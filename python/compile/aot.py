@@ -1,0 +1,138 @@
+"""AOT lowering: jax/Pallas (L2+L1) -> HLO text + manifest, consumed by the
+rust runtime (`rust/src/runtime/`).
+
+HLO *text* is the interchange format, NOT serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Default variant set: (V, D, K, tile). Keep in sync with
+# rust/src/runtime/artifact.rs expectations (read from the manifest).
+# Tile sizes picked by the §Perf sweep (EXPERIMENTS.md): interpret-mode
+# cycle cost at V=1024 is 702 us/cycle with tile=128, 419 with tile=512,
+# and regresses again at 1024 — mid-size tiles amortize the per-program
+# overhead without paying the huge-gather cliff.
+VARIANTS = [
+    {"v": 64, "d": 8, "k": 16, "tile": 64},
+    {"v": 256, "d": 16, "k": 32, "tile": 256},
+    {"v": 1024, "d": 32, "k": 64, "tile": 512},
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_relabel_variant(v: int, d: int, k: int, tile: int) -> str:
+    """Lower the device-side global relabel (extension kernel)."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    spec = jax.ShapeDtypeStruct
+    args = (
+        spec((v, d), i32),   # nbr
+        spec((v, d), f32),   # mask
+        spec((v, d), f32),   # cf
+        spec((v,), i32),     # dist
+    )
+
+    def fn(nbr, mask, cf, dist):
+        return model.run_relabel(nbr, mask, cf, dist, cycles=k, tile=tile)
+
+    lowered = jax.jit(fn, donate_argnums=(3,)).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def lower_variant(v: int, d: int, k: int, tile: int) -> str:
+    """Lower run_cycles for one (V, D, K) variant to HLO text."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    spec = jax.ShapeDtypeStruct
+    args = (
+        spec((v, d), i32),   # nbr
+        spec((v, d), i32),   # rev
+        spec((v, d), f32),   # mask
+        spec((v, d), f32),   # cf
+        spec((v,), f32),     # e
+        spec((v,), i32),     # h
+        spec((v,), f32),     # excl
+        spec((1,), i32),     # nreal
+    )
+
+    def fn(nbr, rev, mask, cf, e, h, excl, nreal):
+        return model.run_cycles(nbr, rev, mask, cf, e, h, excl, nreal, cycles=k, tile=tile)
+
+    # Donate the mutable carry (cf, e, h) so XLA updates in place.
+    lowered = jax.jit(fn, donate_argnums=(3, 4, 5)).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--variants", default="", help="comma list like 64x8x16; empty = defaults")
+    args = ap.parse_args()
+
+    variants = VARIANTS
+    if args.variants:
+        variants = []
+        for spec_str in args.variants.split(","):
+            v, d, k = (int(x) for x in spec_str.split("x"))
+            variants.append({"v": v, "d": d, "k": k, "tile": min(v, 128)})
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "abi": 1, "variants": []}
+    for spec_v in variants:
+        v, d, k, tile = spec_v["v"], spec_v["d"], spec_v["k"], spec_v["tile"]
+        for kind in ("flow", "relabel"):
+            if kind == "flow":
+                name = f"wbpr_v{v}_d{d}_k{k}"
+                text = lower_variant(v, d, k, tile)
+                io = {
+                    "inputs": ["nbr[v,d]i32", "rev[v,d]i32", "mask[v,d]f32", "cf[v,d]f32",
+                               "e[v]f32", "h[v]i32", "excl[v]f32", "nreal[1]i32"],
+                    "outputs": ["cf[v,d]f32", "e[v]f32", "h[v]i32", "active[1]i32"],
+                }
+            else:
+                name = f"wbpr_gr_v{v}_d{d}_k{k}"
+                text = lower_relabel_variant(v, d, k, tile)
+                io = {
+                    "inputs": ["nbr[v,d]i32", "mask[v,d]f32", "cf[v,d]f32", "dist[v]i32"],
+                    "outputs": ["dist[v]i32", "changed[1]i32"],
+                }
+            print(f"lowering {name} (tile={tile}) ...", flush=True)
+            path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+            manifest["variants"].append(
+                {"name": name, "file": f"{name}.hlo.txt", "kind": kind, "v": v, "d": d, "k": k,
+                 "tile": tile, "sha256_16": digest, **io}
+            )
+            print(f"  wrote {path} ({len(text)} chars)")
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {mpath} with {len(manifest['variants'])} variants")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

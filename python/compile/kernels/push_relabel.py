@@ -1,0 +1,157 @@
+"""L1 — the WBPR push-relabel local operation as a Pallas kernel.
+
+The paper's hot spot is the per-active-vertex min-height-neighbor search
+(Alg. 2's second-level parallelism: one warp per vertex, tree reduction).
+On TPU that becomes: tile the degree-padded neighbor matrix into VMEM rows,
+reduce along the lane axis (`jnp.min`/`argmin` lower to VPU tree
+reductions), and emit per-vertex push/relabel *proposals*; the surrounding
+L2 jax program applies them with XLA scatters (the deterministic stand-in
+for CUDA atomics — DESIGN.md §Hardware-Adaptation).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO, which is what the rust
+runtime loads. Real-TPU viability is argued via the VMEM budget in
+DESIGN.md §9.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 1 << 30  # plain int: pallas kernels must not capture traced constants
+
+
+def _proposal_kernel(nbr_ref, mask_ref, cf_ref, e_ref, h_ref, excl_ref, hfull_ref, n_ref,
+                     d_ref, j_ref, newh_ref):
+    """One vertex tile: min-height-neighbor reduction + push/relabel choice.
+
+    Block layout per grid step i (T = tile rows, D = padded degree):
+      nbr/mask/cf: [T, D] VMEM tiles  (the BCSR-row analog)
+      e/h/excl:    [T]     per-vertex state
+      hfull:       [V]     the full height vector, broadcast to every tile
+                           (the 'shared memory' of the paper's reduction)
+      n:           [1]     height cap (scalar prefetch)
+    """
+    nbr = nbr_ref[...]
+    mask = mask_ref[...]
+    cf = cf_ref[...]
+    e = e_ref[...]
+    h = h_ref[...]
+    excl = excl_ref[...]
+    hfull = hfull_ref[...]
+    n = n_ref[0]
+
+    valid = (mask > 0) & (cf > 0)
+    # Gather neighbor heights; padding gathers hfull[0] but is masked to BIG.
+    nh = jnp.where(valid, hfull[nbr], BIG)
+    # Lane-axis tree reduction (the warp parallel reduction, Harris k7).
+    minh = nh.min(axis=1)
+    j = nh.argmin(axis=1).astype(jnp.int32)
+    has = valid.any(axis=1)
+
+    eligible = (e > 0) & (h < n) & (excl == 0)
+    active = eligible & has
+    can_push = active & (h > minh)
+    cf_sel = jnp.take_along_axis(cf, j[:, None], axis=1)[:, 0]
+
+    d_ref[...] = jnp.where(can_push, jnp.minimum(e, cf_sel), 0.0).astype(cf.dtype)
+    j_ref[...] = jnp.where(can_push, j, -1)
+    newh = jnp.where(active & ~can_push, minh + 1, h)
+    newh = jnp.where(eligible & ~has, n + 1, newh).astype(h.dtype)
+    newh_ref[...] = newh
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def proposals(nbr, mask, cf, e, h, excl, nreal, *, tile=0):
+    """Pallas-call wrapper: per-vertex (d, j, newh) proposals.
+
+    `tile` = rows per grid step (0 = whole array in one tile). V must be a
+    multiple of `tile`.
+    """
+    V, D = nbr.shape
+    T = tile if tile else V
+    assert V % T == 0, f"V={V} not a multiple of tile={T}"
+    grid = (V // T,)
+    row_spec = pl.BlockSpec((T, D), lambda i: (i, 0))
+    vec_spec = pl.BlockSpec((T,), lambda i: (i,))
+    full_spec = pl.BlockSpec((V,), lambda i: (0,))
+    one_spec = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        _proposal_kernel,
+        grid=grid,
+        in_specs=[row_spec, row_spec, row_spec, vec_spec, vec_spec, vec_spec, full_spec, one_spec],
+        out_specs=[vec_spec, vec_spec, vec_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((V,), cf.dtype),
+            jax.ShapeDtypeStruct((V,), jnp.int32),
+            jax.ShapeDtypeStruct((V,), jnp.int32),
+        ],
+        interpret=True,
+    )(nbr, mask, cf, e, h, excl, h, nreal)
+
+
+def _min_reduce_kernel(x_ref, mask_ref, o_ref):
+    x = x_ref[...]
+    m = mask_ref[...]
+    o_ref[...] = jnp.where(m > 0, x, BIG).min(axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def masked_min_rows(x, mask, *, tile=0):
+    """Micro-kernel: masked per-row min — the isolated reduction primitive
+    (benchmarked standalone as the paper benchmarks Harris kernel 7)."""
+    V, D = x.shape
+    T = tile if tile else V
+    assert V % T == 0
+    return pl.pallas_call(
+        _min_reduce_kernel,
+        grid=(V // T,),
+        in_specs=[pl.BlockSpec((T, D), lambda i: (i, 0)), pl.BlockSpec((T, D), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((T,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((V,), x.dtype),
+        interpret=True,
+    )(x, mask)
+
+
+def _relabel_kernel(nbr_ref, mask_ref, cf_ref, distfull_ref, dist_ref, o_ref):
+    """Global-relabel relaxation tile: dist'(u) = min(dist(u),
+    1 + min over residual slots of dist(neighbor)) — the device-side form
+    of Alg. 1's GlobalRelabel() backward BFS (see ref.relabel_step)."""
+    nbr = nbr_ref[...]
+    mask = mask_ref[...]
+    cf = cf_ref[...]
+    distfull = distfull_ref[...]
+    dist = dist_ref[...]
+    valid = (mask > 0) & (cf > 0)
+    nd = jnp.where(valid, distfull[nbr], BIG)
+    o_ref[...] = jnp.minimum(dist, nd.min(axis=1) + 1).astype(dist.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def relabel_step(nbr, mask, cf, dist, *, tile=0):
+    """One relaxation sweep as a Pallas call. Returns (dist', changed)."""
+    V, D = nbr.shape
+    T = tile if tile else V
+    assert V % T == 0
+    row_spec = pl.BlockSpec((T, D), lambda i: (i, 0))
+    vec_spec = pl.BlockSpec((T,), lambda i: (i,))
+    full_spec = pl.BlockSpec((V,), lambda i: (0,))
+    new = pl.pallas_call(
+        _relabel_kernel,
+        grid=(V // T,),
+        in_specs=[row_spec, row_spec, row_spec, full_spec, vec_spec],
+        out_specs=vec_spec,
+        out_shape=jax.ShapeDtypeStruct((V,), dist.dtype),
+        interpret=True,
+    )(nbr, mask, cf, dist, dist)
+    changed = (new != dist).sum(dtype=jnp.int32)
+    return new, changed
+
+
+def vmem_bytes(V, D):
+    """Estimated VMEM footprint of one tile invocation with T=V rows:
+    3 [V,D] f32/i32 tiles + 4 [V] vectors + the broadcast hfull.
+    Used by the §9 roofline discussion and checked in tests."""
+    return 3 * V * D * 4 + 4 * V * 4 + V * 4

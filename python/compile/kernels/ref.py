@@ -1,0 +1,119 @@
+"""Pure-jnp oracle for the WBPR device step — the correctness reference the
+Pallas kernel is tested against (and the executable spec of the device ABI
+documented in DESIGN.md §7).
+
+State lives in a degree-padded (ELLPACK-style) layout, the TPU analog of the
+paper's BCSR (see DESIGN.md §Hardware-Adaptation):
+
+  nbr[V, D]  int32  neighbor vertex id per slot (0 for padding)
+  rev[V, D]  int32  flat index (v*D + i') of the reverse slot
+  mask[V, D] f32    1.0 where the slot holds a real residual arc
+  cf[V, D]   f32    residual capacity per slot
+  e[V]       f32    excess per vertex
+  h[V]       int32  height per vertex
+  excl[V]    f32    1.0 for source/sink (never active)
+  nreal[1]   int32  height cap (= number of real vertices)
+
+One step = the bulk-synchronous form of Algorithm 1's local operation:
+every active vertex finds its min-height residual neighbor (the paper's
+warp reduction -> here a lane-axis reduction), then pushes or relabels;
+all updates are computed from the pre-step state and applied at once
+(a legal schedule of the lock-free algorithm — see DESIGN.md §5).
+"""
+
+import jax.numpy as jnp
+
+BIG = 1 << 30  # plain int: pallas kernels must not capture traced constants
+
+
+def proposals(nbr, mask, cf, e, h, excl, nreal):
+    """The kernel's job: per-vertex push/relabel proposals.
+
+    Returns (d, j, newh):
+      d[V]    f32  push amount (0 where no push)
+      j[V]    i32  chosen slot (argmin-height neighbor), -1 where no push
+      newh[V] i32  new heights (relabels applied; unchanged elsewhere)
+    """
+    valid = (mask > 0) & (cf > 0)
+    nh = jnp.where(valid, h[nbr], BIG)  # gather neighbor heights
+    minh = nh.min(axis=1)
+    j = nh.argmin(axis=1).astype(jnp.int32)
+    has = valid.any(axis=1)
+    eligible = (e > 0) & (h < nreal) & (excl == 0)
+    active = eligible & has
+    can_push = active & (h > minh)
+    cf_sel = jnp.take_along_axis(cf, j[:, None], axis=1)[:, 0]
+    d = jnp.where(can_push, jnp.minimum(e, cf_sel), 0.0).astype(cf.dtype)
+    relabel = active & ~can_push
+    dead = eligible & ~has  # no residual arc at all: deactivate
+    newh = jnp.where(relabel, minh + 1, h)
+    newh = jnp.where(dead, nreal + 1, newh).astype(h.dtype)
+    j = jnp.where(can_push, j, -1)
+    return d, j, newh
+
+
+def apply_proposals(nbr, rev, cf, e, d, j, newh):
+    """Scatter-combine of the proposals (the 'atomics' of Alg. 1 lines
+    15-19, as a deterministic bulk-synchronous step)."""
+    V, D = cf.shape
+    push = j >= 0
+    jc = jnp.clip(j, 0, D - 1)
+    amount = jnp.where(push, d, 0.0)
+    onehot = (jnp.arange(D, dtype=jnp.int32)[None, :] == jc[:, None]) & push[:, None]
+    cf1 = cf - onehot * amount[:, None]
+    rev_sel = jnp.take_along_axis(rev, jc[:, None], axis=1)[:, 0]
+    cf2 = cf1.reshape(-1).at[rev_sel].add(amount).reshape(V, D)
+    tgt = jnp.take_along_axis(nbr, jc[:, None], axis=1)[:, 0]
+    e1 = e - amount
+    e2 = e1.at[tgt].add(amount)
+    return cf2, e2, newh
+
+
+def step(nbr, rev, mask, cf, e, h, excl, nreal):
+    """One full BSP push-relabel iteration (proposals + combine)."""
+    d, j, newh = proposals(nbr, mask, cf, e, h, excl, nreal)
+    return apply_proposals(nbr, rev, cf, e, d, j, newh)
+
+
+def active_count(cf, e, h, excl, nreal, mask):
+    """Vertices still active (Alg. 1 line 9), for the host's early exit."""
+    has = ((mask > 0) & (cf > 0)).any(axis=1)
+    act = (e > 0) & (h < nreal) & (excl == 0) & has
+    return act.sum(dtype=jnp.int32)
+
+
+def run_cycles(nbr, rev, mask, cf, e, h, excl, nreal, cycles):
+    """`cycles` BSP iterations (python loop — used by tests; the AOT path
+    uses model.run_cycles with lax.fori_loop)."""
+    for _ in range(cycles):
+        cf, e, h = step(nbr, rev, mask, cf, e, h, excl, nreal)
+    return cf, e, h
+
+
+# ---------------------------------------------------------------------------
+# Global relabel (extension): backward BFS from the sink as an iterative
+# min-plus relaxation. dist(u) relaxes over residual arcs u->v (cf > 0):
+# dist(u) = min(dist(u), 1 + min_v dist(v)); the sink is pinned by its
+# initial 0. A fixpoint equals the exact BFS distance-to-sink, i.e. the
+# height labeling Alg. 1's GlobalRelabel() computes on the CPU.
+# ---------------------------------------------------------------------------
+
+
+def relabel_step(nbr, mask, cf, dist):
+    """One min-plus relaxation sweep. Returns (dist', changed_count)."""
+    valid = (mask > 0) & (cf > 0)
+    nd = jnp.where(valid, dist[nbr], BIG)
+    cand = nd.min(axis=1) + 1
+    new = jnp.minimum(dist, cand).astype(dist.dtype)
+    changed = (new != dist).sum(dtype=jnp.int32)
+    return new, changed
+
+
+def relabel_fixpoint(nbr, mask, cf, dist, max_iters=None):
+    """Iterate to fixpoint (python loop, tests only)."""
+    iters = max_iters if max_iters is not None else int(dist.shape[0]) + 1
+    for _ in range(iters):
+        dist, changed = relabel_step(nbr, mask, cf, dist)
+        if int(changed) == 0:
+            break
+    return dist

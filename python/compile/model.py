@@ -1,0 +1,139 @@
+"""L2 — the device-side push-relabel program: K bulk-synchronous cycles of
+(L1 Pallas proposals -> XLA scatter combine), plus the active-vertex count
+for the host's early exit. This is what `aot.py` lowers to HLO text and the
+rust runtime executes between global relabels (Alg. 1's GPU step).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import push_relabel, ref
+
+
+def _combine(nbr, rev, cf, e, d, j, newh):
+    """Apply proposals: the deterministic scatter form of Alg. 1's atomic
+    push updates (see ref.apply_proposals for the spec)."""
+    return ref.apply_proposals(nbr, rev, cf, e, d, j, newh)
+
+
+def step(nbr, rev, mask, cf, e, h, excl, nreal, *, tile=0):
+    """One device cycle: Pallas proposals + scatter combine."""
+    d, j, newh = push_relabel.proposals(nbr, mask, cf, e, h, excl, nreal, tile=tile)
+    return _combine(nbr, rev, cf, e, d, j, newh)
+
+
+@functools.partial(jax.jit, static_argnames=("cycles", "tile"))
+def run_cycles(nbr, rev, mask, cf, e, h, excl, nreal, *, cycles, tile=0):
+    """`cycles` device iterations + the remaining-active count.
+
+    Inputs/outputs follow the ABI of DESIGN.md §7; `nbr`/`rev`/`mask` are
+    loop-invariant (packed once by the rust coordinator), the (cf, e, h)
+    carry is donated on the AOT path.
+    """
+
+    def body(_, state):
+        cf, e, h = state
+        return step(nbr, rev, mask, cf, e, h, excl, nreal, tile=tile)
+
+    cf, e, h = jax.lax.fori_loop(0, cycles, body, (cf, e, h))
+    count = ref.active_count(cf, e, h, excl, nreal, mask)
+    return cf, e, h, jnp.reshape(count, (1,))
+
+
+def run_cycles_ref(nbr, rev, mask, cf, e, h, excl, nreal, *, cycles):
+    """Pure-jnp twin of run_cycles (differential testing)."""
+    cf, e, h = ref.run_cycles(nbr, rev, mask, cf, e, h, excl, nreal, cycles)
+    count = ref.active_count(cf, e, h, excl, nreal, mask)
+    return cf, e, h, jnp.reshape(count, (1,))
+
+
+@functools.partial(jax.jit, static_argnames=("cycles", "tile"))
+def run_relabel(nbr, mask, cf, dist, *, cycles, tile=0):
+    """`cycles` global-relabel relaxation sweeps + total-change count
+    (device-side GlobalRelabel; the host loops launches until the count
+    is 0, which certifies the BFS fixpoint)."""
+
+    def body(_, state):
+        dist, changed = state
+        dist, c = push_relabel.relabel_step(nbr, mask, cf, dist, tile=tile)
+        return dist, changed + c
+
+    dist, changed = jax.lax.fori_loop(0, cycles, body, (dist, jnp.int32(0)))
+    return dist, jnp.reshape(changed, (1,))
+
+
+def run_relabel_ref(nbr, mask, cf, dist, *, cycles):
+    """Pure-jnp twin of run_relabel."""
+    total = 0
+    for _ in range(cycles):
+        dist, c = ref.relabel_step(nbr, mask, cf, dist)
+        total += int(c)
+    return dist, jnp.array([total], jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Packing helpers (the python mirror of the rust runtime's packer; used by
+# the python tests to drive whole graphs through the device program).
+# ---------------------------------------------------------------------------
+
+
+def pack_graph(n, edges, s, t, V, D):
+    """Pack a directed capacitated edge list into the padded device layout.
+
+    `edges` = [(u, v, cap)], arc pairing as in the rust arena: edge i gives
+    forward arc slot and a 0-capacity reverse slot. Returns the ABI arrays
+    (numpy-compatible jnp arrays) with preflow *not* applied.
+    """
+    assert n <= V, f"graph ({n}) exceeds variant capacity ({V})"
+    rows = [[] for _ in range(V)]  # per-vertex [(target, cap, eid, fwd)]
+    for i, (u, v, c) in enumerate(edges):
+        rows[u].append([v, float(c), i, True])
+        rows[v].append([u, 0.0, i, False])
+    nbr = [[0] * D for _ in range(V)]
+    mask = [[0.0] * D for _ in range(V)]
+    cf = [[0.0] * D for _ in range(V)]
+    rev = [[0] * D for _ in range(V)]
+    slot_of = {}
+    for u in range(V):
+        assert len(rows[u]) <= D, f"vertex {u} degree {len(rows[u])} exceeds D={D}"
+        for i, (v, c, eid, fwd) in enumerate(rows[u]):
+            nbr[u][i] = v
+            mask[u][i] = 1.0
+            cf[u][i] = c
+            slot_of[(eid, fwd)] = u * D + i
+    for (eid, fwd), flat in slot_of.items():
+        rev[flat // D][flat % D] = slot_of[(eid, not fwd)]
+    e = [0.0] * V
+    h = [0] * V
+    excl = [0.0] * V
+    excl[s] = 1.0
+    excl[t] = 1.0
+    h[s] = n
+    return (
+        jnp.array(nbr, dtype=jnp.int32),
+        jnp.array(rev, dtype=jnp.int32),
+        jnp.array(mask, dtype=jnp.float32),
+        jnp.array(cf, dtype=jnp.float32),
+        jnp.array(e, dtype=jnp.float32),
+        jnp.array(h, dtype=jnp.int32),
+        jnp.array(excl, dtype=jnp.float32),
+        jnp.array([n], dtype=jnp.int32),
+    )
+
+
+def preflow(nbr, mask, cf, rev, e, s):
+    """Saturate the source's outgoing arcs (Alg. 1 step 0). Returns
+    (cf, e, excess_total)."""
+    V, D = cf.shape
+    src_slots = (jnp.arange(V) == s)[:, None] & (mask > 0)
+    amounts = jnp.where(src_slots, cf, 0.0)
+    total = amounts.sum()
+    cf1 = cf - amounts
+    rev_flat = rev.reshape(-1)
+    cf2 = cf1.reshape(-1).at[rev_flat].add(amounts.reshape(-1)).reshape(V, D)
+    tgt = nbr.reshape(-1)
+    e1 = e.reshape(-1 if e.ndim > 1 else e.shape[0])
+    e2 = e1.at[tgt].add(amounts.reshape(-1))
+    return cf2, e2, float(total)

@@ -1,0 +1,55 @@
+"""AOT path: lowering to HLO text must produce parseable, entry-complete
+modules with the expected parameter/result shapes (the rust runtime's ABI)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def small_hlo():
+    return aot.lower_variant(v=16, d=8, k=4, tile=16)
+
+
+def test_hlo_text_has_entry(small_hlo):
+    assert "ENTRY" in small_hlo
+    assert "HloModule" in small_hlo
+
+
+def test_hlo_text_shapes(small_hlo):
+    # 8 parameters with the ABI shapes (donated carry still appears as
+    # parameters in HLO).
+    assert "s32[16,8]" in small_hlo  # nbr/rev
+    assert "f32[16,8]" in small_hlo  # mask/cf
+    assert "f32[16]" in small_hlo    # e/excl
+    assert "s32[16]" in small_hlo    # h
+    assert "s32[1]" in small_hlo     # nreal / active count
+
+
+def test_hlo_is_deterministic():
+    a = aot.lower_variant(v=16, d=8, k=4, tile=16)
+    b = aot.lower_variant(v=16, d=8, k=4, tile=16)
+    assert a == b
+
+
+def test_manifest_writer(tmp_path):
+    out = tmp_path / "artifacts"
+    cmd = [sys.executable, "-m", "compile.aot", "--out-dir", str(out), "--variants", "16x8x4"]
+    env = dict(os.environ)
+    subprocess.run(cmd, check=True, cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))), env=env)
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["format"] == "hlo-text"
+    # Each (V, D, K) spec yields a flow variant and a relabel variant.
+    assert len(manifest["variants"]) == 2
+    names = {v["name"]: v for v in manifest["variants"]}
+    assert set(names) == {"wbpr_v16_d8_k4", "wbpr_gr_v16_d8_k4"}
+    for v in names.values():
+        assert (out / v["file"]).exists()
+        assert v["v"] == 16 and v["d"] == 8 and v["k"] == 4
+    assert names["wbpr_v16_d8_k4"]["kind"] == "flow"
+    assert names["wbpr_gr_v16_d8_k4"]["kind"] == "relabel"

@@ -1,0 +1,142 @@
+"""L1 correctness: the Pallas proposal kernel vs the pure-jnp oracle
+(ref.proposals), swept over shapes, tilings and arbitrary states."""
+
+import random
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import push_relabel, ref
+from tests.util import random_state
+
+
+def assert_proposals_match(state, tile):
+    nbr, mask, cf, e, h, excl, nreal = state
+    dk, jk, hk = push_relabel.proposals(nbr, mask, cf, e, h, excl, nreal, tile=tile)
+    dr, jr, hr = ref.proposals(nbr, mask, cf, e, h, excl, nreal[0])
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(dr), err_msg="push amounts")
+    np.testing.assert_array_equal(np.asarray(jk), np.asarray(jr), err_msg="chosen slots")
+    np.testing.assert_array_equal(np.asarray(hk), np.asarray(hr), err_msg="new heights")
+
+
+@pytest.mark.parametrize("V,D,tile", [(8, 4, 0), (16, 8, 8), (32, 8, 16), (64, 8, 64), (64, 16, 32)])
+def test_kernel_matches_ref_random_states(V, D, tile):
+    rng = random.Random(V * 1000 + D)
+    for _ in range(5):
+        assert_proposals_match(random_state(rng, V, D, V - 1 if V > 2 else V), tile)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    v_exp=st.integers(min_value=2, max_value=6),
+    d_exp=st.integers(min_value=1, max_value=4),
+    tile_div=st.integers(min_value=0, max_value=2),
+    seed=st.integers(min_value=0, max_value=2**32 - 1),
+)
+def test_kernel_matches_ref_hypothesis(v_exp, d_exp, tile_div, seed):
+    V, D = 1 << v_exp, 1 << d_exp
+    tile = 0 if tile_div == 0 else max(1, V >> tile_div)
+    rng = random.Random(seed)
+    assert_proposals_match(random_state(rng, V, D, max(V - 1, 2)), tile)
+
+
+def test_tiling_is_invisible():
+    rng = random.Random(7)
+    state = random_state(rng, 64, 8, 63)
+    nbr, mask, cf, e, h, excl, nreal = state
+    outs = []
+    for tile in (64, 32, 16, 8):
+        outs.append(push_relabel.proposals(nbr, mask, cf, e, h, excl, nreal, tile=tile))
+    for o in outs[1:]:
+        for a, b in zip(outs[0], o):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_inactive_vertices_produce_nothing():
+    V, D = 8, 4
+    nbr = jnp.zeros((V, D), jnp.int32)
+    mask = jnp.ones((V, D), jnp.float32)
+    cf = jnp.ones((V, D), jnp.float32)
+    e = jnp.zeros((V,), jnp.float32)  # no excess anywhere
+    h = jnp.zeros((V,), jnp.int32)
+    excl = jnp.zeros((V,), jnp.float32)
+    n = jnp.array([V], jnp.int32)
+    d, j, newh = push_relabel.proposals(nbr, mask, cf, e, h, excl, n)
+    assert np.all(np.asarray(d) == 0)
+    assert np.all(np.asarray(j) == -1)
+    np.testing.assert_array_equal(np.asarray(newh), np.asarray(h))
+
+
+def test_excluded_vertices_never_act():
+    V, D = 8, 4
+    rng = random.Random(3)
+    nbr, mask, cf, e, h, excl, nreal = random_state(rng, V, D, V - 1)
+    e = e.at[:].set(5.0)  # everyone has excess
+    d, j, newh = push_relabel.proposals(nbr, mask, cf, e, h, excl, nreal)
+    excl_np = np.asarray(excl) > 0
+    assert np.all(np.asarray(d)[excl_np] == 0)
+    assert np.all(np.asarray(j)[excl_np] == -1)
+    np.testing.assert_array_equal(np.asarray(newh)[excl_np], np.asarray(h)[excl_np])
+
+
+def test_dead_end_vertex_is_lifted():
+    # Excess but no residual arcs -> relabeled past n (deactivated).
+    V, D = 4, 2
+    nbr = jnp.zeros((V, D), jnp.int32)
+    mask = jnp.zeros((V, D), jnp.float32)
+    cf = jnp.zeros((V, D), jnp.float32)
+    e = jnp.array([0, 3, 0, 0], jnp.float32)
+    h = jnp.zeros((V,), jnp.int32)
+    excl = jnp.array([1, 0, 0, 1], jnp.float32)
+    n = jnp.array([4], jnp.int32)
+    _, _, newh = push_relabel.proposals(nbr, mask, cf, e, h, excl, n)
+    assert int(np.asarray(newh)[1]) == 5
+
+
+def test_min_reduce_micro_kernel():
+    rng = np.random.default_rng(5)
+    x = jnp.array(rng.integers(0, 100, (32, 16)), jnp.int32)
+    m = jnp.array(rng.random((32, 16)) < 0.5, jnp.float32)
+    got = push_relabel.masked_min_rows(x, m, tile=16)
+    want = np.where(np.asarray(m) > 0, np.asarray(x), int(push_relabel.BIG)).min(axis=1)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_vmem_budget_within_tpu_limits():
+    # DESIGN.md §9: the largest default variant must fit VMEM comfortably.
+    assert push_relabel.vmem_bytes(1024, 32) < 4 * 1024 * 1024
+
+
+def test_relabel_kernel_matches_ref():
+    rng = random.Random(21)
+    for tile in (0, 16, 8):
+        nbr, mask, cf, _, _, _, _ = random_state(rng, 32, 8, 31)
+        dist = jnp.where(jnp.arange(32) == 5, 0, 1 << 30).astype(jnp.int32)
+        got, gc = push_relabel.relabel_step(nbr, mask, cf, dist, tile=tile)
+        want, wc = ref.relabel_step(nbr, mask, cf, dist)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert int(gc) == int(wc)
+
+
+def test_relabel_fixpoint_is_bfs_distance():
+    # Chain 0<-1<-2<-3 via residual arcs: dist from vertex 0.
+    V, D = 4, 2
+    nbr = jnp.array([[0, 0], [0, 0], [1, 0], [2, 0]], jnp.int32)
+    mask = jnp.array([[0, 0], [1, 0], [1, 0], [1, 0]], jnp.float32)
+    cf = mask * 1.0
+    dist = jnp.array([0, 1 << 30, 1 << 30, 1 << 30], jnp.int32)
+    out = ref.relabel_fixpoint(nbr, mask, cf, dist)
+    np.testing.assert_array_equal(np.asarray(out), [0, 1, 2, 3])
+
+
+def test_relabel_ignores_saturated_arcs():
+    V, D = 3, 1
+    nbr = jnp.array([[0], [0], [1]], jnp.int32)
+    mask = jnp.ones((V, D), jnp.float32)
+    cf = jnp.array([[0.0], [0.0], [1.0]], jnp.float32)  # 1->0 saturated
+    dist = jnp.array([0, 1 << 30, 1 << 30], jnp.int32)
+    out = ref.relabel_fixpoint(nbr, mask, cf, dist)
+    assert int(out[1]) >= (1 << 30)  # unreachable through saturated arc
+    assert int(out[2]) >= (1 << 30)  # transitively unreachable

@@ -1,0 +1,131 @@
+"""L2 correctness: the K-cycle device program — step/ref equivalence,
+invariant preservation, and end-to-end convergence to the true max-flow on
+whole (packed) graphs."""
+
+import random
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from tests.util import dinic, random_graph, random_state
+
+
+def pack_random(seed, n, m, V, D, max_cap=6):
+    rng = random.Random(seed)
+    while True:
+        edges = random_graph(rng, n, m, max_cap)
+        # Need positive flow between 0 and n-1 for an interesting test.
+        if dinic(n, edges, 0, n - 1) > 0:
+            return edges, model.pack_graph(n, edges, 0, n - 1, V, D)
+
+
+def test_pack_graph_layout():
+    edges = [(0, 1, 3), (1, 2, 2), (0, 2, 1)]
+    nbr, rev, mask, cf, e, h, excl, nreal = model.pack_graph(3, edges, 0, 2, 4, 4)
+    assert nbr.shape == (4, 4)
+    # Vertex 0: out-arcs to 1 and 2; vertex 1: reverse of (0,1) + forward (1,2).
+    assert float(cf[0, 0]) == 3.0 and int(nbr[0, 0]) == 1
+    assert float(mask.sum()) == 6.0  # 3 edges * 2 slots
+    # rev is an involution over real slots.
+    rev_np = np.asarray(rev).reshape(-1)
+    mask_np = np.asarray(mask).reshape(-1)
+    for flat, m in enumerate(mask_np):
+        if m > 0:
+            assert rev_np[rev_np[flat]] == flat
+    assert int(h[0]) == 3 and float(excl[0]) == 1.0 and float(excl[2]) == 1.0
+
+
+def test_preflow_saturates_source():
+    edges = [(0, 1, 3), (1, 2, 2), (0, 2, 1)]
+    nbr, rev, mask, cf, e, h, excl, nreal = model.pack_graph(3, edges, 0, 2, 4, 4)
+    cf2, e2, total = model.preflow(nbr, mask, cf, rev, e, 0)
+    assert total == 4.0
+    assert float(e2[1]) == 3.0 and float(e2[2]) == 1.0
+    # Source rows zeroed, reverse slots credited.
+    assert float(cf2[0].sum()) == 0.0
+    np.testing.assert_allclose(np.asarray(cf2).sum(), np.asarray(cf).sum())
+
+
+def step_invariants(nbr, rev, mask, cf, e, h, excl, nreal, steps=20):
+    """cf >= 0, e >= 0, total (cf+e) conserved across steps."""
+    total0 = float(jnp.sum(cf * mask)) + 0  # capacity mass
+    for _ in range(steps):
+        cf, e, h = ref.step(nbr, rev, mask, cf, e, h, excl, nreal)
+        cf_np, e_np = np.asarray(cf), np.asarray(e)
+        assert (cf_np >= -1e-6).all(), "negative residual"
+        assert (e_np >= -1e-6).all(), "negative excess"
+        assert abs(float((cf * mask).sum()) - total0) < 1e-3, "capacity mass not conserved"
+    return cf, e, h
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**32 - 1))
+def test_invariants_on_random_graphs(seed):
+    edges, state = pack_random(seed, 8, 20, 8, 8)
+    nbr, rev, mask, cf, e, h, excl, nreal = state
+    cf, e, total = model.preflow(nbr, mask, cf, rev, e, 0)
+    step_invariants(nbr, rev, mask, cf, e, h, excl, nreal)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_device_program_converges_to_maxflow(seed):
+    """Run the full device loop (no global relabel — heights saturate on
+    their own) until quiescent; e(t) must equal Dinic's max flow."""
+    n, m, V, D = 10, 26, 16, 16
+    edges, state = pack_random(seed, n, m, V, D)
+    want = dinic(n, edges, 0, n - 1)
+    nbr, rev, mask, cf, e, h, excl, nreal = state
+    cf, e, _ = model.preflow(nbr, mask, cf, rev, e, 0)
+    for _ in range(200):
+        cf, e, h, count = model.run_cycles(nbr, rev, mask, cf, e, h, excl, nreal, cycles=8, tile=V)
+        if int(count[0]) == 0:
+            break
+    assert int(count[0]) == 0, "did not quiesce"
+    assert float(e[n - 1]) == float(want), f"flow mismatch: {float(e[n-1])} vs {want}"
+
+
+def test_run_cycles_matches_ref_twin():
+    rng = random.Random(11)
+    state = random_state(rng, 16, 8, 15)
+    nbr, mask, cf, e, h, excl, nreal = state
+    rev = jnp.array(np.random.default_rng(1).permutation(16 * 8).reshape(16, 8), jnp.int32)
+    # rev here is arbitrary (not an involution): both paths must still
+    # compute the same function of their inputs.
+    a = model.run_cycles(nbr, rev, mask, cf, e, h, excl, nreal, cycles=5, tile=16)
+    b = model.run_cycles_ref(nbr, rev, mask, cf, e, h, excl, nreal, cycles=5)
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=0, atol=0)
+
+
+def test_active_count_counts():
+    edges = [(0, 1, 3), (1, 2, 2)]
+    nbr, rev, mask, cf, e, h, excl, nreal = model.pack_graph(3, edges, 0, 2, 4, 4)
+    cf, e, _ = model.preflow(nbr, mask, cf, rev, e, 0)
+    # Vertex 1 now has excess and a residual arc: exactly one active vertex.
+    assert int(ref.active_count(cf, e, h, excl, nreal[0], mask)) == 1
+
+
+def test_multi_source_rejects_oversize():
+    with pytest.raises(AssertionError):
+        model.pack_graph(10, [], 0, 9, 8, 4)
+
+
+def test_run_relabel_matches_ref_twin_and_converges():
+    edges = [(0, 1, 2), (1, 2, 2), (2, 3, 2), (1, 3, 1)]
+    nbr, rev, mask, cf, e, h, excl, nreal = model.pack_graph(4, edges, 0, 3, 4, 4)
+    dist = jnp.where(jnp.arange(4) == 3, 0, 1 << 30).astype(jnp.int32)
+    a_dist, a_changed = model.run_relabel(nbr, mask, cf, dist, cycles=6, tile=4)
+    b_dist, b_changed = model.run_relabel_ref(nbr, mask, cf, dist, cycles=6)
+    np.testing.assert_array_equal(np.asarray(a_dist), np.asarray(b_dist))
+    assert int(a_changed[0]) == int(b_changed[0])
+    # Fixpoint: BFS distances to the sink along residual (= original,
+    # preflow not applied) arcs: 3 at 0; 1,2 adjacent; 0 via 1.
+    np.testing.assert_array_equal(np.asarray(a_dist)[:4], [2, 1, 1, 0])
+    # A second round reports zero changes (fixpoint certificate).
+    c_dist, c_changed = model.run_relabel(nbr, mask, cf, a_dist, cycles=4, tile=4)
+    assert int(c_changed[0]) == 0
+    np.testing.assert_array_equal(np.asarray(c_dist), np.asarray(a_dist))

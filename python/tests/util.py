@@ -1,0 +1,96 @@
+"""Shared helpers for the python test-suite: random graph/state generation
+and a tiny Dinic oracle (independent of the rust implementation)."""
+
+import random
+from collections import deque
+
+import jax.numpy as jnp
+
+
+def random_graph(rng, n, m, max_cap=9):
+    """Random directed capacitated graph without self loops / duplicates."""
+    seen = set()
+    edges = []
+    for _ in range(m):
+        u = rng.randrange(n)
+        v = rng.randrange(n)
+        if u == v or (u, v) in seen:
+            continue
+        seen.add((u, v))
+        edges.append((u, v, rng.randint(1, max_cap)))
+    return edges
+
+
+def dinic(n, edges, s, t):
+    """Reference max-flow (pure python)."""
+    to, cap, nxt, head = [], [], [], [-1] * n
+
+    def add(u, v, c):
+        to.append(v)
+        cap.append(c)
+        nxt.append(head[u])
+        head[u] = len(to) - 1
+
+    for u, v, c in edges:
+        add(u, v, c)
+        add(v, u, 0)
+
+    flow = 0
+    while True:
+        level = [-1] * n
+        level[s] = 0
+        q = deque([s])
+        while q:
+            u = q.popleft()
+            a = head[u]
+            while a != -1:
+                if cap[a] > 0 and level[to[a]] < 0:
+                    level[to[a]] = level[u] + 1
+                    q.append(to[a])
+                a = nxt[a]
+        if level[t] < 0:
+            return flow
+        it = list(head)
+
+        def dfs(u, lim):
+            if u == t:
+                return lim
+            while it[u] != -1:
+                a = it[u]
+                v = to[a]
+                if cap[a] > 0 and level[v] == level[u] + 1:
+                    d = dfs(v, min(lim, cap[a]))
+                    if d > 0:
+                        cap[a] -= d
+                        cap[a ^ 1] += d
+                        return d
+                it[u] = nxt[a]
+            return 0
+
+        while True:
+            f = dfs(s, float("inf"))
+            if f == 0:
+                break
+            flow += f
+
+
+def random_state(rng, V, D, nreal):
+    """An arbitrary (not necessarily reachable) device state — the kernel
+    must agree with the reference on *any* well-formed input."""
+    nbr = [[rng.randrange(nreal) for _ in range(D)] for _ in range(V)]
+    mask = [[1.0 if rng.random() < 0.7 else 0.0 for _ in range(D)] for _ in range(V)]
+    cf = [[float(rng.randint(0, 5)) for _ in range(D)] for _ in range(V)]
+    e = [float(rng.randint(0, 4)) for _ in range(V)]
+    h = [rng.randrange(nreal + 2) for _ in range(V)]
+    excl = [0.0] * V
+    excl[0] = 1.0
+    excl[nreal - 1] = 1.0
+    return (
+        jnp.array(nbr, dtype=jnp.int32),
+        jnp.array(mask, dtype=jnp.float32),
+        jnp.array(cf, dtype=jnp.float32),
+        jnp.array(e, dtype=jnp.float32),
+        jnp.array(h, dtype=jnp.int32),
+        jnp.array(excl, dtype=jnp.float32),
+        jnp.array([nreal], dtype=jnp.int32),
+    )

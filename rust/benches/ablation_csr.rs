@@ -1,0 +1,157 @@
+//! `cargo bench --bench ablation_csr` — ablations of the design choices
+//! DESIGN.md calls out:
+//!
+//! 1. **Representation access costs** in isolation: RCSR's O(1)
+//!    reverse-arc lookup vs BCSR's binary search, and row-scan locality —
+//!    microbenchmarked on real graphs.
+//! 2. **Global relabel on/off** (the He & Hong heuristic the paper keeps).
+//! 3. **cycles_per_launch** sweep (the `cycle` parameter of Alg. 1).
+//! 4. **Degree skew sweep**: where the VC-over-TC crossover sits in the
+//!    SIMT model (the paper's §4.2 "high degree std-dev" claim).
+
+use wbpr::graph::builder::ArcGraph;
+use wbpr::graph::residual::Residual;
+use wbpr::graph::{generators, Bcsr, Rcsr, Representation};
+use wbpr::maxflow::{self, SolveOptions};
+use wbpr::simt::exec::{simulate_tc, simulate_vc};
+use wbpr::simt::trace::record;
+use wbpr::simt::{CostParams, GpuModel};
+use wbpr::util::timer::{bench, black_box};
+
+fn rep_access_costs() {
+    println!("## Ablation 1 — representation access costs (microbench)\n");
+    let net = wbpr::bench::suite::with_pairs(
+        generators::rmat(&generators::RmatParams { scale: 12, edge_factor: 8, a: 0.57, b: 0.19, c: 0.19, seed: 3 }),
+        4,
+        33,
+    );
+    let g = ArcGraph::build(&net.normalized());
+    let rcsr = Rcsr::build(&g);
+    let bcsr = Bcsr::build(&g);
+    println!("graph: V={} E={} | RCSR {} KB, BCSR {} KB", g.n, g.num_arcs() / 2, rcsr.memory_bytes() / 1024, bcsr.memory_bytes() / 1024);
+
+    // Row scans (the k*d(v) term).
+    let scan = |rep: &dyn Fn(u32) -> u64| {
+        let mut acc = 0u64;
+        for u in 0..g.n as u32 {
+            acc = acc.wrapping_add(rep(u));
+        }
+        acc
+    };
+    let r1 = bench("rcsr-scan", 2, 10, || {
+        black_box(scan(&|u| rcsr.row(u).iter().map(|(a, _)| a as u64).sum()));
+    });
+    let r2 = bench("bcsr-scan", 2, 10, || {
+        black_box(scan(&|u| bcsr.row(u).iter().map(|(a, _)| a as u64).sum()));
+    });
+    // Reverse-arc lookups (the push-side cost: O(1) vs O(log d)).
+    let arcs: Vec<(u32, u32, u32)> = (0..g.n as u32)
+        .flat_map(|u| rcsr.row(u).iter().map(move |(a, v)| (a, u, v)).collect::<Vec<_>>())
+        .collect();
+    let r3 = bench("rcsr-rev", 2, 10, || {
+        let mut acc = 0u64;
+        for &(a, u, v) in &arcs {
+            acc = acc.wrapping_add(rcsr.rev_arc(a, u, v) as u64);
+        }
+        black_box(acc);
+    });
+    let r4 = bench("bcsr-rev(binary-search)", 2, 10, || {
+        let mut acc = 0u64;
+        for &(a, u, v) in &arcs {
+            acc = acc.wrapping_add(bcsr.rev_arc(a, u, v) as u64);
+        }
+        black_box(acc);
+    });
+    for r in [r1, r2, r3, r4] {
+        println!("{:<26} {:>9.3} ms/iter (min {:.3})", r.name, r.mean_ms, r.min_ms);
+    }
+    println!();
+}
+
+fn global_relabel_ablation() {
+    println!("## Ablation 2 — global relabel heuristic on/off\n");
+    let net = generators::washington_rlg(&generators::WashingtonParams { levels: 48, width: 48, fanout: 3, max_cap: 50, seed: 5 });
+    let g = ArcGraph::build(&net.normalized());
+    let rep = Bcsr::build(&g);
+    for (label, gr) in [("with global relabel", true), ("accounting only", false)] {
+        let opts = SolveOptions { cycles_per_launch: 256, global_relabel: gr, ..Default::default() };
+        let r = maxflow::vc::solve(&g, &rep, &opts);
+        println!("{label:<22} {:>9.1} ms  launches={} cycles={}", r.stats.total_ms, r.stats.launches, r.stats.cycles);
+    }
+    println!();
+}
+
+fn cycles_sweep() {
+    println!("## Ablation 3 — cycles per launch (Alg. 1 `cycle`)\n");
+    let net = wbpr::bench::suite::with_pairs(
+        generators::rmat(&generators::RmatParams { scale: 12, edge_factor: 8, a: 0.57, b: 0.19, c: 0.19, seed: 9 }),
+        4,
+        99,
+    );
+    let g = ArcGraph::build(&net.normalized());
+    let rep = Bcsr::build(&g);
+    let want = maxflow::dinic::solve(&g).value;
+    for cycles in [32, 128, 512, 2048] {
+        let opts = SolveOptions { cycles_per_launch: cycles, ..Default::default() };
+        let r = maxflow::vc::solve(&g, &rep, &opts);
+        assert_eq!(r.value, want);
+        println!("cycles={cycles:<5} {:>9.1} ms  launches={:<4} relabels={}", r.stats.total_ms, r.stats.launches, r.stats.relabels);
+    }
+    println!();
+}
+
+fn skew_crossover() {
+    println!("## Ablation 4 — degree-skew crossover (SIMT model)\n");
+    println!("{:<28} {:>10} {:>10} {:>9}", "graph", "TC ms", "VC ms", "TC/VC");
+    let (model, costs) = (GpuModel::default(), CostParams::default());
+    let cases: Vec<(String, wbpr::graph::builder::FlowNetwork)> = vec![
+        ("near-regular (R0 regime)".into(), wbpr::bench::suite::with_pairs(generators::near_regular(4000, 5, 1), 4, 2)),
+        ("road mesh (R1 regime)".into(), wbpr::bench::suite::with_pairs(generators::grid_road(64, 64, 0.08, 20, 3), 4, 4)),
+        (
+            "rmat skew a=.50".into(),
+            wbpr::bench::suite::with_pairs(
+                generators::rmat(&generators::RmatParams { scale: 12, edge_factor: 8, a: 0.50, b: 0.22, c: 0.22, seed: 5 }),
+                4,
+                6,
+            ),
+        ),
+        (
+            "rmat skew a=.57".into(),
+            wbpr::bench::suite::with_pairs(
+                generators::rmat(&generators::RmatParams { scale: 12, edge_factor: 8, a: 0.57, b: 0.19, c: 0.19, seed: 5 }),
+                4,
+                6,
+            ),
+        ),
+        (
+            "rmat skew a=.63 (R5 regime)".into(),
+            generators_with_pairs_scaled(0.63),
+        ),
+    ];
+    for (name, net) in cases {
+        let g = ArcGraph::build(&net.normalized());
+        let rcsr = Rcsr::build(&g);
+        let trace = record(&g, &rcsr, 128);
+        let tc = simulate_tc(&trace, Representation::Rcsr, &model, &costs);
+        let vc = simulate_vc(&trace, Representation::Rcsr, &model, &costs);
+        println!("{name:<28} {:>10.1} {:>10.1} {:>8.2}x", tc.ms, vc.ms, tc.ms / vc.ms);
+    }
+    println!("\n(the paper's claim: the VC win grows with degree std-dev; flat graphs favor TC)");
+}
+
+fn generators_with_pairs_scaled(a: f64) -> wbpr::graph::builder::FlowNetwork {
+    let rest = (1.0 - a) / 2.3;
+    wbpr::bench::suite::with_pairs(
+        generators::rmat(&generators::RmatParams { scale: 12, edge_factor: 8, a, b: rest, c: rest, seed: 5 }),
+        4,
+        6,
+    )
+}
+
+fn main() {
+    println!("# Ablations — CSR representations, heuristics, schedule parameters\n");
+    rep_access_costs();
+    global_relabel_ablation();
+    cycles_sweep();
+    skew_crossover();
+}

@@ -1,0 +1,18 @@
+//! `cargo bench --bench fig3_workload` — regenerates the paper's Figure 3
+//! (per-warp workload distribution, TC vs VC on RCSR, across the
+//! bipartite suite). Scale with WBPR_BENCH_SCALE=smoke.
+
+use wbpr::bench::{fig3, Scale};
+
+fn main() {
+    let scale = match std::env::var("WBPR_BENCH_SCALE").as_deref() {
+        Ok("smoke") => Scale::Smoke,
+        _ => Scale::Full,
+    };
+    eprintln!("running Figure 3 suite at {scale:?} scale ...");
+    let t = std::time::Instant::now();
+    let rows = fig3::run(scale);
+    println!("# Figure 3 — per-warp workload distribution (TC vs VC, RCSR)\n");
+    println!("{}", fig3::render(&rows));
+    eprintln!("fig3 done in {:.1}s", t.elapsed().as_secs_f64());
+}

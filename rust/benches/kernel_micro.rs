@@ -1,0 +1,135 @@
+//! `cargo bench --bench kernel_micro` — microbenchmarks of the hot paths:
+//!
+//! * the lock-free local operation (`discharge_once`) per representation,
+//! * the PJRT device launch (K cycles of the AOT executable) per variant,
+//! * graph packing (CSR → device layout),
+//! * end-to-end device solve vs native solve on the same graph.
+
+use wbpr::coordinator::device::DeviceEngine;
+use wbpr::graph::builder::ArcGraph;
+use wbpr::graph::{generators, Bcsr, Rcsr};
+use wbpr::maxflow::lockfree::{discharge_once, LocalCounters};
+use wbpr::maxflow::state::ParState;
+use wbpr::maxflow::{self, EngineKind, SolveOptions};
+use wbpr::runtime::client::DeviceState;
+use wbpr::runtime::pack::PackedGraph;
+use wbpr::runtime::Runtime;
+use wbpr::util::timer::{bench, black_box};
+
+fn discharge_micro() {
+    println!("## discharge_once (the Eq. 1 local operation)\n");
+    let net = wbpr::bench::suite::with_pairs(
+        generators::rmat(&generators::RmatParams { scale: 12, edge_factor: 8, a: 0.57, b: 0.19, c: 0.19, seed: 1 }),
+        4,
+        2,
+    );
+    let g = ArcGraph::build(&net.normalized());
+    let rcsr = Rcsr::build(&g);
+    let bcsr = Bcsr::build(&g);
+    let n = g.n as u32;
+    let r1 = bench("discharge/RCSR (full sweep)", 1, 5, || {
+        let (st, _) = ParState::preflow(&g);
+        let mut c = LocalCounters::default();
+        for u in 0..n {
+            black_box(discharge_once(&g, &rcsr, &st, u, &mut c));
+        }
+    });
+    let r2 = bench("discharge/BCSR (full sweep)", 1, 5, || {
+        let (st, _) = ParState::preflow(&g);
+        let mut c = LocalCounters::default();
+        for u in 0..n {
+            black_box(discharge_once(&g, &bcsr, &st, u, &mut c));
+        }
+    });
+    for r in [r1, r2] {
+        println!("{:<30} {:>9.3} ms/sweep ({:.1} ns/vertex)", r.name, r.mean_ms, r.mean_ms * 1e6 / n as f64);
+    }
+    println!();
+}
+
+fn device_micro() {
+    let Ok(mut rt) = Runtime::from_default_location() else {
+        println!("## device launch: skipped (run `make artifacts`)\n");
+        return;
+    };
+    println!("## device launch latency (PJRT CPU, K cycles per launch)\n");
+    for spec in rt.manifest().variants.clone() {
+        if spec.kind != wbpr::runtime::artifact::VariantKind::Flow {
+            continue; // relabel variants have a different ABI (4 inputs)
+        }
+        // A graph sized for this variant.
+        let side = ((spec.v as f64 - 2.0).sqrt().floor() as usize).min(28).max(4);
+        let net = generators::grid_road(side, side, 0.05, 4, 3);
+        let g = ArcGraph::build(&net.normalized());
+        let b = Bcsr::build(&g);
+        let Ok(packed) = PackedGraph::pack(&g, &b, spec.v, spec.d) else {
+            println!("{:<22} (packing does not fit, skipped)", spec.name);
+            continue;
+        };
+        rt.ensure_compiled(&spec).unwrap();
+        let mut state = DeviceState { cf: packed.cf0.clone(), e: vec![0.0; spec.v], h: packed.h0.clone() };
+        packed.preflow(&mut state.cf, &mut state.e);
+        let mut exec_ms = Vec::new();
+        for _ in 0..10 {
+            let mut s = state.clone();
+            let r = rt.run_cycles(&spec, &packed, &mut s).unwrap();
+            exec_ms.push(r.exec_ms);
+        }
+        let s = wbpr::util::stats::Summary::of(&exec_ms);
+        println!(
+            "{:<22} V={:<5} D={:<3} K={:<4} launch mean {:>7.3} ms (p50 {:.3}, {:.1} µs/cycle)",
+            spec.name,
+            spec.v,
+            spec.d,
+            spec.k,
+            s.mean,
+            s.p50,
+            s.mean * 1e3 / spec.k as f64
+        );
+    }
+    println!();
+}
+
+fn pack_micro() {
+    println!("## packing (CSR -> device layout)\n");
+    let net = generators::grid_road(30, 30, 0.05, 12, 7);
+    let g = ArcGraph::build(&net.normalized());
+    let b = Bcsr::build(&g);
+    let r = bench("pack v1024_d32", 2, 20, || {
+        black_box(PackedGraph::pack(&g, &b, 1024, 32).unwrap());
+    });
+    println!("{:<22} {:>9.3} ms\n", r.name, r.mean_ms);
+}
+
+fn e2e_compare() {
+    let Ok(eng) = DeviceEngine::from_default_location() else {
+        println!("## device vs native: skipped (run `make artifacts`)\n");
+        return;
+    };
+    let mut eng = eng;
+    println!("## end-to-end: device vs native on the same graph\n");
+    let net = generators::grid_road(30, 30, 0.05, 12, 7);
+    let g = ArcGraph::build(&net.normalized());
+    let cold = eng.solve(&g).unwrap(); // includes one-time XLA compilation
+    let warm = eng.solve(&g).unwrap(); // executable cached
+    let native = maxflow::solve_arcs(&g, EngineKind::VertexCentric, wbpr::graph::Representation::Bcsr, &SolveOptions::default());
+    assert_eq!(cold.value, native.value);
+    assert_eq!(warm.value, native.value);
+    println!(
+        "device cold: {:>8.1} ms total ({:.1} exec, {} launches)  [includes XLA compile]",
+        cold.stats.total_ms, cold.stats.kernel_ms, cold.stats.launches
+    );
+    println!(
+        "device warm: {:>8.1} ms total ({:.1} exec, {} launches)",
+        warm.stats.total_ms, warm.stats.kernel_ms, warm.stats.launches
+    );
+    println!("native VC+BCSR: {:>6.1} ms | flow={}", native.stats.total_ms, cold.value);
+}
+
+fn main() {
+    println!("# Kernel microbenchmarks\n");
+    discharge_micro();
+    pack_micro();
+    device_micro();
+    e2e_compare();
+}

@@ -1,0 +1,21 @@
+//! `cargo bench --bench table1_maxflow` — regenerates the paper's Table 1
+//! (max-flow execution times, TC/VC × RCSR/BCSR across the 13-graph
+//! suite): simulated GPU ms (the paper's metric — shape target) plus the
+//! native engines' measured wall-clock. Scale with WBPR_BENCH_SCALE=smoke.
+
+use wbpr::bench::{table1, Scale};
+use wbpr::maxflow::SolveOptions;
+
+fn main() {
+    let scale = match std::env::var("WBPR_BENCH_SCALE").as_deref() {
+        Ok("smoke") => Scale::Smoke,
+        _ => Scale::Full,
+    };
+    let opts = SolveOptions { cycles_per_launch: 256, ..Default::default() };
+    eprintln!("running Table 1 suite at {scale:?} scale ...");
+    let t = std::time::Instant::now();
+    let rows = table1::run(scale, &opts);
+    println!("# Table 1 — max-flow execution time (scaled analogs)\n");
+    println!("{}", table1::render(&rows));
+    eprintln!("table1 done in {:.1}s", t.elapsed().as_secs_f64());
+}

@@ -1,0 +1,21 @@
+//! `cargo bench --bench table2_matching` — regenerates the paper's Table 2
+//! (bipartite matching through the flow pipeline, B0–B12 analogs):
+//! matching sizes (vs Hopcroft–Karp), simulated GPU ms per configuration,
+//! and native wall-clock. Scale with WBPR_BENCH_SCALE=smoke.
+
+use wbpr::bench::{table2, Scale};
+use wbpr::maxflow::SolveOptions;
+
+fn main() {
+    let scale = match std::env::var("WBPR_BENCH_SCALE").as_deref() {
+        Ok("smoke") => Scale::Smoke,
+        _ => Scale::Full,
+    };
+    let opts = SolveOptions { cycles_per_launch: 256, ..Default::default() };
+    eprintln!("running Table 2 suite at {scale:?} scale ...");
+    let t = std::time::Instant::now();
+    let rows = table2::run(scale, &opts);
+    println!("# Table 2 — bipartite matching execution time (scaled analogs)\n");
+    println!("{}", table2::render(&rows));
+    eprintln!("table2 done in {:.1}s", t.elapsed().as_secs_f64());
+}

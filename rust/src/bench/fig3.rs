@@ -1,0 +1,123 @@
+//! Figure 3 — the per-warp workload distribution across the bipartite
+//! suite, TC vs VC on RCSR (the paper's configuration): mean-normalized
+//! spread statistics per graph, plus the paper's two observations (VC
+//! reduces the std; tiny graphs still lose to synchronization).
+
+use super::report::Table;
+use super::suite::{match_smoke_ids, match_suite};
+use super::Scale;
+use crate::graph::builder::ArcGraph;
+use crate::graph::{Rcsr, Representation};
+use crate::maxflow;
+use crate::simt::exec::{simulate_tc, simulate_vc};
+use crate::simt::trace::record;
+use crate::simt::workload::WorkloadDist;
+use crate::simt::{CostParams, GpuModel};
+
+/// One Figure 3 data point.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub id: String,
+    pub paper_name: String,
+    /// Mean-normalized std of per-warp times (the boxplot spread).
+    pub tc_norm_std: f64,
+    pub vc_norm_std: f64,
+    /// p99/mean (tail imbalance).
+    pub tc_p99: f64,
+    pub vc_p99: f64,
+    /// Simulated total times (for the §4.3 note that lower spread does not
+    /// always mean lower total on tiny graphs).
+    pub tc_ms: f64,
+    pub vc_ms: f64,
+}
+
+impl Row {
+    /// The Fig. 3 claim for this graph.
+    pub fn vc_narrower(&self) -> bool {
+        self.vc_norm_std <= self.tc_norm_std
+    }
+}
+
+/// Run the figure across the bipartite suite.
+pub fn run(scale: Scale) -> Vec<Row> {
+    let smoke = match_smoke_ids();
+    let mut out = Vec::new();
+    for case in match_suite() {
+        if scale != Scale::Full && !smoke.contains(&case.id) {
+            continue;
+        }
+        let bg = (case.build)();
+        let net = bg.to_flow_network();
+        let g = ArcGraph::build(&net);
+        let rcsr = Rcsr::build(&g);
+        let trace = record(&g, &rcsr, 128);
+        assert_eq!(trace.value as usize, maxflow::hopcroft_karp::solve(&bg).size);
+        let (model, costs) = (GpuModel::default(), CostParams::default());
+        let tc = simulate_tc(&trace, Representation::Rcsr, &model, &costs);
+        let vc = simulate_vc(&trace, Representation::Rcsr, &model, &costs);
+        let tcd = WorkloadDist::of(&tc);
+        let vcd = WorkloadDist::of(&vc);
+        out.push(Row {
+            id: case.id.to_string(),
+            paper_name: case.paper_name.to_string(),
+            tc_norm_std: tcd.norm_std,
+            vc_norm_std: vcd.norm_std,
+            tc_p99: tcd.p99,
+            vc_p99: vcd.p99,
+            tc_ms: tc.ms,
+            vc_ms: vc.ms,
+        });
+    }
+    out
+}
+
+/// Render the figure data as a table.
+pub fn render(rows: &[Row]) -> String {
+    let mut t = Table::new(&[
+        "Graph", "analog of", "TC std/mean", "VC std/mean", "TC p99/mean", "VC p99/mean", "TC ms", "VC ms", "VC narrower",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.id.clone(),
+            r.paper_name.clone(),
+            format!("{:.3}", r.tc_norm_std),
+            format!("{:.3}", r.vc_norm_std),
+            format!("{:.2}", r.tc_p99),
+            format!("{:.2}", r.vc_p99),
+            super::report::ms(r.tc_ms),
+            super::report::ms(r.vc_ms),
+            if r.vc_narrower() { "yes".into() } else { "NO".into() },
+        ]);
+    }
+    let narrower = rows.iter().filter(|r| r.vc_narrower()).count();
+    format!(
+        "{}\nVC narrows the per-warp distribution on {narrower}/{} graphs (paper: all 13, with B0-B2 still slower overall)\n",
+        t.render(),
+        rows.len()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_rows_produce_distributions() {
+        let rows = run(Scale::Smoke);
+        assert!(!rows.is_empty());
+        for r in &rows {
+            assert!(r.tc_norm_std >= 0.0 && r.vc_norm_std >= 0.0);
+            assert!(r.tc_ms > 0.0 && r.vc_ms > 0.0);
+        }
+        // The skewed representative must show the headline effect.
+        let b7 = rows.iter().find(|r| r.id == "B7").expect("B7 in smoke set");
+        assert!(b7.vc_narrower(), "B7: vc={} tc={}", b7.vc_norm_std, b7.tc_norm_std);
+    }
+
+    #[test]
+    fn render_mentions_counts() {
+        let rows = run(Scale::Smoke);
+        let s = render(&rows);
+        assert!(s.contains("VC narrows"));
+    }
+}

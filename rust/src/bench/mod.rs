@@ -1,0 +1,38 @@
+//! Benchmark harness: regenerates every table and figure of the paper's
+//! evaluation section on the scaled-down graph suites (DESIGN.md §6).
+//!
+//! * [`suite`] — the graph suites: R0–R10/S0–S1 analogs (Table 1) and
+//!   B0–B12 analogs (Table 2), with the paper's per-graph regime notes.
+//! * [`table1`] — max-flow execution times, TC/VC × RCSR/BCSR: measured
+//!   wall-clock of the native engines *and* simulated GPU milliseconds
+//!   from the SIMT cost model.
+//! * [`table2`] — bipartite matching times + max-flow (matching) values.
+//! * [`fig3`] — per-warp workload distribution statistics, TC vs VC.
+//! * [`report`] — markdown table rendering shared by the benches and CLI.
+
+pub mod fig3;
+pub mod report;
+pub mod suite;
+pub mod table1;
+pub mod table2;
+
+/// How much of the suite to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    /// A few seconds: the small representatives of each regime.
+    Smoke,
+    /// The full scaled-down suite (tens of seconds).
+    Full,
+}
+
+impl std::str::FromStr for Scale {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "smoke" | "small" => Ok(Scale::Smoke),
+            "full" => Ok(Scale::Full),
+            other => Err(format!("unknown scale '{other}' (smoke|full)")),
+        }
+    }
+}

@@ -1,0 +1,335 @@
+//! The benchmark graph suites — scaled-down analogs of the paper's
+//! datasets, each matched to the degree-distribution regime that drives
+//! the paper's per-graph results (DESIGN.md §4 substitution table).
+
+use crate::graph::bipartite::{bipartite_zipf, BipartiteGraph};
+use crate::graph::builder::{add_super_terminals, select_pairs, FlowNetwork};
+use crate::graph::generators::{self, GenrmfParams, RmatParams, WashingtonParams};
+
+/// One max-flow suite entry (Table 1 row).
+pub struct FlowCase {
+    /// Paper id (R0..R10, S0, S1).
+    pub id: &'static str,
+    /// Paper dataset this stands in for.
+    pub paper_name: &'static str,
+    /// Regime note (what the paper observed on this graph).
+    pub regime: &'static str,
+    /// Did the paper's VC beat TC here (on the better representation)?
+    pub paper_vc_wins: bool,
+    pub build: fn() -> FlowNetwork,
+}
+
+/// Attach the paper's multi-pair super terminals (§4.1) to a base graph.
+pub fn with_pairs(base: FlowNetwork, pairs: usize, seed: u64) -> FlowNetwork {
+    let ps = select_pairs(&base, pairs, pairs * 3, seed);
+    if ps.is_empty() {
+        return base;
+    }
+    let sources: Vec<u32> = ps.iter().map(|p| p.0).collect();
+    let sinks: Vec<u32> = ps.iter().map(|p| p.1).collect();
+    add_super_terminals(&base, &sources, &sinks, 1 << 20)
+}
+
+/// Table 1 suite: R0–R10 SNAP analogs + S0/S1 DIMACS generators.
+pub fn flow_suite() -> Vec<FlowCase> {
+    vec![
+        FlowCase {
+            id: "R0",
+            paper_name: "Amazon0302",
+            regime: "near-regular co-purchase, one big SCC: workload naturally balanced, VC loses",
+            paper_vc_wins: false,
+            build: || with_pairs(generators::near_regular(6000, 5, 100), 8, 1000),
+        },
+        FlowCase {
+            id: "R1",
+            paper_name: "roadNet-CA",
+            regime: "planar road mesh, max degree < 10: tiles idle, VC+RCSR loses",
+            paper_vc_wins: false,
+            build: || with_pairs(generators::grid_road(110, 100, 0.08, 40, 101), 8, 1001),
+        },
+        FlowCase {
+            id: "R2",
+            paper_name: "roadNet-PA",
+            regime: "planar road mesh (smaller)",
+            paper_vc_wins: false,
+            build: || with_pairs(generators::grid_road(90, 80, 0.08, 30, 102), 8, 1002),
+        },
+        FlowCase {
+            id: "R3",
+            paper_name: "web-BerkStan",
+            regime: "web graph, heavy tail + locality: VC wins on RCSR",
+            paper_vc_wins: true,
+            build: || with_pairs(generators::webgraph(12, 6, 103), 8, 1003),
+        },
+        FlowCase {
+            id: "R4",
+            paper_name: "web-Google",
+            regime: "web graph: VC wins both representations",
+            paper_vc_wins: true,
+            build: || with_pairs(generators::webgraph(12, 4, 104), 8, 1004),
+        },
+        FlowCase {
+            id: "R5",
+            paper_name: "cit-Patents",
+            regime: "heavy-tailed citation graph: the paper's biggest VC win (16-80x)",
+            paper_vc_wins: true,
+            build: || {
+                with_pairs(
+                    generators::rmat(&RmatParams { scale: 13, edge_factor: 6, a: 0.6, b: 0.18, c: 0.18, seed: 105 }),
+                    8,
+                    1005,
+                )
+            },
+        },
+        FlowCase {
+            id: "R6",
+            paper_name: "cit-HepPh",
+            regime: "small dense citation graph: moderate VC win",
+            paper_vc_wins: true,
+            build: || {
+                with_pairs(
+                    generators::rmat(&RmatParams { scale: 10, edge_factor: 12, a: 0.57, b: 0.19, c: 0.19, seed: 106 }),
+                    8,
+                    1006,
+                )
+            },
+        },
+        FlowCase {
+            id: "R7",
+            paper_name: "soc-LiveJournal1",
+            regime: "large social graph, heavy tail: VC wins",
+            paper_vc_wins: true,
+            build: || {
+                with_pairs(
+                    generators::rmat(&RmatParams { scale: 13, edge_factor: 10, a: 0.57, b: 0.19, c: 0.19, seed: 107 }),
+                    8,
+                    1007,
+                )
+            },
+        },
+        FlowCase {
+            id: "R8",
+            paper_name: "soc-Pokec",
+            regime: "dense social graph: VC wins on BCSR",
+            paper_vc_wins: true,
+            build: || {
+                with_pairs(
+                    generators::rmat(&RmatParams { scale: 11, edge_factor: 16, a: 0.57, b: 0.19, c: 0.19, seed: 108 }),
+                    8,
+                    1008,
+                )
+            },
+        },
+        FlowCase {
+            id: "R9",
+            paper_name: "com-YouTube",
+            regime: "sparse community graph, skewed: mixed results",
+            paper_vc_wins: true,
+            build: || {
+                with_pairs(
+                    generators::rmat(&RmatParams { scale: 13, edge_factor: 3, a: 0.6, b: 0.19, c: 0.19, seed: 109 }),
+                    8,
+                    1009,
+                )
+            },
+        },
+        FlowCase {
+            id: "R10",
+            paper_name: "com-Orkut",
+            regime: "very dense social graph: VC ~ parity at huge scale",
+            paper_vc_wins: true,
+            build: || {
+                with_pairs(
+                    generators::rmat(&RmatParams { scale: 11, edge_factor: 28, a: 0.55, b: 0.2, c: 0.2, seed: 110 }),
+                    8,
+                    1010,
+                )
+            },
+        },
+        FlowCase {
+            id: "S0",
+            paper_name: "Washington-RLG",
+            regime: "uniform random level graph: balanced already, VC+RCSR loses",
+            paper_vc_wins: false,
+            build: || {
+                generators::washington_rlg(&WashingtonParams { levels: 64, width: 64, fanout: 3, max_cap: 100, seed: 111 })
+            },
+        },
+        FlowCase {
+            id: "S1",
+            paper_name: "Genrmf",
+            regime: "regular RMF frames: balanced, small VC effect",
+            paper_vc_wins: false,
+            build: || generators::genrmf(&GenrmfParams { a: 8, b: 24, c1: 1, c2: 100, seed: 112 }),
+        },
+    ]
+}
+
+/// One bipartite suite entry (Table 2 row).
+pub struct MatchCase {
+    pub id: &'static str,
+    pub paper_name: &'static str,
+    /// Paper's |L|, |R|, |E| (for the record; ours are scaled).
+    pub paper_dims: (usize, usize, usize),
+    pub paper_vc_wins: bool,
+    pub build: fn() -> BipartiteGraph,
+}
+
+/// Table 2 suite: B0–B12 KONECT analogs. B0–B2 keep the paper's exact
+/// sizes (they are tiny — the "sync overhead dominates" cases); the rest
+/// are scaled down with matched skew.
+pub fn match_suite() -> Vec<MatchCase> {
+    vec![
+        MatchCase {
+            id: "B0",
+            paper_name: "corporate-leadership",
+            paper_dims: (24, 20, 99),
+            paper_vc_wins: false,
+            build: || bipartite_zipf(24, 20, 99, 0.0, 200),
+        },
+        MatchCase {
+            id: "B1",
+            paper_name: "Unicode",
+            paper_dims: (614, 254, 1255),
+            paper_vc_wins: true,
+            build: || bipartite_zipf(614, 254, 1255, 0.8, 201),
+        },
+        MatchCase {
+            id: "B2",
+            paper_name: "UCforum",
+            paper_dims: (899, 522, 7089),
+            paper_vc_wins: true,
+            build: || bipartite_zipf(899, 522, 7089, 0.7, 202),
+        },
+        MatchCase {
+            id: "B3",
+            paper_name: "movielens-u-i",
+            paper_dims: (7601, 4009, 55484),
+            paper_vc_wins: true,
+            build: || bipartite_zipf(3800, 2000, 27000, 1.0, 203),
+        },
+        MatchCase {
+            id: "B4",
+            paper_name: "Marvel",
+            paper_dims: (12942, 6486, 96662),
+            paper_vc_wins: true,
+            build: || bipartite_zipf(6400, 3200, 48000, 1.0, 204),
+        },
+        MatchCase {
+            id: "B5",
+            paper_name: "movielens-u-t",
+            paper_dims: (16528, 4009, 43760),
+            paper_vc_wins: true,
+            build: || bipartite_zipf(8200, 2000, 21800, 1.0, 205),
+        },
+        MatchCase {
+            id: "B6",
+            paper_name: "movielens-t-i",
+            paper_dims: (16528, 7601, 71154),
+            paper_vc_wins: true,
+            build: || bipartite_zipf(8200, 3800, 35500, 1.0, 206),
+        },
+        MatchCase {
+            id: "B7",
+            paper_name: "YouTube",
+            paper_dims: (94238, 30087, 293360),
+            paper_vc_wins: true,
+            build: || bipartite_zipf(11700, 3760, 36600, 1.3, 207),
+        },
+        MatchCase {
+            id: "B8",
+            paper_name: "DBpedia_locations",
+            paper_dims: (172079, 53407, 293697),
+            paper_vc_wins: true,
+            build: || bipartite_zipf(10700, 3330, 18300, 1.4, 208),
+        },
+        MatchCase {
+            id: "B9",
+            paper_name: "BookCrossing",
+            paper_dims: (340523, 105278, 1149739),
+            paper_vc_wins: true,
+            build: || bipartite_zipf(10600, 3290, 35900, 1.2, 209),
+        },
+        MatchCase {
+            id: "B10",
+            paper_name: "stackoverflow",
+            paper_dims: (545195, 96678, 1301942),
+            paper_vc_wins: true,
+            build: || bipartite_zipf(13600, 2410, 32500, 1.3, 210),
+        },
+        MatchCase {
+            id: "B11",
+            paper_name: "IMDB-actor",
+            paper_dims: (896302, 303617, 3782463),
+            paper_vc_wins: true,
+            build: || bipartite_zipf(11200, 3790, 47200, 1.1, 211),
+        },
+        MatchCase {
+            id: "B12",
+            paper_name: "DBLP-author",
+            paper_dims: (5624219, 1953085, 12282059),
+            paper_vc_wins: false, // VC loses on RCSR in the paper
+            build: || bipartite_zipf(14000, 4860, 30600, 0.4, 212),
+        },
+    ]
+}
+
+/// The smoke subsets: one representative per regime.
+pub fn flow_smoke_ids() -> &'static [&'static str] {
+    &["R0", "R2", "R5", "R6", "S1"]
+}
+
+pub fn match_smoke_ids() -> &'static [&'static str] {
+    &["B0", "B2", "B7", "B12"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flow_suite_builds_and_validates() {
+        for case in flow_suite() {
+            if ["R5", "R7", "R9", "R10"].contains(&case.id) {
+                continue; // big ones exercised by the benches
+            }
+            let net = (case.build)();
+            net.validate().unwrap_or_else(|e| panic!("{}: {e}", case.id));
+            assert!(net.n > 100, "{} too small", case.id);
+        }
+    }
+
+    #[test]
+    fn match_suite_builds_and_validates() {
+        for case in match_suite() {
+            let g = (case.build)();
+            g.validate().unwrap_or_else(|e| panic!("{}: {e}", case.id));
+        }
+    }
+
+    #[test]
+    fn suites_have_paper_cardinality() {
+        assert_eq!(flow_suite().len(), 13);
+        assert_eq!(match_suite().len(), 13);
+    }
+
+    #[test]
+    fn smoke_ids_exist() {
+        let flow_ids: Vec<&str> = flow_suite().iter().map(|c| c.id).collect();
+        for id in flow_smoke_ids() {
+            assert!(flow_ids.contains(id));
+        }
+        let match_ids: Vec<&str> = match_suite().iter().map(|c| c.id).collect();
+        for id in match_smoke_ids() {
+            assert!(match_ids.contains(id));
+        }
+    }
+
+    #[test]
+    fn b0_matches_paper_exactly() {
+        let b0 = &match_suite()[0];
+        let g = (b0.build)();
+        assert_eq!((g.nl, g.nr), (24, 20));
+        assert!(g.m() <= 99);
+    }
+}

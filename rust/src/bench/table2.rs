@@ -1,0 +1,161 @@
+//! Table 2 — bipartite matching through the flow pipeline across the
+//! B0–B12 suite: matching sizes (the paper's "Maximum Flow" column),
+//! simulated GPU ms per configuration, native wall-clock, Hopcroft–Karp
+//! agreement.
+
+use super::report::{ms, speedup, Table};
+use super::suite::{match_smoke_ids, match_suite, MatchCase};
+use super::table1::{geo_mean, CONFIGS};
+use super::Scale;
+use crate::graph::builder::ArcGraph;
+use crate::graph::Rcsr;
+use crate::maxflow::{self, EngineKind, SolveOptions};
+use crate::simt::exec::{simulate_tc, simulate_vc};
+use crate::simt::trace::record;
+use crate::simt::{CostParams, GpuModel};
+
+/// One Table 2 row.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub id: String,
+    pub paper_name: String,
+    pub l: usize,
+    pub r: usize,
+    pub e: usize,
+    /// Matching size (= max-flow value; the paper's "Maximum Flow").
+    pub matching: usize,
+    pub sim_ms: [f64; 4],
+    pub native_ms: [f64; 4],
+    pub paper_vc_wins: bool,
+}
+
+impl Row {
+    pub fn speedup_rcsr(&self) -> f64 {
+        self.sim_ms[0] / self.sim_ms[2]
+    }
+
+    pub fn speedup_bcsr(&self) -> f64 {
+        self.sim_ms[1] / self.sim_ms[3]
+    }
+
+    pub fn shape_agrees(&self) -> bool {
+        let vc_wins = self.speedup_rcsr().max(self.speedup_bcsr()) > 1.0;
+        vc_wins == self.paper_vc_wins
+    }
+}
+
+/// Run one matching case across all four configurations.
+pub fn run_case(case: &MatchCase, opts: &SolveOptions) -> Row {
+    let bg = (case.build)();
+    let want = maxflow::hopcroft_karp::solve(&bg).size;
+    let net = bg.to_flow_network();
+    let g = ArcGraph::build(&net);
+    let rcsr = Rcsr::build(&g);
+
+    let trace = record(&g, &rcsr, 128);
+    assert_eq!(trace.value as usize, want, "{}: trace vs Hopcroft-Karp", case.id);
+    let (model, costs) = (GpuModel::default(), CostParams::default());
+    let mut sim_ms = [0.0; 4];
+    for (i, (_, vc, rep)) in CONFIGS.iter().enumerate() {
+        let r = if *vc { simulate_vc(&trace, *rep, &model, &costs) } else { simulate_tc(&trace, *rep, &model, &costs) };
+        sim_ms[i] = r.ms;
+    }
+
+    let mut native_ms = [0.0; 4];
+    for (i, (_, vc, rep)) in CONFIGS.iter().enumerate() {
+        let kind = if *vc { EngineKind::VertexCentric } else { EngineKind::ThreadCentric };
+        let m = maxflow::matching::solve(&bg, kind, *rep, opts);
+        assert_eq!(m.matching.size, want, "{}: {} matching mismatch", case.id, CONFIGS[i].0);
+        maxflow::hopcroft_karp::validate(&bg, &m.matching).unwrap();
+        native_ms[i] = m.flow.stats.total_ms;
+    }
+
+    Row {
+        id: case.id.to_string(),
+        paper_name: case.paper_name.to_string(),
+        l: bg.nl,
+        r: bg.nr,
+        e: bg.m(),
+        matching: want,
+        sim_ms,
+        native_ms,
+        paper_vc_wins: case.paper_vc_wins,
+    }
+}
+
+/// Run the suite at the given scale.
+pub fn run(scale: Scale, opts: &SolveOptions) -> Vec<Row> {
+    let smoke = match_smoke_ids();
+    match_suite()
+        .iter()
+        .filter(|c| scale == Scale::Full || smoke.contains(&c.id))
+        .map(|c| run_case(c, opts))
+        .collect()
+}
+
+/// Render rows in the paper's Table 2 format.
+pub fn render(rows: &[Row]) -> String {
+    let mut t = Table::new(&[
+        "Graph", "analog of", "L", "R", "E", "MaxFlow", "sim TC+RCSR", "sim TC+BCSR", "sim VC+RCSR",
+        "sim VC+BCSR", "RCSR speedup", "BCSR speedup", "shape",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.id.clone(),
+            r.paper_name.clone(),
+            r.l.to_string(),
+            r.r.to_string(),
+            r.e.to_string(),
+            r.matching.to_string(),
+            ms(r.sim_ms[0]),
+            ms(r.sim_ms[1]),
+            ms(r.sim_ms[2]),
+            ms(r.sim_ms[3]),
+            speedup(r.speedup_rcsr()),
+            speedup(r.speedup_bcsr()),
+            if r.shape_agrees() { "agrees".into() } else { "DIFFERS".into() },
+        ]);
+    }
+    let n_agree = rows.iter().filter(|r| r.shape_agrees()).count();
+    format!(
+        "{}\nshape agreement: {n_agree}/{} | geomean speedup RCSR {} BCSR {} (paper avg: 2.29x / 1.89x)\n",
+        t.render(),
+        rows.len(),
+        speedup(geo_mean(rows.iter().map(|r| r.speedup_rcsr()))),
+        speedup(geo_mean(rows.iter().map(|r| r.speedup_bcsr()))),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn b0_runs_exactly() {
+        let opts = SolveOptions { threads: 2, cycles_per_launch: 64, ..Default::default() };
+        let suite = match_suite();
+        let row = run_case(&suite[0], &opts);
+        assert_eq!(row.id, "B0");
+        assert!(row.matching > 0 && row.matching <= 20);
+        // The paper's B0 point: too small for VC to pay off.
+        assert!(!row.paper_vc_wins);
+    }
+
+    #[test]
+    fn render_reports_agreement() {
+        let rows = vec![Row {
+            id: "B9".into(),
+            paper_name: "x".into(),
+            l: 1,
+            r: 1,
+            e: 1,
+            matching: 1,
+            sim_ms: [4.0, 2.0, 2.0, 1.0],
+            native_ms: [0.0; 4],
+            paper_vc_wins: true,
+        }];
+        let s = render(&rows);
+        assert!(s.contains("B9"));
+        assert!(s.contains("agrees"));
+    }
+}

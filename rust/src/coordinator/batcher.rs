@@ -1,0 +1,138 @@
+//! Multi-pair batching: the paper computes one multi-source multi-sink
+//! max-flow over 20 BFS-selected pairs by wiring a super source/sink
+//! (§4.1). The batcher generalizes that: pair requests against the same
+//! graph accumulate and are flushed as a single super-terminal solve,
+//! amortizing packing/compilation, with per-batch size limits.
+
+use crate::graph::builder::{add_super_terminals, FlowNetwork};
+use crate::graph::{Capacity, VertexId};
+
+/// A batched multi-pair job, ready to solve.
+#[derive(Debug, Clone)]
+pub struct PairBatch {
+    /// The pairs merged into this batch (request order preserved).
+    pub pairs: Vec<(VertexId, VertexId)>,
+    /// The augmented network (super source/sink attached).
+    pub net: FlowNetwork,
+}
+
+/// Accumulates (source, sink) pair requests over a fixed base graph.
+#[derive(Debug)]
+pub struct PairBatcher {
+    base: FlowNetwork,
+    super_cap: Capacity,
+    max_pairs: usize,
+    pending: Vec<(VertexId, VertexId)>,
+}
+
+impl PairBatcher {
+    /// `super_cap` bounds per-terminal throughput (pass the sum of
+    /// adjacent capacities or a large constant for unit-cap graphs).
+    pub fn new(base: FlowNetwork, super_cap: Capacity, max_pairs: usize) -> PairBatcher {
+        assert!(max_pairs >= 1);
+        PairBatcher { base, super_cap, max_pairs, pending: Vec::new() }
+    }
+
+    /// Queue a pair; returns a full batch if the size limit was reached.
+    pub fn add(&mut self, s: VertexId, t: VertexId) -> Option<PairBatch> {
+        assert!((s as usize) < self.base.n && (t as usize) < self.base.n && s != t);
+        self.pending.push((s, t));
+        if self.pending.len() >= self.max_pairs {
+            self.flush()
+        } else {
+            None
+        }
+    }
+
+    /// Number of queued pairs.
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Drain the queue into a batch (None if empty).
+    pub fn flush(&mut self) -> Option<PairBatch> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        let pairs: Vec<(VertexId, VertexId)> = std::mem::take(&mut self.pending);
+        // Dedup terminals (a vertex may appear in several pairs).
+        let mut sources: Vec<VertexId> = pairs.iter().map(|p| p.0).collect();
+        let mut sinks: Vec<VertexId> = pairs.iter().map(|p| p.1).collect();
+        sources.sort_unstable();
+        sources.dedup();
+        sinks.sort_unstable();
+        sinks.dedup();
+        let net = add_super_terminals(&self.base, &sources, &sinks, self.super_cap);
+        Some(PairBatch { pairs, net })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    fn base() -> FlowNetwork {
+        generators::grid_road(6, 6, 0.0, 0, 1)
+    }
+
+    #[test]
+    fn flush_builds_super_terminals() {
+        let mut b = PairBatcher::new(base(), 100, 8);
+        assert!(b.add(0, 35).is_none());
+        assert!(b.add(5, 30).is_none());
+        let batch = b.flush().unwrap();
+        assert_eq!(batch.pairs.len(), 2);
+        assert_eq!(batch.net.n, 36 + 2);
+        assert_eq!(b.pending(), 0);
+        batch.net.validate().unwrap();
+    }
+
+    #[test]
+    fn auto_flush_at_capacity() {
+        let mut b = PairBatcher::new(base(), 100, 2);
+        assert!(b.add(0, 35).is_none());
+        let batch = b.add(1, 34).expect("must flush at max_pairs");
+        assert_eq!(batch.pairs.len(), 2);
+    }
+
+    #[test]
+    fn duplicate_terminals_deduped() {
+        let mut b = PairBatcher::new(base(), 100, 8);
+        b.add(0, 35);
+        b.add(0, 34);
+        b.add(1, 35);
+        let batch = b.flush().unwrap();
+        // 2 distinct sources, 2 distinct sinks -> 4 super edges.
+        assert_eq!(batch.net.m(), base().m() + 4);
+        // No pair lost (conservation).
+        assert_eq!(batch.pairs.len(), 3);
+    }
+
+    #[test]
+    fn empty_flush_is_none() {
+        let mut b = PairBatcher::new(base(), 100, 4);
+        assert!(b.flush().is_none());
+    }
+
+    #[test]
+    fn batched_flow_bounds_individual_flows() {
+        // The super-terminal flow upper-bounds each individual pair flow
+        // and lower-bounds their max (sanity of the reduction).
+        let net = base();
+        let mut b = PairBatcher::new(net.clone(), 1 << 20, 8);
+        b.add(0, 35);
+        b.add(7, 28);
+        let batch = b.flush().unwrap();
+        let g_batch = crate::graph::builder::ArcGraph::build(&batch.net.normalized());
+        let batch_flow = crate::maxflow::dinic::solve(&g_batch).value;
+        for &(s, t) in &batch.pairs {
+            let mut single = net.clone();
+            single.s = s;
+            single.t = t;
+            let g1 = crate::graph::builder::ArcGraph::build(&single.normalized());
+            let f1 = crate::maxflow::dinic::solve(&g1).value;
+            assert!(batch_flow >= f1, "batch {batch_flow} < single {f1}");
+        }
+    }
+}

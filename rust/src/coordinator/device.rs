@@ -1,0 +1,244 @@
+//! The device engine: Algorithm 1's outer loop with the AOT-compiled XLA
+//! executable playing the GPU. Per launch: K bulk-synchronous push-relabel
+//! cycles on the device, then the host global relabel + ExcessTotal
+//! accounting (`maxflow::global_relabel` — the same code the native
+//! engines use), heights re-uploaded, until the flow value is proven
+//! complete.
+
+use crate::graph::builder::ArcGraph;
+use crate::graph::Bcsr;
+use crate::maxflow::global_relabel::{global_relabel, ExcessAccounting};
+use crate::maxflow::state::ParState;
+use crate::maxflow::{FlowResult, SolveStats};
+use crate::runtime::client::DeviceState;
+use crate::runtime::pack::PackedGraph;
+use crate::runtime::{Runtime, VariantSpec};
+use crate::util::Timer;
+use anyhow::{anyhow, Context, Result};
+use std::sync::atomic::Ordering;
+
+/// Safety cap on device launches (non-convergence = bug).
+const MAX_LAUNCHES: u64 = 10_000;
+
+/// Solves max-flow jobs on the PJRT device.
+pub struct DeviceEngine {
+    runtime: Runtime,
+    /// Run the host global relabel between launches (disable to ablate —
+    /// the device alone still converges, just slower).
+    pub global_relabel: bool,
+    /// Extension: run the global relabel *on the device* (the
+    /// `wbpr_gr_*` relaxation artifact) instead of the host BFS. The
+    /// ExcessTotal accounting stays on the host either way.
+    pub device_relabel: bool,
+}
+
+impl DeviceEngine {
+    pub fn new(runtime: Runtime) -> DeviceEngine {
+        DeviceEngine { runtime, global_relabel: true, device_relabel: false }
+    }
+
+    pub fn from_default_location() -> Result<DeviceEngine> {
+        Ok(DeviceEngine::new(Runtime::from_default_location()?))
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    /// Which variant would host this graph?
+    pub fn variant_for(&self, g: &ArcGraph, rep: &Bcsr) -> Option<VariantSpec> {
+        use crate::graph::residual::Residual as _;
+        let max_deg = (0..g.n as u32).map(|u| rep.degree(u)).max().unwrap_or(0);
+        self.runtime.pick(g.n, max_deg)
+    }
+
+    /// Solve max-flow on the device.
+    pub fn solve(&mut self, g: &ArcGraph) -> Result<FlowResult> {
+        let total_timer = Timer::start();
+        let rep = Bcsr::build(g);
+        let spec = self
+            .variant_for(g, &rep)
+            .context("no AOT variant fits this graph (run `make artifacts` with larger variants)")?;
+        let packed = PackedGraph::pack(g, &rep, spec.v, spec.d).map_err(|e| anyhow!(e))?;
+        // §Perf: loop-invariant inputs (nbr/rev/mask/excl/nreal) are built
+        // and uploaded once per job, not per launch.
+        let job = self.runtime.prepare(&spec, &packed)?;
+        let mut state = DeviceState { cf: packed.cf0.clone(), e: vec![0.0; spec.v], h: packed.h0.clone() };
+        let excess_total = packed.preflow(&mut state.cf, &mut state.e);
+        let mut acct = ExcessAccounting::new(g.n, excess_total);
+        let mut stats = SolveStats::default();
+        let mut cf_arcs = vec![0i64; g.num_arcs()];
+
+        loop {
+            stats.launches += 1;
+            if stats.launches > MAX_LAUNCHES {
+                return Err(anyhow!("device engine did not converge after {MAX_LAUNCHES} launches"));
+            }
+            let launch = self.runtime.run_prepared(&job, &mut state)?;
+            stats.kernel_ms += launch.exec_ms;
+            stats.cycles += spec.k as u64;
+
+            // Global relabel: device relaxation kernel (extension) or the
+            // host BFS; ExcessTotal accounting is host-side either way.
+            let gr_spec = if self.device_relabel { self.runtime.manifest().pick_relabel(&spec).cloned() } else { None };
+            if let Some(gr) = gr_spec {
+                if self.global_relabel || launch.active == 0 {
+                    let dist = self.device_global_relabel(&gr, &job, g, &mut state, &mut stats)?;
+                    packed.unpack_cf(&state.cf, &mut cf_arcs);
+                    let st = mirror_state(g, &cf_arcs, &state);
+                    settle_accounting(g, &dist, &st, &mut acct);
+                    stats.global_relabels += 1;
+                    if acct.done(g, &st) || launch.active == 0 {
+                        let value = st.excess(g.t);
+                        stats.total_ms = total_timer.ms();
+                        return Ok(FlowResult { value, cf: cf_arcs, stats });
+                    }
+                    continue;
+                }
+            }
+            // Host mirror of the device state for the global relabel +
+            // termination accounting.
+            packed.unpack_cf(&state.cf, &mut cf_arcs);
+            let st = mirror_state(g, &cf_arcs, &state);
+            if self.global_relabel || launch.active == 0 {
+                global_relabel(g, &rep, &st, &mut acct, self.global_relabel);
+                stats.global_relabels += 1;
+                // Re-upload the (possibly) updated heights.
+                for u in 0..g.n {
+                    state.h[u] = st.h[u].load(Ordering::Relaxed) as i32;
+                }
+            }
+            if acct.done(g, &st) || launch.active == 0 {
+                let value = st.excess(g.t);
+                stats.total_ms = total_timer.ms();
+                return Ok(FlowResult { value, cf: cf_arcs, stats });
+            }
+        }
+    }
+}
+
+const DIST_BIG: i32 = 1 << 30;
+
+impl DeviceEngine {
+    /// Run the relaxation kernel to its fixpoint and write the resulting
+    /// heights into `state.h`. Returns the distance vector.
+    fn device_global_relabel(
+        &mut self,
+        gr: &VariantSpec,
+        job: &crate::runtime::client::PreparedJob,
+        g: &ArcGraph,
+        state: &mut DeviceState,
+        stats: &mut SolveStats,
+    ) -> Result<Vec<i32>> {
+        let mut dist = vec![DIST_BIG; gr.v];
+        dist[g.t as usize] = 0;
+        // Each launch does K sweeps; the BFS depth is < n, so the loop is
+        // bounded; `changed == 0` certifies the fixpoint.
+        for _ in 0..(g.n / gr.k + 2) {
+            let (changed, ms) = self.runtime.run_relabel(gr, job, &state.cf, &mut dist)?;
+            stats.kernel_ms += ms;
+            if changed == 0 {
+                break;
+            }
+        }
+        for u in 0..g.n {
+            let du = dist[u];
+            state.h[u] = if u == g.s as usize {
+                g.n as i32
+            } else if du >= DIST_BIG {
+                g.n as i32 // unreachable: deactivate
+            } else {
+                du
+            };
+        }
+        Ok(dist)
+    }
+}
+
+/// ExcessTotal accounting from a device-computed distance labeling
+/// (mirrors `maxflow::global_relabel`'s unreachable-cancel logic).
+fn settle_accounting(g: &ArcGraph, dist: &[i32], st: &ParState, acct: &mut ExcessAccounting) {
+    for u in 0..g.n as u32 {
+        if u == g.s || u == g.t {
+            continue;
+        }
+        let reachable = dist[u as usize] < DIST_BIG;
+        acct.settle(u, reachable, st.excess(u));
+    }
+}
+
+/// Build a host `ParState` view of the device state (for the shared global
+/// relabel / accounting code).
+fn mirror_state(g: &ArcGraph, cf_arcs: &[i64], state: &DeviceState) -> ParState {
+    use std::sync::atomic::{AtomicI64, AtomicU32};
+    ParState {
+        cf: cf_arcs.iter().map(|&c| AtomicI64::new(c)).collect(),
+        e: (0..g.n).map(|u| AtomicI64::new(state.e[u] as i64)).collect(),
+        h: (0..g.n).map(|u| AtomicU32::new(state.h[u].max(0) as u32)).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::FlowNetwork;
+    use crate::graph::generators;
+    use crate::maxflow;
+
+    fn engine() -> Option<DeviceEngine> {
+        match DeviceEngine::from_default_location() {
+            Ok(e) => Some(e),
+            Err(e) => {
+                eprintln!("skipping device test (artifacts not built): {e}");
+                None
+            }
+        }
+    }
+
+    fn check(eng: &mut DeviceEngine, net: &FlowNetwork) {
+        let g = ArcGraph::build(&net.normalized());
+        let want = maxflow::dinic::solve(&g).value;
+        let got = eng.solve(&g).unwrap();
+        assert_eq!(got.value, want, "device flow on {}", net.name);
+        maxflow::verify(&g, &got).unwrap();
+    }
+
+    #[test]
+    fn device_matches_dinic_on_random_graphs() {
+        let Some(mut eng) = engine() else { return };
+        for seed in 0..3 {
+            check(&mut eng, &generators::erdos_renyi(40, 200, 6, seed));
+        }
+    }
+
+    #[test]
+    fn device_solves_structured_graphs() {
+        let Some(mut eng) = engine() else { return };
+        check(&mut eng, &generators::grid_road(8, 8, 0.1, 4, 2));
+        check(
+            &mut eng,
+            &generators::washington_rlg(&generators::WashingtonParams {
+                levels: 5,
+                width: 8,
+                fanout: 3,
+                max_cap: 9,
+                seed: 4,
+            }),
+        );
+    }
+
+    #[test]
+    fn device_without_global_relabel_still_converges() {
+        let Some(mut eng) = engine() else { return };
+        eng.global_relabel = false;
+        check(&mut eng, &generators::erdos_renyi(30, 150, 5, 7));
+    }
+
+    #[test]
+    fn oversize_graph_is_rejected() {
+        let Some(mut eng) = engine() else { return };
+        let net = generators::erdos_renyi(5000, 8000, 3, 1);
+        let g = ArcGraph::build(&net.normalized());
+        assert!(eng.solve(&g).is_err());
+    }
+}

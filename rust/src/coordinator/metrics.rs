@@ -1,0 +1,107 @@
+//! Coordinator metrics: per-engine job counters and latency summaries,
+//! cheap enough to sit on the serving path.
+
+use crate::util::stats::Welford;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// One engine's accumulated metrics.
+#[derive(Debug, Default, Clone)]
+pub struct EngineMetrics {
+    pub jobs: u64,
+    pub failures: u64,
+    pub latency_ms: Welford,
+    pub total_value: i64,
+}
+
+/// Thread-safe metrics registry keyed by engine label.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<BTreeMap<String, EngineMetrics>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Record a completed job.
+    pub fn record(&self, engine: &str, latency_ms: f64, value: i64) {
+        let mut m = self.inner.lock().unwrap();
+        let e = m.entry(engine.to_string()).or_default();
+        e.jobs += 1;
+        e.latency_ms.push(latency_ms);
+        e.total_value += value;
+    }
+
+    /// Record a failed job.
+    pub fn record_failure(&self, engine: &str) {
+        let mut m = self.inner.lock().unwrap();
+        m.entry(engine.to_string()).or_default().failures += 1;
+    }
+
+    /// Snapshot for reporting.
+    pub fn snapshot(&self) -> BTreeMap<String, EngineMetrics> {
+        self.inner.lock().unwrap().clone()
+    }
+
+    /// Human-readable table.
+    pub fn render(&self) -> String {
+        let snap = self.snapshot();
+        let mut out = String::from("engine                     jobs  fail   mean ms    std ms\n");
+        for (k, v) in snap {
+            out.push_str(&format!(
+                "{k:<25} {jobs:>5} {fail:>5} {mean:>9.3} {std:>9.3}\n",
+                jobs = v.jobs,
+                fail = v.failures,
+                mean = v.latency_ms.mean(),
+                std = v.latency_ms.std(),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.record("native:VC+BCSR", 1.5, 10);
+        m.record("native:VC+BCSR", 2.5, 20);
+        m.record("device:v64", 0.5, 5);
+        m.record_failure("device:v64");
+        let s = m.snapshot();
+        assert_eq!(s["native:VC+BCSR"].jobs, 2);
+        assert!((s["native:VC+BCSR"].latency_ms.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(s["native:VC+BCSR"].total_value, 30);
+        assert_eq!(s["device:v64"].failures, 1);
+    }
+
+    #[test]
+    fn render_contains_engines() {
+        let m = Metrics::new();
+        m.record("x", 1.0, 1);
+        let r = m.render();
+        assert!(r.contains('x'));
+        assert!(r.contains("jobs"));
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let m = std::sync::Arc::new(Metrics::new());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let m = m.clone();
+                s.spawn(move || {
+                    for i in 0..250 {
+                        m.record("t", i as f64, 1);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.snapshot()["t"].jobs, 1000);
+    }
+}

@@ -1,0 +1,26 @@
+//! L3 coordinator — the serving layer around the engines.
+//!
+//! The paper's system is a hybrid host/device loop (GPU kernel cycles ↔
+//! CPU global relabel). This module packages that loop as a service a
+//! downstream user can actually deploy:
+//!
+//! * [`device`] — the **device engine**: packs a graph for an AOT variant,
+//!   alternates PJRT launches with host global relabels, terminates via the
+//!   ExcessTotal accounting (Alg. 1's outer loop, with the XLA executable
+//!   as the "GPU").
+//! * [`router`] — device-vs-native placement by graph shape + the paper's
+//!   degree-CV heuristic for picking TC vs VC natively.
+//! * [`batcher`] — multi-pair max-flow batching through the super-
+//!   source/super-sink reduction (paper §4.1's 20-pair setup).
+//! * [`server`] — the leader event loop: worker threads, job queue,
+//!   result collection, metrics.
+//! * [`metrics`] — counters + latency summaries.
+
+pub mod batcher;
+pub mod device;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use router::{Route, Router};
+pub use server::{Coordinator, CoordinatorConfig, Job, JobOutput};

@@ -1,0 +1,150 @@
+//! Job routing: device vs native placement, and the paper's §4.2 heuristic
+//! for choosing the native engine (vertex-centric pays off on graphs with
+//! high degree variance and enough size to amortize synchronization;
+//! thread-centric wins on small or flat-degree graphs).
+
+use crate::graph::csr::DegreeStats;
+use crate::graph::Representation;
+use crate::maxflow::EngineKind;
+use crate::runtime::{Manifest, VariantSpec};
+
+/// Where a job should run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Route {
+    /// AOT-compiled XLA executable via PJRT.
+    Device(VariantSpec),
+    /// In-process parallel engine.
+    Native { kind: EngineKind, rep: Representation },
+}
+
+impl Route {
+    pub fn describe(&self) -> String {
+        match self {
+            Route::Device(v) => format!("device:{}", v.name),
+            Route::Native { kind, rep } => format!("native:{}+{}", kind.name(), rep.name()),
+        }
+    }
+}
+
+/// Routing policy.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Degree coefficient-of-variation above which VC is preferred
+    /// (paper §4.2: "suitable for graphs with a high standard deviation
+    /// of degree").
+    pub vc_cv_threshold: f64,
+    /// Minimum vertex count for VC (below this, synchronization overhead
+    /// dominates — the paper's B0–B2 observation).
+    pub vc_min_vertices: usize,
+    /// Prefer the device when a variant fits.
+    pub prefer_device: bool,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig { vc_cv_threshold: 0.8, vc_min_vertices: 1024, prefer_device: true }
+    }
+}
+
+/// Routes jobs by graph shape.
+#[derive(Debug)]
+pub struct Router {
+    manifest: Option<Manifest>,
+    pub config: RouterConfig,
+}
+
+impl Router {
+    pub fn new(manifest: Option<Manifest>, config: RouterConfig) -> Router {
+        Router { manifest, config }
+    }
+
+    /// Decide placement from graph shape: vertex count, max residual
+    /// degree, and the degree distribution.
+    pub fn route(&self, n: usize, max_residual_degree: usize, degrees: &DegreeStats) -> Route {
+        if self.config.prefer_device {
+            if let Some(m) = &self.manifest {
+                if let Some(spec) = m.pick(n, max_residual_degree) {
+                    return Route::Device(spec.clone());
+                }
+            }
+        }
+        let kind = if degrees.cv() >= self.config.vc_cv_threshold && n >= self.config.vc_min_vertices {
+            EngineKind::VertexCentric
+        } else if n < self.config.vc_min_vertices {
+            // Small graphs: sync overhead dominates; TC (or effectively
+            // sequential TC) is the paper's recommendation.
+            EngineKind::ThreadCentric
+        } else {
+            // Large flat-degree graphs: VC+BCSR still won Table 1 overall;
+            // keep VC but note TC is competitive.
+            EngineKind::VertexCentric
+        };
+        // BCSR is the paper's overall winner for max-flow; RCSR pays off
+        // for high average degree (bipartite matching regime).
+        let rep = if degrees.mean >= 12.0 { Representation::Rcsr } else { Representation::Bcsr };
+        Route::Native { kind, rep }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(
+            Path::new("/tmp"),
+            r#"{"abi":1,"format":"hlo-text","variants":[
+                {"name":"v64","file":"a","v":64,"d":8,"k":16,"tile":64},
+                {"name":"v1024","file":"b","v":1024,"d":32,"k":64,"tile":128}]}"#,
+        )
+        .unwrap()
+    }
+
+    fn flat(mean: f64) -> DegreeStats {
+        DegreeStats { mean, std: 0.1 * mean, max: mean as usize * 2, min: 1 }
+    }
+
+    fn skewed(mean: f64) -> DegreeStats {
+        DegreeStats { mean, std: 3.0 * mean, max: 10_000, min: 0 }
+    }
+
+    #[test]
+    fn small_graphs_go_to_device() {
+        let r = Router::new(Some(manifest()), RouterConfig::default());
+        match r.route(50, 8, &flat(4.0)) {
+            Route::Device(v) => assert_eq!(v.name, "v64"),
+            other => panic!("expected device, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversize_graphs_fall_back_to_native() {
+        let r = Router::new(Some(manifest()), RouterConfig::default());
+        let route = r.route(100_000, 50, &skewed(10.0));
+        assert!(matches!(route, Route::Native { kind: EngineKind::VertexCentric, .. }));
+    }
+
+    #[test]
+    fn flat_small_native_graphs_use_tc() {
+        let r = Router::new(None, RouterConfig::default());
+        let route = r.route(500, 8, &flat(4.0));
+        assert!(matches!(route, Route::Native { kind: EngineKind::ThreadCentric, .. }), "{route:?}");
+    }
+
+    #[test]
+    fn high_mean_degree_prefers_rcsr() {
+        let r = Router::new(None, RouterConfig::default());
+        match r.route(100_000, 500, &skewed(20.0)) {
+            Route::Native { rep, .. } => assert_eq!(rep, Representation::Rcsr),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn device_can_be_disabled() {
+        let cfg = RouterConfig { prefer_device: false, ..Default::default() };
+        let r = Router::new(Some(manifest()), cfg);
+        assert!(matches!(r.route(50, 8, &flat(4.0)), Route::Native { .. }));
+    }
+}

@@ -1,0 +1,410 @@
+//! The leader event loop: a thread-pool coordinator that routes max-flow /
+//! matching jobs to native engine workers or the PJRT device worker,
+//! collects results, and keeps serving metrics.
+//!
+//! Topology: N native workers share one queue; the device worker (if the
+//! AOT artifacts are present) owns its own queue because the PJRT client
+//! lives on that thread. The router decides placement per job from the
+//! graph's shape (see [`super::router`]).
+
+use super::metrics::Metrics;
+use super::router::{Route, Router, RouterConfig};
+use crate::graph::bipartite::BipartiteGraph;
+use crate::graph::builder::{ArcGraph, FlowNetwork};
+use crate::graph::csr::{Csr, DegreeStats};
+use crate::graph::Representation;
+use crate::maxflow::{self, EngineKind, SolveOptions};
+use crate::runtime::Manifest;
+use crate::util::Timer;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// A unit of work.
+#[derive(Debug, Clone)]
+pub enum Job {
+    /// Max-flow with explicit engine choice.
+    MaxFlow { net: FlowNetwork, kind: EngineKind, rep: Representation },
+    /// Max-flow, placement decided by the router (device if it fits).
+    MaxFlowAuto { net: FlowNetwork },
+    /// Bipartite matching through the flow pipeline.
+    Matching { graph: BipartiteGraph, kind: EngineKind, rep: Representation },
+}
+
+/// A finished job.
+#[derive(Debug)]
+pub struct JobOutput {
+    pub id: u64,
+    pub result: Result<JobValue, String>,
+}
+
+/// Successful payload.
+#[derive(Debug, Clone)]
+pub struct JobValue {
+    /// Max-flow value / matching size.
+    pub value: i64,
+    /// Engine label that served the job.
+    pub engine: String,
+    /// End-to-end latency (queue + solve), ms.
+    pub ms: f64,
+}
+
+/// Coordinator configuration (see `configs/default.ini`).
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub native_workers: usize,
+    pub enable_device: bool,
+    pub solve: SolveOptions,
+    pub router: RouterConfig,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            native_workers: 2,
+            enable_device: true,
+            solve: SolveOptions::default(),
+            router: RouterConfig::default(),
+        }
+    }
+}
+
+enum Envelope {
+    Work(u64, Job, Timer),
+}
+
+/// The running coordinator.
+pub struct Coordinator {
+    tx_native: Option<mpsc::Sender<Envelope>>,
+    tx_device: Option<mpsc::Sender<Envelope>>,
+    rx_out: mpsc::Receiver<JobOutput>,
+    next_id: AtomicU64,
+    router: Router,
+    metrics: Arc<Metrics>,
+    handles: Vec<JoinHandle<()>>,
+    config: CoordinatorConfig,
+}
+
+impl Coordinator {
+    /// Spawn workers. Device support activates only if `enable_device`
+    /// and the artifacts manifest is found.
+    pub fn start(config: CoordinatorConfig) -> Coordinator {
+        let metrics = Arc::new(Metrics::new());
+        let (tx_out, rx_out) = mpsc::channel::<JobOutput>();
+
+        // Native worker pool over a shared queue.
+        let (tx_native, rx_native) = mpsc::channel::<Envelope>();
+        let rx_native = Arc::new(Mutex::new(rx_native));
+        let mut handles = Vec::new();
+        for w in 0..config.native_workers.max(1) {
+            let rx = rx_native.clone();
+            let tx_out = tx_out.clone();
+            let metrics = metrics.clone();
+            let solve = config.solve.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("wbpr-native-{w}"))
+                    .spawn(move || native_worker(rx, tx_out, metrics, solve))
+                    .expect("spawn native worker"),
+            );
+        }
+
+        // Device worker, if artifacts exist.
+        let manifest = crate::runtime::find_artifacts_dir().and_then(|d| Manifest::load(&d).ok());
+        let tx_device = if config.enable_device && manifest.is_some() {
+            let (tx_device, rx_device) = mpsc::channel::<Envelope>();
+            let tx_out = tx_out.clone();
+            let metrics = metrics.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name("wbpr-device".into())
+                    .spawn(move || device_worker(rx_device, tx_out, metrics))
+                    .expect("spawn device worker"),
+            );
+            Some(tx_device)
+        } else {
+            None
+        };
+
+        let router = Router::new(manifest, config.router.clone());
+        Coordinator {
+            tx_native: Some(tx_native),
+            tx_device,
+            rx_out,
+            next_id: AtomicU64::new(1),
+            router,
+            metrics,
+            handles,
+            config,
+        }
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn has_device(&self) -> bool {
+        self.tx_device.is_some()
+    }
+
+    /// Submit a job; returns its id. Results arrive via [`Coordinator::recv`].
+    pub fn submit(&self, job: Job) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let timer = Timer::start();
+        let to_device = match &job {
+            Job::MaxFlowAuto { net } => {
+                let adj = Csr::from_edges(net.n, net.edges.iter().map(|e| (e.u, e.v)));
+                let stats = DegreeStats::of(&adj);
+                // Residual degree ≈ in+out; bound by 2*max out-degree as a
+                // cheap upper estimate, refined by the device worker.
+                let max_res_deg = residual_max_degree(net);
+                matches!(self.router.route(net.n + 2, max_res_deg, &stats), Route::Device(_))
+            }
+            _ => false,
+        };
+        let env = Envelope::Work(id, job, timer);
+        if to_device {
+            if let Some(tx) = &self.tx_device {
+                tx.send(env).expect("device worker alive");
+                return id;
+            }
+        }
+        self.tx_native.as_ref().expect("not shut down").send(env).expect("native workers alive");
+        id
+    }
+
+    /// Blocking receive of the next finished job.
+    pub fn recv(&self) -> Option<JobOutput> {
+        self.rx_out.recv().ok()
+    }
+
+    /// Receive with timeout.
+    pub fn recv_timeout(&self, d: std::time::Duration) -> Option<JobOutput> {
+        self.rx_out.recv_timeout(d).ok()
+    }
+
+    /// Collect exactly `n` results (any order).
+    pub fn collect(&self, n: usize) -> Vec<JobOutput> {
+        (0..n).filter_map(|_| self.recv()).collect()
+    }
+
+    /// Graceful shutdown: close queues, join workers.
+    pub fn shutdown(mut self) -> Arc<Metrics> {
+        self.tx_native.take();
+        self.tx_device.take();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        self.metrics.clone()
+    }
+
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.config
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.tx_native.take();
+        self.tx_device.take();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Max residual degree (in + out) of a network — what the device layout
+/// must accommodate (including the +1 for a potential super edge).
+pub fn residual_max_degree(net: &FlowNetwork) -> usize {
+    let mut deg = vec![0usize; net.n];
+    for e in &net.edges {
+        deg[e.u as usize] += 1;
+        deg[e.v as usize] += 1;
+    }
+    deg.iter().copied().max().unwrap_or(0)
+}
+
+fn native_worker(
+    rx: Arc<Mutex<mpsc::Receiver<Envelope>>>,
+    tx_out: mpsc::Sender<JobOutput>,
+    metrics: Arc<Metrics>,
+    solve: SolveOptions,
+) {
+    loop {
+        let env = { rx.lock().unwrap().recv() };
+        let Ok(Envelope::Work(id, job, timer)) = env else { return };
+        let (engine, result) = match job {
+            Job::MaxFlow { net, kind, rep } => {
+                let label = format!("native:{}+{}", kind.name(), rep.name());
+                let r = maxflow::solve(&net, kind, rep, &solve);
+                (label, Ok(r.value))
+            }
+            Job::MaxFlowAuto { net } => {
+                // Routed native (device absent or graph too big): the
+                // paper's overall best configuration is VC + BCSR.
+                let r = maxflow::solve(&net, EngineKind::VertexCentric, Representation::Bcsr, &solve);
+                ("native:VC+BCSR(auto)".to_string(), Ok(r.value))
+            }
+            Job::Matching { graph, kind, rep } => {
+                let label = format!("native:{}+{}(match)", kind.name(), rep.name());
+                let m = maxflow::matching::solve(&graph, kind, rep, &solve);
+                (label, Ok(m.matching.size as i64))
+            }
+        };
+        finish(&tx_out, &metrics, id, engine, result, timer);
+    }
+}
+
+fn finish(
+    tx_out: &mpsc::Sender<JobOutput>,
+    metrics: &Metrics,
+    id: u64,
+    engine: String,
+    result: Result<i64, String>,
+    timer: Timer,
+) {
+    let ms = timer.ms();
+    let output = match result {
+        Ok(value) => {
+            metrics.record(&engine, ms, value);
+            JobOutput { id, result: Ok(JobValue { value, engine, ms }) }
+        }
+        Err(e) => {
+            metrics.record_failure(&engine);
+            JobOutput { id, result: Err(e) }
+        }
+    };
+    let _ = tx_out.send(output);
+}
+
+fn device_worker(rx: mpsc::Receiver<Envelope>, tx_out: mpsc::Sender<JobOutput>, metrics: Arc<Metrics>) {
+    // The PJRT client must live on this thread.
+    let mut engine = match super::device::DeviceEngine::from_default_location() {
+        Ok(e) => e,
+        Err(e) => {
+            // Drain the queue reporting failures.
+            while let Ok(Envelope::Work(id, _, _)) = rx.recv() {
+                metrics.record_failure("device");
+                let _ = tx_out.send(JobOutput { id, result: Err(format!("device init: {e}")) });
+            }
+            return;
+        }
+    };
+    while let Ok(Envelope::Work(id, job, timer)) = rx.recv() {
+        let result = match job {
+            Job::MaxFlow { net, .. } | Job::MaxFlowAuto { net } => {
+                let g = ArcGraph::build(&net.normalized());
+                engine.solve(&g).map(|r| r.value).map_err(|e| e.to_string())
+            }
+            Job::Matching { graph, .. } => {
+                let net = graph.to_flow_network();
+                let g = ArcGraph::build(&net);
+                engine.solve(&g).map(|r| r.value).map_err(|e| e.to_string())
+            }
+        };
+        finish(&tx_out, &metrics, id, "device".into(), result, timer);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::bipartite::bipartite_planted;
+    use crate::graph::generators;
+
+    fn config(native: usize, device: bool) -> CoordinatorConfig {
+        CoordinatorConfig {
+            native_workers: native,
+            enable_device: device,
+            solve: SolveOptions { threads: 2, cycles_per_launch: 64, ..Default::default() },
+            router: RouterConfig::default(),
+        }
+    }
+
+    #[test]
+    fn serves_explicit_maxflow_jobs() {
+        let c = Coordinator::start(config(2, false));
+        let net = generators::erdos_renyi(40, 250, 6, 1);
+        let want = maxflow::solve(&net, EngineKind::Dinic, Representation::Bcsr, &SolveOptions::default()).value;
+        let mut ids = Vec::new();
+        for kind in [EngineKind::Sequential, EngineKind::ThreadCentric, EngineKind::VertexCentric] {
+            ids.push(c.submit(Job::MaxFlow { net: net.clone(), kind, rep: Representation::Bcsr }));
+        }
+        let outs = c.collect(3);
+        assert_eq!(outs.len(), 3);
+        for o in outs {
+            let v = o.result.expect("job ok");
+            assert_eq!(v.value, want);
+            assert!(ids.contains(&o.id));
+        }
+        let metrics = c.shutdown();
+        let snap = metrics.snapshot();
+        assert_eq!(snap.values().map(|e| e.jobs).sum::<u64>(), 3);
+    }
+
+    #[test]
+    fn serves_matching_jobs() {
+        let c = Coordinator::start(config(2, false));
+        let g = bipartite_planted(20, 30, 60, 5);
+        let want = maxflow::hopcroft_karp::solve(&g).size as i64;
+        c.submit(Job::Matching { graph: g, kind: EngineKind::VertexCentric, rep: Representation::Rcsr });
+        let out = c.recv().unwrap();
+        assert_eq!(out.result.unwrap().value, want);
+    }
+
+    #[test]
+    fn auto_jobs_route_to_device_when_available() {
+        let c = Coordinator::start(config(1, true));
+        if !c.has_device() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let net = generators::erdos_renyi(40, 200, 5, 3);
+        let want = maxflow::solve(&net, EngineKind::Dinic, Representation::Bcsr, &SolveOptions::default()).value;
+        c.submit(Job::MaxFlowAuto { net });
+        let out = c.recv().unwrap();
+        let v = out.result.expect("device job ok");
+        assert_eq!(v.value, want);
+        assert_eq!(v.engine, "device");
+    }
+
+    #[test]
+    fn big_auto_jobs_fall_back_to_native() {
+        let c = Coordinator::start(config(1, true));
+        let net = generators::rmat(&generators::RmatParams { scale: 11, edge_factor: 6, a: 0.57, b: 0.19, c: 0.19, seed: 2 });
+        let pairs = crate::graph::builder::select_pairs(&net, 2, 6, 3);
+        let sources: Vec<u32> = pairs.iter().map(|p| p.0).collect();
+        let sinks: Vec<u32> = pairs.iter().map(|p| p.1).collect();
+        let net = crate::graph::builder::add_super_terminals(&net, &sources, &sinks, 1 << 20);
+        let want = maxflow::solve(&net, EngineKind::Dinic, Representation::Bcsr, &SolveOptions::default()).value;
+        c.submit(Job::MaxFlowAuto { net });
+        let out = c.recv().unwrap();
+        let v = out.result.unwrap();
+        assert_eq!(v.value, want);
+        assert!(v.engine.starts_with("native"), "engine = {}", v.engine);
+    }
+
+    #[test]
+    fn concurrent_load_conserves_jobs() {
+        let c = Coordinator::start(config(4, false));
+        let n_jobs = 32;
+        for seed in 0..n_jobs {
+            let net = generators::erdos_renyi(30, 150, 4, seed as u64);
+            c.submit(Job::MaxFlow { net, kind: EngineKind::VertexCentric, rep: Representation::Bcsr });
+        }
+        let outs = c.collect(n_jobs);
+        assert_eq!(outs.len(), n_jobs);
+        let mut ids: Vec<u64> = outs.iter().map(|o| o.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n_jobs, "no job lost or duplicated");
+    }
+
+    #[test]
+    fn shutdown_is_clean() {
+        let c = Coordinator::start(config(2, false));
+        let m = c.shutdown();
+        assert_eq!(m.snapshot().len(), 0);
+    }
+}

@@ -1,0 +1,201 @@
+//! Bidirectional CSR (paper Fig. 2d): each vertex's in- and out-residual
+//! arcs are *aggregated into one contiguous, column-sorted row*. Scans are
+//! coalesced (one contiguous range), but locating the reverse arc of a push
+//! requires a binary search over the target's row — O(log₂ d) — because the
+//! backward slot no longer sits at a fixed offset.
+
+use super::builder::ArcGraph;
+use super::residual::{Residual, RowSegs};
+use super::VertexId;
+
+#[derive(Debug, Clone)]
+pub struct Bcsr {
+    n: usize,
+    pub offsets: Vec<u32>,
+    /// Target vertex per slot, sorted ascending within each row.
+    pub cols: Vec<VertexId>,
+    /// Arc id per slot (ties in `cols` broken by arc id, also ascending).
+    pub arcs: Vec<u32>,
+}
+
+impl Bcsr {
+    pub fn build(g: &ArcGraph) -> Bcsr {
+        let m2 = g.num_arcs();
+        let triples = (0..m2 as u32).map(|a| (g.arc_from[a as usize], g.arc_to[a as usize], a));
+        let (csr, arcs) = super::csr::Csr::from_pairs_with(g.n, triples);
+        let offsets = csr.offsets;
+        let mut cols = csr.cols;
+        let mut arcs = arcs;
+        // Column-sort each row (the paper sorts the column list in
+        // ascending vertex-id order to enable the binary search).
+        for u in 0..g.n {
+            let r = offsets[u] as usize..offsets[u + 1] as usize;
+            let mut pairs: Vec<(VertexId, u32)> = cols[r.clone()].iter().copied().zip(arcs[r.clone()].iter().copied()).collect();
+            pairs.sort_unstable();
+            for (i, (c, a)) in pairs.into_iter().enumerate() {
+                cols[r.start + i] = c;
+                arcs[r.start + i] = a;
+            }
+        }
+        Bcsr { n: g.n, offsets, cols, arcs }
+    }
+
+    #[inline(always)]
+    fn range(&self, u: VertexId) -> std::ops::Range<usize> {
+        self.offsets[u as usize] as usize..self.offsets[u as usize + 1] as usize
+    }
+
+    /// Binary-search `to`'s row for the slot holding arc `want`.
+    /// Returns the slot index into `cols`/`arcs`.
+    ///
+    /// This is the extra work BCSR pays per push (paper §3.2): first find
+    /// the column range equal to `back_to` by binary search, then resolve
+    /// the (rare) parallel-arc tie by arc id.
+    pub fn find_slot(&self, to: VertexId, back_to: VertexId, want: u32) -> Option<usize> {
+        let r = self.range(to);
+        let row_cols = &self.cols[r.clone()];
+        let row_arcs = &self.arcs[r.clone()];
+        // partition_point gives the first index with col >= back_to.
+        let lo = row_cols.partition_point(|&c| c < back_to);
+        let mut i = lo;
+        while i < row_cols.len() && row_cols[i] == back_to {
+            if row_arcs[i] == want {
+                return Some(r.start + i);
+            }
+            i += 1;
+        }
+        None
+    }
+}
+
+impl Residual for Bcsr {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn row(&self, u: VertexId) -> RowSegs<'_> {
+        let r = self.range(u);
+        RowSegs::one(&self.arcs[r.clone()], &self.cols[r])
+    }
+
+    #[inline]
+    fn rev_arc(&self, a: u32, from: VertexId, to: VertexId) -> u32 {
+        // O(log d(to)): search the aggregated row of `to` for the paired
+        // arc. The arena guarantees it exists; the search is the honest
+        // cost model of the representation.
+        let want = a ^ 1;
+        let slot = self
+            .find_slot(to, from, want)
+            .unwrap_or_else(|| panic!("BCSR invariant broken: reverse of arc {a} not in row of {to}"));
+        self.arcs[slot]
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.offsets.len() * 4 + self.cols.len() * 4 + self.arcs.len() * 4
+    }
+
+    fn name(&self) -> &'static str {
+        "BCSR"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::FlowNetwork;
+    use crate::graph::Edge;
+
+    fn fig2() -> ArcGraph {
+        let net = FlowNetwork::new(
+            5,
+            0,
+            3,
+            vec![
+                Edge::new(0, 1, 5),
+                Edge::new(0, 2, 4),
+                Edge::new(2, 0, 3),
+                Edge::new(2, 4, 2),
+                Edge::new(4, 3, 6),
+                Edge::new(1, 3, 7),
+            ],
+            "fig2",
+        );
+        ArcGraph::build(&net)
+    }
+
+    #[test]
+    fn rows_are_sorted_and_aggregated() {
+        let g = fig2();
+        let b = Bcsr::build(&g);
+        for u in 0..g.n as u32 {
+            let row = b.row(u);
+            let cols: Vec<u32> = row.iter().map(|(_, v)| v).collect();
+            let mut sorted = cols.clone();
+            sorted.sort_unstable();
+            assert_eq!(cols, sorted, "row {u} not column-sorted");
+        }
+        // Vertex 2's aggregated row: out {0,4} + in {0} => cols [0,0,4].
+        let cols2: Vec<u32> = b.row(2).iter().map(|(_, v)| v).collect();
+        assert_eq!(cols2, vec![0, 0, 4]);
+    }
+
+    #[test]
+    fn single_contiguous_segment() {
+        let g = fig2();
+        let b = Bcsr::build(&g);
+        for u in 0..g.n as u32 {
+            assert!(b.row(u).segs[1].0.is_empty());
+        }
+    }
+
+    #[test]
+    fn rev_arc_matches_pairing_via_search() {
+        let g = fig2();
+        let b = Bcsr::build(&g);
+        for u in 0..g.n as u32 {
+            for (a, v) in b.row(u).iter() {
+                assert_eq!(b.rev_arc(a, u, v), a ^ 1);
+            }
+        }
+    }
+
+    #[test]
+    fn find_slot_handles_parallel_pairs() {
+        // Both (0,2) and (2,0) exist: vertex 0's row has two col==2 slots
+        // (forward arc of (0,2), backward arc of (2,0)); the tie must be
+        // broken by arc id.
+        let g = fig2();
+        let b = Bcsr::build(&g);
+        let row0: Vec<(u32, u32)> = b.row(0).iter().collect();
+        let col2: Vec<u32> = row0.iter().filter(|&&(_, v)| v == 2).map(|&(a, _)| a).collect();
+        assert_eq!(col2.len(), 2);
+        for a in col2 {
+            let from = 0;
+            let to = 2;
+            assert_eq!(b.rev_arc(a, from, to), a ^ 1);
+        }
+    }
+
+    #[test]
+    fn missing_reverse_is_none() {
+        let g = fig2();
+        let b = Bcsr::build(&g);
+        assert!(b.find_slot(3, 0, 999).is_none());
+    }
+
+    #[test]
+    fn every_arc_once_and_degrees_match_rcsr() {
+        let g = fig2();
+        let b = Bcsr::build(&g);
+        let r = crate::graph::Rcsr::build(&g);
+        use crate::graph::residual::Residual as _;
+        let mut seen = vec![0u32; g.num_arcs()];
+        for u in 0..g.n as u32 {
+            assert_eq!(b.degree(u), r.degree(u), "degree mismatch at {u}");
+            for (a, _) in b.row(u).iter() {
+                seen[a as usize] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+}

@@ -1,0 +1,143 @@
+//! Bipartite graphs and their reduction to max-flow (paper §4.1, Table 2:
+//! a super source feeds the left part, the right part drains into a super
+//! sink, all capacities 1 — maximum flow = maximum matching).
+
+use super::builder::FlowNetwork;
+use super::{Edge, VertexId};
+use crate::util::Rng;
+
+/// A bipartite graph: left part `0..nl`, right part `0..nr`, edges between.
+#[derive(Debug, Clone)]
+pub struct BipartiteGraph {
+    pub nl: usize,
+    pub nr: usize,
+    /// `(l, r)` with `l < nl`, `r < nr`.
+    pub edges: Vec<(VertexId, VertexId)>,
+    pub name: String,
+}
+
+impl BipartiteGraph {
+    pub fn new(nl: usize, nr: usize, mut edges: Vec<(VertexId, VertexId)>, name: impl Into<String>) -> BipartiteGraph {
+        edges.sort_unstable();
+        edges.dedup();
+        let g = BipartiteGraph { nl, nr, edges, name: name.into() };
+        g.validate().expect("invalid bipartite graph");
+        g
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        for &(l, r) in &self.edges {
+            if l as usize >= self.nl || r as usize >= self.nr {
+                return Err(format!("edge ({l},{r}) out of range ({}, {})", self.nl, self.nr));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn m(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Reduce to a unit-capacity flow network:
+    /// vertex ids: left `0..nl`, right `nl..nl+nr`, source `nl+nr`,
+    /// sink `nl+nr+1`.
+    pub fn to_flow_network(&self) -> FlowNetwork {
+        let s = (self.nl + self.nr) as VertexId;
+        let t = s + 1;
+        let mut edges = Vec::with_capacity(self.nl + self.nr + self.edges.len());
+        for l in 0..self.nl {
+            edges.push(Edge::new(s, l as VertexId, 1));
+        }
+        for &(l, r) in &self.edges {
+            edges.push(Edge::new(l, self.nl as VertexId + r, 1));
+        }
+        for r in 0..self.nr {
+            edges.push(Edge::new(self.nl as VertexId + r as VertexId, t, 1));
+        }
+        FlowNetwork::new(self.nl + self.nr + 2, s, t, edges, format!("{}-flow", self.name))
+    }
+}
+
+/// KONECT-analog generator: `m` edges with Zipf-skewed endpoints on both
+/// sides (`skew = 0.0` gives uniform). The paper's B7/B8 (YouTube,
+/// DBpedia) are highly skewed; B0-B2 are tiny and near-uniform.
+pub fn bipartite_zipf(nl: usize, nr: usize, m: usize, skew: f64, seed: u64) -> BipartiteGraph {
+    assert!(nl >= 1 && nr >= 1);
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::with_capacity(m);
+    // Random side permutations so the Zipf head isn't always vertex 0..k —
+    // keeps analog graphs from looking artificially sorted.
+    let mut lperm: Vec<u32> = (0..nl as u32).collect();
+    let mut rperm: Vec<u32> = (0..nr as u32).collect();
+    rng.shuffle(&mut lperm);
+    rng.shuffle(&mut rperm);
+    for _ in 0..m {
+        let l = if skew > 0.0 { rng.zipf(nl, skew) } else { rng.index(nl) };
+        let r = if skew > 0.0 { rng.zipf(nr, skew) } else { rng.index(nr) };
+        edges.push((lperm[l], rperm[r]));
+    }
+    BipartiteGraph::new(nl, nr, edges, format!("bipartite(nl={nl},nr={nr},m={m},skew={skew},seed={seed})"))
+}
+
+/// A bipartite graph with a known perfect-on-the-left matching (planted),
+/// useful as a correctness oracle for the matching pipeline.
+pub fn bipartite_planted(nl: usize, nr: usize, extra: usize, seed: u64) -> BipartiteGraph {
+    assert!(nl <= nr);
+    let mut rng = Rng::new(seed);
+    let mut rperm: Vec<u32> = (0..nr as u32).collect();
+    rng.shuffle(&mut rperm);
+    let mut edges: Vec<(u32, u32)> = (0..nl).map(|l| (l as u32, rperm[l])).collect();
+    for _ in 0..extra {
+        edges.push((rng.index(nl) as u32, rng.index(nr) as u32));
+    }
+    BipartiteGraph::new(nl, nr, edges, format!("planted(nl={nl},nr={nr},extra={extra},seed={seed})"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduction_shape() {
+        let g = BipartiteGraph::new(2, 3, vec![(0, 0), (0, 2), (1, 1)], "tiny");
+        let net = g.to_flow_network();
+        assert_eq!(net.n, 7);
+        assert_eq!(net.m(), 2 + 3 + 3);
+        assert_eq!(net.s, 5);
+        assert_eq!(net.t, 6);
+        net.validate().unwrap();
+        // All capacities are 1.
+        assert!(net.edges.iter().all(|e| e.cap == 1));
+    }
+
+    #[test]
+    fn dedup_on_construction() {
+        let g = BipartiteGraph::new(2, 2, vec![(0, 0), (0, 0), (1, 1)], "dup");
+        assert_eq!(g.m(), 2);
+    }
+
+    #[test]
+    fn zipf_generator_in_range_and_deterministic() {
+        let a = bipartite_zipf(100, 40, 500, 1.1, 9);
+        let b = bipartite_zipf(100, 40, 500, 1.1, 9);
+        assert_eq!(a.edges, b.edges);
+        a.validate().unwrap();
+        assert!(a.m() <= 500);
+    }
+
+    #[test]
+    fn planted_has_left_perfect_matching_edges() {
+        let g = bipartite_planted(10, 15, 30, 4);
+        g.validate().unwrap();
+        // Each left vertex must appear at least once.
+        for l in 0..10u32 {
+            assert!(g.edges.iter().any(|&(a, _)| a == l));
+        }
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range() {
+        let g = BipartiteGraph { nl: 2, nr: 2, edges: vec![(5, 0)], name: "bad".into() };
+        assert!(g.validate().is_err());
+    }
+}

@@ -1,0 +1,281 @@
+//! Flow-network container, residual-arc arena construction, super-source /
+//! super-sink augmentation, and the paper's BFS-based source/sink pair
+//! selection (§4.1).
+
+use super::{Capacity, Edge, VertexId};
+use crate::util::Rng;
+
+/// A directed capacitated graph with a designated source and sink.
+#[derive(Debug, Clone)]
+pub struct FlowNetwork {
+    pub n: usize,
+    pub s: VertexId,
+    pub t: VertexId,
+    pub edges: Vec<Edge>,
+    /// Human-readable provenance ("genrmf a=8 ...", "snap-analog R5", ...).
+    pub name: String,
+}
+
+impl FlowNetwork {
+    pub fn new(n: usize, s: VertexId, t: VertexId, edges: Vec<Edge>, name: impl Into<String>) -> FlowNetwork {
+        let net = FlowNetwork { n, s, t, edges, name: name.into() };
+        net.validate().expect("invalid flow network");
+        net
+    }
+
+    /// Structural sanity: ids in range, s != t, non-negative capacities.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.s == self.t {
+            return Err("source equals sink".into());
+        }
+        if self.s as usize >= self.n || self.t as usize >= self.n {
+            return Err("source/sink out of range".into());
+        }
+        for (i, e) in self.edges.iter().enumerate() {
+            if e.u as usize >= self.n || e.v as usize >= self.n {
+                return Err(format!("edge {i} endpoint out of range"));
+            }
+            if e.cap < 0 {
+                return Err(format!("edge {i} has negative capacity"));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn m(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Remove self loops and merge parallel edges (summing capacities).
+    /// Mirrors the preprocessing the paper applies to SNAP inputs.
+    pub fn normalized(&self) -> FlowNetwork {
+        let mut map = std::collections::HashMap::<(u32, u32), i64>::new();
+        for e in &self.edges {
+            if e.u == e.v {
+                continue;
+            }
+            *map.entry((e.u, e.v)).or_insert(0) += e.cap;
+        }
+        let mut edges: Vec<Edge> = map.into_iter().map(|((u, v), cap)| Edge { u, v, cap }).collect();
+        edges.sort_by_key(|e| (e.u, e.v));
+        FlowNetwork { n: self.n, s: self.s, t: self.t, edges, name: self.name.clone() }
+    }
+}
+
+/// The canonical residual arena shared by all representations: arc `2e`
+/// is the forward copy of edge `e`, arc `2e+1` its reverse (cap 0).
+#[derive(Debug, Clone)]
+pub struct ArcGraph {
+    pub n: usize,
+    pub s: VertexId,
+    pub t: VertexId,
+    /// Target vertex of each arc; `len == 2 * edges`.
+    pub arc_to: Vec<VertexId>,
+    /// Source vertex of each arc (redundant with the CSRs but O(1) handy).
+    pub arc_from: Vec<VertexId>,
+    /// Initial residual capacity of each arc.
+    pub arc_cap: Vec<Capacity>,
+}
+
+impl ArcGraph {
+    pub fn build(net: &FlowNetwork) -> ArcGraph {
+        let m = net.edges.len();
+        let mut arc_to = Vec::with_capacity(2 * m);
+        let mut arc_from = Vec::with_capacity(2 * m);
+        let mut arc_cap = Vec::with_capacity(2 * m);
+        for e in &net.edges {
+            arc_to.push(e.v);
+            arc_from.push(e.u);
+            arc_cap.push(e.cap);
+            arc_to.push(e.u);
+            arc_from.push(e.v);
+            arc_cap.push(0);
+        }
+        ArcGraph { n: net.n, s: net.s, t: net.t, arc_to, arc_from, arc_cap }
+    }
+
+    pub fn num_arcs(&self) -> usize {
+        self.arc_to.len()
+    }
+
+    /// Reverse arc (the paper's `flow_idx` pairing).
+    #[inline(always)]
+    pub fn rev(a: u32) -> u32 {
+        a ^ 1
+    }
+
+    /// Bytes of the arena itself (part of the O(V+E) accounting).
+    pub fn memory_bytes(&self) -> usize {
+        self.arc_to.len() * 4 + self.arc_from.len() * 4 + self.arc_cap.len() * 8
+    }
+}
+
+/// Attach a super-source feeding `sources` and a super-sink drained by
+/// `sinks` (paper §4.1: multi-source multi-sink max flow over 20 BFS-chosen
+/// pairs). Super edges get capacity `super_cap` (pass the sum of adjacent
+/// capacities, or a large constant for unit-cap graphs).
+pub fn add_super_terminals(
+    net: &FlowNetwork,
+    sources: &[VertexId],
+    sinks: &[VertexId],
+    super_cap: Capacity,
+) -> FlowNetwork {
+    assert!(!sources.is_empty() && !sinks.is_empty());
+    let ss = net.n as VertexId;
+    let tt = net.n as VertexId + 1;
+    let mut edges = net.edges.clone();
+    for &s in sources {
+        edges.push(Edge::new(ss, s, super_cap));
+    }
+    for &t in sinks {
+        edges.push(Edge::new(t, tt, super_cap));
+    }
+    FlowNetwork {
+        n: net.n + 2,
+        s: ss,
+        t: tt,
+        edges,
+        name: format!("{}+super({}s,{}t)", net.name, sources.len(), sinks.len()),
+    }
+}
+
+/// BFS distances over the *original* out-edges (used for pair selection and
+/// diameter probes; the residual BFS lives in `maxflow::global_relabel`).
+pub fn bfs_dist(n: usize, adj: &super::Csr, start: VertexId) -> Vec<u32> {
+    let mut dist = vec![u32::MAX; n];
+    let mut queue = std::collections::VecDeque::new();
+    dist[start as usize] = 0;
+    queue.push_back(start);
+    while let Some(u) = queue.pop_front() {
+        let du = dist[u as usize];
+        for &v in adj.row(u) {
+            if dist[v as usize] == u32::MAX {
+                dist[v as usize] = du + 1;
+                queue.push_back(v);
+            }
+        }
+    }
+    dist
+}
+
+/// The paper's source/sink selection: probe BFS from sampled vertices,
+/// keep the pairs whose finite eccentricity lands in the top 25%, and return
+/// up to `pairs` (start, farthest) pairs.
+pub fn select_pairs(net: &FlowNetwork, pairs: usize, probes: usize, seed: u64) -> Vec<(VertexId, VertexId)> {
+    let adj = super::Csr::from_edges(net.n, net.edges.iter().map(|e| (e.u, e.v)));
+    let mut rng = Rng::new(seed);
+    let mut cands: Vec<(u32, u32, u32)> = Vec::new(); // (dist, from, to)
+    for _ in 0..probes.max(pairs) {
+        let start = rng.index(net.n) as VertexId;
+        let dist = bfs_dist(net.n, &adj, start);
+        let mut far = start;
+        let mut best = 0;
+        for (v, &d) in dist.iter().enumerate() {
+            if d != u32::MAX && d > best {
+                best = d;
+                far = v as VertexId;
+            }
+        }
+        if best > 0 {
+            cands.push((best, start, far));
+        }
+    }
+    cands.sort_unstable_by(|a, b| b.0.cmp(&a.0));
+    // Top quartile (at least `pairs` candidates when available).
+    let take = (cands.len().div_ceil(4)).max(pairs.min(cands.len()));
+    let mut out: Vec<(VertexId, VertexId)> = Vec::new();
+    let mut seen = std::collections::HashSet::new();
+    for &(_, a, b) in cands.iter().take(take) {
+        if a != b && seen.insert((a, b)) {
+            out.push((a, b));
+            if out.len() == pairs {
+                break;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> FlowNetwork {
+        // s=0 -> {1,2} -> t=3
+        FlowNetwork::new(
+            4,
+            0,
+            3,
+            vec![Edge::new(0, 1, 3), Edge::new(0, 2, 2), Edge::new(1, 3, 2), Edge::new(2, 3, 3)],
+            "diamond",
+        )
+    }
+
+    #[test]
+    fn arc_graph_pairs_arcs() {
+        let g = ArcGraph::build(&diamond());
+        assert_eq!(g.num_arcs(), 8);
+        for e in 0..4 {
+            let f = 2 * e as u32;
+            assert_eq!(ArcGraph::rev(f), f + 1);
+            assert_eq!(ArcGraph::rev(f + 1), f);
+            assert_eq!(g.arc_to[f as usize], g.arc_from[(f + 1) as usize]);
+            assert_eq!(g.arc_from[f as usize], g.arc_to[(f + 1) as usize]);
+            assert_eq!(g.arc_cap[(f + 1) as usize], 0);
+        }
+    }
+
+    #[test]
+    fn validate_catches_errors() {
+        let mut bad = diamond();
+        bad.edges.push(Edge::new(0, 9, 1));
+        assert!(bad.validate().is_err());
+        let mut neg = diamond();
+        neg.edges[0].cap = -1;
+        assert!(neg.validate().is_err());
+    }
+
+    #[test]
+    fn normalized_merges_and_drops_loops() {
+        let net = FlowNetwork {
+            n: 3,
+            s: 0,
+            t: 2,
+            edges: vec![Edge::new(0, 1, 1), Edge::new(0, 1, 2), Edge::new(1, 1, 5), Edge::new(1, 2, 1)],
+            name: "x".into(),
+        };
+        let norm = net.normalized();
+        assert_eq!(norm.edges.len(), 2);
+        assert_eq!(norm.edges[0], Edge::new(0, 1, 3));
+    }
+
+    #[test]
+    fn super_terminals_wire_up() {
+        let net = diamond();
+        let aug = add_super_terminals(&net, &[0], &[3], 1_000);
+        assert_eq!(aug.n, 6);
+        assert_eq!(aug.s, 4);
+        assert_eq!(aug.t, 5);
+        assert_eq!(aug.m(), net.m() + 2);
+        aug.validate().unwrap();
+    }
+
+    #[test]
+    fn bfs_dist_on_diamond() {
+        let net = diamond();
+        let adj = super::super::Csr::from_edges(net.n, net.edges.iter().map(|e| (e.u, e.v)));
+        let d = bfs_dist(net.n, &adj, 0);
+        assert_eq!(d, vec![0, 1, 1, 2]);
+    }
+
+    #[test]
+    fn select_pairs_returns_valid_distinct_pairs() {
+        let net = diamond();
+        let ps = select_pairs(&net, 2, 8, 42);
+        assert!(!ps.is_empty());
+        for (a, b) in ps {
+            assert_ne!(a, b);
+            assert!((a as usize) < net.n && (b as usize) < net.n);
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! Plain compressed-sparse-row adjacency (paper Fig. 2b, without residual
+//! bookkeeping). Used for BFS traversals (pair selection, global relabel)
+//! and as the building block of RCSR / BCSR.
+
+use super::VertexId;
+
+/// CSR over `(u, v)` pairs; payloads (arc ids) can ride along via
+/// [`Csr::from_pairs_with`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    pub offsets: Vec<u32>,
+    pub cols: Vec<VertexId>,
+}
+
+impl Csr {
+    /// Build from directed edges.
+    pub fn from_edges<I: Iterator<Item = (VertexId, VertexId)>>(n: usize, edges: I) -> Csr {
+        let (csr, _) = Csr::from_pairs_with(n, edges.map(|(u, v)| (u, v, 0u32)));
+        csr
+    }
+
+    /// Build from `(u, v, payload)` triples using counting sort; returns the
+    /// CSR and the payload array aligned with `cols`. Stable within a row
+    /// (insertion order preserved).
+    pub fn from_pairs_with<I: Iterator<Item = (VertexId, VertexId, u32)>>(n: usize, triples: I) -> (Csr, Vec<u32>) {
+        let items: Vec<(VertexId, VertexId, u32)> = triples.collect();
+        let mut counts = vec![0u32; n + 1];
+        for &(u, _, _) in &items {
+            counts[u as usize + 1] += 1;
+        }
+        for i in 0..n {
+            counts[i + 1] += counts[i];
+        }
+        let offsets = counts.clone();
+        let total = offsets[n] as usize;
+        let mut cols = vec![0 as VertexId; total];
+        let mut payload = vec![0u32; total];
+        let mut cursor = offsets.clone();
+        for (u, v, p) in items {
+            let slot = cursor[u as usize] as usize;
+            cols[slot] = v;
+            payload[slot] = p;
+            cursor[u as usize] += 1;
+        }
+        (Csr { offsets, cols }, payload)
+    }
+
+    pub fn n(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    #[inline(always)]
+    pub fn range(&self, u: VertexId) -> std::ops::Range<usize> {
+        self.offsets[u as usize] as usize..self.offsets[u as usize + 1] as usize
+    }
+
+    #[inline(always)]
+    pub fn row(&self, u: VertexId) -> &[VertexId] {
+        &self.cols[self.range(u)]
+    }
+
+    #[inline(always)]
+    pub fn degree(&self, u: VertexId) -> usize {
+        (self.offsets[u as usize + 1] - self.offsets[u as usize]) as usize
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.offsets.len() * 4 + self.cols.len() * 4
+    }
+}
+
+/// Degree statistics of a CSR — the paper's predictor for when the
+/// vertex-centric approach pays off (§4.2: high degree std-dev ⇒ VC wins).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DegreeStats {
+    pub mean: f64,
+    pub std: f64,
+    pub max: usize,
+    pub min: usize,
+}
+
+impl DegreeStats {
+    pub fn of(csr: &Csr) -> DegreeStats {
+        let n = csr.n();
+        if n == 0 {
+            return DegreeStats { mean: 0.0, std: 0.0, max: 0, min: 0 };
+        }
+        let degs: Vec<f64> = (0..n).map(|u| csr.degree(u as VertexId) as f64).collect();
+        let s = crate::util::stats::Summary::of(&degs);
+        DegreeStats { mean: s.mean, std: s.std, max: s.max as usize, min: s.min as usize }
+    }
+
+    /// Coefficient of variation of the degree distribution.
+    pub fn cv(&self) -> f64 {
+        if self.mean > 0.0 { self.std / self.mean } else { 0.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        Csr::from_edges(4, vec![(0, 1), (0, 2), (2, 3), (1, 3), (0, 3)].into_iter())
+    }
+
+    #[test]
+    fn rows_and_degrees() {
+        let c = sample();
+        assert_eq!(c.n(), 4);
+        assert_eq!(c.row(0), &[1, 2, 3]);
+        assert_eq!(c.row(1), &[3]);
+        assert_eq!(c.row(3), &[] as &[u32]);
+        assert_eq!(c.degree(0), 3);
+        assert_eq!(c.degree(3), 0);
+    }
+
+    #[test]
+    fn payload_rides_along() {
+        let (c, p) = Csr::from_pairs_with(3, vec![(1, 0, 10), (0, 2, 20), (1, 2, 30)].into_iter());
+        assert_eq!(c.row(1), &[0, 2]);
+        let r = c.range(1);
+        assert_eq!(&p[r], &[10, 30]);
+    }
+
+    #[test]
+    fn stable_within_row() {
+        let (c, p) = Csr::from_pairs_with(2, vec![(0, 1, 1), (0, 1, 2), (0, 1, 3)].into_iter());
+        assert_eq!(&p[c.range(0)], &[1, 2, 3]);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let c = Csr::from_edges(3, std::iter::empty());
+        assert_eq!(c.n(), 3);
+        assert_eq!(c.degree(0), 0);
+    }
+
+    #[test]
+    fn degree_stats() {
+        let c = sample();
+        let d = DegreeStats::of(&c);
+        assert_eq!(d.max, 3);
+        assert_eq!(d.min, 0);
+        assert!((d.mean - 1.25).abs() < 1e-12);
+        assert!(d.cv() > 0.0);
+    }
+
+    #[test]
+    fn memory_is_v_plus_e_scale() {
+        let c = sample();
+        assert_eq!(c.memory_bytes(), (4 + 1) * 4 + 5 * 4);
+    }
+}

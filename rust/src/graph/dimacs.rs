@@ -1,0 +1,139 @@
+//! DIMACS max-flow format (1st Implementation Challenge) parser + writer.
+//!
+//! ```text
+//! c comment
+//! p max <nodes> <arcs>
+//! n <id> s
+//! n <id> t
+//! a <from> <to> <capacity>
+//! ```
+//!
+//! Vertex ids in files are 1-based (converted to 0-based internally).
+
+use super::builder::FlowNetwork;
+use super::{Edge, VertexId};
+
+/// Parse DIMACS max-flow text.
+pub fn parse(text: &str) -> Result<FlowNetwork, String> {
+    let mut n: Option<usize> = None;
+    let mut declared_m = 0usize;
+    let mut s: Option<VertexId> = None;
+    let mut t: Option<VertexId> = None;
+    let mut edges: Vec<Edge> = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        match it.next().unwrap() {
+            "c" => {}
+            "p" => {
+                if it.next() != Some("max") {
+                    return Err(format!("line {}: only 'p max' supported", lineno + 1));
+                }
+                let nodes: usize = it.next().ok_or("missing node count")?.parse().map_err(|_| "bad node count")?;
+                declared_m = it.next().ok_or("missing arc count")?.parse().map_err(|_| "bad arc count")?;
+                n = Some(nodes);
+                edges.reserve(declared_m);
+            }
+            "n" => {
+                let id: usize = it.next().ok_or("missing node id")?.parse().map_err(|_| "bad node id")?;
+                if id == 0 {
+                    return Err(format!("line {}: DIMACS ids are 1-based", lineno + 1));
+                }
+                match it.next() {
+                    Some("s") => s = Some((id - 1) as VertexId),
+                    Some("t") => t = Some((id - 1) as VertexId),
+                    other => return Err(format!("line {}: bad node designator {:?}", lineno + 1, other)),
+                }
+            }
+            "a" => {
+                let u: usize = it.next().ok_or("missing tail")?.parse().map_err(|_| "bad tail")?;
+                let v: usize = it.next().ok_or("missing head")?.parse().map_err(|_| "bad head")?;
+                let cap: i64 = it.next().ok_or("missing capacity")?.parse().map_err(|_| "bad capacity")?;
+                if u == 0 || v == 0 {
+                    return Err(format!("line {}: DIMACS ids are 1-based", lineno + 1));
+                }
+                edges.push(Edge::new((u - 1) as VertexId, (v - 1) as VertexId, cap));
+            }
+            other => return Err(format!("line {}: unknown record '{other}'", lineno + 1)),
+        }
+    }
+    let n = n.ok_or("missing 'p max' line")?;
+    let s = s.ok_or("missing source ('n <id> s')")?;
+    let t = t.ok_or("missing sink ('n <id> t')")?;
+    if edges.len() != declared_m {
+        return Err(format!("arc count mismatch: declared {declared_m}, found {}", edges.len()));
+    }
+    let net = FlowNetwork { n, s, t, edges, name: "dimacs".into() };
+    net.validate()?;
+    Ok(net)
+}
+
+/// Read a DIMACS file.
+pub fn read(path: &str) -> Result<FlowNetwork, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    parse(&text)
+}
+
+/// Serialize to DIMACS max-flow text.
+pub fn write(net: &FlowNetwork) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("c {}\n", net.name));
+    out.push_str(&format!("p max {} {}\n", net.n, net.m()));
+    out.push_str(&format!("n {} s\n", net.s + 1));
+    out.push_str(&format!("n {} t\n", net.t + 1));
+    for e in &net.edges {
+        out.push_str(&format!("a {} {} {}\n", e.u + 1, e.v + 1, e.cap));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "c tiny\np max 4 5\nn 1 s\nn 4 t\na 1 2 3\na 1 3 2\na 2 4 2\na 3 4 3\na 2 3 1\n";
+
+    #[test]
+    fn parses_sample() {
+        let net = parse(SAMPLE).unwrap();
+        assert_eq!(net.n, 4);
+        assert_eq!(net.m(), 5);
+        assert_eq!(net.s, 0);
+        assert_eq!(net.t, 3);
+        assert_eq!(net.edges[0], Edge::new(0, 1, 3));
+    }
+
+    #[test]
+    fn roundtrip() {
+        let net = parse(SAMPLE).unwrap();
+        let text = write(&net);
+        let again = parse(&text).unwrap();
+        assert_eq!(net.n, again.n);
+        assert_eq!(net.s, again.s);
+        assert_eq!(net.t, again.t);
+        assert_eq!(net.edges, again.edges);
+    }
+
+    #[test]
+    fn rejects_missing_header() {
+        assert!(parse("a 1 2 3\n").is_err());
+    }
+
+    #[test]
+    fn rejects_count_mismatch() {
+        assert!(parse("p max 2 2\nn 1 s\nn 2 t\na 1 2 3\n").is_err());
+    }
+
+    #[test]
+    fn rejects_zero_based_ids() {
+        assert!(parse("p max 2 1\nn 0 s\nn 2 t\na 1 2 1\n").is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_record() {
+        assert!(parse("p max 2 0\nn 1 s\nn 2 t\nx nonsense\n").is_err());
+    }
+}

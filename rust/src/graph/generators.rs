@@ -1,0 +1,330 @@
+//! Synthetic workload generators.
+//!
+//! Two DIMACS 1st-Challenge generators are reimplemented faithfully
+//! (Washington-RLG, Genrmf — the paper's S0/S1), and a family of
+//! SNAP/KONECT *analogs* provide the degree-distribution regimes of the
+//! paper's real-world graphs (see DESIGN.md §4 for the substitution
+//! rationale): road-like meshes (R1/R2), near-regular co-purchase graphs
+//! (R0), power-law RMAT graphs (R5/R7...), and web-like graphs (R3/R4).
+
+use super::builder::FlowNetwork;
+use super::{Capacity, Edge, VertexId};
+use crate::util::Rng;
+
+/// Parameters of the DIMACS `genrmf` generator: `b` frames of `a × a` grid
+/// vertices; in-frame edges have capacity `c2 * a * a`, inter-frame edges
+/// (a random permutation per frame boundary) have capacity uniform in
+/// `[c1, c2]`. Source is the first vertex of the first frame, sink the last
+/// vertex of the last frame.
+#[derive(Debug, Clone)]
+pub struct GenrmfParams {
+    pub a: usize,
+    pub b: usize,
+    pub c1: Capacity,
+    pub c2: Capacity,
+    pub seed: u64,
+}
+
+/// DIMACS `genrmf` (Goldfarb–Grigoriadis RMF networks) — the paper's S1.
+pub fn genrmf(p: &GenrmfParams) -> FlowNetwork {
+    assert!(p.a >= 1 && p.b >= 2 && p.c1 >= 1 && p.c2 >= p.c1);
+    let a = p.a;
+    let frame = a * a;
+    let n = frame * p.b;
+    let mut rng = Rng::new(p.seed);
+    let idx = |f: usize, x: usize, y: usize| -> VertexId { (f * frame + y * a + x) as VertexId };
+    let in_cap = (p.c2 as i64) * (a as i64) * (a as i64);
+    let mut edges = Vec::new();
+    for f in 0..p.b {
+        // In-frame 4-neighborhood, both directions.
+        for y in 0..a {
+            for x in 0..a {
+                if x + 1 < a {
+                    edges.push(Edge::new(idx(f, x, y), idx(f, x + 1, y), in_cap));
+                    edges.push(Edge::new(idx(f, x + 1, y), idx(f, x, y), in_cap));
+                }
+                if y + 1 < a {
+                    edges.push(Edge::new(idx(f, x, y), idx(f, x, y + 1), in_cap));
+                    edges.push(Edge::new(idx(f, x, y + 1), idx(f, x, y), in_cap));
+                }
+            }
+        }
+        // Inter-frame random permutation, forward only.
+        if f + 1 < p.b {
+            let mut perm: Vec<usize> = (0..frame).collect();
+            rng.shuffle(&mut perm);
+            for (i, &j) in perm.iter().enumerate() {
+                let cap = rng.range_i64(p.c1, p.c2);
+                edges.push(Edge::new((f * frame + i) as VertexId, ((f + 1) * frame + j) as VertexId, cap));
+            }
+        }
+    }
+    FlowNetwork::new(
+        n,
+        0,
+        (n - 1) as VertexId,
+        edges,
+        format!("genrmf(a={},b={},c1={},c2={},seed={})", p.a, p.b, p.c1, p.c2, p.seed),
+    )
+}
+
+/// Parameters of the DIMACS Washington random-level-graph generator (RLG) —
+/// the paper's S0. `levels` ranks of `width` vertices; every vertex sends
+/// `fanout` edges to random vertices of the next level with capacity uniform
+/// in `[1, max_cap]`; a super source feeds level 0 and the last level drains
+/// into the sink.
+#[derive(Debug, Clone)]
+pub struct WashingtonParams {
+    pub levels: usize,
+    pub width: usize,
+    pub fanout: usize,
+    pub max_cap: Capacity,
+    pub seed: u64,
+}
+
+/// Washington RLG (random level graph).
+pub fn washington_rlg(p: &WashingtonParams) -> FlowNetwork {
+    assert!(p.levels >= 1 && p.width >= 1 && p.fanout >= 1 && p.max_cap >= 1);
+    let n = p.levels * p.width + 2;
+    let s = (n - 2) as VertexId;
+    let t = (n - 1) as VertexId;
+    let mut rng = Rng::new(p.seed);
+    let node = |lvl: usize, i: usize| -> VertexId { (lvl * p.width + i) as VertexId };
+    let mut edges = Vec::new();
+    for i in 0..p.width {
+        edges.push(Edge::new(s, node(0, i), p.max_cap * p.fanout as i64));
+    }
+    for lvl in 0..p.levels {
+        for i in 0..p.width {
+            if lvl + 1 < p.levels {
+                for _ in 0..p.fanout {
+                    let j = rng.index(p.width);
+                    edges.push(Edge::new(node(lvl, i), node(lvl + 1, j), rng.range_i64(1, p.max_cap)));
+                }
+            } else {
+                edges.push(Edge::new(node(lvl, i), t, p.max_cap * p.fanout as i64));
+            }
+        }
+    }
+    FlowNetwork::new(
+        n,
+        s,
+        t,
+        edges,
+        format!("washington-rlg(l={},w={},f={},cap={},seed={})", p.levels, p.width, p.fanout, p.max_cap, p.seed),
+    )
+}
+
+/// R-MAT power-law generator (Chakrabarti et al.) — the analog of the
+/// paper's heavy-tailed SNAP graphs (cit-Patents R5, soc-LiveJournal R7,
+/// web graphs R3/R4 with suitable parameters). Unit capacities, like the
+/// paper's SNAP setup.
+#[derive(Debug, Clone)]
+pub struct RmatParams {
+    /// `n = 1 << scale` vertices.
+    pub scale: u32,
+    /// `m = edge_factor * n` directed edges (before dedup).
+    pub edge_factor: usize,
+    /// Quadrant probabilities; must sum to ~1. (0.57, 0.19, 0.19, 0.05) is
+    /// the Graph500 default and yields strong degree skew.
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    pub seed: u64,
+}
+
+pub fn rmat(p: &RmatParams) -> FlowNetwork {
+    let n = 1usize << p.scale;
+    let m = p.edge_factor * n;
+    let d = 1.0 - p.a - p.b - p.c;
+    assert!(d >= -1e-9, "rmat probabilities exceed 1");
+    let mut rng = Rng::new(p.seed);
+    let mut edges = Vec::with_capacity(m);
+    for _ in 0..m {
+        let (mut u, mut v) = (0usize, 0usize);
+        let mut half = n >> 1;
+        while half > 0 {
+            let r = rng.f64();
+            if r < p.a {
+                // top-left
+            } else if r < p.a + p.b {
+                v += half;
+            } else if r < p.a + p.b + p.c {
+                u += half;
+            } else {
+                u += half;
+                v += half;
+            }
+            half >>= 1;
+        }
+        if u != v {
+            edges.push(Edge::new(u as VertexId, v as VertexId, 1));
+        }
+    }
+    let net = FlowNetwork {
+        n,
+        s: 0,
+        t: (n - 1) as VertexId,
+        edges,
+        name: format!("rmat(scale={},ef={},seed={})", p.scale, p.edge_factor, p.seed),
+    };
+    net.normalized()
+}
+
+/// Road-network analog (paper R1/R2: planar meshes, max degree < 10, unit
+/// caps): a `w × h` 4-neighbor grid with a fraction of edges knocked out and
+/// a few random "highway" shortcuts.
+pub fn grid_road(w: usize, h: usize, drop_prob: f64, shortcuts: usize, seed: u64) -> FlowNetwork {
+    assert!(w >= 2 && h >= 2);
+    let n = w * h;
+    let mut rng = Rng::new(seed);
+    let idx = |x: usize, y: usize| -> VertexId { (y * w + x) as VertexId };
+    let mut edges = Vec::new();
+    let both = |edges: &mut Vec<Edge>, a: VertexId, b: VertexId| {
+        edges.push(Edge::new(a, b, 1));
+        edges.push(Edge::new(b, a, 1));
+    };
+    for y in 0..h {
+        for x in 0..w {
+            if x + 1 < w && !rng.chance(drop_prob) {
+                both(&mut edges, idx(x, y), idx(x + 1, y));
+            }
+            if y + 1 < h && !rng.chance(drop_prob) {
+                both(&mut edges, idx(x, y), idx(x, y + 1));
+            }
+        }
+    }
+    for _ in 0..shortcuts {
+        let a = rng.index(n) as VertexId;
+        let b = rng.index(n) as VertexId;
+        if a != b {
+            both(&mut edges, a, b);
+        }
+    }
+    FlowNetwork::new(n, 0, (n - 1) as VertexId, edges, format!("grid-road({w}x{h},seed={seed})")).normalized()
+}
+
+/// Near-regular directed graph (paper R0 analog: Amazon co-purchase —
+/// "almost all nodes in the same SCC, degrees very close to each other").
+/// Every vertex gets out-degree in `[d-1, d+1]`, targets drawn uniformly,
+/// plus a Hamiltonian cycle to force one big SCC. Unit capacities.
+pub fn near_regular(n: usize, d: usize, seed: u64) -> FlowNetwork {
+    assert!(n >= 3 && d >= 1);
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::with_capacity(n * (d + 1));
+    for u in 0..n {
+        edges.push(Edge::new(u as VertexId, ((u + 1) % n) as VertexId, 1));
+        let deg = d - 1 + rng.index(3);
+        for _ in 0..deg {
+            let v = rng.index(n);
+            if v != u {
+                edges.push(Edge::new(u as VertexId, v as VertexId, 1));
+            }
+        }
+    }
+    FlowNetwork::new(n, 0, (n - 1) as VertexId, edges, format!("near-regular(n={n},d={d},seed={seed})")).normalized()
+}
+
+/// Erdős–Rényi-style random directed graph for tests: `m` uniform edges,
+/// capacities uniform in `[1, max_cap]`.
+pub fn erdos_renyi(n: usize, m: usize, max_cap: Capacity, seed: u64) -> FlowNetwork {
+    assert!(n >= 2);
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::with_capacity(m);
+    for _ in 0..m {
+        let u = rng.index(n);
+        let v = rng.index(n);
+        if u != v {
+            edges.push(Edge::new(u as VertexId, v as VertexId, rng.range_i64(1, max_cap.max(1))));
+        }
+    }
+    FlowNetwork::new(n, 0, (n - 1) as VertexId, edges, format!("er(n={n},m={m},seed={seed})")).normalized()
+}
+
+/// Web-graph analog (paper R3/R4: web-BerkStan, web-Google — power law with
+/// locality): RMAT skeleton plus intra-"site" cliquelets.
+pub fn webgraph(scale: u32, edge_factor: usize, seed: u64) -> FlowNetwork {
+    let base = rmat(&RmatParams { scale, edge_factor, a: 0.6, b: 0.15, c: 0.15, seed });
+    let n = base.n;
+    let mut rng = Rng::new(seed ^ 0xDEAD_BEEF);
+    let mut edges = base.edges;
+    // Link consecutive ids in small blocks (site-local navigation links).
+    let mut u = 0usize;
+    while u + 1 < n {
+        let block = 2 + rng.index(6);
+        for i in u..(u + block - 1).min(n - 1) {
+            edges.push(Edge::new(i as VertexId, (i + 1) as VertexId, 1));
+            if rng.chance(0.5) {
+                edges.push(Edge::new((i + 1) as VertexId, i as VertexId, 1));
+            }
+        }
+        u += block;
+    }
+    FlowNetwork { n, s: base.s, t: base.t, edges, name: format!("webgraph(scale={scale},ef={edge_factor},seed={seed})") }
+        .normalized()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::{Csr, DegreeStats};
+
+    #[test]
+    fn genrmf_shape() {
+        let g = genrmf(&GenrmfParams { a: 4, b: 3, c1: 1, c2: 100, seed: 7 });
+        assert_eq!(g.n, 48);
+        // In-frame edges: 3 frames * 2*2*a*(a-1) = 3*48; inter-frame: 2*16.
+        assert_eq!(g.m(), 3 * 48 + 2 * 16);
+        g.validate().unwrap();
+        // Every inter-frame capacity within [c1, c2]; in-frame = c2*a*a.
+        for e in &g.edges {
+            assert!(e.cap == 100 * 16 || (1..=100).contains(&e.cap));
+        }
+    }
+
+    #[test]
+    fn genrmf_deterministic() {
+        let p = GenrmfParams { a: 3, b: 4, c1: 2, c2: 9, seed: 11 };
+        assert_eq!(genrmf(&p).edges, genrmf(&p).edges);
+    }
+
+    #[test]
+    fn washington_shape() {
+        let p = WashingtonParams { levels: 5, width: 8, fanout: 3, max_cap: 50, seed: 3 };
+        let g = washington_rlg(&p);
+        assert_eq!(g.n, 5 * 8 + 2);
+        assert_eq!(g.m(), 8 + 4 * 8 * 3 + 8);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn rmat_is_skewed() {
+        let g = rmat(&RmatParams { scale: 10, edge_factor: 8, a: 0.57, b: 0.19, c: 0.19, seed: 5 });
+        let csr = Csr::from_edges(g.n, g.edges.iter().map(|e| (e.u, e.v)));
+        let d = DegreeStats::of(&csr);
+        assert!(d.cv() > 1.0, "rmat should be heavy-tailed, cv={}", d.cv());
+        assert!(g.m() > 1000);
+    }
+
+    #[test]
+    fn near_regular_is_flat() {
+        let g = near_regular(2000, 6, 9);
+        let csr = Csr::from_edges(g.n, g.edges.iter().map(|e| (e.u, e.v)));
+        let d = DegreeStats::of(&csr);
+        assert!(d.cv() < 0.5, "near-regular should be flat, cv={}", d.cv());
+    }
+
+    #[test]
+    fn grid_road_low_degree() {
+        let g = grid_road(30, 30, 0.1, 20, 4);
+        let csr = Csr::from_edges(g.n, g.edges.iter().map(|e| (e.u, e.v)));
+        let d = DegreeStats::of(&csr);
+        assert!(d.max <= 10, "road max degree {} too high", d.max);
+    }
+
+    #[test]
+    fn generators_validate() {
+        webgraph(8, 4, 1).validate().unwrap();
+        erdos_renyi(50, 300, 10, 2).validate().unwrap();
+    }
+}

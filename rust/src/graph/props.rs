@@ -1,0 +1,164 @@
+//! Graph characterization: strongly connected components (Tarjan,
+//! iterative) and the structural statistics the paper uses to explain
+//! per-graph results (§4.2: "almost all nodes are within the same SCC, and
+//! the degrees of these nodes are very close to each other" for Amazon
+//! R0). Consumed by `wbpr info` and the router.
+
+use super::csr::Csr;
+use super::VertexId;
+
+/// SCC decomposition result.
+#[derive(Debug, Clone)]
+pub struct SccResult {
+    /// Component id per vertex (0-based, reverse topological order).
+    pub comp: Vec<u32>,
+    /// Number of components.
+    pub count: usize,
+    /// Size of the largest component.
+    pub largest: usize,
+}
+
+/// Tarjan's SCC, iterative (explicit stack — safe for deep graphs).
+pub fn scc(csr: &Csr) -> SccResult {
+    let n = csr.n();
+    const UNSET: u32 = u32::MAX;
+    let mut index = vec![UNSET; n];
+    let mut low = vec![0u32; n];
+    let mut on_stack = vec![false; n];
+    let mut comp = vec![UNSET; n];
+    let mut stack: Vec<u32> = Vec::new();
+    let mut next_index = 0u32;
+    let mut count = 0u32;
+
+    // Explicit DFS frames: (vertex, next edge offset within row).
+    let mut frames: Vec<(u32, usize)> = Vec::new();
+    for root in 0..n as u32 {
+        if index[root as usize] != UNSET {
+            continue;
+        }
+        frames.push((root, 0));
+        while let Some(&mut (u, ref mut ei)) = frames.last_mut() {
+            let ui = u as usize;
+            if *ei == 0 {
+                index[ui] = next_index;
+                low[ui] = next_index;
+                next_index += 1;
+                stack.push(u);
+                on_stack[ui] = true;
+            }
+            let row = csr.row(u);
+            let mut descended = false;
+            while *ei < row.len() {
+                let v = row[*ei] as usize;
+                *ei += 1;
+                if index[v] == UNSET {
+                    frames.push((v as u32, 0));
+                    descended = true;
+                    break;
+                } else if on_stack[v] {
+                    low[ui] = low[ui].min(index[v]);
+                }
+            }
+            if descended {
+                continue;
+            }
+            // u finished.
+            if low[ui] == index[ui] {
+                loop {
+                    let w = stack.pop().unwrap();
+                    on_stack[w as usize] = false;
+                    comp[w as usize] = count;
+                    if w == u {
+                        break;
+                    }
+                }
+                count += 1;
+            }
+            frames.pop();
+            if let Some(&mut (p, _)) = frames.last_mut() {
+                let pi = p as usize;
+                low[pi] = low[pi].min(low[ui]);
+            }
+        }
+    }
+
+    let mut sizes = vec![0usize; count as usize];
+    for &c in &comp {
+        sizes[c as usize] += 1;
+    }
+    SccResult { comp, count: count as usize, largest: sizes.iter().copied().max().unwrap_or(0) }
+}
+
+/// Fraction of vertices inside the largest SCC — the paper's R0 predictor
+/// ("naturally balanced" graphs have one giant SCC + flat degrees).
+pub fn largest_scc_fraction(n: usize, edges: impl Iterator<Item = (VertexId, VertexId)>) -> f64 {
+    if n == 0 {
+        return 0.0;
+    }
+    let csr = Csr::from_edges(n, edges);
+    scc(&csr).largest as f64 / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    fn csr_of(n: usize, edges: &[(u32, u32)]) -> Csr {
+        Csr::from_edges(n, edges.iter().copied())
+    }
+
+    #[test]
+    fn single_cycle_is_one_scc() {
+        let c = csr_of(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+        let r = scc(&c);
+        assert_eq!(r.count, 1);
+        assert_eq!(r.largest, 4);
+    }
+
+    #[test]
+    fn dag_has_singleton_sccs() {
+        let c = csr_of(4, &[(0, 1), (1, 2), (2, 3)]);
+        let r = scc(&c);
+        assert_eq!(r.count, 4);
+        assert_eq!(r.largest, 1);
+    }
+
+    #[test]
+    fn two_components_plus_bridge() {
+        // {0,1} cycle, {2,3} cycle, bridge 1->2.
+        let c = csr_of(4, &[(0, 1), (1, 0), (2, 3), (3, 2), (1, 2)]);
+        let r = scc(&c);
+        assert_eq!(r.count, 2);
+        assert_eq!(r.largest, 2);
+        assert_ne!(r.comp[0], r.comp[2]);
+        assert_eq!(r.comp[0], r.comp[1]);
+        assert_eq!(r.comp[2], r.comp[3]);
+    }
+
+    #[test]
+    fn near_regular_is_one_giant_scc() {
+        // The R0 regime: the generator plants a Hamiltonian cycle.
+        let g = generators::near_regular(500, 4, 7);
+        let frac = largest_scc_fraction(g.n, g.edges.iter().map(|e| (e.u, e.v)));
+        assert!(frac > 0.99, "expected giant SCC, got {frac}");
+    }
+
+    #[test]
+    fn deep_chain_does_not_overflow() {
+        // 200k-vertex path: recursive Tarjan would blow the stack.
+        let n = 200_000;
+        let edges: Vec<(u32, u32)> = (0..n as u32 - 1).map(|i| (i, i + 1)).collect();
+        let c = Csr::from_edges(n, edges.into_iter());
+        let r = scc(&c);
+        assert_eq!(r.count, n);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let c = csr_of(3, &[]);
+        let r = scc(&c);
+        assert_eq!(r.count, 3);
+        assert_eq!(r.largest, 1);
+    }
+}

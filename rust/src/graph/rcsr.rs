@@ -1,0 +1,151 @@
+//! Reversed CSR (paper Fig. 2c): the original forward CSR plus a second CSR
+//! of reversed edges whose payload (`flow_idx`) identifies the backward
+//! arc's flow slot. Backward-arc access is O(1); the price is that a
+//! vertex's residual neighborhood spans two discontiguous ranges.
+
+use super::builder::ArcGraph;
+use super::csr::Csr;
+use super::residual::{Residual, RowSegs};
+use super::VertexId;
+
+#[derive(Debug, Clone)]
+pub struct Rcsr {
+    n: usize,
+    /// Forward CSR: row `u` holds the forward arcs `2e` of edges `u → v`.
+    pub fwd: Csr,
+    pub fwd_arcs: Vec<u32>,
+    /// Reversed CSR: row `v` holds the backward arcs `2e+1` of edges
+    /// `u → v`. The arc id doubles as the paper's `flow_idx` — it *is* the
+    /// index of the backward flow slot.
+    pub rev: Csr,
+    pub rev_arcs: Vec<u32>,
+}
+
+impl Rcsr {
+    pub fn build(g: &ArcGraph) -> Rcsr {
+        let m2 = g.num_arcs();
+        // Forward arcs are the even ids, rows keyed by arc_from.
+        let fwd_iter = (0..m2 as u32).step_by(2).map(|a| (g.arc_from[a as usize], g.arc_to[a as usize], a));
+        let (fwd, fwd_arcs) = Csr::from_pairs_with(g.n, fwd_iter);
+        // Backward arcs are the odd ids, rows keyed by their source
+        // (= original edge's head).
+        let rev_iter = (1..m2 as u32).step_by(2).map(|a| (g.arc_from[a as usize], g.arc_to[a as usize], a));
+        let (rev, rev_arcs) = Csr::from_pairs_with(g.n, rev_iter);
+        Rcsr { n: g.n, fwd, fwd_arcs, rev, rev_arcs }
+    }
+}
+
+impl Residual for Rcsr {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn row(&self, u: VertexId) -> RowSegs<'_> {
+        let fr = self.fwd.range(u);
+        let rr = self.rev.range(u);
+        RowSegs::two(
+            (&self.fwd_arcs[fr.clone()], &self.fwd.cols[fr]),
+            (&self.rev_arcs[rr.clone()], &self.rev.cols[rr]),
+        )
+    }
+
+    #[inline(always)]
+    fn rev_arc(&self, a: u32, _from: VertexId, _to: VertexId) -> u32 {
+        // O(1): the flow_idx pairing.
+        a ^ 1
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.fwd.memory_bytes() + self.fwd_arcs.len() * 4 + self.rev.memory_bytes() + self.rev_arcs.len() * 4
+    }
+
+    fn name(&self) -> &'static str {
+        "RCSR"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::FlowNetwork;
+    use crate::graph::Edge;
+
+    fn paper_like() -> ArcGraph {
+        // 0->1, 0->2, 2->0, 2->4, 4->3, 1->3 — includes the (0,2)/(2,0)
+        // two-cycle the paper's Fig. 2 example cares about.
+        let net = FlowNetwork::new(
+            5,
+            0,
+            3,
+            vec![
+                Edge::new(0, 1, 5),
+                Edge::new(0, 2, 4),
+                Edge::new(2, 0, 3),
+                Edge::new(2, 4, 2),
+                Edge::new(4, 3, 6),
+                Edge::new(1, 3, 7),
+            ],
+            "fig2",
+        );
+        ArcGraph::build(&net)
+    }
+
+    #[test]
+    fn rows_cover_in_and_out_neighbors() {
+        let g = paper_like();
+        let r = Rcsr::build(&g);
+        // Residual neighbors of vertex 2: out {0, 4}, in {0} -> cols {0,4,0}.
+        let row = r.row(2);
+        let mut cols: Vec<u32> = row.iter().map(|(_, v)| v).collect();
+        cols.sort_unstable();
+        assert_eq!(cols, vec![0, 0, 4]);
+        assert_eq!(r.degree(2), 3);
+    }
+
+    #[test]
+    fn arcs_point_where_they_say() {
+        let g = paper_like();
+        let r = Rcsr::build(&g);
+        for u in 0..g.n as u32 {
+            for (a, v) in r.row(u).iter() {
+                assert_eq!(g.arc_from[a as usize], u);
+                assert_eq!(g.arc_to[a as usize], v);
+            }
+        }
+    }
+
+    #[test]
+    fn rev_arc_is_pairing() {
+        let g = paper_like();
+        let r = Rcsr::build(&g);
+        for u in 0..g.n as u32 {
+            for (a, v) in r.row(u).iter() {
+                let ra = r.rev_arc(a, u, v);
+                assert_eq!(ra, a ^ 1);
+                assert_eq!(g.arc_from[ra as usize], v);
+                assert_eq!(g.arc_to[ra as usize], u);
+            }
+        }
+    }
+
+    #[test]
+    fn every_arc_appears_exactly_once() {
+        let g = paper_like();
+        let r = Rcsr::build(&g);
+        let mut seen = vec![0u32; g.num_arcs()];
+        for u in 0..g.n as u32 {
+            for (a, _) in r.row(u).iter() {
+                seen[a as usize] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn memory_is_linear() {
+        let g = paper_like();
+        let r = Rcsr::build(&g);
+        // 2 CSRs: offsets 2*(n+1)*4, cols 2*m*4, arcs 2*m*4 with m = 6.
+        assert_eq!(r.memory_bytes(), 2 * (6 * 4) + 2 * (6 * 4) + 2 * (6 * 4));
+    }
+}

@@ -1,0 +1,73 @@
+//! The residual-representation trait implemented by [`Rcsr`](super::Rcsr)
+//! and [`Bcsr`](super::Bcsr).
+//!
+//! Engines are generic over `R: Residual`, so the representation's *access
+//! costs* (RCSR: two discontiguous row segments but O(1) reverse-arc lookup;
+//! BCSR: one contiguous segment but O(log d) reverse-arc search) are paid for
+//! real in every engine — this is the trade-off Tables 1–2 measure.
+
+use super::VertexId;
+
+/// A vertex's residual neighborhood, exposed as up to two contiguous
+/// segments of parallel `(arc id, target)` slices.
+///
+/// RCSR yields two segments (forward row, reversed row) — the paper's
+/// "discontinuous addresses, causing uncoalesced memory access". BCSR yields
+/// one (the aggregated row).
+#[derive(Debug, Clone, Copy)]
+pub struct RowSegs<'a> {
+    pub segs: [(&'a [u32], &'a [VertexId]); 2],
+}
+
+impl<'a> RowSegs<'a> {
+    pub fn one(arcs: &'a [u32], cols: &'a [VertexId]) -> RowSegs<'a> {
+        RowSegs { segs: [(arcs, cols), (&[], &[])] }
+    }
+
+    pub fn two(a: (&'a [u32], &'a [VertexId]), b: (&'a [u32], &'a [VertexId])) -> RowSegs<'a> {
+        RowSegs { segs: [a, b] }
+    }
+
+    /// Total number of residual arcs in the row.
+    pub fn len(&self) -> usize {
+        self.segs[0].0.len() + self.segs[1].0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Iterate `(arc, target)` over both segments.
+    pub fn iter(&self) -> impl Iterator<Item = (u32, VertexId)> + 'a {
+        let [(a0, c0), (a1, c1)] = self.segs;
+        a0.iter().copied().zip(c0.iter().copied()).chain(a1.iter().copied().zip(c1.iter().copied()))
+    }
+}
+
+/// A residual-graph representation over the shared arc arena.
+pub trait Residual: Sync {
+    /// Number of vertices.
+    fn n(&self) -> usize;
+
+    /// Residual arcs of `u`.
+    fn row(&self, u: VertexId) -> RowSegs<'_>;
+
+    /// Residual degree of `u` (in + out).
+    fn degree(&self, u: VertexId) -> usize {
+        self.row(u).len()
+    }
+
+    /// Locate the reverse arc of `a = (from → to)`.
+    ///
+    /// The *result* always equals `a ^ 1` (the arena pairing); what differs
+    /// is the **cost**: RCSR answers in O(1) via its `flow_idx` pairing,
+    /// BCSR binary-searches `to`'s aggregated row (O(log d(to))), exactly as
+    /// in the paper's Fig. 2 discussion.
+    fn rev_arc(&self, a: u32, from: VertexId, to: VertexId) -> u32;
+
+    /// Bytes used by this representation (O(V+E) accounting).
+    fn memory_bytes(&self) -> usize;
+
+    /// Short display name.
+    fn name(&self) -> &'static str;
+}

@@ -1,0 +1,84 @@
+//! SNAP edge-list format parser (`# comment` header lines, then
+//! whitespace-separated `u v` pairs). The paper sets all SNAP capacities
+//! to 1 (§4.1, Table 1 caption); we do the same, relabeling arbitrary
+//! vertex ids to a dense `0..n` range.
+
+use super::builder::FlowNetwork;
+use super::{Edge, VertexId};
+use std::collections::HashMap;
+
+/// Parse SNAP edge-list text into a unit-capacity network. `s`/`t` default
+/// to the first/last relabeled vertices; callers normally re-select
+/// terminals with `builder::select_pairs` + `add_super_terminals`.
+pub fn parse(text: &str) -> Result<FlowNetwork, String> {
+    let mut remap: HashMap<u64, VertexId> = HashMap::new();
+    let mut edges: Vec<Edge> = Vec::new();
+    let intern = |remap: &mut HashMap<u64, VertexId>, raw: u64| -> VertexId {
+        let next = remap.len() as VertexId;
+        *remap.entry(raw).or_insert(next)
+    };
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') || line.starts_with('%') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let u: u64 = it
+            .next()
+            .and_then(|x| x.parse().ok())
+            .ok_or_else(|| format!("line {}: bad edge", lineno + 1))?;
+        let v: u64 = it
+            .next()
+            .and_then(|x| x.parse().ok())
+            .ok_or_else(|| format!("line {}: bad edge", lineno + 1))?;
+        let u = intern(&mut remap, u);
+        let v = intern(&mut remap, v);
+        if u != v {
+            edges.push(Edge::new(u, v, 1));
+        }
+    }
+    let n = remap.len();
+    if n < 2 {
+        return Err("graph has fewer than 2 vertices".into());
+    }
+    Ok(FlowNetwork { n, s: 0, t: (n - 1) as VertexId, edges, name: "snap".into() }.normalized())
+}
+
+/// Read a SNAP file.
+pub fn read(path: &str) -> Result<FlowNetwork, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    parse(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_with_comments_and_remap() {
+        let net = parse("# Directed graph\n# Nodes: 3 Edges: 3\n10 20\n20 30\n30 10\n").unwrap();
+        assert_eq!(net.n, 3);
+        assert_eq!(net.m(), 3);
+        assert!(net.edges.iter().all(|e| e.cap == 1));
+    }
+
+    #[test]
+    fn drops_self_loops_and_dups() {
+        let net = parse("1 1\n1 2\n1 2\n2 1\n").unwrap();
+        assert_eq!(net.n, 2);
+        assert_eq!(net.m(), 2); // 1->2 (deduped) and 2->1
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("not numbers\n").is_err());
+        assert!(parse("# only comments\n").is_err());
+    }
+
+    #[test]
+    fn tabs_and_spaces() {
+        let net = parse("0\t1\n1 2\n").unwrap();
+        assert_eq!(net.n, 3);
+        assert_eq!(net.m(), 2);
+    }
+}

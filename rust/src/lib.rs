@@ -1,0 +1,36 @@
+//! # WBPR — Workload-Balanced Push-Relabel for Massive Graphs
+//!
+//! A reproduction of *"Engineering A Workload-balanced Push-Relabel Algorithm
+//! for Massive Graphs on GPUs"* (Hsieh, Lin, Kuo; CS.DC 2024) as a
+//! three-layer rust + JAX + Pallas system:
+//!
+//! * **L1** — the vertex-centric push-relabel step as a Pallas kernel
+//!   (`python/compile/kernels/`), AOT-lowered to HLO text.
+//! * **L2** — the K-cycle push-relabel loop as a JAX program
+//!   (`python/compile/model.py`).
+//! * **L3** — this crate: graph substrates (CSR / RCSR / BCSR), the
+//!   thread-centric and vertex-centric parallel engines, the GPU SIMT
+//!   simulator used to reproduce the paper's workload analysis, the PJRT
+//!   runtime that executes the AOT artifacts, and the job coordinator.
+//!
+//! See `DESIGN.md` for the paper-to-module map and `EXPERIMENTS.md` for the
+//! reproduced tables/figures.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use wbpr::graph::{generators, Representation};
+//! use wbpr::maxflow::{self, EngineKind};
+//!
+//! let g = generators::genrmf(&generators::GenrmfParams { a: 8, b: 8, c1: 1, c2: 100, seed: 1 });
+//! let flow = maxflow::solve(&g, EngineKind::VertexCentric, Representation::Bcsr, &Default::default());
+//! println!("max flow = {}", flow.value);
+//! ```
+
+pub mod bench;
+pub mod coordinator;
+pub mod graph;
+pub mod maxflow;
+pub mod runtime;
+pub mod simt;
+pub mod util;

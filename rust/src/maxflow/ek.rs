@@ -1,0 +1,104 @@
+//! Edmonds–Karp (paper §2.1 background): BFS augmenting paths, O(VE²).
+//! Used as a second independent oracle on small graphs.
+
+use super::{FlowResult, SolveStats};
+use crate::graph::builder::ArcGraph;
+use crate::graph::csr::Csr;
+use crate::util::Timer;
+
+/// Solve max-flow with Edmonds–Karp. Intended for small graphs (tests).
+pub fn solve(g: &ArcGraph) -> FlowResult {
+    let t0 = Timer::start();
+    let m2 = g.num_arcs();
+    let (csr, arcs) = Csr::from_pairs_with(g.n, (0..m2 as u32).map(|a| (g.arc_from[a as usize], g.arc_to[a as usize], a)));
+    let mut cf = g.arc_cap.clone();
+    let mut value = 0i64;
+    loop {
+        // BFS recording the arc used to reach each vertex.
+        let mut pred: Vec<i64> = vec![-1; g.n]; // arc id, -1 unvisited
+        let mut q = std::collections::VecDeque::new();
+        pred[g.s as usize] = -2; // visited marker for source
+        q.push_back(g.s);
+        'bfs: while let Some(u) = q.pop_front() {
+            for i in csr.range(u) {
+                let a = arcs[i] as usize;
+                let v = csr.cols[i] as usize;
+                if cf[a] > 0 && pred[v] == -1 {
+                    pred[v] = a as i64;
+                    if v == g.t as usize {
+                        break 'bfs;
+                    }
+                    q.push_back(v as u32);
+                }
+            }
+        }
+        if pred[g.t as usize] == -1 {
+            break;
+        }
+        // Find bottleneck along the path, then augment.
+        let mut bottleneck = i64::MAX;
+        let mut v = g.t as usize;
+        while v != g.s as usize {
+            let a = pred[v] as usize;
+            bottleneck = bottleneck.min(cf[a]);
+            v = g.arc_from[a] as usize;
+        }
+        let mut v = g.t as usize;
+        while v != g.s as usize {
+            let a = pred[v] as usize;
+            cf[a] -= bottleneck;
+            cf[a ^ 1] += bottleneck;
+            v = g.arc_from[a] as usize;
+        }
+        value += bottleneck;
+    }
+    let ms = t0.ms();
+    FlowResult { value, cf, stats: SolveStats { total_ms: ms, kernel_ms: ms, ..Default::default() } }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::FlowNetwork;
+    use crate::graph::generators;
+    use crate::graph::Edge;
+
+    #[test]
+    fn matches_dinic_on_known_nets() {
+        let nets = vec![
+            FlowNetwork::new(
+                6,
+                0,
+                5,
+                vec![
+                    Edge::new(0, 1, 16),
+                    Edge::new(0, 2, 13),
+                    Edge::new(1, 3, 12),
+                    Edge::new(2, 1, 4),
+                    Edge::new(2, 4, 14),
+                    Edge::new(3, 2, 9),
+                    Edge::new(3, 5, 20),
+                    Edge::new(4, 3, 7),
+                    Edge::new(4, 5, 4),
+                ],
+                "clrs",
+            ),
+            generators::erdos_renyi(30, 200, 9, 1),
+            generators::erdos_renyi(50, 400, 5, 2),
+        ];
+        for net in nets {
+            let g = crate::graph::builder::ArcGraph::build(&net.normalized());
+            let ek = solve(&g);
+            let di = super::super::dinic::solve(&g);
+            assert_eq!(ek.value, di.value, "mismatch on {}", net.name);
+            super::super::verify(&g, &ek).unwrap();
+        }
+    }
+
+    #[test]
+    fn zero_capacity_edges_carry_nothing() {
+        let net = FlowNetwork::new(3, 0, 2, vec![Edge::new(0, 1, 0), Edge::new(1, 2, 7)], "zero");
+        let g = crate::graph::builder::ArcGraph::build(&net);
+        assert_eq!(solve(&g).value, 0);
+    }
+}

@@ -1,0 +1,218 @@
+//! Global relabeling heuristic + ExcessTotal termination accounting
+//! (Algorithm 1, step 2 — executed on the host between kernel launches,
+//! exactly like the paper's CPU phase).
+//!
+//! A backward BFS from the sink over the residual graph reassigns every
+//! reachable vertex's height to its exact residual distance from `t`
+//! (a valid labeling, and the tightest one). Vertices that cannot reach
+//! `t` are lifted to height `n` (deactivated) and their excess is
+//! subtracted from `Excess_total`, which makes the host loop's
+//! `e(s) + e(t) ≥ Excess_total` termination test sound (He & Hong).
+
+use super::state::ParState;
+use crate::graph::builder::ArcGraph;
+use crate::graph::residual::Residual;
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering;
+
+/// Mutable accounting carried across global relabels.
+#[derive(Debug)]
+pub struct ExcessAccounting {
+    /// Excess already subtracted from `Excess_total` per vertex.
+    canceled: Vec<i64>,
+    /// Current `Excess_total`.
+    pub excess_total: i64,
+}
+
+impl ExcessAccounting {
+    pub fn new(n: usize, excess_total: i64) -> ExcessAccounting {
+        ExcessAccounting { canceled: vec![0; n], excess_total }
+    }
+
+    /// Has the algorithm terminated (all routable excess arrived)?
+    pub fn done(&self, g: &ArcGraph, st: &ParState) -> bool {
+        st.excess(g.s) + st.excess(g.t) >= self.excess_total
+    }
+
+    /// Update the accounting for one vertex given its current reachability
+    /// to the sink and its excess: cancel newly-stranded excess, restore
+    /// excess of vertices that became reachable again. Shared by the host
+    /// BFS and the device-relabel paths.
+    pub fn settle(&mut self, u: u32, reachable: bool, e_u: i64) {
+        let c = &mut self.canceled[u as usize];
+        if reachable {
+            if *c != 0 {
+                self.excess_total += *c;
+                *c = 0;
+            }
+        } else {
+            let newly = e_u - *c;
+            if newly != 0 {
+                self.excess_total -= newly;
+                *c = e_u;
+            }
+        }
+    }
+}
+
+/// Outcome of one global relabel pass.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RelabelOutcome {
+    /// Vertices that can still reach the sink.
+    pub reachable: usize,
+    /// Active vertices remaining after the pass.
+    pub active: usize,
+}
+
+/// Run one global relabel over the current state. `update_heights=false`
+/// runs only the reachability/accounting part (used to ablate the
+/// heuristic while keeping termination sound).
+pub fn global_relabel<R: Residual>(
+    g: &ArcGraph,
+    rep: &R,
+    st: &ParState,
+    acct: &mut ExcessAccounting,
+    update_heights: bool,
+) -> RelabelOutcome {
+    let n = g.n;
+    let mut dist: Vec<u32> = vec![u32::MAX; n];
+    let mut queue = VecDeque::new();
+    dist[g.t as usize] = 0;
+    queue.push_back(g.t);
+    // Backward BFS: u is one step from v if the residual arc u→v exists,
+    // i.e. cf[reverse of (v→u)] > 0. Each vertex's outgoing row gives us
+    // exactly those reverse arcs in O(d).
+    while let Some(v) = queue.pop_front() {
+        let dv = dist[v as usize];
+        for (a, u) in rep.row(v).iter() {
+            if dist[u as usize] == u32::MAX && st.residual(a ^ 1) > 0 {
+                dist[u as usize] = dv + 1;
+                queue.push_back(u);
+            }
+        }
+    }
+    let mut reachable = 0usize;
+    let mut active = 0usize;
+    for u in 0..n as u32 {
+        if u == g.s || u == g.t {
+            continue;
+        }
+        let e_u = st.excess(u);
+        let is_reachable = dist[u as usize] != u32::MAX;
+        acct.settle(u, is_reachable, e_u);
+        if is_reachable {
+            reachable += 1;
+            if update_heights {
+                st.h[u as usize].store(dist[u as usize], Ordering::Relaxed);
+            }
+            if e_u > 0 && st.height(u) < n as u32 {
+                active += 1;
+            }
+        } else {
+            // Unreachable: deactivate.
+            st.h[u as usize].store(n as u32, Ordering::Relaxed);
+        }
+    }
+    // Source keeps h = n (it must never be relabeled below n).
+    st.h[g.s as usize].store(n as u32, Ordering::Relaxed);
+    RelabelOutcome { reachable, active }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::FlowNetwork;
+    use crate::graph::{Edge, Rcsr};
+
+    fn line() -> (ArcGraph, Rcsr) {
+        // 0 -> 1 -> 2 -> 3 plus a dead-end 1 -> 4.
+        let g = ArcGraph::build(&FlowNetwork::new(
+            5,
+            0,
+            3,
+            vec![Edge::new(0, 1, 2), Edge::new(1, 2, 2), Edge::new(2, 3, 2), Edge::new(1, 4, 2)],
+            "line",
+        ));
+        let r = Rcsr::build(&g);
+        (g, r)
+    }
+
+    #[test]
+    fn heights_become_bfs_distances() {
+        let (g, rep) = line();
+        let (st, total) = ParState::preflow(&g);
+        let mut acct = ExcessAccounting::new(g.n, total);
+        let out = global_relabel(&g, &rep, &st, &mut acct, true);
+        // 1 and 2 can reach t; 4 cannot (no outgoing residual yet).
+        assert_eq!(st.height(2), 1);
+        assert_eq!(st.height(1), 2);
+        assert_eq!(st.height(4), g.n as u32);
+        assert_eq!(st.height(0), g.n as u32);
+        assert_eq!(out.reachable, 2);
+    }
+
+    #[test]
+    fn stranded_excess_is_canceled_once() {
+        let (g, rep) = line();
+        let (st, total) = ParState::preflow(&g);
+        assert_eq!(total, 2);
+        // Manually strand 1 unit at vertex 4 (as if pushed 1 -> 4).
+        st.e[4].fetch_add(1, Ordering::Relaxed);
+        st.e[1].fetch_sub(1, Ordering::Relaxed);
+        st.cf[6].fetch_sub(1, Ordering::Relaxed); // arc (1->4) is edge 3 -> arc 6
+        st.cf[7].fetch_add(1, Ordering::Relaxed);
+        let mut acct = ExcessAccounting::new(g.n, total);
+        // After the push, 4 has a residual arc back to 1, which reaches t:
+        // so 4 is actually reachable now and nothing is canceled.
+        let out = global_relabel(&g, &rep, &st, &mut acct, true);
+        assert_eq!(acct.excess_total, 2);
+        assert_eq!(out.reachable, 3);
+    }
+
+    #[test]
+    fn truly_stranded_excess_cancels_and_restores() {
+        // 0 -> 1 -> 2(sink); 0 -> 3 dead end.
+        let g = ArcGraph::build(&FlowNetwork::new(
+            4,
+            0,
+            2,
+            vec![Edge::new(0, 1, 1), Edge::new(1, 2, 1), Edge::new(0, 3, 5)],
+            "dead",
+        ));
+        let rep = Rcsr::build(&g);
+        let (st, total) = ParState::preflow(&g);
+        assert_eq!(total, 6);
+        let mut acct = ExcessAccounting::new(g.n, total);
+        global_relabel(&g, &rep, &st, &mut acct, true);
+        // Vertex 3's preflow excess (5) can only go back to s, never to t.
+        assert_eq!(acct.excess_total, 1);
+        assert!(!acct.done(&g, &st));
+        // Route the single routable unit: push 1 -> 2.
+        st.e[1].store(0, Ordering::Relaxed);
+        st.e[2].store(1, Ordering::Relaxed);
+        st.cf[2].store(0, Ordering::Relaxed);
+        st.cf[3].store(1, Ordering::Relaxed);
+        assert!(acct.done(&g, &st));
+    }
+
+    #[test]
+    fn accounting_tracks_growth_of_stranded_excess() {
+        let g = ArcGraph::build(&FlowNetwork::new(
+            4,
+            0,
+            2,
+            vec![Edge::new(0, 1, 1), Edge::new(1, 2, 1), Edge::new(0, 3, 5)],
+            "dead",
+        ));
+        let rep = Rcsr::build(&g);
+        let (st, total) = ParState::preflow(&g);
+        let mut acct = ExcessAccounting::new(g.n, total);
+        global_relabel(&g, &rep, &st, &mut acct, true);
+        assert_eq!(acct.excess_total, 1);
+        // More excess lands on the stranded vertex later (pathological but
+        // legal under races): only the delta is canceled next pass.
+        st.e[3].fetch_add(2, Ordering::Relaxed);
+        global_relabel(&g, &rep, &st, &mut acct, true);
+        assert_eq!(acct.excess_total, -1);
+    }
+}

@@ -1,0 +1,161 @@
+//! Hopcroft–Karp maximum bipartite matching — O(E√V) combinatorial oracle
+//! for the Table 2 pipeline (matching via max-flow must agree with it).
+
+use crate::graph::bipartite::BipartiteGraph;
+use crate::graph::csr::Csr;
+use std::collections::VecDeque;
+
+/// Result: the matching size plus the partner arrays.
+#[derive(Debug, Clone)]
+pub struct Matching {
+    pub size: usize,
+    /// `match_l[l] = r` or `u32::MAX` if unmatched.
+    pub match_l: Vec<u32>,
+    /// `match_r[r] = l` or `u32::MAX` if unmatched.
+    pub match_r: Vec<u32>,
+}
+
+const FREE: u32 = u32::MAX;
+const INF: u32 = u32::MAX;
+
+/// Maximum matching via Hopcroft–Karp.
+pub fn solve(g: &BipartiteGraph) -> Matching {
+    let adj = Csr::from_edges(g.nl, g.edges.iter().map(|&(l, r)| (l, r)));
+    let mut match_l = vec![FREE; g.nl];
+    let mut match_r = vec![FREE; g.nr];
+    let mut dist = vec![INF; g.nl];
+    let mut size = 0usize;
+
+    loop {
+        // BFS layering from free left vertices.
+        let mut q = VecDeque::new();
+        for l in 0..g.nl {
+            if match_l[l] == FREE {
+                dist[l] = 0;
+                q.push_back(l as u32);
+            } else {
+                dist[l] = INF;
+            }
+        }
+        let mut found = false;
+        while let Some(l) = q.pop_front() {
+            for &r in adj.row(l) {
+                let l2 = match_r[r as usize];
+                if l2 == FREE {
+                    found = true;
+                } else if dist[l2 as usize] == INF {
+                    dist[l2 as usize] = dist[l as usize] + 1;
+                    q.push_back(l2);
+                }
+            }
+        }
+        if !found {
+            break;
+        }
+        // DFS augmentation along the layering.
+        fn try_augment(
+            l: u32,
+            adj: &Csr,
+            match_l: &mut [u32],
+            match_r: &mut [u32],
+            dist: &mut [u32],
+        ) -> bool {
+            for i in adj.range(l) {
+                let r = adj.cols[i];
+                let l2 = match_r[r as usize];
+                if l2 == FREE || (dist[l2 as usize] == dist[l as usize] + 1 && try_augment(l2, adj, match_l, match_r, dist)) {
+                    match_l[l as usize] = r;
+                    match_r[r as usize] = l;
+                    return true;
+                }
+            }
+            dist[l as usize] = INF;
+            false
+        }
+        for l in 0..g.nl as u32 {
+            if match_l[l as usize] == FREE && try_augment(l, &adj, &mut match_l, &mut match_r, &mut dist) {
+                size += 1;
+            }
+        }
+    }
+
+    Matching { size, match_l, match_r }
+}
+
+/// Check that a matching is valid for `g` (partners consistent, edges
+/// exist, no vertex matched twice).
+pub fn validate(g: &BipartiteGraph, m: &Matching) -> Result<(), String> {
+    let edge_set: std::collections::HashSet<(u32, u32)> = g.edges.iter().copied().collect();
+    let mut count = 0usize;
+    for l in 0..g.nl as u32 {
+        let r = m.match_l[l as usize];
+        if r != FREE {
+            if m.match_r[r as usize] != l {
+                return Err(format!("partner arrays disagree at l={l}"));
+            }
+            if !edge_set.contains(&(l, r)) {
+                return Err(format!("matched pair ({l},{r}) is not an edge"));
+            }
+            count += 1;
+        }
+    }
+    for r in 0..g.nr as u32 {
+        let l = m.match_r[r as usize];
+        if l != FREE && m.match_l[l as usize] != r {
+            return Err(format!("partner arrays disagree at r={r}"));
+        }
+    }
+    if count != m.size {
+        return Err(format!("size {} but {count} matched pairs", m.size));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::bipartite::{bipartite_planted, bipartite_zipf, BipartiteGraph};
+
+    #[test]
+    fn perfect_matching_found() {
+        let g = BipartiteGraph::new(3, 3, vec![(0, 0), (1, 1), (2, 2), (0, 1)], "perfect");
+        let m = solve(&g);
+        assert_eq!(m.size, 3);
+        validate(&g, &m).unwrap();
+    }
+
+    #[test]
+    fn blocked_matching() {
+        // Both left vertices only like r0.
+        let g = BipartiteGraph::new(2, 2, vec![(0, 0), (1, 0)], "contended");
+        let m = solve(&g);
+        assert_eq!(m.size, 1);
+        validate(&g, &m).unwrap();
+    }
+
+    #[test]
+    fn planted_graphs_reach_left_perfect() {
+        for seed in 0..5 {
+            let g = bipartite_planted(40, 60, 120, seed);
+            let m = solve(&g);
+            assert_eq!(m.size, 40, "seed {seed}");
+            validate(&g, &m).unwrap();
+        }
+    }
+
+    #[test]
+    fn empty_graph_matches_nothing() {
+        let g = BipartiteGraph::new(4, 4, vec![], "empty");
+        assert_eq!(solve(&g).size, 0);
+    }
+
+    #[test]
+    fn zipf_graphs_validate() {
+        for seed in 0..3 {
+            let g = bipartite_zipf(80, 50, 400, 1.1, seed);
+            let m = solve(&g);
+            validate(&g, &m).unwrap();
+            assert!(m.size > 0);
+        }
+    }
+}

@@ -1,0 +1,100 @@
+//! Bipartite matching via max-flow (paper §4.1, Table 2): super source →
+//! left part → right part → super sink, all capacities 1; the max-flow
+//! value is the matching size, and the saturated L→R arcs are the matching.
+
+use super::hopcroft_karp::Matching;
+use super::{solve_arcs, EngineKind, FlowResult, SolveOptions};
+use crate::graph::bipartite::BipartiteGraph;
+use crate::graph::builder::ArcGraph;
+use crate::graph::Representation;
+
+/// Result of a matching computed through the flow pipeline.
+#[derive(Debug, Clone)]
+pub struct FlowMatching {
+    pub matching: Matching,
+    pub flow: FlowResult,
+}
+
+/// Compute a maximum matching by reducing to max-flow and running the
+/// chosen engine/representation.
+pub fn solve(g: &BipartiteGraph, kind: EngineKind, rep: Representation, opts: &SolveOptions) -> FlowMatching {
+    let net = g.to_flow_network();
+    let arcs = ArcGraph::build(&net);
+    let flow = solve_arcs(&arcs, kind, rep, opts);
+    // Extraction. The parallel engines compute a maximum *preflow* (phase 1
+    // of push-relabel), which may strand excess at R vertices, so "every
+    // saturated L→R arc is matched" would over-count. Instead anchor on the
+    // sink side: an R vertex is matched iff its R→t arc is saturated
+    // (their count equals e(t) = the flow value), and each such R is paired
+    // with any L whose L→R arc carries net flow — each L has at most one
+    // out-edge with net flow (its source inflow is ≤ 1), so no L is claimed
+    // twice and the result is a valid maximum matching.
+    //
+    // Edge layout in `to_flow_network`: `nl` source edges, then the L→R
+    // edges in `g.edges` order, then `nr` sink edges. Arc of edge i = 2i.
+    let saturated = |edge_idx: usize| flow.cf[2 * edge_idx] == 0;
+    let mut match_l = vec![u32::MAX; g.nl];
+    let mut match_r = vec![u32::MAX; g.nr];
+    // Per-R list of (edge index, l).
+    let mut in_edges: Vec<Vec<(usize, u32)>> = vec![Vec::new(); g.nr];
+    for (i, &(l, r)) in g.edges.iter().enumerate() {
+        in_edges[r as usize].push((g.nl + i, l));
+    }
+    let mut size = 0usize;
+    for r in 0..g.nr {
+        let sink_edge = g.nl + g.edges.len() + r;
+        if !saturated(sink_edge) {
+            continue;
+        }
+        let l = in_edges[r]
+            .iter()
+            .find(|&&(e, l)| saturated(e) && match_l[l as usize] == u32::MAX)
+            .map(|&(_, l)| l)
+            .expect("saturated sink arc must have a saturated in-arc");
+        match_l[l as usize] = r as u32;
+        match_r[r] = l;
+        size += 1;
+    }
+    debug_assert_eq!(size as i64, flow.value, "matching size must equal flow value");
+    FlowMatching { matching: Matching { size, match_l, match_r }, flow }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::bipartite::{bipartite_planted, bipartite_zipf, BipartiteGraph};
+    use crate::maxflow::hopcroft_karp;
+
+    fn check_all_engines(g: &BipartiteGraph) {
+        let want = hopcroft_karp::solve(g).size;
+        let opts = SolveOptions { threads: 4, cycles_per_launch: 64, ..Default::default() };
+        for kind in [EngineKind::Sequential, EngineKind::ThreadCentric, EngineKind::VertexCentric] {
+            for rep in [Representation::Rcsr, Representation::Bcsr] {
+                let got = solve(g, kind, rep, &opts);
+                assert_eq!(got.matching.size, want, "{:?}+{:?} on {}", kind, rep, g.name);
+                hopcroft_karp::validate(g, &got.matching).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_graphs() {
+        check_all_engines(&BipartiteGraph::new(3, 3, vec![(0, 0), (1, 1), (2, 2), (0, 1)], "p3"));
+        check_all_engines(&BipartiteGraph::new(2, 2, vec![(0, 0), (1, 0)], "contended"));
+    }
+
+    #[test]
+    fn planted_matching() {
+        check_all_engines(&bipartite_planted(25, 40, 80, 3));
+    }
+
+    #[test]
+    fn skewed_konect_analog() {
+        check_all_engines(&bipartite_zipf(60, 40, 300, 1.2, 5));
+    }
+
+    #[test]
+    fn uniform_bipartite() {
+        check_all_engines(&bipartite_zipf(50, 50, 200, 0.0, 6));
+    }
+}

@@ -1,0 +1,278 @@
+//! Maximum-flow engines.
+//!
+//! * [`seq`] — sequential FIFO push-relabel (host oracle).
+//! * [`dinic`] / [`ek`] — Dinic's and Edmonds–Karp baselines, used to
+//!   cross-check every other engine (the paper's §2.1 background
+//!   algorithms).
+//! * [`tc`] — the **thread-centric** lock-free parallel push-relabel of
+//!   He & Hong (Algorithm 1), the paper's baseline: one worker owns a fixed
+//!   vertex range, scans its active vertices, and serially searches each
+//!   vertex's residual neighborhood.
+//! * [`vc`] — the paper's **vertex-centric** two-level parallelism
+//!   (Algorithm 2): a shared active-vertex queue (AVQ) built by an atomic
+//!   scan, then balanced tile-per-active-vertex processing with early exit.
+//! * [`global_relabel`] — the backward-BFS heuristic + the ExcessTotal
+//!   termination accounting (Algorithm 1, step 2).
+//! * [`matching`] / [`hopcroft_karp`] — bipartite matching via max-flow and
+//!   its combinatorial oracle (Table 2).
+
+pub mod dinic;
+pub mod ek;
+pub mod global_relabel;
+pub mod hopcroft_karp;
+pub mod lockfree;
+pub mod matching;
+pub mod mincut;
+pub mod seq;
+pub mod state;
+pub mod tc;
+pub mod vc;
+
+use crate::graph::builder::{ArcGraph, FlowNetwork};
+use crate::graph::{Bcsr, Rcsr, Representation};
+
+pub use state::{ParState, SolveStats};
+
+/// Which engine to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EngineKind {
+    /// Sequential FIFO push-relabel (oracle).
+    Sequential,
+    /// Dinic's algorithm (baseline / verifier).
+    Dinic,
+    /// Edmonds–Karp (small graphs only).
+    EdmondsKarp,
+    /// Thread-centric lock-free parallel push-relabel (prior work, Alg. 1).
+    ThreadCentric,
+    /// Vertex-centric workload-balanced push-relabel (the paper, Alg. 2).
+    VertexCentric,
+}
+
+impl EngineKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Sequential => "SEQ",
+            EngineKind::Dinic => "DINIC",
+            EngineKind::EdmondsKarp => "EK",
+            EngineKind::ThreadCentric => "TC",
+            EngineKind::VertexCentric => "VC",
+        }
+    }
+}
+
+impl std::str::FromStr for EngineKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "seq" | "sequential" => Ok(EngineKind::Sequential),
+            "dinic" => Ok(EngineKind::Dinic),
+            "ek" | "edmonds-karp" => Ok(EngineKind::EdmondsKarp),
+            "tc" | "thread-centric" => Ok(EngineKind::ThreadCentric),
+            "vc" | "vertex-centric" => Ok(EngineKind::VertexCentric),
+            other => Err(format!("unknown engine '{other}' (seq|dinic|ek|tc|vc)")),
+        }
+    }
+}
+
+/// Tuning knobs shared by the parallel engines.
+#[derive(Debug, Clone)]
+pub struct SolveOptions {
+    /// Worker threads for TC/VC (0 = available parallelism).
+    pub threads: usize,
+    /// Push-relabel cycles per kernel launch between global relabels
+    /// (the paper uses `cycle = |V|`; smaller values relabel more often,
+    /// which is almost always faster in practice — He & Hong tune this).
+    pub cycles_per_launch: usize,
+    /// Run the global-relabel heuristic (Alg. 1 step 2). Disabling it is
+    /// only safe for the sequential engine, which can terminate on its own.
+    pub global_relabel: bool,
+}
+
+impl Default for SolveOptions {
+    fn default() -> Self {
+        SolveOptions { threads: 0, cycles_per_launch: 0, global_relabel: true }
+    }
+}
+
+impl SolveOptions {
+    pub fn resolved_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+        }
+    }
+
+    /// Paper default: `cycle = |V|`, clamped to keep launches responsive.
+    pub fn resolved_cycles(&self, n: usize) -> usize {
+        if self.cycles_per_launch > 0 {
+            self.cycles_per_launch
+        } else {
+            n.clamp(32, 4096)
+        }
+    }
+}
+
+/// Result of a max-flow computation.
+#[derive(Debug, Clone)]
+pub struct FlowResult {
+    /// The maximum-flow value (= `e(t)` at termination for push-relabel).
+    pub value: i64,
+    /// Final residual capacities per arc (for min-cut verification).
+    pub cf: Vec<i64>,
+    pub stats: SolveStats,
+}
+
+/// Solve max-flow on `net` with the chosen engine and residual
+/// representation. This is the library's front door; the coordinator calls
+/// it for native jobs.
+pub fn solve(net: &FlowNetwork, kind: EngineKind, rep: Representation, opts: &SolveOptions) -> FlowResult {
+    let g = ArcGraph::build(&net.normalized());
+    solve_arcs(&g, kind, rep, opts)
+}
+
+/// Same as [`solve`], over a prebuilt arc arena.
+pub fn solve_arcs(g: &ArcGraph, kind: EngineKind, rep: Representation, opts: &SolveOptions) -> FlowResult {
+    match (kind, rep) {
+        (EngineKind::Sequential, _) => seq::solve(g),
+        (EngineKind::Dinic, _) => dinic::solve(g),
+        (EngineKind::EdmondsKarp, _) => ek::solve(g),
+        (EngineKind::ThreadCentric, Representation::Rcsr) => tc::solve(g, &Rcsr::build(g), opts),
+        (EngineKind::ThreadCentric, Representation::Bcsr) => tc::solve(g, &Bcsr::build(g), opts),
+        (EngineKind::VertexCentric, Representation::Rcsr) => vc::solve(g, &Rcsr::build(g), opts),
+        (EngineKind::VertexCentric, Representation::Bcsr) => vc::solve(g, &Bcsr::build(g), opts),
+    }
+}
+
+/// Dispatch one of the two parallel engines over an already-built
+/// representation (used by the bench harness, which reuses the
+/// representation across configurations).
+pub fn tc_or_vc<R: crate::graph::residual::Residual>(
+    g: &ArcGraph,
+    rep: &R,
+    kind: EngineKind,
+    opts: &SolveOptions,
+) -> FlowResult {
+    match kind {
+        EngineKind::ThreadCentric => tc::solve(g, rep, opts),
+        EngineKind::VertexCentric => vc::solve(g, rep, opts),
+        other => panic!("tc_or_vc dispatches parallel engines, not {other:?}"),
+    }
+}
+
+/// Verify `result` against the max-flow/min-cut theorem and conservation
+/// constraints; returns a description of the first violation.
+///
+/// Checks:
+/// 1. arc residuals non-negative and antisymmetric (`cf[a] + cf[a^1]`
+///    equals the arc pair's total capacity);
+/// 2. the claimed value equals the net flow into `t`;
+/// 3. no augmenting path `s → t` remains (maximality, by the max-flow /
+///    min-cut theorem).
+pub fn verify(g: &ArcGraph, result: &FlowResult) -> Result<(), String> {
+    let m2 = g.num_arcs();
+    if result.cf.len() != m2 {
+        return Err(format!("cf length {} != arcs {}", result.cf.len(), m2));
+    }
+    // (1) capacity + antisymmetry per arc pair.
+    for e in 0..m2 / 2 {
+        let f = 2 * e;
+        let b = f + 1;
+        let total = g.arc_cap[f] + g.arc_cap[b];
+        if result.cf[f] < 0 || result.cf[b] < 0 {
+            return Err(format!("negative residual on arc pair {e}"));
+        }
+        if result.cf[f] + result.cf[b] != total {
+            return Err(format!(
+                "antisymmetry broken on edge {e}: {} + {} != {total}",
+                result.cf[f], result.cf[b]
+            ));
+        }
+    }
+    // (2) net inflow at t.
+    let mut inflow = 0i64;
+    for a in 0..m2 {
+        let flow = g.arc_cap[a] - result.cf[a]; // positive if used forward
+        if flow > 0 {
+            if g.arc_to[a] == g.t {
+                inflow += flow;
+            }
+            if g.arc_from[a] == g.t {
+                inflow -= flow;
+            }
+        }
+    }
+    if inflow != result.value {
+        return Err(format!("claimed value {} but net inflow at t is {inflow}", result.value));
+    }
+    // (3) no residual augmenting path s -> t (BFS over arcs with cf > 0).
+    let mut seen = vec![false; g.n];
+    let mut queue = std::collections::VecDeque::new();
+    seen[g.s as usize] = true;
+    queue.push_back(g.s);
+    let (csr, arcs) = crate::graph::csr::Csr::from_pairs_with(
+        g.n,
+        (0..m2 as u32).map(|a| (g.arc_from[a as usize], g.arc_to[a as usize], a)),
+    );
+    while let Some(u) = queue.pop_front() {
+        for i in csr.range(u) {
+            let a = arcs[i] as usize;
+            let v = csr.cols[i];
+            if result.cf[a] > 0 && !seen[v as usize] {
+                if v == g.t {
+                    return Err("augmenting path remains: flow not maximum".into());
+                }
+                seen[v as usize] = true;
+                queue.push_back(v);
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Edge;
+
+    #[test]
+    fn engine_kind_parses() {
+        assert_eq!("vc".parse::<EngineKind>().unwrap(), EngineKind::VertexCentric);
+        assert_eq!("Thread-Centric".parse::<EngineKind>().unwrap(), EngineKind::ThreadCentric);
+        assert!("gpu".parse::<EngineKind>().is_err());
+    }
+
+    #[test]
+    fn options_resolve() {
+        let o = SolveOptions::default();
+        assert!(o.resolved_threads() >= 1);
+        assert_eq!(o.resolved_cycles(10), 32);
+        assert_eq!(o.resolved_cycles(100_000), 4096);
+        let o2 = SolveOptions { cycles_per_launch: 7, threads: 3, ..Default::default() };
+        assert_eq!(o2.resolved_cycles(10), 7);
+        assert_eq!(o2.resolved_threads(), 3);
+    }
+
+    #[test]
+    fn verify_accepts_true_flow_and_rejects_fakes() {
+        // s=0 -> {1,2} -> t=3, max flow 4.
+        let net = FlowNetwork::new(
+            4,
+            0,
+            3,
+            vec![Edge::new(0, 1, 3), Edge::new(0, 2, 2), Edge::new(1, 3, 2), Edge::new(2, 3, 3)],
+            "diamond",
+        );
+        let g = ArcGraph::build(&net);
+        let good = dinic::solve(&g);
+        assert_eq!(good.value, 4);
+        verify(&g, &good).unwrap();
+        let mut bad = good.clone();
+        bad.value += 1;
+        assert!(verify(&g, &bad).is_err());
+        let mut bad2 = good.clone();
+        bad2.cf[0] += 1;
+        assert!(verify(&g, &bad2).is_err());
+    }
+}

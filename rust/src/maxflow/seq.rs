@@ -1,0 +1,186 @@
+//! Sequential FIFO push-relabel with the gap heuristic (Goldberg–Tarjan,
+//! paper §2.2). The textbook two-phase variant (heights up to `2n`, all
+//! stranded excess returned to the source), used as the host oracle and as
+//! the single-thread baseline in the benches.
+
+use super::{FlowResult, SolveStats};
+use crate::graph::builder::ArcGraph;
+use crate::graph::csr::Csr;
+use crate::util::Timer;
+use std::collections::VecDeque;
+
+/// Solve max-flow with sequential FIFO push-relabel.
+pub fn solve(g: &ArcGraph) -> FlowResult {
+    let t0 = Timer::start();
+    let n = g.n;
+    let m2 = g.num_arcs();
+    let (csr, arcs) = Csr::from_pairs_with(n, (0..m2 as u32).map(|a| (g.arc_from[a as usize], g.arc_to[a as usize], a)));
+    let mut cf = g.arc_cap.clone();
+    let mut e = vec![0i64; n];
+    let mut h = vec![0u32; n];
+    let mut cur = vec![0usize; n];
+    let max_h = 2 * n as u32 + 1;
+    let mut stats = SolveStats::default();
+
+    // Height histogram for the gap heuristic.
+    let mut cnt = vec![0u32; max_h as usize + 2];
+    cnt[0] = n as u32 - 1;
+    h[g.s as usize] = n as u32;
+    cnt[n] += 1;
+
+    let mut queue: VecDeque<u32> = VecDeque::new();
+    let mut in_queue = vec![false; n];
+
+    // Preflow.
+    for i in csr.range(g.s) {
+        let a = arcs[i] as usize;
+        let c = cf[a];
+        if c > 0 && a % 2 == 0 {
+            let v = csr.cols[i];
+            cf[a] = 0;
+            cf[a ^ 1] += c;
+            e[v as usize] += c;
+            stats.pushes += 1;
+            if v != g.t && v != g.s && !in_queue[v as usize] {
+                in_queue[v as usize] = true;
+                queue.push_back(v);
+            }
+        }
+    }
+
+    while let Some(u) = queue.pop_front() {
+        in_queue[u as usize] = false;
+        // Discharge u.
+        while e[u as usize] > 0 {
+            let range = csr.range(u);
+            let len = range.end - range.start;
+            if cur[u as usize] >= len {
+                // Relabel: minimum neighbor height + 1.
+                let old = h[u as usize];
+                let mut min_h = max_h;
+                for i in range.clone() {
+                    stats.scan_arcs += 1;
+                    let a = arcs[i] as usize;
+                    if cf[a] > 0 {
+                        min_h = min_h.min(h[csr.cols[i] as usize]);
+                    }
+                }
+                let new_h = min_h.saturating_add(1).min(max_h);
+                cnt[old as usize] -= 1;
+                h[u as usize] = new_h;
+                cnt[new_h as usize] += 1;
+                cur[u as usize] = 0;
+                stats.relabels += 1;
+                // Gap heuristic: heights strictly between `old` and `n`
+                // can never route to t again — lift them above n.
+                if cnt[old as usize] == 0 && old < n as u32 {
+                    for v in 0..n as u32 {
+                        if v != g.s && v != g.t && h[v as usize] > old && h[v as usize] < n as u32 {
+                            cnt[h[v as usize] as usize] -= 1;
+                            h[v as usize] = n as u32 + 1;
+                            cnt[n + 1] += 1;
+                        }
+                    }
+                }
+                if new_h >= max_h {
+                    break; // unroutable excess (disconnected pocket)
+                }
+                continue;
+            }
+            let i = range.start + cur[u as usize];
+            let a = arcs[i] as usize;
+            let v = csr.cols[i];
+            stats.scan_arcs += 1;
+            if cf[a] > 0 && h[u as usize] == h[v as usize] + 1 {
+                let d = e[u as usize].min(cf[a]);
+                cf[a] -= d;
+                cf[a ^ 1] += d;
+                e[u as usize] -= d;
+                e[v as usize] += d;
+                stats.pushes += 1;
+                if v != g.s && v != g.t && !in_queue[v as usize] {
+                    in_queue[v as usize] = true;
+                    queue.push_back(v);
+                }
+            } else {
+                cur[u as usize] += 1;
+            }
+        }
+    }
+
+    let value = e[g.t as usize];
+    let ms = t0.ms();
+    stats.total_ms = ms;
+    stats.kernel_ms = ms;
+    FlowResult { value, cf, stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::FlowNetwork;
+    use crate::graph::generators;
+    use crate::graph::Edge;
+
+    #[test]
+    fn clrs_example() {
+        let net = FlowNetwork::new(
+            6,
+            0,
+            5,
+            vec![
+                Edge::new(0, 1, 16),
+                Edge::new(0, 2, 13),
+                Edge::new(1, 3, 12),
+                Edge::new(2, 1, 4),
+                Edge::new(2, 4, 14),
+                Edge::new(3, 2, 9),
+                Edge::new(3, 5, 20),
+                Edge::new(4, 3, 7),
+                Edge::new(4, 5, 4),
+            ],
+            "clrs",
+        );
+        let g = ArcGraph::build(&net);
+        let r = solve(&g);
+        assert_eq!(r.value, 23);
+        super::super::verify(&g, &r).unwrap();
+    }
+
+    #[test]
+    fn matches_dinic_on_random_suite() {
+        for seed in 0..8u64 {
+            let net = generators::erdos_renyi(40, 250, 7, seed);
+            let g = ArcGraph::build(&net);
+            let pr = solve(&g);
+            let di = super::super::dinic::solve(&g);
+            assert_eq!(pr.value, di.value, "seed {seed}");
+            super::super::verify(&g, &pr).unwrap();
+        }
+    }
+
+    #[test]
+    fn matches_dinic_on_structured_graphs() {
+        let nets = vec![
+            generators::genrmf(&generators::GenrmfParams { a: 4, b: 4, c1: 1, c2: 40, seed: 3 }),
+            generators::washington_rlg(&generators::WashingtonParams { levels: 6, width: 10, fanout: 3, max_cap: 20, seed: 5 }),
+            generators::grid_road(12, 12, 0.1, 8, 7),
+        ];
+        for net in nets {
+            let g = ArcGraph::build(&net.normalized());
+            let pr = solve(&g);
+            let di = super::super::dinic::solve(&g);
+            assert_eq!(pr.value, di.value, "on {}", net.name);
+            super::super::verify(&g, &pr).unwrap();
+        }
+    }
+
+    #[test]
+    fn sink_unreachable_gives_zero() {
+        let net = FlowNetwork::new(4, 0, 3, vec![Edge::new(0, 1, 5), Edge::new(1, 2, 5)], "dead-end");
+        let g = ArcGraph::build(&net);
+        let r = solve(&g);
+        assert_eq!(r.value, 0);
+        super::super::verify(&g, &r).unwrap();
+    }
+}

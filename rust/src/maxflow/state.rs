@@ -1,0 +1,180 @@
+//! Shared push-relabel state: residual capacities, excess, heights — as
+//! atomics for the lock-free parallel engines — plus the preflow
+//! initialisation and solve statistics.
+
+use crate::graph::builder::ArcGraph;
+use std::sync::atomic::{AtomicI64, AtomicU32, AtomicU64, Ordering};
+
+/// Counters reported by every engine (pushes/relabels mirror the paper's
+/// cost-model terms `P(v)` / `R(v)`; `scan_arcs` is the `k·d(v)` term).
+#[derive(Debug, Clone, Default)]
+pub struct SolveStats {
+    /// Kernel-iteration count (inner cycles actually executed).
+    pub cycles: u64,
+    /// Host-loop launches (device invocations for the device engine).
+    pub launches: u64,
+    pub pushes: u64,
+    pub relabels: u64,
+    pub global_relabels: u64,
+    /// Residual arcs examined during min-height scans.
+    pub scan_arcs: u64,
+    /// Wall-clock of the push-relabel kernel portion, milliseconds.
+    pub kernel_ms: f64,
+    /// Total wall-clock, milliseconds.
+    pub total_ms: f64,
+}
+
+/// Atomic counters accumulated inside parallel kernels, merged into
+/// [`SolveStats`] at the end of a launch.
+#[derive(Debug, Default)]
+pub struct AtomicCounters {
+    pub pushes: AtomicU64,
+    pub relabels: AtomicU64,
+    pub scan_arcs: AtomicU64,
+}
+
+impl AtomicCounters {
+    pub fn merge_into(&self, s: &mut SolveStats) {
+        s.pushes += self.pushes.swap(0, Ordering::Relaxed);
+        s.relabels += self.relabels.swap(0, Ordering::Relaxed);
+        s.scan_arcs += self.scan_arcs.swap(0, Ordering::Relaxed);
+    }
+}
+
+/// Shared mutable state of the lock-free algorithm. All orderings are
+/// `Relaxed`: the lock-free push-relabel proof (Hong 2008) tolerates stale
+/// reads of `h`/`e`/`cf`, and the host loop joins worker threads (a full
+/// happens-before) before reading state for global relabel.
+#[derive(Debug)]
+pub struct ParState {
+    /// Residual capacity per arc.
+    pub cf: Vec<AtomicI64>,
+    /// Excess per vertex.
+    pub e: Vec<AtomicI64>,
+    /// Height (label) per vertex.
+    pub h: Vec<AtomicU32>,
+}
+
+impl ParState {
+    /// Initialise heights/excess and perform the preflow (Alg. 1 step 0):
+    /// saturate every arc out of `s`, set `h(s) = n`. Returns
+    /// `Excess_total` = total preflow pushed out of the source.
+    pub fn preflow(g: &ArcGraph) -> (ParState, i64) {
+        let n = g.n;
+        let m2 = g.num_arcs();
+        let cf: Vec<AtomicI64> = g.arc_cap.iter().map(|&c| AtomicI64::new(c)).collect();
+        let e: Vec<AtomicI64> = (0..n).map(|_| AtomicI64::new(0)).collect();
+        let h: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+        h[g.s as usize].store(n as u32, Ordering::Relaxed);
+        let mut excess_total = 0i64;
+        for a in (0..m2).step_by(2) {
+            if g.arc_from[a] == g.s {
+                let c = g.arc_cap[a];
+                if c > 0 {
+                    cf[a].store(0, Ordering::Relaxed);
+                    cf[a + 1].fetch_add(c, Ordering::Relaxed);
+                    e[g.arc_to[a] as usize].fetch_add(c, Ordering::Relaxed);
+                    excess_total += c;
+                }
+            }
+            // Arcs into s (backward preflow) are never saturated at init.
+        }
+        // Flow pushed straight into t by the preflow already "arrived".
+        (ParState { cf, e, h }, excess_total)
+    }
+
+    pub fn n(&self) -> usize {
+        self.e.len()
+    }
+
+    #[inline(always)]
+    pub fn excess(&self, u: u32) -> i64 {
+        self.e[u as usize].load(Ordering::Relaxed)
+    }
+
+    #[inline(always)]
+    pub fn height(&self, u: u32) -> u32 {
+        self.h[u as usize].load(Ordering::Relaxed)
+    }
+
+    #[inline(always)]
+    pub fn residual(&self, a: u32) -> i64 {
+        self.cf[a as usize].load(Ordering::Relaxed)
+    }
+
+    /// Snapshot residuals into a plain vector (after joining workers).
+    pub fn cf_snapshot(&self) -> Vec<i64> {
+        self.cf.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Is `u` active in the Alg. 1 sense (positive excess, height below n,
+    /// not a terminal)?
+    #[inline(always)]
+    pub fn is_active(&self, g: &ArcGraph, u: u32) -> bool {
+        u != g.s && u != g.t && self.excess(u) > 0 && self.height(u) < g.n as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::FlowNetwork;
+    use crate::graph::Edge;
+
+    fn diamond() -> ArcGraph {
+        ArcGraph::build(&FlowNetwork::new(
+            4,
+            0,
+            3,
+            vec![Edge::new(0, 1, 3), Edge::new(0, 2, 2), Edge::new(1, 3, 2), Edge::new(2, 3, 3)],
+            "diamond",
+        ))
+    }
+
+    #[test]
+    fn preflow_saturates_source_arcs() {
+        let g = diamond();
+        let (st, total) = ParState::preflow(&g);
+        assert_eq!(total, 5);
+        assert_eq!(st.excess(1), 3);
+        assert_eq!(st.excess(2), 2);
+        assert_eq!(st.height(0), 4);
+        assert_eq!(st.height(3), 0);
+        // cf(s->1) == 0, cf(1->s) == 3.
+        assert_eq!(st.residual(0), 0);
+        assert_eq!(st.residual(1), 3);
+    }
+
+    #[test]
+    fn activity_excludes_terminals() {
+        let g = diamond();
+        let (st, _) = ParState::preflow(&g);
+        assert!(st.is_active(&g, 1));
+        assert!(st.is_active(&g, 2));
+        assert!(!st.is_active(&g, 0)); // source
+        assert!(!st.is_active(&g, 3)); // sink
+    }
+
+    #[test]
+    fn snapshot_matches_state() {
+        let g = diamond();
+        let (st, _) = ParState::preflow(&g);
+        let snap = st.cf_snapshot();
+        assert_eq!(snap.len(), g.num_arcs());
+        assert_eq!(snap[0], 0);
+        assert_eq!(snap[1], 3);
+    }
+
+    #[test]
+    fn counters_merge_and_reset() {
+        let c = AtomicCounters::default();
+        c.pushes.fetch_add(3, Ordering::Relaxed);
+        c.relabels.fetch_add(2, Ordering::Relaxed);
+        let mut s = SolveStats::default();
+        c.merge_into(&mut s);
+        assert_eq!(s.pushes, 3);
+        assert_eq!(s.relabels, 2);
+        c.merge_into(&mut s);
+        assert_eq!(s.pushes, 3, "counters must reset after merge");
+    }
+}

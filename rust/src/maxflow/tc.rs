@@ -1,0 +1,149 @@
+//! Thread-centric lock-free push-relabel (He & Hong 2010; paper Alg. 1) —
+//! the baseline the paper improves on.
+//!
+//! Each worker owns a *fixed contiguous vertex range* (the CPU analog of
+//! the GPU's thread-per-vertex assignment) and sweeps it `cycles` times per
+//! launch with no synchronization between workers — the lock-free property
+//! makes the races benign. The workload imbalance the paper analyses
+//! (Eq. 1) shows up here directly: a worker whose range contains the
+//! active, high-degree vertices finishes last while the others idle.
+
+use super::global_relabel::{global_relabel, ExcessAccounting};
+use super::lockfree::{discharge_once, LocalCounters};
+use super::state::{AtomicCounters, ParState};
+use super::{FlowResult, SolveOptions, SolveStats};
+use crate::graph::builder::ArcGraph;
+use crate::graph::residual::Residual;
+use crate::util::Timer;
+
+/// Hard cap on host launches; hitting it means the engine is not
+/// converging, which is a bug — fail loudly rather than spin forever.
+const MAX_LAUNCHES: u64 = 100_000;
+
+/// Solve max-flow with the thread-centric engine over representation `rep`.
+pub fn solve<R: Residual>(g: &ArcGraph, rep: &R, opts: &SolveOptions) -> FlowResult {
+    let total_timer = Timer::start();
+    let n = g.n;
+    let threads = opts.resolved_threads().min(n.max(1));
+    let cycles = opts.resolved_cycles(n);
+    let (st, excess_total) = ParState::preflow(g);
+    let mut acct = ExcessAccounting::new(n, excess_total);
+    let counters = AtomicCounters::default();
+    let mut stats = SolveStats::default();
+
+    // Fixed contiguous ranges, one per worker (thread-centric assignment).
+    let chunk = n.div_ceil(threads);
+    let ranges: Vec<(u32, u32)> = (0..threads)
+        .map(|w| ((w * chunk).min(n) as u32, ((w + 1) * chunk).min(n) as u32))
+        .collect();
+
+    while !acct.done(g, &st) {
+        stats.launches += 1;
+        if stats.launches > MAX_LAUNCHES {
+            panic!("TC engine did not converge after {MAX_LAUNCHES} launches on {} vertices", n);
+        }
+        let kt = Timer::start();
+        std::thread::scope(|scope| {
+            for &(lo, hi) in &ranges {
+                let st = &st;
+                let counters = &counters;
+                scope.spawn(move || {
+                    let mut local = LocalCounters::default();
+                    for _ in 0..cycles {
+                        let mut any = false;
+                        for u in lo..hi {
+                            any |= discharge_once(g, rep, st, u, &mut local);
+                        }
+                        if !any {
+                            break; // this worker's range is quiescent
+                        }
+                    }
+                    local.flush(counters);
+                });
+            }
+        });
+        stats.kernel_ms += kt.ms();
+        stats.cycles += cycles as u64;
+        // Host step: global relabel + termination accounting (Alg. 1 §2).
+        global_relabel(g, rep, &st, &mut acct, opts.global_relabel);
+        stats.global_relabels += 1;
+    }
+
+    counters.merge_into(&mut stats);
+    stats.total_ms = total_timer.ms();
+    FlowResult { value: st.excess(g.t), cf: st.cf_snapshot(), stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::FlowNetwork;
+    use crate::graph::generators;
+    use crate::graph::{Bcsr, Edge, Rcsr};
+
+    fn check(net: &FlowNetwork, threads: usize) {
+        let g = ArcGraph::build(&net.normalized());
+        let want = super::super::dinic::solve(&g).value;
+        let opts = SolveOptions { threads, cycles_per_launch: 64, ..Default::default() };
+        let rc = solve(&g, &Rcsr::build(&g), &opts);
+        assert_eq!(rc.value, want, "TC+RCSR on {}", net.name);
+        super::super::verify(&g, &rc).unwrap();
+        let bc = solve(&g, &Bcsr::build(&g), &opts);
+        assert_eq!(bc.value, want, "TC+BCSR on {}", net.name);
+        super::super::verify(&g, &bc).unwrap();
+    }
+
+    #[test]
+    fn clrs_single_thread() {
+        let net = FlowNetwork::new(
+            6,
+            0,
+            5,
+            vec![
+                Edge::new(0, 1, 16),
+                Edge::new(0, 2, 13),
+                Edge::new(1, 3, 12),
+                Edge::new(2, 1, 4),
+                Edge::new(2, 4, 14),
+                Edge::new(3, 2, 9),
+                Edge::new(3, 5, 20),
+                Edge::new(4, 3, 7),
+                Edge::new(4, 5, 4),
+            ],
+            "clrs",
+        );
+        check(&net, 1);
+    }
+
+    #[test]
+    fn random_graphs_multi_thread() {
+        for seed in 0..4u64 {
+            check(&generators::erdos_renyi(60, 400, 8, seed), 4);
+        }
+    }
+
+    #[test]
+    fn structured_graphs() {
+        check(&generators::genrmf(&generators::GenrmfParams { a: 4, b: 3, c1: 1, c2: 30, seed: 1 }), 4);
+        check(
+            &generators::washington_rlg(&generators::WashingtonParams { levels: 5, width: 8, fanout: 3, max_cap: 12, seed: 2 }),
+            4,
+        );
+    }
+
+    #[test]
+    fn unit_capacity_skewed_graph() {
+        check(&generators::rmat(&generators::RmatParams { scale: 7, edge_factor: 6, a: 0.57, b: 0.19, c: 0.19, seed: 3 }), 4);
+    }
+
+    #[test]
+    fn stats_are_populated() {
+        let net = generators::erdos_renyi(40, 250, 6, 7);
+        let g = ArcGraph::build(&net.normalized());
+        let r = solve(&g, &Rcsr::build(&g), &SolveOptions::default());
+        assert!(r.stats.launches >= 1);
+        assert!(r.stats.pushes > 0);
+        assert!(r.stats.scan_arcs > 0);
+        assert!(r.stats.global_relabels >= 1);
+    }
+}

@@ -1,0 +1,158 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime (ABI v1, DESIGN.md §7).
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// What a variant computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VariantKind {
+    /// K push-relabel cycles (Alg. 1 step 1).
+    Flow,
+    /// K global-relabel relaxation sweeps (Alg. 1 step 2, device-side).
+    Relabel,
+}
+
+/// One compiled model variant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VariantSpec {
+    pub name: String,
+    /// HLO text file, relative to the manifest directory.
+    pub file: String,
+    pub kind: VariantKind,
+    /// Padded vertex capacity.
+    pub v: usize,
+    /// Padded degree capacity.
+    pub d: usize,
+    /// Device cycles per invocation.
+    pub k: usize,
+    /// Pallas tile rows (informational).
+    pub tile: usize,
+}
+
+impl VariantSpec {
+    /// Can this variant host a graph with `n` vertices and max residual
+    /// degree `max_deg`?
+    pub fn fits(&self, n: usize, max_deg: usize) -> bool {
+        n <= self.v && max_deg <= self.d
+    }
+
+    /// Device-state footprint in bytes (3 padded matrices + 3 vectors).
+    pub fn state_bytes(&self) -> usize {
+        4 * self.v * self.d * 4 + 3 * self.v * 4
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: Vec<VariantSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| format!("{}: {e}", path.display()))?;
+        Manifest::parse(dir, &text)
+    }
+
+    /// Parse manifest JSON (schema checks included).
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest, String> {
+        let v = Json::parse(text).map_err(|e| format!("manifest: {e}"))?;
+        if v.get("format").and_then(|f| f.as_str()) != Some("hlo-text") {
+            return Err("manifest: unsupported format (want hlo-text)".into());
+        }
+        if v.get("abi").and_then(|a| a.as_i64()) != Some(1) {
+            return Err("manifest: unsupported ABI (want 1)".into());
+        }
+        let vs = v.get("variants").and_then(|x| x.as_arr()).ok_or("manifest: missing variants")?;
+        let mut variants = Vec::with_capacity(vs.len());
+        for (i, item) in vs.iter().enumerate() {
+            let gets = |k: &str| item.get(k).and_then(|x| x.as_str()).map(str::to_string);
+            let geti = |k: &str| item.get(k).and_then(|x| x.as_i64());
+            let kind = match gets("kind").as_deref() {
+                None | Some("flow") => VariantKind::Flow,
+                Some("relabel") => VariantKind::Relabel,
+                Some(other) => return Err(format!("variant {i}: unknown kind '{other}'")),
+            };
+            variants.push(VariantSpec {
+                name: gets("name").ok_or_else(|| format!("variant {i}: missing name"))?,
+                file: gets("file").ok_or_else(|| format!("variant {i}: missing file"))?,
+                kind,
+                v: geti("v").ok_or_else(|| format!("variant {i}: missing v"))? as usize,
+                d: geti("d").ok_or_else(|| format!("variant {i}: missing d"))? as usize,
+                k: geti("k").ok_or_else(|| format!("variant {i}: missing k"))? as usize,
+                tile: geti("tile").unwrap_or(0) as usize,
+            });
+        }
+        // Smallest-first so `pick` selects the tightest fit.
+        variants.sort_by_key(|v| (v.v, v.d));
+        Ok(Manifest { dir: dir.to_path_buf(), variants })
+    }
+
+    /// Tightest flow variant that fits (smallest state).
+    pub fn pick(&self, n: usize, max_deg: usize) -> Option<&VariantSpec> {
+        self.variants.iter().find(|v| v.kind == VariantKind::Flow && v.fits(n, max_deg))
+    }
+
+    /// The relabel variant matching a flow variant's (V, D) shape.
+    pub fn pick_relabel(&self, flow: &VariantSpec) -> Option<&VariantSpec> {
+        self.variants
+            .iter()
+            .find(|v| v.kind == VariantKind::Relabel && v.v == flow.v && v.d == flow.d)
+    }
+
+    /// Path of a variant's HLO file.
+    pub fn hlo_path(&self, v: &VariantSpec) -> PathBuf {
+        self.dir.join(&v.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "abi": 1, "format": "hlo-text",
+      "variants": [
+        {"name": "wbpr_v256_d16_k32", "file": "b.hlo.txt", "v": 256, "d": 16, "k": 32, "tile": 128},
+        {"name": "wbpr_v64_d8_k16", "file": "a.hlo.txt", "v": 64, "d": 8, "k": 16, "tile": 64}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_and_sorts() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert_eq!(m.variants.len(), 2);
+        assert_eq!(m.variants[0].v, 64, "sorted smallest first");
+    }
+
+    #[test]
+    fn pick_tightest_fit() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert_eq!(m.pick(50, 8).unwrap().v, 64);
+        assert_eq!(m.pick(50, 9).unwrap().v, 256, "degree overflow promotes");
+        assert_eq!(m.pick(100, 4).unwrap().v, 256);
+        assert!(m.pick(1000, 4).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_schema() {
+        assert!(Manifest::parse(Path::new("/tmp"), r#"{"abi":2,"format":"hlo-text","variants":[]}"#).is_err());
+        assert!(Manifest::parse(Path::new("/tmp"), r#"{"abi":1,"format":"protobuf","variants":[]}"#).is_err());
+        assert!(Manifest::parse(Path::new("/tmp"), "{}").is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        if let Some(dir) = crate::runtime::find_artifacts_dir() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.variants.is_empty());
+            for v in &m.variants {
+                assert!(m.hlo_path(v).exists(), "missing {}", v.file);
+            }
+        }
+    }
+}

@@ -1,0 +1,244 @@
+//! PJRT client wrapper: compile-on-demand executable cache + the typed
+//! device entry point (`run_cycles`). One compiled executable per variant,
+//! reused across launches and jobs (compilation is the expensive part).
+
+use super::artifact::{Manifest, VariantSpec};
+use crate::util::Timer;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+
+/// Mutable device-side state between launches.
+#[derive(Debug, Clone)]
+pub struct DeviceState {
+    pub cf: Vec<f32>,
+    pub e: Vec<f32>,
+    pub h: Vec<i32>,
+}
+
+/// Result of one device launch (K cycles).
+#[derive(Debug)]
+pub struct LaunchResult {
+    /// Vertices still active after the launch (device-computed).
+    pub active: i32,
+    /// Device execution wall-clock, ms.
+    pub exec_ms: f64,
+}
+
+/// The PJRT runtime: client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Cumulative compile time, ms (reported by `wbpr info`).
+    pub compile_ms: f64,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime over an artifacts directory.
+    pub fn new(manifest: Manifest) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        Ok(Runtime { client, manifest, executables: HashMap::new(), compile_ms: 0.0 })
+    }
+
+    /// Load from the default artifacts location.
+    pub fn from_default_location() -> Result<Runtime> {
+        let dir = super::find_artifacts_dir()
+            .context("artifacts not found: run `make artifacts` (or set WBPR_ARTIFACTS)")?;
+        let manifest = Manifest::load(&dir).map_err(|e| anyhow!(e))?;
+        Runtime::new(manifest)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Pick the tightest variant for a graph shape.
+    pub fn pick(&self, n: usize, max_deg: usize) -> Option<VariantSpec> {
+        self.manifest.pick(n, max_deg).cloned()
+    }
+
+    /// Compile (or fetch) a variant's executable.
+    pub fn ensure_compiled(&mut self, spec: &VariantSpec) -> Result<()> {
+        if self.executables.contains_key(&spec.name) {
+            return Ok(());
+        }
+        let path = self.manifest.hlo_path(spec);
+        let t = Timer::start();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {}: {e:?}", spec.name))?;
+        self.compile_ms += t.ms();
+        self.executables.insert(spec.name.clone(), exe);
+        Ok(())
+    }
+
+    /// Prepare the loop-invariant inputs of a packed graph once per job
+    /// (§Perf: the constant literals used to be rebuilt every launch).
+    pub fn prepare(&mut self, spec: &VariantSpec, packed: &super::pack::PackedGraph) -> Result<PreparedJob> {
+        assert_eq!(spec.kind, super::artifact::VariantKind::Flow, "prepare() takes flow variants");
+        assert_eq!(packed.v, spec.v, "packed graph does not match variant");
+        assert_eq!(packed.d, spec.d);
+        self.ensure_compiled(spec)?;
+        let vd = [spec.v as i64, spec.d as i64];
+        let v1 = [spec.v as i64];
+        let lit = |r: Result<xla::Literal, xla::Error>| r.map_err(|e| anyhow!("literal: {e:?}"));
+        Ok(PreparedJob {
+            name: spec.name.clone(),
+            vd,
+            v1,
+            nbr: lit(xla::Literal::vec1(&packed.nbr).reshape(&vd))?,
+            rev: lit(xla::Literal::vec1(&packed.rev).reshape(&vd))?,
+            mask: lit(xla::Literal::vec1(&packed.mask).reshape(&vd))?,
+            excl: lit(xla::Literal::vec1(&packed.excl).reshape(&v1))?,
+            nreal: xla::Literal::vec1(&[packed.nreal]),
+        })
+    }
+
+    /// Execute K device cycles (one launch) over a prepared job and the
+    /// mutable `state`. Updates `state` in place and returns the
+    /// remaining-active count.
+    pub fn run_prepared(&mut self, job: &PreparedJob, state: &mut DeviceState) -> Result<LaunchResult> {
+        let exe = self.executables.get(&job.name).expect("prepare() compiled this");
+        let lit = |r: Result<xla::Literal, xla::Error>| r.map_err(|e| anyhow!("literal: {e:?}"));
+        let cf = lit(xla::Literal::vec1(&state.cf).reshape(&job.vd))?;
+        let e = lit(xla::Literal::vec1(&state.e).reshape(&job.v1))?;
+        let h = lit(xla::Literal::vec1(&state.h).reshape(&job.v1))?;
+        let inputs: [&xla::Literal; 8] = [&job.nbr, &job.rev, &job.mask, &cf, &e, &h, &job.excl, &job.nreal];
+        let t = Timer::start();
+        let result = exe
+            .execute::<&xla::Literal>(&inputs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", job.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let exec_ms = t.ms();
+        let (cf, e, h, active) = out.to_tuple4().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        // copy_raw_to reuses the existing host vectors (no realloc).
+        cf.copy_raw_to(&mut state.cf).map_err(|e| anyhow!("cf: {e:?}"))?;
+        e.copy_raw_to(&mut state.e).map_err(|e| anyhow!("e: {e:?}"))?;
+        h.copy_raw_to(&mut state.h).map_err(|e| anyhow!("h: {e:?}"))?;
+        let active = active.to_vec::<i32>().map_err(|e| anyhow!("active: {e:?}"))?[0];
+        Ok(LaunchResult { active, exec_ms })
+    }
+
+    /// Convenience: prepare + run one launch (tests, microbenches).
+    pub fn run_cycles(
+        &mut self,
+        spec: &VariantSpec,
+        packed: &super::pack::PackedGraph,
+        state: &mut DeviceState,
+    ) -> Result<LaunchResult> {
+        let job = self.prepare(spec, packed)?;
+        self.run_prepared(&job, state)
+    }
+}
+
+/// Loop-invariant device inputs of one job (constants uploaded once).
+pub struct PreparedJob {
+    name: String,
+    vd: [i64; 2],
+    v1: [i64; 1],
+    nbr: xla::Literal,
+    rev: xla::Literal,
+    mask: xla::Literal,
+    excl: xla::Literal,
+    nreal: xla::Literal,
+}
+
+impl Runtime {
+    /// Execute K global-relabel relaxation sweeps (extension kernel).
+    /// `dist` is updated in place; returns how many labels changed and the
+    /// execution time. The relabel artifact shares the job's (V, D) shape
+    /// but takes only (nbr, mask, cf, dist).
+    pub fn run_relabel(
+        &mut self,
+        spec: &VariantSpec,
+        job: &PreparedJob,
+        cf: &[f32],
+        dist: &mut Vec<i32>,
+    ) -> Result<(i32, f64)> {
+        assert_eq!(spec.kind, super::artifact::VariantKind::Relabel);
+        self.ensure_compiled(spec)?;
+        let exe = self.executables.get(&spec.name).unwrap();
+        let lit = |r: Result<xla::Literal, xla::Error>| r.map_err(|e| anyhow!("literal: {e:?}"));
+        let cf_l = lit(xla::Literal::vec1(cf).reshape(&job.vd))?;
+        let dist_l = lit(xla::Literal::vec1(dist).reshape(&job.v1))?;
+        let inputs: [&xla::Literal; 4] = [&job.nbr, &job.mask, &cf_l, &dist_l];
+        let t = Timer::start();
+        let result = exe
+            .execute::<&xla::Literal>(&inputs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", spec.name))?;
+        let out = result[0][0].to_literal_sync().map_err(|e| anyhow!("fetch: {e:?}"))?;
+        let ms = t.ms();
+        let (d, changed) = out.to_tuple2().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        d.copy_raw_to(dist).map_err(|e| anyhow!("dist: {e:?}"))?;
+        let changed = changed.to_vec::<i32>().map_err(|e| anyhow!("changed: {e:?}"))?[0];
+        Ok((changed, ms))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::{ArcGraph, FlowNetwork};
+    use crate::graph::{Bcsr, Edge};
+    use crate::runtime::pack::PackedGraph;
+
+    fn runtime() -> Option<Runtime> {
+        match Runtime::from_default_location() {
+            Ok(r) => Some(r),
+            Err(e) => {
+                eprintln!("skipping runtime test (artifacts not built): {e}");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn device_solves_diamond() {
+        let Some(mut rt) = runtime() else { return };
+        let net = FlowNetwork::new(
+            4,
+            0,
+            3,
+            vec![Edge::new(0, 1, 3), Edge::new(0, 2, 2), Edge::new(1, 3, 2), Edge::new(2, 3, 3)],
+            "diamond",
+        );
+        let g = ArcGraph::build(&net);
+        let b = Bcsr::build(&g);
+        let spec = rt.pick(g.n, 4).expect("variant fits");
+        let packed = PackedGraph::pack(&g, &b, spec.v, spec.d).unwrap();
+        let mut state = DeviceState {
+            cf: packed.cf0.clone(),
+            e: vec![0.0; spec.v],
+            h: packed.h0.clone(),
+        };
+        let total = packed.preflow(&mut state.cf, &mut state.e);
+        assert_eq!(total, 5);
+        // Iterate launches until the device reports quiescence.
+        for _ in 0..100 {
+            let r = rt.run_cycles(&spec, &packed, &mut state).unwrap();
+            if r.active == 0 {
+                break;
+            }
+        }
+        assert_eq!(state.e[3] as i64, 4, "device max-flow value");
+    }
+
+    #[test]
+    fn executables_are_cached() {
+        let Some(mut rt) = runtime() else { return };
+        let spec = rt.manifest().variants[0].clone();
+        rt.ensure_compiled(&spec).unwrap();
+        let before = rt.compile_ms;
+        rt.ensure_compiled(&spec).unwrap();
+        assert_eq!(rt.compile_ms, before, "second compile must be a cache hit");
+    }
+}

@@ -1,0 +1,38 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! (HLO text + manifest) and executes them from the rust hot path. Python
+//! is never involved at runtime — `make artifacts` is build-time only.
+//!
+//! * [`artifact`] — manifest schema + variant registry.
+//! * [`pack`] — CSR → degree-padded device layout (and back), the bridge
+//!   between the host representations (RCSR/BCSR) and the device ABI.
+//! * [`client`] — PJRT CPU client wrapper: compile-on-demand executable
+//!   cache and the typed `run_cycles` entry point.
+
+pub mod artifact;
+pub mod client;
+pub mod pack;
+
+pub use artifact::{Manifest, VariantSpec};
+pub use client::{DeviceState, Runtime};
+pub use pack::PackedGraph;
+
+/// Default artifacts directory (relative to the repo root / cwd).
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// Locate the artifacts directory: `WBPR_ARTIFACTS` env var, cwd, or the
+/// crate root (useful when tests run from a different cwd).
+pub fn find_artifacts_dir() -> Option<std::path::PathBuf> {
+    if let Ok(dir) = std::env::var("WBPR_ARTIFACTS") {
+        let p = std::path::PathBuf::from(dir);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    for base in [".", env!("CARGO_MANIFEST_DIR")] {
+        let p = std::path::Path::new(base).join(DEFAULT_ARTIFACTS_DIR);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    None
+}

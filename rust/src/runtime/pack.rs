@@ -1,0 +1,213 @@
+//! Pack a host-side residual graph into the degree-padded device layout
+//! (DESIGN.md §7) and unpack device outputs back into arc-indexed state.
+//!
+//! The packing walks the **BCSR** aggregated rows — the device layout *is*
+//! the VMEM-tiled analog of BCSR (DESIGN.md §Hardware-Adaptation) — and
+//! precomputes the reverse-slot index (`rev`), the role RCSR's `flow_idx`
+//! plays on the host.
+
+use crate::graph::builder::ArcGraph;
+use crate::graph::residual::Residual;
+use crate::graph::Bcsr;
+
+/// Capacities must stay exactly representable in f32 on the device.
+pub const MAX_EXACT_F32: i64 = 1 << 24;
+
+/// A graph packed for a `(V, D)` device variant.
+#[derive(Debug, Clone)]
+pub struct PackedGraph {
+    pub v: usize,
+    pub d: usize,
+    pub nreal: i32,
+    pub s: u32,
+    pub t: u32,
+    /// `[V*D]` neighbor ids (0 for padding).
+    pub nbr: Vec<i32>,
+    /// `[V*D]` flat reverse-slot index.
+    pub rev: Vec<i32>,
+    /// `[V*D]` 1.0 where the slot holds a real arc.
+    pub mask: Vec<f32>,
+    /// `[V*D]` initial residual capacities.
+    pub cf0: Vec<f32>,
+    /// `[V]` terminal exclusion flags.
+    pub excl: Vec<f32>,
+    /// `[V]` initial heights (h(s) = n).
+    pub h0: Vec<i32>,
+    /// flat slot -> arc id (`u32::MAX` for padding).
+    pub slot_arc: Vec<u32>,
+    /// arc id -> flat slot.
+    pub arc_slot: Vec<u32>,
+}
+
+impl PackedGraph {
+    /// Pack `g` (with its BCSR) into a `(v_pad, d_pad)` layout.
+    pub fn pack(g: &ArcGraph, rep: &Bcsr, v_pad: usize, d_pad: usize) -> Result<PackedGraph, String> {
+        if g.n > v_pad {
+            return Err(format!("graph has {} vertices, variant holds {v_pad}", g.n));
+        }
+        let m2 = g.num_arcs();
+        let cap_sum: i64 = g.arc_cap.iter().sum();
+        if cap_sum >= MAX_EXACT_F32 {
+            return Err(format!("total capacity {cap_sum} not exactly representable in f32"));
+        }
+        let flat = v_pad * d_pad;
+        let mut nbr = vec![0i32; flat];
+        let mut rev = vec![0i32; flat];
+        let mut mask = vec![0f32; flat];
+        let mut cf0 = vec![0f32; flat];
+        let mut slot_arc = vec![u32::MAX; flat];
+        let mut arc_slot = vec![u32::MAX; m2];
+        for u in 0..g.n as u32 {
+            let row = rep.row(u);
+            if row.len() > d_pad {
+                return Err(format!("vertex {u} residual degree {} exceeds D={d_pad}", row.len()));
+            }
+            for (i, (a, v)) in row.iter().enumerate() {
+                let f = u as usize * d_pad + i;
+                nbr[f] = v as i32;
+                mask[f] = 1.0;
+                cf0[f] = g.arc_cap[a as usize] as f32;
+                slot_arc[f] = a;
+                arc_slot[a as usize] = f as u32;
+            }
+        }
+        for f in 0..flat {
+            if slot_arc[f] != u32::MAX {
+                rev[f] = arc_slot[(slot_arc[f] ^ 1) as usize] as i32;
+            }
+        }
+        let mut excl = vec![0f32; v_pad];
+        excl[g.s as usize] = 1.0;
+        excl[g.t as usize] = 1.0;
+        let mut h0 = vec![0i32; v_pad];
+        h0[g.s as usize] = g.n as i32;
+        Ok(PackedGraph {
+            v: v_pad,
+            d: d_pad,
+            nreal: g.n as i32,
+            s: g.s,
+            t: g.t,
+            nbr,
+            rev,
+            mask,
+            cf0,
+            excl,
+            h0,
+            slot_arc,
+            arc_slot,
+        })
+    }
+
+    /// Host-side preflow on a packed cf/e state (Alg. 1 step 0). Returns
+    /// the preflow total.
+    pub fn preflow(&self, cf: &mut [f32], e: &mut [f32]) -> i64 {
+        let mut total = 0f64;
+        let base = self.s as usize * self.d;
+        for i in 0..self.d {
+            let f = base + i;
+            if self.mask[f] > 0.0 && cf[f] > 0.0 {
+                let amount = cf[f];
+                cf[f] = 0.0;
+                cf[self.rev[f] as usize] += amount;
+                e[self.nbr[f] as usize] += amount;
+                total += amount as f64;
+            }
+        }
+        total as i64
+    }
+
+    /// Copy padded residuals back into an arc-indexed vector.
+    pub fn unpack_cf(&self, cf: &[f32], out: &mut [i64]) {
+        for (f, &a) in self.slot_arc.iter().enumerate() {
+            if a != u32::MAX {
+                out[a as usize] = cf[f] as i64;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::FlowNetwork;
+    use crate::graph::Edge;
+
+    fn diamond() -> (ArcGraph, Bcsr) {
+        let g = ArcGraph::build(&FlowNetwork::new(
+            4,
+            0,
+            3,
+            vec![Edge::new(0, 1, 3), Edge::new(0, 2, 2), Edge::new(1, 3, 2), Edge::new(2, 3, 3)],
+            "diamond",
+        ));
+        let b = Bcsr::build(&g);
+        (g, b)
+    }
+
+    #[test]
+    fn pack_roundtrips_arcs() {
+        let (g, b) = diamond();
+        let p = PackedGraph::pack(&g, &b, 8, 4).unwrap();
+        // Every arc has a slot; slot/arc maps are inverse.
+        for a in 0..g.num_arcs() {
+            let f = p.arc_slot[a] as usize;
+            assert_eq!(p.slot_arc[f], a as u32);
+            assert_eq!(p.nbr[f] as u32, g.arc_to[a]);
+            assert_eq!(p.cf0[f], g.arc_cap[a] as f32);
+        }
+        // rev is the slot of the paired arc.
+        for f in 0..p.nbr.len() {
+            if p.slot_arc[f] != u32::MAX {
+                assert_eq!(p.slot_arc[p.rev[f] as usize], p.slot_arc[f] ^ 1);
+            }
+        }
+        assert_eq!(p.h0[0], 4);
+        assert_eq!(p.excl[0], 1.0);
+        assert_eq!(p.excl[3], 1.0);
+    }
+
+    #[test]
+    fn preflow_matches_host_semantics() {
+        let (g, b) = diamond();
+        let p = PackedGraph::pack(&g, &b, 8, 4).unwrap();
+        let mut cf = p.cf0.clone();
+        let mut e = vec![0f32; p.v];
+        let total = p.preflow(&mut cf, &mut e);
+        assert_eq!(total, 5);
+        assert_eq!(e[1], 3.0);
+        assert_eq!(e[2], 2.0);
+        // Source row drained.
+        for i in 0..p.d {
+            assert_eq!(cf[0 * p.d + i] * p.mask[0 * p.d + i], 0.0);
+        }
+    }
+
+    #[test]
+    fn unpack_inverts_pack() {
+        let (g, b) = diamond();
+        let p = PackedGraph::pack(&g, &b, 8, 4).unwrap();
+        let mut out = vec![-1i64; g.num_arcs()];
+        p.unpack_cf(&p.cf0, &mut out);
+        assert_eq!(out, g.arc_cap);
+    }
+
+    #[test]
+    fn rejects_oversize() {
+        let (g, b) = diamond();
+        assert!(PackedGraph::pack(&g, &b, 2, 4).is_err());
+        assert!(PackedGraph::pack(&g, &b, 8, 1).is_err());
+    }
+
+    #[test]
+    fn rejects_f32_overflow() {
+        let g = ArcGraph::build(&FlowNetwork::new(
+            3,
+            0,
+            2,
+            vec![Edge::new(0, 1, MAX_EXACT_F32), Edge::new(1, 2, 1)],
+            "big",
+        ));
+        let b = Bcsr::build(&g);
+        assert!(PackedGraph::pack(&g, &b, 4, 4).is_err());
+    }
+}

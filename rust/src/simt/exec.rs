@@ -1,0 +1,274 @@
+//! Charge a recorded workload trace to warps under the thread-centric and
+//! vertex-centric disciplines — the executable form of the paper's Eq. 1.
+
+use super::sched::schedule;
+use super::trace::Trace;
+use super::{CostParams, GpuModel};
+use crate::graph::Representation;
+
+/// Result of one simulated kernel execution.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Total model cycles of the launch.
+    pub total_cycles: f64,
+    /// Converted milliseconds under the machine's clock.
+    pub ms: f64,
+    /// Kernel iterations executed.
+    pub iterations: usize,
+    /// Per-warp busy times — the Figure 3 distribution. TC: one entry per
+    /// static warp (vertex block); VC: one entry per resident warp slot.
+    pub warp_times: Vec<f64>,
+    /// Local operations charged.
+    pub ops: usize,
+}
+
+#[inline]
+fn coop_scan_tx(d: f64, rep: Representation, c: &CostParams) -> f64 {
+    // Warp-cooperative (VC tile) row streaming: 32 lanes read consecutive
+    // slots in one instruction ⇒ fully coalesced transactions. RCSR's two
+    // discontiguous ranges + separate flow-index array lower the line
+    // utilisation and add a segment restart (paper: "uncoalesced memory
+    // access ... tremendous pressure on the memory bandwidth").
+    match rep {
+        Representation::Bcsr => (d / c.arcs_per_tx).ceil(),
+        Representation::Rcsr => (d * c.rcsr_scan_factor / c.arcs_per_tx).ceil() + 1.0,
+    }
+}
+
+#[inline]
+fn serial_scan_tx(d: f64, rep: Representation, c: &CostParams) -> f64 {
+    // Thread-serial (TC lane) row walk: coalescing only happens across
+    // lanes within one instruction, and each lane walks a *different* row,
+    // so nearly every access is its own transaction.
+    match rep {
+        Representation::Bcsr => d * c.serial_tx_per_arc,
+        Representation::Rcsr => d * c.serial_tx_per_arc * c.rcsr_scan_factor,
+    }
+}
+
+#[inline]
+fn op_cost(pushed: bool, d: f64, rep: Representation, c: &CostParams) -> f64 {
+    if pushed {
+        // BCSR pays the backward-arc binary search in the target's row
+        // (~log2 d); RCSR finds it in O(1) via flow_idx.
+        let search = match rep {
+            Representation::Bcsr => d.max(2.0).log2().ceil() * c.c_search_step,
+            Representation::Rcsr => 0.0,
+        };
+        c.c_push + search
+    } else {
+        c.c_relabel
+    }
+}
+
+/// Thread-centric simulation: warp `w` permanently owns vertices
+/// `[32w, 32w+32)`; each iteration it checks all 32 in lockstep, then the
+/// active lanes serially scan their own rows (divergence ⇒ the warp stalls
+/// for the *longest* lane — the `max` of Eq. 1) and apply their push /
+/// relabel serially (branch divergence). No synchronization between
+/// iterations: a warp's launch time is the sum of its iteration times, and
+/// the launch completes when the slowest warp does.
+pub fn simulate_tc(trace: &Trace, rep: Representation, model: &GpuModel, c: &CostParams) -> SimReport {
+    let ws = model.warp_size;
+    let warps = trace.n.div_ceil(ws);
+    let mut warp_total = vec![0.0f64; warps];
+    // Per-warp per-iteration scratch (reset via touched list).
+    let mut max_d = vec![0.0f64; warps];
+    let mut tx = vec![0.0f64; warps];
+    let mut opc = vec![0.0f64; warps];
+    let mut touched: Vec<usize> = Vec::new();
+    let mut ops_count = 0usize;
+
+    for iter in &trace.iters {
+        // Every warp pays the activity sweep each iteration (TC scans all
+        // vertices regardless of how many are active).
+        for t in warp_total.iter_mut() {
+            *t += c.c_check + c.mem_tx;
+        }
+        for op in iter {
+            let w = op.u as usize / ws;
+            let d = trace.row_len[op.u as usize] as f64;
+            if max_d[w] == 0.0 && tx[w] == 0.0 && opc[w] == 0.0 {
+                touched.push(w);
+            }
+            max_d[w] = max_d[w].max(d);
+            tx[w] += serial_scan_tx(d, rep, c);
+            opc[w] += op_cost(op.pushed, d, rep, c);
+            ops_count += 1;
+        }
+        for &w in &touched {
+            // Divergence: the warp advances at the pace of its longest
+            // lane scan; bandwidth: all lanes' transactions serialize.
+            warp_total[w] += max_d[w] * c.c_arc + tx[w] * c.mem_tx + opc[w];
+            max_d[w] = 0.0;
+            tx[w] = 0.0;
+            opc[w] = 0.0;
+        }
+        touched.clear();
+    }
+
+    let sched = schedule(&warp_total, model.slots());
+    let total_cycles = sched.makespan;
+    SimReport {
+        total_cycles,
+        ms: model.cycles_to_ms(total_cycles),
+        iterations: trace.iters.len(),
+        warp_times: warp_total,
+        ops: ops_count,
+    }
+}
+
+/// Vertex-centric simulation (Alg. 2): per iteration, a uniform scan phase
+/// builds the AVQ (atomic appends), a `grid_sync()`, then one *tile* (warp)
+/// per active vertex streams that vertex's row cooperatively — coalesced
+/// loads, `log2(32)` tree-reduction steps — and the delegated lane applies
+/// the operation; then a second `grid_sync()`. Iteration latency is the
+/// makespan of each phase over the resident warp slots.
+pub fn simulate_vc(trace: &Trace, rep: Representation, model: &GpuModel, c: &CostParams) -> SimReport {
+    let ws = model.warp_size as f64;
+    let slots = model.slots();
+    let scan_warps = trace.n.div_ceil(model.warp_size);
+    let mut slot_busy = vec![0.0f64; slots];
+    let mut total = 0.0f64;
+    let mut ops_count = 0usize;
+    let reduce = (ws.log2()).ceil() * c.c_reduce_step;
+
+    let mut scan_tasks = vec![0.0f64; scan_warps];
+    for iter in &trace.iters {
+        // --- scan phase: uniform sweep + AVQ appends ---
+        for t in scan_tasks.iter_mut() {
+            *t = c.c_check + c.mem_tx;
+        }
+        for op in iter {
+            scan_tasks[op.u as usize / model.warp_size] += c.c_avq_append;
+        }
+        let scan = schedule(&scan_tasks, slots);
+        // --- process phase: one tile per active vertex ---
+        let mut tasks = Vec::with_capacity(iter.len());
+        for op in iter {
+            let d = trace.row_len[op.u as usize] as f64;
+            // Cooperative scan: d/32 lane-steps of compute, coalesced
+            // transactions for the whole row, then the tree reduction.
+            let cost = (d / ws).ceil() * c.c_arc + coop_scan_tx(d, rep, c) * c.mem_tx + reduce + op_cost(op.pushed, d, rep, c);
+            tasks.push(cost);
+            ops_count += 1;
+        }
+        let proc = schedule(&tasks, slots);
+        for i in 0..slots {
+            slot_busy[i] += scan.slot_busy[i] + proc.slot_busy[i];
+        }
+        total += scan.makespan + proc.makespan + 2.0 * c.c_sync;
+    }
+
+    SimReport {
+        total_cycles: total,
+        ms: model.cycles_to_ms(total),
+        iterations: trace.iters.len(),
+        warp_times: slot_busy,
+        ops: ops_count,
+    }
+}
+
+/// Convenience: simulate one configuration from a trace.
+pub fn simulate(trace: &Trace, vertex_centric: bool, rep: Representation, model: &GpuModel, c: &CostParams) -> SimReport {
+    if vertex_centric {
+        simulate_vc(trace, rep, model, c)
+    } else {
+        simulate_tc(trace, rep, model, c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::ArcGraph;
+    use crate::graph::{generators, Rcsr};
+    use crate::simt::trace::record;
+
+    fn trace_of(net: &crate::graph::builder::FlowNetwork) -> Trace {
+        let g = ArcGraph::build(&net.normalized());
+        let rep = Rcsr::build(&g);
+        let t = record(&g, &rep, 64);
+        assert!(t.value > 0, "test graph must carry flow ({})", net.name);
+        t
+    }
+
+    /// Attach super terminals over BFS-selected pairs — the same terminal
+    /// selection the paper uses for SNAP graphs (§4.1), guaranteeing s→t
+    /// paths on generated graphs.
+    fn with_terminals(net: crate::graph::builder::FlowNetwork) -> crate::graph::builder::FlowNetwork {
+        let pairs = crate::graph::builder::select_pairs(&net, 4, 12, 99);
+        assert!(!pairs.is_empty());
+        let sources: Vec<u32> = pairs.iter().map(|p| p.0).collect();
+        let sinks: Vec<u32> = pairs.iter().map(|p| p.1).collect();
+        crate::graph::builder::add_super_terminals(&net, &sources, &sinks, 1 << 20)
+    }
+
+    #[test]
+    fn vc_beats_tc_on_skewed_graph() {
+        // cit-Patents-regime analog: heavy-tailed degrees (paper R5:
+        // the biggest VC win).
+        let net = with_terminals(generators::rmat(&generators::RmatParams {
+            scale: 11,
+            edge_factor: 10,
+            a: 0.6,
+            b: 0.18,
+            c: 0.18,
+            seed: 4,
+        }));
+        let t = trace_of(&net);
+        let (m, c) = (GpuModel::default(), CostParams::default());
+        let tc = simulate_tc(&t, Representation::Rcsr, &m, &c);
+        let vc = simulate_vc(&t, Representation::Rcsr, &m, &c);
+        assert!(
+            vc.total_cycles < tc.total_cycles,
+            "VC {} !< TC {}",
+            vc.total_cycles,
+            tc.total_cycles
+        );
+    }
+
+    #[test]
+    fn sync_overhead_hurts_tiny_graphs() {
+        // B0-regime: a graph so small the grid syncs dominate (paper §4.2
+        // observation on B0–B2).
+        let net = generators::erdos_renyi(48, 120, 3, 8);
+        let t = trace_of(&net);
+        let (m, c) = (GpuModel::default(), CostParams::default());
+        let tc = simulate_tc(&t, Representation::Rcsr, &m, &c);
+        let vc = simulate_vc(&t, Representation::Rcsr, &m, &c);
+        assert!(vc.total_cycles > tc.total_cycles, "tiny graph should favor TC");
+    }
+
+    #[test]
+    fn bcsr_coalescing_helps_vc() {
+        let net = with_terminals(generators::rmat(&generators::RmatParams {
+            scale: 8,
+            edge_factor: 8,
+            a: 0.6,
+            b: 0.18,
+            c: 0.18,
+            seed: 5,
+        }));
+        let t = trace_of(&net);
+        let (m, c) = (GpuModel::default(), CostParams::default());
+        let r = simulate_vc(&t, Representation::Rcsr, &m, &c);
+        let b = simulate_vc(&t, Representation::Bcsr, &m, &c);
+        assert!(b.total_cycles < r.total_cycles, "BCSR should coalesce better under VC");
+    }
+
+    #[test]
+    fn reports_are_consistent() {
+        let net = generators::erdos_renyi(100, 600, 4, 2);
+        let t = trace_of(&net);
+        let (m, c) = (GpuModel::default(), CostParams::default());
+        for rep in [Representation::Rcsr, Representation::Bcsr] {
+            let tc = simulate_tc(&t, rep, &m, &c);
+            let vc = simulate_vc(&t, rep, &m, &c);
+            assert_eq!(tc.ops, vc.ops, "both disciplines charge the same ops");
+            assert_eq!(tc.iterations, vc.iterations);
+            assert!(tc.total_cycles > 0.0 && vc.total_cycles > 0.0);
+            assert!(tc.ms > 0.0 && vc.ms > 0.0);
+        }
+    }
+}

@@ -1,0 +1,95 @@
+//! Warp-task scheduling onto the GPU's resident warp slots: in-order
+//! greedy assignment of each task to the least-loaded slot (the block
+//! scheduler abstraction), yielding the makespan and the per-slot busy
+//! times used for the Figure 3 workload distributions.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// A slot's accumulated busy time, ordered for the min-heap.
+#[derive(PartialEq)]
+struct Slot(f64, usize);
+
+impl Eq for Slot {}
+
+impl PartialOrd for Slot {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Slot {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).unwrap_or(std::cmp::Ordering::Equal).then(self.1.cmp(&other.1))
+    }
+}
+
+/// Result of scheduling one batch of warp tasks.
+#[derive(Debug, Clone)]
+pub struct ScheduleResult {
+    /// Completion time of the last task (batch latency).
+    pub makespan: f64,
+    /// Busy time accumulated per slot.
+    pub slot_busy: Vec<f64>,
+}
+
+/// Greedy in-order list scheduling of `tasks` onto `slots` parallel warp
+/// slots.
+pub fn schedule(tasks: &[f64], slots: usize) -> ScheduleResult {
+    assert!(slots > 0);
+    let mut heap: BinaryHeap<Reverse<Slot>> = (0..slots).map(|i| Reverse(Slot(0.0, i))).collect();
+    let mut busy = vec![0.0f64; slots];
+    let mut makespan = 0.0f64;
+    for &t in tasks {
+        let Reverse(Slot(time, idx)) = heap.pop().unwrap();
+        let end = time + t;
+        busy[idx] += t;
+        makespan = makespan.max(end);
+        heap.push(Reverse(Slot(end, idx)));
+    }
+    ScheduleResult { makespan, slot_busy: busy }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_slot_sums() {
+        let r = schedule(&[1.0, 2.0, 3.0], 1);
+        assert!((r.makespan - 6.0).abs() < 1e-12);
+        assert_eq!(r.slot_busy.len(), 1);
+    }
+
+    #[test]
+    fn perfectly_parallel() {
+        let r = schedule(&[5.0, 5.0, 5.0, 5.0], 4);
+        assert!((r.makespan - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalance_dominates() {
+        // One huge task: makespan = its length, no matter how many slots.
+        let mut tasks = vec![1.0; 100];
+        tasks.push(1000.0);
+        let r = schedule(&tasks, 64);
+        assert!(r.makespan >= 1000.0);
+        assert!(r.makespan < 1010.0);
+    }
+
+    #[test]
+    fn makespan_at_least_mean_load() {
+        let tasks: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let total: f64 = tasks.iter().sum();
+        let r = schedule(&tasks, 8);
+        assert!(r.makespan >= total / 8.0);
+        let busy_total: f64 = r.slot_busy.iter().sum();
+        assert!((busy_total - total).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_tasks() {
+        let r = schedule(&[], 4);
+        assert_eq!(r.makespan, 0.0);
+    }
+}

@@ -1,0 +1,129 @@
+//! Workload trace: replay a real push-relabel execution and record, per
+//! kernel iteration, which vertices were active and whether each pushed or
+//! relabeled. The trace is *schedule-independent* input to the cost model:
+//! the same local operations happen under TC and VC; what differs (and what
+//! [`super::exec`] charges) is how they map onto warps.
+
+use crate::graph::builder::ArcGraph;
+use crate::graph::residual::Residual;
+use crate::maxflow::global_relabel::{global_relabel, ExcessAccounting};
+use crate::maxflow::lockfree::{discharge_once, LocalCounters};
+use crate::maxflow::state::ParState;
+
+/// One local operation in an iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Op {
+    pub u: u32,
+    /// true = push, false = relabel.
+    pub pushed: bool,
+}
+
+/// A recorded execution.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub n: usize,
+    /// Per-iteration active-vertex operations.
+    pub iters: Vec<Vec<Op>>,
+    /// Row length (in + out arcs) per vertex — the scan cost `d(v)` of
+    /// Eq. 1 (the full row is always examined by the min-height search).
+    pub row_len: Vec<u32>,
+    /// Max-flow value reached (sanity cross-check against the engines).
+    pub value: i64,
+}
+
+impl Trace {
+    /// Total local operations.
+    pub fn total_ops(&self) -> usize {
+        self.iters.iter().map(|i| i.len()).sum()
+    }
+}
+
+/// Cap on recorded iterations — beyond this the cost model extrapolates
+/// linearly rather than store an unbounded trace.
+pub const MAX_TRACE_ITERS: usize = 200_000;
+
+/// Replay push-relabel over `rep`, recording every iteration. Uses the
+/// same lock-free local operation as the real engines, executed
+/// sequentially per iteration (a legal schedule), with global relabel every
+/// `gr_interval` iterations.
+pub fn record<R: Residual>(g: &ArcGraph, rep: &R, gr_interval: usize) -> Trace {
+    let n = g.n;
+    let (st, excess_total) = ParState::preflow(g);
+    let mut acct = ExcessAccounting::new(n, excess_total);
+    let row_len: Vec<u32> = (0..n as u32).map(|u| rep.degree(u) as u32).collect();
+    let mut iters: Vec<Vec<Op>> = Vec::new();
+    let gr = gr_interval.max(1);
+    let mut cnt = LocalCounters::default();
+    global_relabel(g, rep, &st, &mut acct, true);
+    while !acct.done(g, &st) && iters.len() < MAX_TRACE_ITERS {
+        let mut ops = Vec::new();
+        for u in 0..n as u32 {
+            if st.is_active(g, u) {
+                let pushes_before = cnt.pushes;
+                discharge_once(g, rep, &st, u, &mut cnt);
+                ops.push(Op { u, pushed: cnt.pushes > pushes_before });
+            }
+        }
+        iters.push(ops);
+        if iters.len() % gr == 0 {
+            global_relabel(g, rep, &st, &mut acct, true);
+        }
+    }
+    Trace { n, iters, row_len, value: st.excess(g.t) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::FlowNetwork;
+    use crate::graph::generators;
+    use crate::graph::{Edge, Rcsr};
+
+    #[test]
+    fn trace_reaches_maxflow_value() {
+        let net = generators::erdos_renyi(40, 250, 6, 3);
+        let g = ArcGraph::build(&net.normalized());
+        let rep = Rcsr::build(&g);
+        let t = record(&g, &rep, 64);
+        let want = crate::maxflow::dinic::solve(&g).value;
+        assert_eq!(t.value, want);
+        assert!(t.total_ops() > 0);
+    }
+
+    #[test]
+    fn iterations_shrink_to_zero_activity() {
+        let net = FlowNetwork::new(3, 0, 2, vec![Edge::new(0, 1, 5), Edge::new(1, 2, 5)], "line3");
+        let g = ArcGraph::build(&net);
+        let rep = Rcsr::build(&g);
+        let t = record(&g, &rep, 8);
+        assert_eq!(t.value, 5);
+        // The line resolves in a handful of iterations.
+        assert!(t.iters.len() < 16, "{} iterations", t.iters.len());
+    }
+
+    #[test]
+    fn ops_reference_valid_vertices_and_degrees() {
+        let net = generators::grid_road(8, 8, 0.1, 4, 1);
+        let g = ArcGraph::build(&net.normalized());
+        let rep = Rcsr::build(&g);
+        let t = record(&g, &rep, 32);
+        for iter in &t.iters {
+            for op in iter {
+                assert!((op.u as usize) < t.n);
+                assert!(t.row_len[op.u as usize] > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn both_push_and_relabel_ops_recorded() {
+        let net = generators::erdos_renyi(30, 150, 5, 9);
+        let g = ArcGraph::build(&net.normalized());
+        let rep = Rcsr::build(&g);
+        let t = record(&g, &rep, 64);
+        let pushes = t.iters.iter().flatten().filter(|o| o.pushed).count();
+        let relabels = t.iters.iter().flatten().filter(|o| !o.pushed).count();
+        assert!(pushes > 0);
+        assert!(relabels > 0);
+    }
+}

@@ -1,0 +1,93 @@
+//! Figure 3 — per-warp workload distribution.
+//!
+//! The paper instruments the first thread of each warp to timestamp kernel
+//! execution, then plots per-warp execution times normalized by their mean
+//! for TC vs VC. The headline observation: VC *reduces the standard
+//! deviation* of per-warp times (more even work), even where the mean does
+//! not improve.
+
+use super::exec::SimReport;
+use crate::util::stats::Summary;
+
+/// Mean-normalized distribution statistics of per-warp busy times.
+#[derive(Debug, Clone)]
+pub struct WorkloadDist {
+    /// Std of mean-normalized warp times (the Fig. 3 spread; equals the
+    /// coefficient of variation of the raw times).
+    pub norm_std: f64,
+    /// Mean-normalized percentiles.
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+    /// Number of warps with non-zero work.
+    pub busy_warps: usize,
+}
+
+impl WorkloadDist {
+    /// Compute from a simulation report, ignoring fully idle warps (warps
+    /// that never received an active vertex — the paper's instrumentation
+    /// likewise only sees warps that executed).
+    pub fn of(report: &SimReport) -> WorkloadDist {
+        let busy: Vec<f64> = report.warp_times.iter().copied().filter(|&t| t > 0.0).collect();
+        let s = Summary::of(&busy);
+        let mean = if s.mean > 0.0 { s.mean } else { 1.0 };
+        WorkloadDist {
+            norm_std: s.std / mean,
+            p50: s.p50 / mean,
+            p90: s.p90 / mean,
+            p99: s.p99 / mean,
+            max: s.max / mean,
+            busy_warps: busy.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::ArcGraph;
+    use crate::graph::{generators, Rcsr, Representation};
+    use crate::simt::exec::{simulate_tc, simulate_vc};
+    use crate::simt::trace::record;
+    use crate::simt::{CostParams, GpuModel};
+
+    #[test]
+    fn vc_narrows_the_distribution_on_skewed_graphs() {
+        // The Fig. 3 claim, on RCSR (the figure's configuration).
+        let base = generators::rmat(&generators::RmatParams { scale: 9, edge_factor: 8, a: 0.6, b: 0.18, c: 0.18, seed: 7 });
+        let pairs = crate::graph::builder::select_pairs(&base, 4, 12, 99);
+        let sources: Vec<u32> = pairs.iter().map(|p| p.0).collect();
+        let sinks: Vec<u32> = pairs.iter().map(|p| p.1).collect();
+        let net = crate::graph::builder::add_super_terminals(&base, &sources, &sinks, 1 << 20);
+        let g = ArcGraph::build(&net.normalized());
+        let rep = Rcsr::build(&g);
+        let t = record(&g, &rep, 64);
+        let (m, c) = (GpuModel::default(), CostParams::default());
+        let tc = WorkloadDist::of(&simulate_tc(&t, Representation::Rcsr, &m, &c));
+        let vc = WorkloadDist::of(&simulate_vc(&t, Representation::Rcsr, &m, &c));
+        assert!(
+            vc.norm_std < tc.norm_std,
+            "VC should even out warp work: vc={} tc={}",
+            vc.norm_std,
+            tc.norm_std
+        );
+    }
+
+    #[test]
+    fn dist_of_uniform_times_is_tight() {
+        let report = SimReport { total_cycles: 0.0, ms: 0.0, iterations: 0, warp_times: vec![3.0; 50], ops: 0 };
+        let d = WorkloadDist::of(&report);
+        assert!(d.norm_std < 1e-12);
+        assert_eq!(d.busy_warps, 50);
+        assert!((d.p99 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn idle_warps_excluded() {
+        let mut times = vec![0.0; 10];
+        times.extend([2.0, 2.0, 2.0]);
+        let report = SimReport { total_cycles: 0.0, ms: 0.0, iterations: 0, warp_times: times, ops: 0 };
+        assert_eq!(WorkloadDist::of(&report).busy_warps, 3);
+    }
+}

@@ -1,0 +1,132 @@
+//! Tiny argv parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, repeated options, and
+//! positional arguments, which is all the `wbpr` launcher needs.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals + options (last-wins plus full history).
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, Vec<String>>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (normally `std::env::args().skip(1)`).
+    ///
+    /// Any `--name` followed by a token that does not start with `--` is an
+    /// option with a value, unless `name` is listed in `bool_flags`.
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I, bool_flags: &[&str]) -> Args {
+        let mut out = Args::default();
+        let toks: Vec<String> = tokens.into_iter().collect();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(name) = t.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.opts.entry(k.to_string()).or_default().push(v.to_string());
+                } else if bool_flags.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    out.opts.entry(name.to_string()).or_default().push(toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    /// Last value of `--name`.
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// All values of a repeated `--name`.
+    pub fn opt_all(&self, name: &str) -> &[String] {
+        self.opts.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Was `--name` given as a flag?
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: '{v}' is not an integer")),
+        }
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: '{v}' is not an integer")),
+        }
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: '{v}' is not a number")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), &["verbose", "quiet"])
+    }
+
+    #[test]
+    fn positionals_and_options() {
+        let a = parse("maxflow --graph genrmf --seed 7 input.dimacs");
+        assert_eq!(a.positional, vec!["maxflow", "input.dimacs"]);
+        assert_eq!(a.opt("graph"), Some("genrmf"));
+        assert_eq!(a.opt_u64("seed", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("--k=v --n=3");
+        assert_eq!(a.opt("k"), Some("v"));
+        assert_eq!(a.opt_usize("n", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn bool_flags_consume_nothing() {
+        let a = parse("--verbose run");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["run"]);
+    }
+
+    #[test]
+    fn repeated_options_collect() {
+        let a = parse("--set a.b=1 --set c.d=2");
+        assert_eq!(a.opt_all("set"), &["a.b=1".to_string(), "c.d=2".to_string()]);
+        assert_eq!(a.opt("set"), Some("c.d=2"));
+    }
+
+    #[test]
+    fn trailing_option_without_value_is_flag() {
+        let a = parse("--maybe");
+        assert!(a.flag("maybe"));
+        assert_eq!(a.opt("maybe"), None);
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse("--n notanum");
+        assert!(a.opt_usize("n", 0).is_err());
+    }
+}

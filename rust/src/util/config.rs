@@ -1,0 +1,174 @@
+//! INI-style configuration files + key=value overrides.
+//!
+//! The launcher (`wbpr` CLI) accepts `--config path.ini` plus repeated
+//! `--set section.key=value` overrides, mirroring the config systems of
+//! larger frameworks (MaxText/Megatron-style) without external deps.
+//!
+//! Format:
+//! ```text
+//! # comment
+//! [engine]
+//! kind = vc            ; inline comments allowed after ';' or '#'
+//! representation = bcsr
+//! cycles_per_launch = 128
+//! ```
+
+use std::collections::BTreeMap;
+
+/// Parsed configuration: section -> key -> value (strings; typed getters).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl Config {
+    pub fn new() -> Config {
+        Config::default()
+    }
+
+    /// Parse from INI text.
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut cfg = Config::new();
+        let mut section = String::from("global");
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| format!("line {}: unterminated section header", lineno + 1))?;
+                section = name.trim().to_string();
+                if section.is_empty() {
+                    return Err(format!("line {}: empty section name", lineno + 1));
+                }
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            cfg.set(&section, k.trim(), v.trim());
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file.
+    pub fn load(path: &str) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Config::parse(&text)
+    }
+
+    /// Set a value.
+    pub fn set(&mut self, section: &str, key: &str, value: &str) {
+        self.sections
+            .entry(section.to_string())
+            .or_default()
+            .insert(key.to_string(), value.to_string());
+    }
+
+    /// Apply a `section.key=value` override string.
+    pub fn apply_override(&mut self, spec: &str) -> Result<(), String> {
+        let (path, value) = spec.split_once('=').ok_or_else(|| format!("override '{spec}': expected section.key=value"))?;
+        let (section, key) = path.split_once('.').ok_or_else(|| format!("override '{spec}': expected section.key=value"))?;
+        self.set(section.trim(), key.trim(), value.trim());
+        Ok(())
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section).and_then(|s| s.get(key)).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("{section}.{key}: '{v}' is not an integer")),
+        }
+    }
+
+    pub fn get_u64(&self, section: &str, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("{section}.{key}: '{v}' is not an integer")),
+        }
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("{section}.{key}: '{v}' is not a number")),
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str, default: bool) -> Result<bool, String> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") | Some("on") => Ok(true),
+            Some("false") | Some("0") | Some("no") | Some("off") => Ok(false),
+            Some(v) => Err(format!("{section}.{key}: '{v}' is not a bool")),
+        }
+    }
+
+    /// All keys of one section (for diagnostics).
+    pub fn section(&self, name: &str) -> Option<&BTreeMap<String, String>> {
+        self.sections.get(name)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Comments start at '#' or ';' (not inside values — our values never
+    // legitimately contain these characters).
+    match line.find(|c| c == '#' || c == ';') {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\n# top comment\n[engine]\nkind = vc ; inline\nrepresentation = bcsr\ncycles_per_launch = 128\n\n[simt]\nwarps = 82\nenable = true\nfrac = 0.5\n";
+
+    #[test]
+    fn parses_sections_and_values() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get("engine", "kind"), Some("vc"));
+        assert_eq!(c.get("engine", "representation"), Some("bcsr"));
+        assert_eq!(c.get_usize("engine", "cycles_per_launch", 0).unwrap(), 128);
+        assert_eq!(c.get_usize("simt", "warps", 0).unwrap(), 82);
+        assert!(c.get_bool("simt", "enable", false).unwrap());
+        assert_eq!(c.get_f64("simt", "frac", 0.0).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn defaults_apply_when_missing() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.get_usize("x", "y", 7).unwrap(), 7);
+        assert!(!c.get_bool("x", "y", false).unwrap());
+    }
+
+    #[test]
+    fn overrides() {
+        let mut c = Config::parse(SAMPLE).unwrap();
+        c.apply_override("engine.kind=tc").unwrap();
+        assert_eq!(c.get("engine", "kind"), Some("tc"));
+        assert!(c.apply_override("malformed").is_err());
+        assert!(c.apply_override("nosection=1").is_err());
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let c = Config::parse("[a]\nx = notanum\n").unwrap();
+        assert!(c.get_usize("a", "x", 0).is_err());
+        assert!(c.get_bool("a", "x", false).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Config::parse("[unterminated\n").is_err());
+        assert!(Config::parse("keywithoutvalue\n").is_err());
+    }
+}

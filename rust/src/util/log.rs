@@ -1,0 +1,89 @@
+//! Minimal leveled logger (env-controlled via `WBPR_LOG=debug|info|warn|error`).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(255); // 255 = uninitialised
+
+fn init_from_env() -> u8 {
+    let lvl = match std::env::var("WBPR_LOG").ok().as_deref() {
+        Some("debug") => Level::Debug,
+        Some("warn") => Level::Warn,
+        Some("error") => Level::Error,
+        _ => Level::Info,
+    } as u8;
+    LEVEL.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+/// Current threshold level.
+pub fn level() -> u8 {
+    let l = LEVEL.load(Ordering::Relaxed);
+    if l == 255 { init_from_env() } else { l }
+}
+
+/// Override the level programmatically (tests, CLI `--quiet`).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Emit one log line if `lvl` clears the threshold.
+pub fn log(lvl: Level, target: &str, msg: &str) {
+    if (lvl as u8) < level() {
+        return;
+    }
+    let t = SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default();
+    let tag = match lvl {
+        Level::Debug => "DEBUG",
+        Level::Info => "INFO ",
+        Level::Warn => "WARN ",
+        Level::Error => "ERROR",
+    };
+    eprintln!("[{:>10}.{:03} {} {}] {}", t.as_secs(), t.subsec_millis(), tag, target, msg);
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($target:expr, $($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, $target, &format!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! info {
+    ($target:expr, $($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, $target, &format!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! warn_ {
+    ($target:expr, $($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Warn, $target, &format!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! error {
+    ($target:expr, $($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Error, $target, &format!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!((Level::Debug as u8) < (Level::Info as u8));
+        assert!((Level::Info as u8) < (Level::Warn as u8));
+        assert!((Level::Warn as u8) < (Level::Error as u8));
+    }
+
+    #[test]
+    fn set_level_filters() {
+        set_level(Level::Error);
+        assert_eq!(level(), Level::Error as u8);
+        set_level(Level::Info);
+        assert_eq!(level(), Level::Info as u8);
+    }
+}

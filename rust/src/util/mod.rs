@@ -1,0 +1,19 @@
+//! Dependency-light utilities.
+//!
+//! The build environment is offline and only vendors the `xla` crate's
+//! dependency closure, so the conveniences a project would normally pull from
+//! crates.io (rand, clap, serde_json, criterion, proptest) are implemented
+//! here at the scale this repo needs them.
+
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod log;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Rng;
+pub use stats::Summary;
+pub use timer::Timer;

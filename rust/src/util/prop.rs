@@ -1,0 +1,146 @@
+//! In-repo property-based testing harness (proptest is unavailable offline).
+//!
+//! A property is a closure over a [`Rng`]; the harness runs it for many
+//! seeded cases and, on failure, retries the failing case with a fresh seed
+//! derived deterministically so failures are reproducible from the printed
+//! seed. A lightweight "shrink" is provided for integer size parameters:
+//! generators draw sizes through [`Gen::size`], and on failure the harness
+//! re-runs with progressively smaller size budgets to find a small
+//! counterexample.
+
+use super::rng::Rng;
+
+/// Generation context handed to properties.
+pub struct Gen {
+    pub rng: Rng,
+    /// Size budget in [0, 1]; generators should scale their dimensions by it.
+    pub budget: f64,
+}
+
+impl Gen {
+    /// A size in `[lo, hi]`, scaled by the current shrink budget.
+    pub fn size(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let span = ((hi - lo) as f64 * self.budget).round() as usize;
+        lo + if span == 0 { 0 } else { self.rng.index(span + 1) }
+    }
+}
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub struct PropReport {
+    pub cases: u32,
+    pub failure: Option<String>,
+}
+
+/// Run `prop` for `cases` random cases. On the first failure, attempt to
+/// shrink by re-running the same seed with smaller size budgets, then panic
+/// with the smallest failing description.
+///
+/// `prop` returns `Ok(())` on success or `Err(description)` on failure and
+/// may also panic (panics are treated as failures with the panic message).
+pub fn check<F>(name: &str, cases: u32, base_seed: u64, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String> + std::panic::RefUnwindSafe,
+{
+    let report = check_quiet(cases, base_seed, &prop);
+    if let Some(msg) = report.failure {
+        panic!("property '{name}' failed: {msg}");
+    }
+}
+
+/// Non-panicking variant (used by the harness's own tests).
+pub fn check_quiet<F>(cases: u32, base_seed: u64, prop: &F) -> PropReport
+where
+    F: Fn(&mut Gen) -> Result<(), String> + std::panic::RefUnwindSafe,
+{
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        if let Err(msg) = run_case(prop, seed, 1.0) {
+            // Shrink: smaller budgets, same seed.
+            let mut best = (1.0, msg);
+            for &budget in &[0.5, 0.25, 0.1, 0.05, 0.0] {
+                if let Err(m) = run_case(prop, seed, budget) {
+                    best = (budget, m);
+                } else {
+                    break;
+                }
+            }
+            let (budget, msg) = best;
+            return PropReport {
+                cases: case + 1,
+                failure: Some(format!("case {case} seed {seed:#x} budget {budget}: {msg}")),
+            };
+        }
+    }
+    PropReport { cases, failure: None }
+}
+
+fn run_case<F>(prop: &F, seed: u64, budget: f64) -> Result<(), String>
+where
+    F: Fn(&mut Gen) -> Result<(), String> + std::panic::RefUnwindSafe,
+{
+    let result = std::panic::catch_unwind(|| {
+        let mut g = Gen { rng: Rng::new(seed), budget };
+        prop(&mut g)
+    });
+    match result {
+        Ok(r) => r,
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "panic".to_string());
+            Err(format!("panicked: {msg}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum-commutes", 50, 1, |g| {
+            let a = g.rng.range_i64(-1000, 1000);
+            let b = g.rng.range_i64(-1000, 1000);
+            if a + b == b + a { Ok(()) } else { Err("math broke".into()) }
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_and_shrinks() {
+        let r = check_quiet(100, 7, &|g: &mut Gen| {
+            let n = g.size(0, 1000);
+            if n > 900 { Err(format!("n={n} too big")) } else { Ok(()) }
+        });
+        let msg = r.failure.expect("should fail eventually");
+        assert!(msg.contains("budget"), "message: {msg}");
+    }
+
+    #[test]
+    fn panics_are_captured() {
+        let r = check_quiet(10, 3, &|g: &mut Gen| {
+            if g.rng.chance(1.0) {
+                panic!("boom");
+            }
+            Ok(())
+        });
+        assert!(r.failure.unwrap().contains("boom"));
+    }
+
+    #[test]
+    fn size_respects_bounds_and_budget() {
+        let mut g = Gen { rng: Rng::new(1), budget: 0.0 };
+        for _ in 0..50 {
+            assert_eq!(g.size(3, 100), 3);
+        }
+        let mut g = Gen { rng: Rng::new(2), budget: 1.0 };
+        for _ in 0..200 {
+            let s = g.size(3, 10);
+            assert!((3..=10).contains(&s));
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! Descriptive statistics used by the SIMT workload analysis (Figure 3),
+//! the benchmark report printer, and the coordinator metrics.
+
+/// Summary statistics over a sample of f64 values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    /// Coefficient of variation (std / mean) — the paper's Figure 3 metric
+    /// for workload imbalance across warps, after mean-normalization.
+    pub cv: f64,
+}
+
+impl Summary {
+    /// Compute a summary; returns an all-zero summary for an empty sample.
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0, p50: 0.0, p90: 0.0, p99: 0.0, cv: 0.0 };
+        }
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let std = var.sqrt();
+        let mut sorted: Vec<f64> = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| -> f64 {
+            let idx = (p * (n - 1) as f64).round() as usize;
+            sorted[idx.min(n - 1)]
+        };
+        Summary {
+            n,
+            mean,
+            std,
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: q(0.50),
+            p90: q(0.90),
+            p99: q(0.99),
+            cv: if mean.abs() > 1e-300 { std / mean } else { 0.0 },
+        }
+    }
+}
+
+/// A fixed-bucket histogram for latency-style metrics (exponential buckets).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// Bucket upper bounds (exclusive), ascending; final bucket is +inf.
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum: f64,
+    n: u64,
+}
+
+impl Histogram {
+    /// Exponential buckets: `base * growth^i` for i in 0..buckets.
+    pub fn exponential(base: f64, growth: f64, buckets: usize) -> Histogram {
+        assert!(base > 0.0 && growth > 1.0 && buckets >= 1);
+        let bounds: Vec<f64> = (0..buckets).map(|i| base * growth.powi(i as i32)).collect();
+        let counts = vec![0; buckets + 1];
+        Histogram { bounds, counts, sum: 0.0, n: 0 }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let idx = self.bounds.iter().position(|&b| v < b).unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum += v;
+        self.n += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.sum / self.n as f64 }
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound of the bucket
+    /// containing the q-quantile observation).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let target = (q * self.n as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target.max(1) {
+                return if i < self.bounds.len() { self.bounds[i] } else { f64::INFINITY };
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+/// Online mean/std (Welford) — used in hot loops where we cannot afford to
+/// buffer every sample.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { (self.m2 / self.n as f64).sqrt() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_constant() {
+        let s = Summary::of(&[2.0; 10]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.cv, 0.0);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 2.0);
+    }
+
+    #[test]
+    fn summary_of_known_sample() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.std - (1.25f64).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn summary_empty() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let xs: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert!(s.p50 <= s.p90 && s.p90 <= s.p99);
+        assert!((s.p50 - 499.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn histogram_counts_and_quantiles() {
+        let mut h = Histogram::exponential(1.0, 2.0, 10);
+        for i in 0..100 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.mean() - 49.5).abs() < 1e-9);
+        assert!(h.quantile(0.5) >= 32.0 && h.quantile(0.5) <= 64.0);
+        assert!(h.quantile(0.99) >= 64.0);
+    }
+
+    #[test]
+    fn welford_matches_summary() {
+        let xs: Vec<f64> = (0..500).map(|i| (i as f64).sin() * 3.0 + 1.0).collect();
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        let s = Summary::of(&xs);
+        assert!((w.mean() - s.mean).abs() < 1e-9);
+        assert!((w.std() - s.std).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,82 @@
+//! Wall-clock timing helpers for the hand-rolled benchmark harness
+//! (criterion is unavailable offline).
+
+use std::time::{Duration, Instant};
+
+/// A simple scope timer.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn ms(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Benchmark result for one measured routine.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean_ms: f64,
+    pub std_ms: f64,
+    pub min_ms: f64,
+}
+
+/// Run `f` with warmup then `iters` measured repetitions; report stats.
+///
+/// This is the repo's stand-in for criterion: fixed iteration counts keep
+/// total bench time bounded and the output format is one row per routine,
+/// which the table-regeneration benches aggregate into paper-style tables.
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters.max(1) {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let s = crate::util::stats::Summary::of(&samples);
+    BenchResult { name: name.to_string(), iters: iters.max(1), mean_ms: s.mean, std_ms: s.std, min_ms: s.min }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_measures_something() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(t.ms() >= 4.0);
+    }
+
+    #[test]
+    fn bench_runs_requested_iters() {
+        let mut count = 0u32;
+        let r = bench("noop", 2, 10, || {
+            count += 1;
+        });
+        assert_eq!(count, 12);
+        assert_eq!(r.iters, 10);
+        assert!(r.mean_ms >= 0.0);
+    }
+}

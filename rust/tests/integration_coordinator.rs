@@ -1,0 +1,134 @@
+//! Coordinator integration: mixed concurrent workloads, routing behaviour,
+//! batching pipeline, metrics consistency, failure injection.
+
+use std::collections::HashMap;
+use wbpr::coordinator::batcher::PairBatcher;
+use wbpr::coordinator::{Coordinator, CoordinatorConfig, Job};
+use wbpr::graph::bipartite::bipartite_planted;
+use wbpr::graph::builder::ArcGraph;
+use wbpr::graph::{generators, Representation};
+use wbpr::maxflow::{self, EngineKind, SolveOptions};
+
+fn config(native: usize, device: bool) -> CoordinatorConfig {
+    CoordinatorConfig {
+        native_workers: native,
+        enable_device: device,
+        solve: SolveOptions { threads: 2, cycles_per_launch: 64, ..Default::default() },
+        router: Default::default(),
+    }
+}
+
+#[test]
+fn mixed_workload_all_verified() {
+    let coord = Coordinator::start(config(3, true));
+    let mut expected: HashMap<u64, i64> = HashMap::new();
+    // Max-flow jobs across engines.
+    for seed in 0..4u64 {
+        let net = generators::erdos_renyi(40, 220, 5, seed);
+        let g = ArcGraph::build(&net.normalized());
+        let want = maxflow::dinic::solve(&g).value;
+        for kind in [EngineKind::ThreadCentric, EngineKind::VertexCentric] {
+            let id = coord.submit(Job::MaxFlow { net: net.clone(), kind, rep: Representation::Bcsr });
+            expected.insert(id, want);
+        }
+        let id = coord.submit(Job::MaxFlowAuto { net });
+        expected.insert(id, want);
+    }
+    // Matching jobs.
+    for seed in 0..3u64 {
+        let bg = bipartite_planted(15, 25, 40, seed);
+        let want = maxflow::hopcroft_karp::solve(&bg).size as i64;
+        let id = coord.submit(Job::Matching { graph: bg, kind: EngineKind::VertexCentric, rep: Representation::Rcsr });
+        expected.insert(id, want);
+    }
+    let outs = coord.collect(expected.len());
+    assert_eq!(outs.len(), expected.len());
+    for o in outs {
+        let v = o.result.expect("job ok");
+        assert_eq!(v.value, expected[&o.id], "job {}", o.id);
+    }
+    let metrics = coord.shutdown();
+    let total_jobs: u64 = metrics.snapshot().values().map(|e| e.jobs).sum();
+    assert_eq!(total_jobs as usize, expected.len(), "metrics count every job");
+}
+
+#[test]
+fn batched_pipeline_through_coordinator() {
+    let coord = Coordinator::start(config(2, true));
+    let base = generators::grid_road(16, 16, 0.05, 6, 3);
+    let pairs = wbpr::graph::builder::select_pairs(&base, 8, 16, 5);
+    let mut batcher = PairBatcher::new(base, 1 << 16, 3);
+    let mut expected = HashMap::new();
+    let mut submitted = 0;
+    for &(s, t) in &pairs {
+        let batch = batcher.add(s, t);
+        if let Some(b) = batch {
+            let g = ArcGraph::build(&b.net.normalized());
+            let want = maxflow::dinic::solve(&g).value;
+            expected.insert(coord.submit(Job::MaxFlowAuto { net: b.net }), want);
+            submitted += 1;
+        }
+    }
+    if let Some(b) = batcher.flush() {
+        let g = ArcGraph::build(&b.net.normalized());
+        let want = maxflow::dinic::solve(&g).value;
+        expected.insert(coord.submit(Job::MaxFlowAuto { net: b.net }), want);
+        submitted += 1;
+    }
+    assert!(submitted >= 2);
+    for o in coord.collect(submitted) {
+        let v = o.result.expect("batch ok");
+        assert_eq!(v.value, expected[&o.id]);
+    }
+}
+
+#[test]
+fn no_device_config_still_serves_everything() {
+    let coord = Coordinator::start(config(2, false));
+    assert!(!coord.has_device());
+    let net = generators::erdos_renyi(30, 150, 4, 9);
+    let g = ArcGraph::build(&net.normalized());
+    let want = maxflow::dinic::solve(&g).value;
+    coord.submit(Job::MaxFlowAuto { net });
+    let out = coord.recv().unwrap();
+    let v = out.result.unwrap();
+    assert_eq!(v.value, want);
+    assert!(v.engine.starts_with("native"));
+}
+
+#[test]
+fn results_match_ids_under_contention() {
+    let coord = Coordinator::start(config(4, false));
+    let mut expected = HashMap::new();
+    for seed in 0..24u64 {
+        // Different graphs => different values; ids must not get crossed.
+        let net = generators::erdos_renyi(20 + (seed as usize % 7) * 5, 120, 3 + (seed % 4) as i64, seed);
+        let g = ArcGraph::build(&net.normalized());
+        let want = maxflow::dinic::solve(&g).value;
+        expected.insert(coord.submit(Job::MaxFlow { net, kind: EngineKind::Sequential, rep: Representation::Rcsr }), want);
+    }
+    for o in coord.collect(24) {
+        assert_eq!(o.result.unwrap().value, expected[&o.id], "id {}", o.id);
+    }
+}
+
+#[test]
+fn latency_timer_includes_queue_time() {
+    let coord = Coordinator::start(config(1, false));
+    // Saturate the single worker; later jobs must report larger latency.
+    let net = generators::erdos_renyi(60, 400, 6, 1);
+    let mut ids = Vec::new();
+    for _ in 0..6 {
+        ids.push(coord.submit(Job::MaxFlow {
+            net: net.clone(),
+            kind: EngineKind::Sequential,
+            rep: Representation::Rcsr,
+        }));
+    }
+    let outs = coord.collect(6);
+    let mut by_id: Vec<(u64, f64)> = outs.into_iter().map(|o| (o.id, o.result.unwrap().ms)).collect();
+    by_id.sort_unstable_by_key(|x| x.0);
+    // Last-submitted should have waited at least as long as the first
+    // finished (weak monotonicity check with slack for scheduling noise).
+    assert!(by_id.last().unwrap().1 >= by_id.first().unwrap().1 * 0.5);
+}

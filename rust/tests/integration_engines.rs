@@ -1,0 +1,111 @@
+//! Cross-engine integration: every engine × representation must agree with
+//! Dinic on a broad randomized + structured graph suite, and every result
+//! must pass the max-flow/min-cut verifier.
+
+use wbpr::graph::builder::{ArcGraph, FlowNetwork};
+use wbpr::graph::{generators, Representation};
+use wbpr::maxflow::{self, EngineKind, SolveOptions};
+
+fn all_configs() -> Vec<(EngineKind, Representation)> {
+    let mut v = vec![
+        (EngineKind::Sequential, Representation::Rcsr),
+        (EngineKind::EdmondsKarp, Representation::Rcsr),
+    ];
+    for kind in [EngineKind::ThreadCentric, EngineKind::VertexCentric] {
+        for rep in [Representation::Rcsr, Representation::Bcsr] {
+            v.push((kind, rep));
+        }
+    }
+    v
+}
+
+fn check_suite(nets: Vec<FlowNetwork>) {
+    let opts = SolveOptions { threads: 4, cycles_per_launch: 128, ..Default::default() };
+    for net in nets {
+        let g = ArcGraph::build(&net.normalized());
+        let want = maxflow::dinic::solve(&g).value;
+        for (kind, rep) in all_configs() {
+            let r = maxflow::solve_arcs(&g, kind, rep, &opts);
+            assert_eq!(r.value, want, "{}+{} on {}", kind.name(), rep.name(), net.name);
+            maxflow::verify(&g, &r).unwrap_or_else(|e| panic!("{}+{} on {}: {e}", kind.name(), rep.name(), net.name));
+        }
+    }
+}
+
+#[test]
+fn random_dense_and_sparse() {
+    let mut nets = Vec::new();
+    for seed in 0..6 {
+        nets.push(generators::erdos_renyi(50, 400, 9, seed));
+        nets.push(generators::erdos_renyi(120, 400, 4, seed + 100));
+    }
+    check_suite(nets);
+}
+
+#[test]
+fn structured_generators() {
+    check_suite(vec![
+        generators::genrmf(&generators::GenrmfParams { a: 5, b: 5, c1: 1, c2: 50, seed: 1 }),
+        generators::washington_rlg(&generators::WashingtonParams { levels: 8, width: 12, fanout: 3, max_cap: 30, seed: 2 }),
+        generators::grid_road(14, 14, 0.1, 10, 3),
+        generators::near_regular(300, 4, 4),
+    ]);
+}
+
+#[test]
+fn skewed_with_super_terminals() {
+    let base = generators::rmat(&generators::RmatParams { scale: 9, edge_factor: 8, a: 0.6, b: 0.18, c: 0.18, seed: 5 });
+    let net = wbpr::bench::suite::with_pairs(base, 6, 55);
+    check_suite(vec![net]);
+}
+
+#[test]
+fn adversarial_shapes() {
+    // Zero-capacity edges, two-cycles, source/sink direct edge, dead ends.
+    use wbpr::graph::Edge;
+    let nets = vec![
+        FlowNetwork::new(2, 0, 1, vec![Edge::new(0, 1, 7)], "direct"),
+        FlowNetwork::new(3, 0, 2, vec![Edge::new(0, 1, 0), Edge::new(1, 2, 5)], "zero-cap"),
+        FlowNetwork::new(
+            4,
+            0,
+            3,
+            vec![Edge::new(0, 1, 4), Edge::new(1, 2, 3), Edge::new(2, 1, 3), Edge::new(2, 3, 2), Edge::new(1, 3, 1)],
+            "two-cycle",
+        ),
+        FlowNetwork::new(
+            5,
+            0,
+            4,
+            vec![Edge::new(0, 1, 9), Edge::new(1, 2, 9), Edge::new(0, 3, 5), Edge::new(3, 4, 1)],
+            "dead-end-branch",
+        ),
+        FlowNetwork::new(3, 0, 2, vec![Edge::new(1, 0, 5), Edge::new(2, 1, 5)], "only-backward"),
+    ];
+    check_suite(nets);
+}
+
+#[test]
+fn single_thread_equals_many_threads() {
+    let net = generators::erdos_renyi(80, 500, 6, 42);
+    let g = ArcGraph::build(&net.normalized());
+    let want = maxflow::dinic::solve(&g).value;
+    for threads in [1, 2, 8] {
+        let opts = SolveOptions { threads, cycles_per_launch: 64, ..Default::default() };
+        for kind in [EngineKind::ThreadCentric, EngineKind::VertexCentric] {
+            let r = maxflow::solve_arcs(&g, kind, Representation::Bcsr, &opts);
+            assert_eq!(r.value, want, "{}x{threads}", kind.name());
+        }
+    }
+}
+
+#[test]
+fn stats_reflect_work() {
+    let net = generators::genrmf(&generators::GenrmfParams { a: 6, b: 6, c1: 1, c2: 40, seed: 9 });
+    let g = ArcGraph::build(&net.normalized());
+    let opts = SolveOptions::default();
+    let r = maxflow::solve_arcs(&g, EngineKind::VertexCentric, Representation::Bcsr, &opts);
+    assert!(r.stats.pushes > 0 && r.stats.relabels > 0);
+    assert!(r.stats.scan_arcs >= r.stats.pushes, "every push required a scan");
+    assert!(r.stats.total_ms >= r.stats.kernel_ms * 0.5);
+}

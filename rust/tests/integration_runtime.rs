@@ -1,0 +1,184 @@
+//! Runtime + device-engine integration: the AOT artifact path must produce
+//! the same flows as the native engines on a shared graph suite.
+//!
+//! All tests skip gracefully when `make artifacts` has not been run (CI
+//! without python); `make test` always builds artifacts first.
+
+use wbpr::coordinator::device::DeviceEngine;
+use wbpr::graph::builder::ArcGraph;
+use wbpr::graph::{generators, Representation};
+use wbpr::maxflow::{self, EngineKind, SolveOptions};
+use wbpr::runtime::{Manifest, Runtime};
+
+fn engine() -> Option<DeviceEngine> {
+    match DeviceEngine::from_default_location() {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("SKIP: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_and_artifacts_consistent() {
+    let Some(dir) = wbpr::runtime::find_artifacts_dir() else {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    };
+    let m = Manifest::load(&dir).unwrap();
+    assert!(m.variants.len() >= 3, "default build has 3 variants");
+    for v in &m.variants {
+        let text = std::fs::read_to_string(m.hlo_path(v)).unwrap();
+        assert!(text.contains("ENTRY"), "{} lacks an entry computation", v.name);
+        assert!(v.fits(v.v, v.d));
+        assert!(!v.fits(v.v + 1, v.d));
+    }
+}
+
+#[test]
+fn device_agrees_with_all_native_engines() {
+    let Some(mut eng) = engine() else { return };
+    let opts = SolveOptions { threads: 2, cycles_per_launch: 64, ..Default::default() };
+    for seed in 0..4u64 {
+        let net = generators::erdos_renyi(36, 180, 5, seed);
+        let g = ArcGraph::build(&net.normalized());
+        let device = eng.solve(&g).unwrap();
+        maxflow::verify(&g, &device).unwrap();
+        for kind in [EngineKind::Dinic, EngineKind::Sequential, EngineKind::VertexCentric] {
+            let native = maxflow::solve_arcs(&g, kind, Representation::Bcsr, &opts);
+            assert_eq!(device.value, native.value, "seed {seed} vs {}", kind.name());
+        }
+    }
+}
+
+#[test]
+fn device_handles_capacitated_graphs() {
+    let Some(mut eng) = engine() else { return };
+    let net = generators::washington_rlg(&generators::WashingtonParams {
+        levels: 6,
+        width: 8,
+        fanout: 3,
+        max_cap: 40,
+        seed: 11,
+    });
+    let g = ArcGraph::build(&net.normalized());
+    let want = maxflow::dinic::solve(&g).value;
+    let got = eng.solve(&g).unwrap();
+    assert_eq!(got.value, want);
+    assert!(got.stats.launches >= 1);
+    assert!(got.stats.kernel_ms > 0.0);
+}
+
+#[test]
+fn variant_selection_promotes_on_degree() {
+    let Some(mut rt) = Runtime::from_default_location().ok() else {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    };
+    let small = rt.pick(32, 8).unwrap();
+    let hub = rt.pick(32, 20).unwrap();
+    assert!(hub.v >= small.v || hub.d > small.d, "hub degree must promote the variant");
+    // Compile both and reuse from cache.
+    rt.ensure_compiled(&small).unwrap();
+    rt.ensure_compiled(&hub).unwrap();
+    let before = rt.compile_ms;
+    rt.ensure_compiled(&small).unwrap();
+    assert_eq!(rt.compile_ms, before);
+}
+
+#[test]
+fn device_launch_counts_scale_with_difficulty() {
+    let Some(mut eng) = engine() else { return };
+    // A long chain forces many launches (distance >> K cycles per launch).
+    use wbpr::graph::builder::FlowNetwork;
+    use wbpr::graph::Edge;
+    let n = 60;
+    let mut edges = Vec::new();
+    for i in 0..n - 1 {
+        edges.push(Edge::new(i as u32, i as u32 + 1, 2));
+    }
+    let net = FlowNetwork::new(n, 0, (n - 1) as u32, edges, "chain");
+    let g = ArcGraph::build(&net);
+    let r = eng.solve(&g).unwrap();
+    assert_eq!(r.value, 2);
+    maxflow::verify(&g, &r).unwrap();
+}
+
+#[test]
+fn device_relabel_kernel_agrees_with_host_path() {
+    let Some(mut eng) = engine() else { return };
+    // Solve the same graphs with host-BFS global relabel and with the
+    // device relaxation kernel; flows must agree with Dinic either way.
+    for seed in 0..3u64 {
+        let net = generators::erdos_renyi(36, 200, 5, seed + 40);
+        let g = ArcGraph::build(&net.normalized());
+        let want = maxflow::dinic::solve(&g).value;
+        eng.device_relabel = false;
+        let host = eng.solve(&g).unwrap();
+        eng.device_relabel = true;
+        let device = eng.solve(&g).unwrap();
+        assert_eq!(host.value, want, "host GR seed {seed}");
+        assert_eq!(device.value, want, "device GR seed {seed}");
+        maxflow::verify(&g, &device).unwrap();
+    }
+    eng.device_relabel = false;
+}
+
+#[test]
+fn device_relabel_on_structured_graph() {
+    let Some(mut eng) = engine() else { return };
+    eng.device_relabel = true;
+    let net = generators::grid_road(8, 8, 0.1, 4, 9);
+    let g = ArcGraph::build(&net.normalized());
+    let want = maxflow::dinic::solve(&g).value;
+    let r = eng.solve(&g).unwrap();
+    assert_eq!(r.value, want);
+    assert!(r.stats.global_relabels >= 1);
+}
+
+#[test]
+fn failure_injection_corrupt_artifacts() {
+    use std::path::Path;
+    let dir = std::env::temp_dir().join(format!("wbpr-fi-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    // (a) Corrupt manifest JSON.
+    std::fs::write(dir.join("manifest.json"), "{not json").unwrap();
+    assert!(Manifest::load(&dir).is_err());
+    // (b) Valid manifest, missing HLO file.
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"abi":1,"format":"hlo-text","variants":[
+            {"name":"ghost","file":"ghost.hlo.txt","kind":"flow","v":16,"d":8,"k":4,"tile":16}]}"#,
+    )
+    .unwrap();
+    let m = Manifest::load(&dir).unwrap();
+    let mut rt = Runtime::new(m).unwrap();
+    let spec = rt.manifest().variants[0].clone();
+    assert!(rt.ensure_compiled(&spec).is_err(), "missing HLO must fail cleanly");
+    // (c) Truncated / garbage HLO text.
+    std::fs::write(dir.join("ghost.hlo.txt"), "HloModule broken\nENTRY %oops {").unwrap();
+    let m = Manifest::load(&dir).unwrap();
+    let mut rt = Runtime::new(m).unwrap();
+    let spec = rt.manifest().variants[0].clone();
+    assert!(rt.ensure_compiled(&spec).is_err(), "garbage HLO must fail cleanly");
+    // (d) Unknown kind is rejected at parse time.
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"abi":1,"format":"hlo-text","variants":[
+            {"name":"x","file":"x","kind":"quantum","v":1,"d":1,"k":1,"tile":1}]}"#,
+    )
+    .unwrap();
+    assert!(Manifest::load(&dir).is_err());
+    let _ = std::fs::remove_dir_all(Path::new(&dir));
+}
+
+#[test]
+fn mincut_certificate_from_device_flow() {
+    let Some(mut eng) = engine() else { return };
+    let net = generators::erdos_renyi(32, 160, 5, 13);
+    let g = ArcGraph::build(&net.normalized());
+    let r = eng.solve(&g).unwrap();
+    let cut = maxflow::mincut::extract(&g, &r);
+    maxflow::mincut::validate(&g, &r, &cut).unwrap();
+}

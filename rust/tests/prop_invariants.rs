@@ -1,0 +1,211 @@
+//! Property-based invariants (in-repo harness, `util::prop`): randomized
+//! graphs, all the algebraic facts the paper's correctness rests on.
+
+use wbpr::graph::builder::{ArcGraph, FlowNetwork};
+use wbpr::graph::residual::Residual;
+use wbpr::graph::{dimacs, generators, Bcsr, Rcsr, Representation};
+use wbpr::maxflow::{self, EngineKind, SolveOptions};
+use wbpr::util::prop::{check, Gen};
+
+fn random_net(g: &mut Gen) -> FlowNetwork {
+    let n = g.size(4, 60).max(4);
+    let m = g.size(n, n * 6);
+    let cap = g.size(1, 12) as i64;
+    generators::erdos_renyi(n, m, cap, g.rng.next_u64())
+}
+
+#[test]
+fn prop_flow_value_is_engine_invariant() {
+    check("engine-invariant flow value", 40, 0xF10, |g| {
+        let net = random_net(g);
+        let arcs = ArcGraph::build(&net.normalized());
+        let want = maxflow::dinic::solve(&arcs).value;
+        let opts = SolveOptions { threads: 2, cycles_per_launch: 32, ..Default::default() };
+        for kind in [EngineKind::Sequential, EngineKind::VertexCentric] {
+            let got = maxflow::solve_arcs(&arcs, kind, Representation::Bcsr, &opts);
+            if got.value != want {
+                return Err(format!("{} got {} want {want} on {}", kind.name(), got.value, net.name));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_maxflow_equals_mincut() {
+    // Max-flow = min-cut: the verifier checks residual s-t disconnection +
+    // conservation; additionally compute the cut capacity across the
+    // reachable set and compare with the value.
+    check("maxflow = mincut", 40, 0xCA7, |g| {
+        let net = random_net(g);
+        let arcs = ArcGraph::build(&net.normalized());
+        let r = maxflow::seq::solve(&arcs);
+        maxflow::verify(&arcs, &r)?;
+        // S = residual-reachable from s; cut = sum of original caps S->T.
+        let m2 = arcs.num_arcs();
+        let mut seen = vec![false; arcs.n];
+        let mut stack = vec![arcs.s];
+        seen[arcs.s as usize] = true;
+        let (csr, aid) = wbpr::graph::csr::Csr::from_pairs_with(
+            arcs.n,
+            (0..m2 as u32).map(|a| (arcs.arc_from[a as usize], arcs.arc_to[a as usize], a)),
+        );
+        while let Some(u) = stack.pop() {
+            for i in csr.range(u) {
+                let a = aid[i] as usize;
+                let v = csr.cols[i] as usize;
+                if r.cf[a] > 0 && !seen[v] {
+                    seen[v] = true;
+                    stack.push(v as u32);
+                }
+            }
+        }
+        let mut cut = 0i64;
+        for a in (0..m2).step_by(2) {
+            if seen[arcs.arc_from[a] as usize] && !seen[arcs.arc_to[a] as usize] {
+                cut += arcs.arc_cap[a];
+            }
+        }
+        if cut != r.value {
+            return Err(format!("cut {cut} != flow {}", r.value));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_representations_expose_identical_neighborhoods() {
+    check("RCSR == BCSR neighborhoods", 60, 0xBEEF, |g| {
+        let net = random_net(g);
+        let arcs = ArcGraph::build(&net.normalized());
+        let rcsr = Rcsr::build(&arcs);
+        let bcsr = Bcsr::build(&arcs);
+        for u in 0..arcs.n as u32 {
+            let mut a: Vec<(u32, u32)> = rcsr.row(u).iter().collect();
+            let mut b: Vec<(u32, u32)> = bcsr.row(u).iter().collect();
+            a.sort_unstable();
+            b.sort_unstable();
+            if a != b {
+                return Err(format!("row {u} differs between representations"));
+            }
+            for (arc, v) in a {
+                let ra = rcsr.rev_arc(arc, u, v);
+                let rb = bcsr.rev_arc(arc, u, v);
+                if ra != rb || ra != (arc ^ 1) {
+                    return Err(format!("rev mismatch arc {arc}: rcsr {ra} bcsr {rb}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dimacs_roundtrip() {
+    check("dimacs roundtrip", 40, 0xD1AC, |g| {
+        let net = random_net(g).normalized();
+        let text = dimacs::write(&net);
+        let back = dimacs::parse(&text).map_err(|e| e)?;
+        if back.n != net.n || back.s != net.s || back.t != net.t || back.edges != net.edges {
+            return Err("roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_matching_via_flow_equals_hopcroft_karp() {
+    check("matching == hopcroft-karp", 30, 0x3A7C, |g| {
+        let nl = g.size(2, 40).max(2);
+        let nr = g.size(2, 40).max(2);
+        let m = g.size(1, nl * 4);
+        let skew = if g.rng.chance(0.5) { 1.2 } else { 0.0 };
+        let bg = wbpr::graph::bipartite::bipartite_zipf(nl, nr, m, skew, g.rng.next_u64());
+        let want = maxflow::hopcroft_karp::solve(&bg).size;
+        let opts = SolveOptions { threads: 2, cycles_per_launch: 32, ..Default::default() };
+        let fm = maxflow::matching::solve(&bg, EngineKind::VertexCentric, Representation::Rcsr, &opts);
+        if fm.matching.size != want {
+            return Err(format!("flow matching {} != hk {want}", fm.matching.size));
+        }
+        maxflow::hopcroft_karp::validate(&bg, &fm.matching)
+    });
+}
+
+#[test]
+fn prop_pack_unpack_roundtrip() {
+    check("device pack/unpack roundtrip", 40, 0x9ACC, |g| {
+        let net = random_net(g);
+        let arcs = ArcGraph::build(&net.normalized());
+        let bcsr = Bcsr::build(&arcs);
+        let maxdeg = (0..arcs.n as u32).map(|u| bcsr.degree(u)).max().unwrap_or(0);
+        let v_pad = arcs.n.next_power_of_two().max(4);
+        let d_pad = maxdeg.next_power_of_two().max(2);
+        let p = wbpr::runtime::PackedGraph::pack(&arcs, &bcsr, v_pad, d_pad).map_err(|e| e)?;
+        let mut out = vec![0i64; arcs.num_arcs()];
+        p.unpack_cf(&p.cf0, &mut out);
+        if out != arcs.arc_cap {
+            return Err("unpack(pack(cf0)) != arc caps".into());
+        }
+        // rev slots form an involution.
+        for (f, &a) in p.slot_arc.iter().enumerate() {
+            if a != u32::MAX {
+                let r = p.rev[f] as usize;
+                if p.rev[r] as usize != f {
+                    return Err(format!("rev not involutive at slot {f}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batcher_conserves_pairs() {
+    check("batcher conservation", 40, 0xBA7C, |g| {
+        let base = generators::grid_road(6 + g.size(0, 6), 6 + g.size(0, 6), 0.05, 4, g.rng.next_u64());
+        let max_pairs = 1 + g.size(1, 5);
+        let mut b = wbpr::coordinator::batcher::PairBatcher::new(base.clone(), 100, max_pairs);
+        let n_pairs = g.size(1, 12).max(1);
+        let mut submitted = 0usize;
+        let mut collected = 0usize;
+        for _ in 0..n_pairs {
+            let s = g.rng.index(base.n) as u32;
+            let t = g.rng.index(base.n) as u32;
+            if s == t {
+                continue;
+            }
+            submitted += 1;
+            if let Some(batch) = b.add(s, t) {
+                collected += batch.pairs.len();
+                batch.net.validate()?;
+            }
+        }
+        if let Some(batch) = b.flush() {
+            collected += batch.pairs.len();
+        }
+        if submitted != collected {
+            return Err(format!("submitted {submitted} != collected {collected}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_excess_never_negative_midway() {
+    // Run the trace recorder (a legal lock-free schedule) and check the
+    // invariants the Jacobi-combine proof relies on.
+    check("nonnegative excess/cf", 20, 0xE0, |g| {
+        let net = random_net(g);
+        let arcs = ArcGraph::build(&net.normalized());
+        let rep = Rcsr::build(&arcs);
+        let trace = wbpr::simt::trace::record(&arcs, &rep, 16);
+        if trace.value < 0 {
+            return Err("negative flow value".into());
+        }
+        let want = maxflow::dinic::solve(&arcs).value;
+        if trace.value != want {
+            return Err(format!("trace {} != dinic {want}", trace.value));
+        }
+        Ok(())
+    });
+}
