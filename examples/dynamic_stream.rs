@@ -1,0 +1,81 @@
+//! Streaming-update walkthrough: solve once, then repair the flow across
+//! a stream of capacity updates instead of re-solving — first directly on
+//! the `DynamicFlow` engine, then through a warm coordinator session.
+//!
+//! ```bash
+//! cargo run --release --example dynamic_stream
+//! ```
+
+use wbpr::coordinator::{Coordinator, CoordinatorConfig, Job};
+use wbpr::dynamic::DynamicFlow;
+use wbpr::graph::builder::ArcGraph;
+use wbpr::graph::generators::{self, update_stream, UpdateStreamParams};
+use wbpr::maxflow::{self, EngineKind, SolveOptions};
+
+fn main() {
+    // 1. A workload: the paper's S1 generator, solved once and kept warm.
+    let net = generators::genrmf(&generators::GenrmfParams { a: 8, b: 12, c1: 1, c2: 100, seed: 42 });
+    let opts = SolveOptions::default();
+    let mut df = DynamicFlow::new(&net, &opts);
+    println!("graph: {} (V={}, E={})", net.name, net.n, net.m());
+    println!("initial max flow = {}", df.value());
+
+    // 2. A deterministic stream: 1% of |E| capacity edits per batch.
+    let stream = update_stream(
+        df.network(),
+        &UpdateStreamParams::capacity_only(df.network().m(), 4, 0.01, 40, 7),
+    );
+    println!("replaying {} ({} updates)\n", stream.name, stream.len());
+
+    // 3. Repair vs re-solve, batch by batch.
+    for (i, batch) in stream.batches.iter().enumerate() {
+        let report = df.apply(batch).expect("valid stream");
+        let now = df.network().clone();
+        let scratch =
+            maxflow::solve(&now, EngineKind::VertexCentric, wbpr::graph::Representation::Bcsr, &opts);
+        assert_eq!(report.value, scratch.value, "repair must match from-scratch");
+        maxflow::verify(df.arcs(), &df.flow_result()).expect("verified max flow");
+        let inc_ops = report.stats.pushes + report.stats.relabels;
+        let scratch_ops = scratch.stats.pushes + scratch.stats.relabels;
+        println!(
+            "batch {i}: {} updates | value {} ({:+}) | repair {} push+relabel vs {} from scratch ({:.0}x less work)",
+            report.applied,
+            report.value,
+            report.delta,
+            inc_ops,
+            scratch_ops,
+            scratch_ops as f64 / inc_ops.max(1) as f64,
+        );
+    }
+
+    // 4. The same workload as a service: a warm session behind the
+    //    coordinator, interleaving with ordinary jobs.
+    let coord = Coordinator::start(CoordinatorConfig { enable_device: false, ..Default::default() });
+    let sid = coord.open_session(net.clone());
+    let open = coord.recv().unwrap().result.expect("open ok");
+    println!("\nsession {sid} open: value={} via {} in {:.1}ms", open.value, open.engine, open.ms);
+    let stream2 = update_stream(
+        &net.normalized(),
+        &UpdateStreamParams::capacity_only(net.m(), 3, 0.01, 40, 8),
+    );
+    for batch in &stream2.batches {
+        coord.submit(Job::SessionUpdate { session: sid, batch: batch.clone() });
+        let out = coord.recv().unwrap().result.expect("update ok");
+        println!("session update: value={} in {:.1}ms", out.value, out.ms);
+    }
+    coord.submit(Job::SessionClose { session: sid });
+    let closed = coord.recv().unwrap().result.expect("close ok");
+    println!("session closed with final value {}", closed.value);
+    coord.shutdown();
+
+    // 5. Cross-check the final session value: replay the same stream on a
+    //    local engine and compare against a from-scratch Dinic solve.
+    let mut oracle = DynamicFlow::new(&net, &opts);
+    for batch in &stream2.batches {
+        oracle.apply(batch).unwrap();
+    }
+    assert_eq!(closed.value, oracle.value(), "session tracked the oracle");
+    let dinic = maxflow::dinic::solve(&ArcGraph::build(&oracle.network().normalized()));
+    assert_eq!(oracle.value(), dinic.value);
+    println!("\ncross-checked: session == oracle == dinic == {}", dinic.value);
+}

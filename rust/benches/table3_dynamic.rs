@@ -1,0 +1,22 @@
+//! `cargo bench --bench table3_dynamic` — the dynamic-workload table:
+//! incremental repair (`dynamic::DynamicFlow`) vs from-scratch VC+BCSR
+//! and Dinic re-solves across streams of 1%-of-|E| capacity-update
+//! batches, using the shared `SolveStats` push/relabel counters as the
+//! work metric. Scale with WBPR_BENCH_SCALE=smoke.
+
+use wbpr::bench::{table3, Scale};
+use wbpr::maxflow::SolveOptions;
+
+fn main() {
+    let scale = match std::env::var("WBPR_BENCH_SCALE").as_deref() {
+        Ok("smoke") => Scale::Smoke,
+        _ => Scale::Full,
+    };
+    let opts = SolveOptions { cycles_per_launch: 256, ..Default::default() };
+    eprintln!("running Table 3 dynamic suite at {scale:?} scale ...");
+    let t = std::time::Instant::now();
+    let rows = table3::run(scale, &opts);
+    println!("# Table 3 — incremental repair vs from-scratch (streaming capacity updates)\n");
+    println!("{}", table3::render(&rows));
+    eprintln!("table3 done in {:.1}s", t.elapsed().as_secs_f64());
+}

@@ -7,6 +7,8 @@
 //!   wall-clock of the native engines *and* simulated GPU milliseconds
 //!   from the SIMT cost model.
 //! * [`table2`] — bipartite matching times + max-flow (matching) values.
+//! * [`table3`] — incremental repair vs from-scratch re-solve under
+//!   streaming capacity updates (the dynamic workload; repo extension).
 //! * [`fig3`] — per-warp workload distribution statistics, TC vs VC.
 //! * [`report`] — markdown table rendering shared by the benches and CLI.
 
@@ -15,6 +17,7 @@ pub mod report;
 pub mod suite;
 pub mod table1;
 pub mod table2;
+pub mod table3;
 
 /// How much of the suite to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -23,6 +23,8 @@ pub struct PairBatcher {
     super_cap: Capacity,
     max_pairs: usize,
     pending: Vec<(VertexId, VertexId)>,
+    /// When the oldest pending pair arrived (None while empty).
+    oldest: Option<std::time::Instant>,
 }
 
 impl PairBatcher {
@@ -30,12 +32,15 @@ impl PairBatcher {
     /// adjacent capacities or a large constant for unit-cap graphs).
     pub fn new(base: FlowNetwork, super_cap: Capacity, max_pairs: usize) -> PairBatcher {
         assert!(max_pairs >= 1);
-        PairBatcher { base, super_cap, max_pairs, pending: Vec::new() }
+        PairBatcher { base, super_cap, max_pairs, pending: Vec::new(), oldest: None }
     }
 
     /// Queue a pair; returns a full batch if the size limit was reached.
     pub fn add(&mut self, s: VertexId, t: VertexId) -> Option<PairBatch> {
         assert!((s as usize) < self.base.n && (t as usize) < self.base.n && s != t);
+        if self.pending.is_empty() {
+            self.oldest = Some(std::time::Instant::now());
+        }
         self.pending.push((s, t));
         if self.pending.len() >= self.max_pairs {
             self.flush()
@@ -49,11 +54,31 @@ impl PairBatcher {
         self.pending.len()
     }
 
+    /// Age of the oldest pending pair (zero while empty).
+    pub fn age(&self) -> std::time::Duration {
+        match (&self.oldest, self.pending.is_empty()) {
+            (Some(t0), false) => t0.elapsed(),
+            _ => std::time::Duration::ZERO,
+        }
+    }
+
+    /// Flush only if the oldest pending pair has waited at least
+    /// `max_age`. Poll this from the serving loop so a trickle of
+    /// requests below `max_pairs` is never stranded indefinitely.
+    pub fn flush_stale(&mut self, max_age: std::time::Duration) -> Option<PairBatch> {
+        if !self.pending.is_empty() && self.age() >= max_age {
+            self.flush()
+        } else {
+            None
+        }
+    }
+
     /// Drain the queue into a batch (None if empty).
     pub fn flush(&mut self) -> Option<PairBatch> {
         if self.pending.is_empty() {
             return None;
         }
+        self.oldest = None;
         let pairs: Vec<(VertexId, VertexId)> = std::mem::take(&mut self.pending);
         // Dedup terminals (a vertex may appear in several pairs).
         let mut sources: Vec<VertexId> = pairs.iter().map(|p| p.0).collect();
@@ -113,6 +138,30 @@ mod tests {
     fn empty_flush_is_none() {
         let mut b = PairBatcher::new(base(), 100, 4);
         assert!(b.flush().is_none());
+        assert!(b.flush_stale(std::time::Duration::ZERO).is_none());
+        assert_eq!(b.age(), std::time::Duration::ZERO);
+    }
+
+    #[test]
+    fn flush_stale_releases_partial_batches_by_age() {
+        use std::time::Duration;
+        let mut b = PairBatcher::new(base(), 100, 8);
+        assert!(b.add(0, 35).is_none());
+        assert!(b.add(5, 30).is_none());
+        // Young batch: a long max_age keeps it pending.
+        assert!(b.flush_stale(Duration::from_secs(3600)).is_none());
+        assert_eq!(b.pending(), 2);
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(b.age() >= Duration::from_millis(5));
+        // Old enough: the partial batch is released with both pairs.
+        let batch = b.flush_stale(Duration::from_millis(5)).expect("stale batch flushes");
+        assert_eq!(batch.pairs.len(), 2);
+        assert_eq!(b.pending(), 0);
+        assert_eq!(b.age(), std::time::Duration::ZERO, "age resets after flush");
+        // And the clock restarts with the next add.
+        b.add(1, 34);
+        assert!(b.flush_stale(Duration::from_secs(3600)).is_none());
+        assert_eq!(b.pending(), 1);
     }
 
     #[test]

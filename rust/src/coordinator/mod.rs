@@ -11,16 +11,28 @@
 //! * [`router`] — device-vs-native placement by graph shape + the paper's
 //!   degree-CV heuristic for picking TC vs VC natively.
 //! * [`batcher`] — multi-pair max-flow batching through the super-
-//!   source/super-sink reduction (paper §4.1's 20-pair setup).
+//!   source/super-sink reduction (paper §4.1's 20-pair setup), with
+//!   age-based flushing so partial batches are never stranded.
+//! * [`session`] — warm per-graph sessions for the streaming-update
+//!   workload: each session owns a solved [`crate::dynamic::DynamicFlow`]
+//!   and repairs it incrementally across `Job::SessionUpdate` requests.
 //! * [`server`] — the leader event loop: worker threads, job queue,
 //!   result collection, metrics.
 //! * [`metrics`] — counters + latency summaries.
 
 pub mod batcher;
+#[cfg(feature = "device")]
+pub mod device;
+// Offline builds get an API-compatible stub whose constructor fails
+// gracefully (see `runtime::client_stub` for the rationale).
+#[cfg(not(feature = "device"))]
+#[path = "device_stub.rs"]
 pub mod device;
 pub mod metrics;
 pub mod router;
 pub mod server;
+pub mod session;
 
 pub use router::{Route, Router};
 pub use server::{Coordinator, CoordinatorConfig, Job, JobOutput};
+pub use session::SessionManager;

@@ -15,6 +15,9 @@ pub enum Route {
     Device(VariantSpec),
     /// In-process parallel engine.
     Native { kind: EngineKind, rep: Representation },
+    /// Stateful streaming-update job: pinned to the session worker, which
+    /// owns the warm [`crate::dynamic::DynamicFlow`] state per graph.
+    Session,
 }
 
 impl Route {
@@ -22,6 +25,7 @@ impl Route {
         match self {
             Route::Device(v) => format!("device:{}", v.name),
             Route::Native { kind, rep } => format!("native:{}+{}", kind.name(), rep.name()),
+            Route::Session => "session".to_string(),
         }
     }
 }
@@ -56,6 +60,26 @@ pub struct Router {
 impl Router {
     pub fn new(manifest: Option<Manifest>, config: RouterConfig) -> Router {
         Router { manifest, config }
+    }
+
+    /// Place a full job. Stateful session jobs (open / update / close)
+    /// are pinned to the session worker — their value *is* the warm state,
+    /// so shape-based placement does not apply. Auto max-flow jobs fall
+    /// through to shape routing ([`Router::route`]); jobs with an explicit
+    /// engine choice honor it.
+    pub fn place(&self, job: &crate::coordinator::server::Job) -> Route {
+        use crate::coordinator::server::{residual_max_degree, Job};
+        match job {
+            Job::SessionOpen { .. } | Job::SessionUpdate { .. } | Job::SessionClose { .. } => Route::Session,
+            Job::MaxFlow { kind, rep, .. } => Route::Native { kind: *kind, rep: *rep },
+            Job::Matching { kind, rep, .. } => Route::Native { kind: *kind, rep: *rep },
+            Job::MaxFlowAuto { net } => {
+                let adj = crate::graph::csr::Csr::from_edges(net.n, net.edges.iter().map(|e| (e.u, e.v)));
+                let stats = DegreeStats::of(&adj);
+                // +2 vertices for potential super terminals, as before.
+                self.route(net.n + 2, residual_max_degree(net), &stats)
+            }
+        }
     }
 
     /// Decide placement from graph shape: vertex count, max residual

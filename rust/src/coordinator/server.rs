@@ -9,9 +9,10 @@
 
 use super::metrics::Metrics;
 use super::router::{Route, Router, RouterConfig};
+use super::session::SessionManager;
+use crate::dynamic::UpdateBatch;
 use crate::graph::bipartite::BipartiteGraph;
 use crate::graph::builder::{ArcGraph, FlowNetwork};
-use crate::graph::csr::{Csr, DegreeStats};
 use crate::graph::Representation;
 use crate::maxflow::{self, EngineKind, SolveOptions};
 use crate::runtime::Manifest;
@@ -30,6 +31,15 @@ pub enum Job {
     MaxFlowAuto { net: FlowNetwork },
     /// Bipartite matching through the flow pipeline.
     Matching { graph: BipartiteGraph, kind: EngineKind, rep: Representation },
+    /// Open a warm streaming session over `net` (id chosen by the caller,
+    /// below `1 << 63` to stay clear of [`Coordinator::open_session`]'s
+    /// range; result value = initial max flow).
+    SessionOpen { session: u64, net: FlowNetwork },
+    /// Apply an update batch to a warm session (result value = repaired
+    /// max flow).
+    SessionUpdate { session: u64, batch: UpdateBatch },
+    /// Close a session (result value = final max flow).
+    SessionClose { session: u64 },
 }
 
 /// A finished job.
@@ -70,6 +80,10 @@ impl Default for CoordinatorConfig {
     }
 }
 
+/// Session ids at or above this value are allocated by
+/// [`Coordinator::open_session`]; caller-chosen ids must stay below it.
+pub const SESSION_ID_AUTO_BASE: u64 = 1 << 63;
+
 enum Envelope {
     Work(u64, Job, Timer),
 }
@@ -78,6 +92,7 @@ enum Envelope {
 pub struct Coordinator {
     tx_native: Option<mpsc::Sender<Envelope>>,
     tx_device: Option<mpsc::Sender<Envelope>>,
+    tx_session: Option<mpsc::Sender<Envelope>>,
     rx_out: mpsc::Receiver<JobOutput>,
     next_id: AtomicU64,
     router: Router,
@@ -127,10 +142,26 @@ impl Coordinator {
             None
         };
 
+        // Session worker: owns every warm DynamicFlow, single-threaded by
+        // construction (the warm state is the whole point — no sharing).
+        let (tx_session, rx_session) = mpsc::channel::<Envelope>();
+        {
+            let tx_out = tx_out.clone();
+            let metrics = metrics.clone();
+            let solve = config.solve.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name("wbpr-session".into())
+                    .spawn(move || session_worker(rx_session, tx_out, metrics, solve))
+                    .expect("spawn session worker"),
+            );
+        }
+
         let router = Router::new(manifest, config.router.clone());
         Coordinator {
             tx_native: Some(tx_native),
             tx_device,
+            tx_session: Some(tx_session),
             rx_out,
             next_id: AtomicU64::new(1),
             router,
@@ -149,29 +180,51 @@ impl Coordinator {
     }
 
     /// Submit a job; returns its id. Results arrive via [`Coordinator::recv`].
+    ///
+    /// Panics if a caller-chosen `Job::SessionOpen` id intrudes into the
+    /// range [`Coordinator::open_session`] allocates from (`>= 1 << 63`)
+    /// — silently colliding would serve updates from the wrong graph.
     pub fn submit(&self, job: Job) -> u64 {
+        if let Job::SessionOpen { session, .. } = &job {
+            assert!(
+                *session < SESSION_ID_AUTO_BASE,
+                "caller-chosen session ids must stay below 1 << 63 (reserved for open_session)"
+            );
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let timer = Timer::start();
-        let to_device = match &job {
-            Job::MaxFlowAuto { net } => {
-                let adj = Csr::from_edges(net.n, net.edges.iter().map(|e| (e.u, e.v)));
-                let stats = DegreeStats::of(&adj);
-                // Residual degree ≈ in+out; bound by 2*max out-degree as a
-                // cheap upper estimate, refined by the device worker.
-                let max_res_deg = residual_max_degree(net);
-                matches!(self.router.route(net.n + 2, max_res_deg, &stats), Route::Device(_))
-            }
-            _ => false,
-        };
+        let route = self.router.place(&job);
         let env = Envelope::Work(id, job, timer);
-        if to_device {
-            if let Some(tx) = &self.tx_device {
-                tx.send(env).expect("device worker alive");
+        match route {
+            Route::Session => {
+                self.tx_session.as_ref().expect("not shut down").send(env).expect("session worker alive");
                 return id;
             }
+            Route::Device(_) => {
+                if let Some(tx) = &self.tx_device {
+                    tx.send(env).expect("device worker alive");
+                    return id;
+                }
+                // Device preferred but absent: fall through to native.
+            }
+            Route::Native { .. } => {}
         }
         self.tx_native.as_ref().expect("not shut down").send(env).expect("native workers alive");
         id
+    }
+
+    /// Convenience: open a session keyed by the id it returns. The
+    /// `JobOutput` with this id carries the initial max-flow value, and
+    /// the id doubles as the session handle for follow-up updates.
+    /// Ids from this path live in the upper half of the u64 space so they
+    /// can never collide with caller-chosen `Job::SessionOpen` ids (which
+    /// should stay below `1 << 63`).
+    pub fn open_session(&self, net: FlowNetwork) -> u64 {
+        let session = SESSION_ID_AUTO_BASE | self.next_id.fetch_add(1, Ordering::Relaxed);
+        let timer = Timer::start();
+        let env = Envelope::Work(session, Job::SessionOpen { session, net }, timer);
+        self.tx_session.as_ref().expect("not shut down").send(env).expect("session worker alive");
+        session
     }
 
     /// Blocking receive of the next finished job.
@@ -193,6 +246,7 @@ impl Coordinator {
     pub fn shutdown(mut self) -> Arc<Metrics> {
         self.tx_native.take();
         self.tx_device.take();
+        self.tx_session.take();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -208,6 +262,7 @@ impl Drop for Coordinator {
     fn drop(&mut self) {
         self.tx_native.take();
         self.tx_device.take();
+        self.tx_session.take();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -251,8 +306,36 @@ fn native_worker(
                 let m = maxflow::matching::solve(&graph, kind, rep, &solve);
                 (label, Ok(m.matching.size as i64))
             }
+            Job::SessionOpen { .. } | Job::SessionUpdate { .. } | Job::SessionClose { .. } => {
+                // The router pins these to the session worker; reaching a
+                // native worker is a routing bug, not a user error.
+                ("native".to_string(), Err("session job misrouted to native worker".to_string()))
+            }
         };
         finish(&tx_out, &metrics, id, engine, result, timer);
+    }
+}
+
+/// The session worker: single owner of every warm [`SessionManager`]
+/// state, so streaming updates need no locking at all.
+fn session_worker(
+    rx: mpsc::Receiver<Envelope>,
+    tx_out: mpsc::Sender<JobOutput>,
+    metrics: Arc<Metrics>,
+    solve: SolveOptions,
+) {
+    let mut mgr = SessionManager::new(solve);
+    while let Ok(Envelope::Work(id, job, timer)) = rx.recv() {
+        let (engine, result) = match job {
+            Job::SessionOpen { session, net } => ("session:open", mgr.open(session, &net)),
+            Job::SessionUpdate { session, batch } => ("session:update", mgr.update(session, &batch)),
+            Job::SessionClose { session } => ("session:close", mgr.close(session)),
+            other => {
+                drop(other);
+                ("session", Err("non-session job routed to session worker".to_string()))
+            }
+        };
+        finish(&tx_out, &metrics, id, engine.to_string(), result, timer);
     }
 }
 
@@ -301,6 +384,9 @@ fn device_worker(rx: mpsc::Receiver<Envelope>, tx_out: mpsc::Sender<JobOutput>, 
                 let net = graph.to_flow_network();
                 let g = ArcGraph::build(&net);
                 engine.solve(&g).map(|r| r.value).map_err(|e| e.to_string())
+            }
+            Job::SessionOpen { .. } | Job::SessionUpdate { .. } | Job::SessionClose { .. } => {
+                Err("session job misrouted to device worker".to_string())
             }
         };
         finish(&tx_out, &metrics, id, "device".into(), result, timer);
@@ -406,5 +492,75 @@ mod tests {
         let c = Coordinator::start(config(2, false));
         let m = c.shutdown();
         assert_eq!(m.snapshot().len(), 0);
+    }
+
+    #[test]
+    fn session_lifecycle_through_coordinator() {
+        use crate::dynamic::{GraphUpdate, UpdateBatch};
+        let c = Coordinator::start(config(1, false));
+        let net = generators::erdos_renyi(40, 200, 6, 5);
+        let want = maxflow::solve(&net, EngineKind::Dinic, Representation::Bcsr, &SolveOptions::default()).value;
+        let sid = c.open_session(net.clone());
+        let open = c.recv().unwrap();
+        assert_eq!(open.id, sid);
+        let v = open.result.expect("open ok");
+        assert_eq!(v.value, want);
+        assert_eq!(v.engine, "session:open");
+
+        c.submit(Job::SessionUpdate {
+            session: sid,
+            batch: UpdateBatch::new(vec![GraphUpdate::IncreaseCap { edge: 0, delta: 4 }]),
+        });
+        let upd = c.recv().unwrap().result.expect("update ok");
+        assert_eq!(upd.engine, "session:update");
+
+        c.submit(Job::SessionClose { session: sid });
+        let closed = c.recv().unwrap().result.expect("close ok");
+        assert_eq!(closed.value, upd.value, "close returns the final value");
+
+        // Closing again fails cleanly.
+        c.submit(Job::SessionClose { session: sid });
+        assert!(c.recv().unwrap().result.is_err());
+        let metrics = c.shutdown();
+        let snap = metrics.snapshot();
+        assert!(snap.contains_key("session:open"), "session metrics recorded: {snap:?}");
+    }
+
+    #[test]
+    fn session_updates_interleave_with_native_jobs() {
+        use crate::dynamic::{GraphUpdate, UpdateBatch};
+        let c = Coordinator::start(config(2, false));
+        let net = generators::erdos_renyi(30, 150, 5, 8);
+        let sid = c.open_session(net.clone());
+        let mut expected = 1usize; // the open
+        for seed in 0..3u64 {
+            c.submit(Job::MaxFlow {
+                net: generators::erdos_renyi(30, 150, 4, seed),
+                kind: EngineKind::VertexCentric,
+                rep: Representation::Bcsr,
+            });
+            c.submit(Job::SessionUpdate {
+                session: sid,
+                batch: UpdateBatch::new(vec![GraphUpdate::IncreaseCap { edge: seed as usize, delta: 2 }]),
+            });
+            expected += 2;
+        }
+        let outs = c.collect(expected);
+        assert_eq!(outs.len(), expected);
+        for o in outs {
+            o.result.expect("all jobs ok");
+        }
+    }
+
+    #[test]
+    fn router_places_session_jobs_on_session_worker() {
+        let r = Router::new(None, RouterConfig::default());
+        let net = generators::erdos_renyi(20, 60, 3, 1);
+        assert_eq!(r.place(&Job::SessionClose { session: 1 }), Route::Session);
+        assert_eq!(
+            r.place(&Job::SessionOpen { session: 1, net: net.clone() }),
+            Route::Session
+        );
+        assert!(matches!(r.place(&Job::MaxFlowAuto { net }), Route::Native { .. } | Route::Device(_)));
     }
 }

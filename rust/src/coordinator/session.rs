@@ -1,0 +1,142 @@
+//! Warm per-graph sessions for the streaming-update workload.
+//!
+//! A session pins one solved [`DynamicFlow`] instance in memory so a
+//! client can stream [`UpdateBatch`]es against it and read back repaired
+//! max-flow values without ever re-solving from scratch — the serving-side
+//! face of the [`crate::dynamic`] subsystem. The coordinator owns one
+//! [`SessionManager`] on a dedicated worker thread (state is single-owner
+//! by construction, no locks needed); jobs reach it via
+//! [`super::Route::Session`].
+
+use crate::dynamic::{DynamicFlow, UpdateBatch, UpdateReport};
+use crate::graph::builder::FlowNetwork;
+use crate::maxflow::SolveOptions;
+use std::collections::HashMap;
+
+/// Owns every live session. Session ids are chosen by the caller (the
+/// coordinator's job id is a convenient source of unique ids).
+pub struct SessionManager {
+    opts: SolveOptions,
+    sessions: HashMap<u64, DynamicFlow>,
+}
+
+impl SessionManager {
+    pub fn new(opts: SolveOptions) -> SessionManager {
+        SessionManager { opts, sessions: HashMap::new() }
+    }
+
+    /// Solve `net` from scratch and keep it warm under `id`. Returns the
+    /// initial max-flow value.
+    pub fn open(&mut self, id: u64, net: &FlowNetwork) -> Result<i64, String> {
+        if self.sessions.contains_key(&id) {
+            return Err(format!("session {id} already open"));
+        }
+        net.validate()?;
+        let df = DynamicFlow::new(net, &self.opts);
+        let value = df.value();
+        self.sessions.insert(id, df);
+        Ok(value)
+    }
+
+    /// Apply a batch to a warm session; returns the repaired value.
+    pub fn update(&mut self, id: u64, batch: &UpdateBatch) -> Result<i64, String> {
+        self.update_report(id, batch).map(|r| r.value)
+    }
+
+    /// Like [`SessionManager::update`] but with the full work report.
+    ///
+    /// A validation error leaves the session untouched; a repair-invariant
+    /// failure poisons the engine, so the session is evicted rather than
+    /// kept serving values from an invalid flow — the caller must re-open.
+    pub fn update_report(&mut self, id: u64, batch: &UpdateBatch) -> Result<UpdateReport, String> {
+        let df = self.sessions.get_mut(&id).ok_or_else(|| format!("session {id} not open"))?;
+        let result = df.apply(batch);
+        if df.is_poisoned() {
+            self.sessions.remove(&id);
+            let cause = result.err().unwrap_or_default();
+            return Err(format!("session {id} evicted, re-open required: {cause}"));
+        }
+        result
+    }
+
+    /// Drop a session, returning its final value.
+    pub fn close(&mut self, id: u64) -> Result<i64, String> {
+        self.sessions
+            .remove(&id)
+            .map(|df| df.value())
+            .ok_or_else(|| format!("session {id} not open"))
+    }
+
+    /// Read-only view of a live session.
+    pub fn get(&self, id: u64) -> Option<&DynamicFlow> {
+        self.sessions.get(&id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dynamic::GraphUpdate;
+    use crate::graph::builder::ArcGraph;
+    use crate::graph::generators;
+    use crate::maxflow;
+
+    fn mgr() -> SessionManager {
+        SessionManager::new(SolveOptions { threads: 2, cycles_per_launch: 64, ..Default::default() })
+    }
+
+    #[test]
+    fn open_update_close_lifecycle() {
+        let mut m = mgr();
+        let net = generators::erdos_renyi(40, 200, 6, 1);
+        let want = maxflow::dinic::solve(&ArcGraph::build(&net.normalized())).value;
+        let v0 = m.open(7, &net).unwrap();
+        assert_eq!(v0, want);
+        assert_eq!(m.len(), 1);
+        let v1 = m
+            .update(7, &UpdateBatch::new(vec![GraphUpdate::IncreaseCap { edge: 0, delta: 3 }]))
+            .unwrap();
+        let df = m.get(7).unwrap();
+        let scratch = maxflow::dinic::solve(&ArcGraph::build(&df.network().normalized())).value;
+        assert_eq!(v1, scratch, "warm session agrees with from-scratch");
+        assert_eq!(m.close(7).unwrap(), v1);
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn double_open_and_unknown_ids_fail() {
+        let mut m = mgr();
+        let net = generators::erdos_renyi(20, 80, 4, 2);
+        m.open(1, &net).unwrap();
+        assert!(m.open(1, &net).is_err());
+        assert!(m.update(2, &UpdateBatch::default()).is_err());
+        assert!(m.close(2).is_err());
+        m.close(1).unwrap();
+    }
+
+    #[test]
+    fn many_independent_sessions() {
+        let mut m = mgr();
+        for seed in 0..4u64 {
+            let net = generators::erdos_renyi(25, 100, 4, seed);
+            m.open(seed, &net).unwrap();
+        }
+        assert_eq!(m.len(), 4);
+        for seed in 0..4u64 {
+            let v = m
+                .update(seed, &UpdateBatch::new(vec![GraphUpdate::IncreaseCap { edge: 1, delta: 2 }]))
+                .unwrap();
+            let df = m.get(seed).unwrap();
+            assert_eq!(v, df.value());
+            maxflow::verify(df.arcs(), &df.flow_result()).unwrap();
+        }
+    }
+}

@@ -1,0 +1,531 @@
+//! The incremental max-flow engine: a solved instance kept warm across
+//! streaming capacity updates.
+//!
+//! # Repair algorithm
+//!
+//! The engine maintains, between batches, a **valid maximum flow**: the
+//! residuals `cf`, the excess/height arrays of [`ParState`], and the
+//! invariant `e(u) = 0` for every non-terminal `u`. One
+//! [`DynamicFlow::apply`] call runs four phases:
+//!
+//! 1. **Edit** — each [`GraphUpdate`] mutates `arc_cap`/`cf` in place.
+//!    Capacity increases just widen the forward residual. Decreases that
+//!    undercut the current flow cancel the overflow along residual flow
+//!    paths (a BFS over positive-flow arcs) and convert the displaced
+//!    units at the tail into push-relabel excess. Inserts append an arc
+//!    pair (the RCSR is rebuilt once per batch); deletes are full
+//!    decreases that leave a capacity-0 tombstone.
+//! 2. **Seed** — every residual arc out of `s` is saturated, exactly the
+//!    generalized preflow over the *current* residual network. On an
+//!    unchanged instance all of this excess is provably stranded (no
+//!    augmenting path exists), so the next phase cancels it without a
+//!    single push; only capacity that the batch actually opened gives
+//!    live excess.
+//! 3. **Repair** — one host global relabel refreshes the warm heights and
+//!    cancels stranded excess from the ExcessTotal accounting, then the
+//!    vertex-centric kernel ([`crate::maxflow::vc::run_from_state`]) runs
+//!    from the warm state. Work is proportional to the new augmenting
+//!    structure, not to the graph.
+//! 4. **Return** — leftover excess (units that no longer fit through the
+//!    min cut) walks back to `s` along positive-flow arcs, restoring flow
+//!    conservation so the state is again a valid flow — and a valid
+//!    warm-start for the next batch.
+//!
+//! Phases 1, 2 and 4 only touch vertices that cannot reach the sink (the
+//! "dead" region behind the min cut), so they cannot create an augmenting
+//! path; maximality at exit follows from the kernel's termination proof.
+
+use super::update::{GraphUpdate, UpdateBatch, UpdateReport};
+use crate::graph::builder::{ArcGraph, FlowNetwork};
+use crate::graph::residual::Residual;
+use crate::graph::{Edge, Rcsr};
+use crate::maxflow::global_relabel::{global_relabel, ExcessAccounting};
+use crate::maxflow::{vc, FlowResult, ParState, SolveOptions, SolveStats};
+use crate::util::Timer;
+use std::sync::atomic::{AtomicI64, AtomicU32, Ordering};
+
+/// A max-flow instance kept warm across streaming updates.
+pub struct DynamicFlow {
+    net: FlowNetwork,
+    g: ArcGraph,
+    rep: Rcsr,
+    st: ParState,
+    opts: SolveOptions,
+    value: i64,
+    batches: u64,
+    total: SolveStats,
+    /// Set when an internal repair invariant broke mid-batch (state is no
+    /// longer a valid flow); every later `apply` refuses to run.
+    poisoned: bool,
+    /// Reused BFS buffers for the cancel/return walks.
+    scratch: BfsScratch,
+}
+
+/// Generation-stamped BFS scratch so the repair walks (which run once per
+/// canceled path) never re-allocate or re-zero O(n) buffers per round.
+struct BfsScratch {
+    /// Arc that discovered each vertex (valid only when stamped).
+    parent: Vec<u32>,
+    stamp: Vec<u32>,
+    gen: u32,
+}
+
+impl BfsScratch {
+    fn new(n: usize) -> BfsScratch {
+        BfsScratch { parent: vec![u32::MAX; n], stamp: vec![0; n], gen: 0 }
+    }
+
+    /// Start a fresh BFS round: bump the generation instead of clearing.
+    fn next_round(&mut self) {
+        self.gen = self.gen.wrapping_add(1);
+        if self.gen == 0 {
+            // Stamp wrap-around (once per 2^32 rounds): hard reset.
+            self.stamp.iter_mut().for_each(|s| *s = 0);
+            self.gen = 1;
+        }
+    }
+
+    #[inline(always)]
+    fn visited(&self, v: u32) -> bool {
+        self.stamp[v as usize] == self.gen
+    }
+
+    #[inline(always)]
+    fn visit(&mut self, v: u32, parent_arc: u32) {
+        self.stamp[v as usize] = self.gen;
+        self.parent[v as usize] = parent_arc;
+    }
+
+    #[inline(always)]
+    fn parent_arc(&self, v: u32) -> u32 {
+        self.parent[v as usize]
+    }
+}
+
+impl DynamicFlow {
+    /// Solve `net` from scratch and keep the state warm. The initial solve
+    /// uses the same seed/repair/return pipeline as updates do (with a
+    /// cold state it *is* the ordinary preflow-push solve).
+    pub fn new(net: &FlowNetwork, opts: &SolveOptions) -> DynamicFlow {
+        let net = net.normalized();
+        let g = ArcGraph::build(&net);
+        let rep = Rcsr::build(&g);
+        let cf: Vec<AtomicI64> = g.arc_cap.iter().map(|&c| AtomicI64::new(c)).collect();
+        let e: Vec<AtomicI64> = (0..g.n).map(|_| AtomicI64::new(0)).collect();
+        let h: Vec<AtomicU32> = (0..g.n).map(|_| AtomicU32::new(0)).collect();
+        h[g.s as usize].store(g.n as u32, Ordering::Relaxed);
+        let st = ParState { cf, e, h };
+        let n = g.n;
+        let mut df = DynamicFlow {
+            net,
+            g,
+            rep,
+            st,
+            opts: opts.clone(),
+            value: 0,
+            batches: 0,
+            total: SolveStats::default(),
+            poisoned: false,
+            scratch: BfsScratch::new(n),
+        };
+        let t0 = Timer::start();
+        let mut stats = SolveStats::default();
+        df.resolve(&mut stats).expect("initial solve cannot fail on a validated network");
+        stats.total_ms = t0.ms();
+        df.value = df.st.excess(df.g.t);
+        add_stats(&mut df.total, &stats);
+        df
+    }
+
+    /// Current max-flow value.
+    pub fn value(&self) -> i64 {
+        self.value
+    }
+
+    /// The current network (normalized base + applied updates). Edge
+    /// indices in [`GraphUpdate`] refer to this edge list. Inserts append
+    /// to it, so after topology updates it is index-stable but no longer
+    /// sorted — generate further streams over it with
+    /// [`crate::graph::generators::update_stream_unchecked`].
+    pub fn network(&self) -> &FlowNetwork {
+        &self.net
+    }
+
+    /// The residual arena (for [`crate::maxflow::verify`]).
+    pub fn arcs(&self) -> &ArcGraph {
+        &self.g
+    }
+
+    /// Batches applied so far (not counting the initial solve).
+    pub fn batches(&self) -> u64 {
+        self.batches
+    }
+
+    /// Cumulative work over the initial solve and every batch.
+    pub fn total_stats(&self) -> &SolveStats {
+        &self.total
+    }
+
+    /// Snapshot the state as a [`FlowResult`] (verifier-compatible).
+    pub fn flow_result(&self) -> FlowResult {
+        FlowResult { value: self.value, cf: self.st.cf_snapshot(), stats: self.total.clone() }
+    }
+
+    /// Did an internal repair invariant break? (See [`DynamicFlow::apply`].)
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned
+    }
+
+    /// Apply one batch: validate every update, edit the network, repair
+    /// the flow.
+    ///
+    /// A validation `Err` (bad index, negative delta, …) is returned
+    /// before any state is touched — nothing was applied. An `Err` from
+    /// the repair itself signals a broken engine invariant (a bug, not a
+    /// user error): the state is no longer a valid flow, the engine is
+    /// marked poisoned, and every later `apply` fails fast; callers must
+    /// rebuild via [`DynamicFlow::new`].
+    pub fn apply(&mut self, batch: &UpdateBatch) -> Result<UpdateReport, String> {
+        if self.poisoned {
+            return Err("engine poisoned by an earlier repair failure; rebuild with DynamicFlow::new".into());
+        }
+        self.validate(batch)?;
+        let t0 = Timer::start();
+        let before = self.value;
+        let mut stats = SolveStats::default();
+        let mut topology_changed = false;
+        let edited: Result<(), String> = (|| {
+            for up in &batch.updates {
+                // The RCSR is rebuilt once after the loop, so cancel walks
+                // in `decrease` may see a stale row set mid-batch. That is
+                // safe: walks only traverse arcs carrying positive flow,
+                // and arcs inserted by this batch carry none yet.
+                self.apply_one(up, &mut stats, &mut topology_changed)?;
+            }
+            if topology_changed {
+                self.rep = Rcsr::build(&self.g);
+            }
+            self.resolve(&mut stats)
+        })();
+        if let Err(e) = edited {
+            self.poisoned = true;
+            return Err(e);
+        }
+        stats.total_ms = t0.ms();
+        self.value = self.st.excess(self.g.t);
+        self.batches += 1;
+        add_stats(&mut self.total, &stats);
+        Ok(UpdateReport {
+            value: self.value,
+            delta: self.value - before,
+            applied: batch.updates.len(),
+            stats,
+        })
+    }
+
+    /// Pre-flight check so a bad update cannot leave the batch half
+    /// applied. Tracks in-batch inserts so later updates may address them.
+    fn validate(&self, batch: &UpdateBatch) -> Result<(), String> {
+        let mut len = self.net.edges.len();
+        for (i, up) in batch.updates.iter().enumerate() {
+            match *up {
+                GraphUpdate::IncreaseCap { edge, delta } | GraphUpdate::DecreaseCap { edge, delta } => {
+                    if edge >= len {
+                        return Err(format!("update {i}: edge {edge} out of range ({len} edges)"));
+                    }
+                    if delta < 0 {
+                        return Err(format!("update {i}: negative delta {delta}"));
+                    }
+                }
+                GraphUpdate::DeleteEdge { edge } => {
+                    if edge >= len {
+                        return Err(format!("update {i}: edge {edge} out of range ({len} edges)"));
+                    }
+                }
+                GraphUpdate::InsertEdge { u, v, cap } => {
+                    if u as usize >= self.g.n || v as usize >= self.g.n {
+                        return Err(format!("update {i}: endpoint out of range"));
+                    }
+                    if u == v {
+                        return Err(format!("update {i}: self loop"));
+                    }
+                    if cap < 0 {
+                        return Err(format!("update {i}: negative capacity"));
+                    }
+                    len += 1;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn apply_one(
+        &mut self,
+        up: &GraphUpdate,
+        stats: &mut SolveStats,
+        topology_changed: &mut bool,
+    ) -> Result<(), String> {
+        match *up {
+            GraphUpdate::IncreaseCap { edge, delta } => {
+                let a = 2 * edge;
+                self.net.edges[edge].cap += delta;
+                self.g.arc_cap[a] += delta;
+                self.st.cf[a].fetch_add(delta, Ordering::Relaxed);
+                Ok(())
+            }
+            GraphUpdate::DecreaseCap { edge, delta } => self.decrease(edge, delta, stats),
+            GraphUpdate::DeleteEdge { edge } => {
+                let cap = self.g.arc_cap[2 * edge];
+                self.decrease(edge, cap, stats)
+            }
+            GraphUpdate::InsertEdge { u, v, cap } => {
+                self.net.edges.push(Edge::new(u, v, cap));
+                self.g.arc_from.push(u);
+                self.g.arc_to.push(v);
+                self.g.arc_cap.push(cap);
+                self.g.arc_from.push(v);
+                self.g.arc_to.push(u);
+                self.g.arc_cap.push(0);
+                self.st.cf.push(AtomicI64::new(cap));
+                self.st.cf.push(AtomicI64::new(0));
+                *topology_changed = true;
+                Ok(())
+            }
+        }
+    }
+
+    /// Lower edge `edge`'s capacity by `delta` (clamped), canceling any
+    /// overflowed flow. See the module docs, phase 1.
+    fn decrease(&mut self, edge: usize, delta: i64, stats: &mut SolveStats) -> Result<(), String> {
+        let a = 2 * edge;
+        let b = a + 1;
+        let cap = self.g.arc_cap[a];
+        let delta = delta.min(cap);
+        if delta == 0 {
+            return Ok(());
+        }
+        let new_cap = cap - delta;
+        // Net shipment on the original edge is always u -> v and equals
+        // the backward residual (antisymmetry: cf[a] + cf[b] == cap).
+        let flow = self.st.cf[b].load(Ordering::Relaxed);
+        self.net.edges[edge].cap = new_cap;
+        self.g.arc_cap[a] = new_cap;
+        if flow <= new_cap {
+            // Flow still fits: just shrink the forward residual.
+            self.st.cf[a].store(new_cap - flow, Ordering::Relaxed);
+            return Ok(());
+        }
+        // Overflow: force the flow down to the new capacity...
+        let over = flow - new_cap;
+        self.st.cf[a].store(0, Ordering::Relaxed);
+        self.st.cf[b].store(new_cap, Ordering::Relaxed);
+        let (u, v) = (self.g.arc_from[a], self.g.arc_to[a]);
+        // ... the tail keeps `over` units it no longer forwards (excess
+        // for the kernel to re-route; at t it directly adjusts the value),
+        if u != self.g.s {
+            self.st.e[u as usize].fetch_add(over, Ordering::Relaxed);
+        }
+        // ... and the head forwards `over` units it no longer receives:
+        // cancel them along downstream flow paths.
+        if v == self.g.t {
+            self.st.e[v as usize].fetch_sub(over, Ordering::Relaxed);
+            Ok(())
+        } else if v == self.g.s {
+            Ok(())
+        } else {
+            cancel_deficit(&self.g, &self.rep, &self.st, v, over, stats, &mut self.scratch)
+        }
+    }
+
+    /// Phases 2–4: seed the source frontier, repair with the warm kernel,
+    /// return stranded excess. Restores the valid-max-flow invariant.
+    fn resolve(&mut self, stats: &mut SolveStats) -> Result<(), String> {
+        let (g, rep, st) = (&self.g, &self.rep, &self.st);
+        // Phase 2 — generalized preflow: saturate every residual arc out
+        // of s (forward *and* reverse arcs: a reverse arc out of s is
+        // inflow circulation whose cancellation can also open paths).
+        for (a, y) in rep.row(g.s).iter() {
+            let c = st.residual(a);
+            if c > 0 {
+                st.cf[a as usize].fetch_sub(c, Ordering::Relaxed);
+                st.cf[(a ^ 1) as usize].fetch_add(c, Ordering::Relaxed);
+                st.e[y as usize].fetch_add(c, Ordering::Relaxed);
+                stats.pushes += 1;
+            }
+        }
+        // ExcessTotal = everything at the terminals plus everything in
+        // flight (decrease surpluses + the seeds above).
+        let mut excess_total = st.excess(g.s) + st.excess(g.t);
+        for u in 0..g.n as u32 {
+            if u != g.s && u != g.t {
+                excess_total += st.excess(u);
+            }
+        }
+        let mut acct = ExcessAccounting::new(g.n, excess_total);
+        // Phase 3 — warm-height refresh + kernel. The refresh is not
+        // optional here: capacity increases can put stale heights *above*
+        // the true sink distance, which would strand live excess forever
+        // (the in-kernel relabels only ever lift heights). The
+        // `opts.global_relabel` ablation knob still governs the kernel's
+        // own periodic relabels inside `run_from_state`.
+        global_relabel(g, rep, st, &mut acct, true);
+        stats.global_relabels += 1;
+        vc::run_from_state(g, rep, st, &mut acct, &self.opts, stats);
+        // Phase 4 — return undeliverable excess to s.
+        return_excess(g, rep, st, stats, &mut self.scratch)
+    }
+}
+
+/// Accumulate per-batch counters into a running total.
+fn add_stats(total: &mut SolveStats, s: &SolveStats) {
+    total.cycles += s.cycles;
+    total.launches += s.launches;
+    total.pushes += s.pushes;
+    total.relabels += s.relabels;
+    total.global_relabels += s.global_relabels;
+    total.scan_arcs += s.scan_arcs;
+    total.kernel_ms += s.kernel_ms;
+    total.total_ms += s.total_ms;
+}
+
+/// Cancel `amount` units of the flow currently leaving `from` (whose
+/// inflow just dropped by `amount`): BFS over positive-flow arcs until a
+/// vertex that can absorb the units — `t` (the flow simply shrinks), `s`
+/// (a canceled circulation), or any vertex holding matching excess (the
+/// decrease surplus, typically) — then cancel along the path. Repeats
+/// until the deficit is repaired; every round retires at least one unit.
+fn cancel_deficit(
+    g: &ArcGraph,
+    rep: &Rcsr,
+    st: &ParState,
+    from: u32,
+    amount: i64,
+    stats: &mut SolveStats,
+    scratch: &mut BfsScratch,
+) -> Result<(), String> {
+    let mut left = amount;
+    // The deficit vertex may itself hold excess from an earlier update in
+    // the batch; absorb locally first.
+    let own = st.excess(from).min(left);
+    if own > 0 {
+        st.e[from as usize].fetch_sub(own, Ordering::Relaxed);
+        left -= own;
+    }
+    let mut queue = std::collections::VecDeque::new();
+    while left > 0 {
+        // BFS from `from` along arcs shipping positive flow outward.
+        scratch.next_round();
+        queue.clear();
+        scratch.visit(from, u32::MAX);
+        queue.push_back(from);
+        let mut target: Option<u32> = None;
+        'bfs: while let Some(x) = queue.pop_front() {
+            for (a, y) in rep.row(x).iter() {
+                stats.scan_arcs += 1;
+                // Positive shipment x -> y lives only on forward arcs and
+                // equals the reverse residual.
+                if a & 1 == 0 && st.residual(a ^ 1) > 0 && !scratch.visited(y) {
+                    scratch.visit(y, a);
+                    if y == g.t || y == g.s || st.excess(y) > 0 {
+                        target = Some(y);
+                        break 'bfs;
+                    }
+                    queue.push_back(y);
+                }
+            }
+        }
+        let Some(tv) = target else {
+            return Err(format!("deficit repair: no cancelable flow path from vertex {from}"));
+        };
+        // Bottleneck along the parent chain.
+        let mut bottleneck = left;
+        if tv != g.t && tv != g.s {
+            bottleneck = bottleneck.min(st.excess(tv));
+        }
+        let mut x = tv;
+        while x != from {
+            let a = scratch.parent_arc(x);
+            bottleneck = bottleneck.min(st.residual(a ^ 1));
+            x = g.arc_from[a as usize];
+        }
+        debug_assert!(bottleneck > 0);
+        // Cancel: flow on each path arc drops by `bottleneck`.
+        let mut x = tv;
+        while x != from {
+            let a = scratch.parent_arc(x);
+            st.cf[a as usize].fetch_add(bottleneck, Ordering::Relaxed);
+            st.cf[(a ^ 1) as usize].fetch_sub(bottleneck, Ordering::Relaxed);
+            x = g.arc_from[a as usize];
+        }
+        // At t the flow value shrinks; at an excess vertex the surplus is
+        // consumed; s absorbs without bookkeeping (it has no conservation).
+        if tv != g.s {
+            st.e[tv as usize].fetch_sub(bottleneck, Ordering::Relaxed);
+        }
+        left -= bottleneck;
+    }
+    Ok(())
+}
+
+/// Phase 4: walk every non-terminal's leftover excess back to `s` along
+/// arcs with positive flow into the vertex (the textbook second phase of
+/// preflow-push, restricted to the dead region — see module docs).
+fn return_excess(
+    g: &ArcGraph,
+    rep: &Rcsr,
+    st: &ParState,
+    stats: &mut SolveStats,
+    scratch: &mut BfsScratch,
+) -> Result<(), String> {
+    let mut queue = std::collections::VecDeque::new();
+    for u in 0..g.n as u32 {
+        if u == g.s || u == g.t {
+            continue;
+        }
+        while st.excess(u) > 0 {
+            // BFS from u along arcs with positive inbound flow, toward s.
+            scratch.next_round();
+            queue.clear();
+            scratch.visit(u, u32::MAX);
+            queue.push_back(u);
+            let mut found = false;
+            'bfs: while let Some(x) = queue.pop_front() {
+                for (a, y) in rep.row(x).iter() {
+                    stats.scan_arcs += 1;
+                    // A reverse arc out of x with residual carries the flow
+                    // y -> x; stepping x -> y walks that flow backwards.
+                    if a & 1 == 1 && st.residual(a) > 0 && !scratch.visited(y) {
+                        scratch.visit(y, a);
+                        if y == g.s {
+                            found = true;
+                            break 'bfs;
+                        }
+                        queue.push_back(y);
+                    }
+                }
+            }
+            if !found {
+                return Err(format!("excess return: vertex {u} has excess but no flow path to s"));
+            }
+            // Bottleneck = min flow along the chain, capped by the excess.
+            let mut bottleneck = st.excess(u);
+            let mut x = g.s;
+            while x != u {
+                let a = scratch.parent_arc(x);
+                bottleneck = bottleneck.min(st.residual(a));
+                x = g.arc_from[a as usize];
+            }
+            debug_assert!(bottleneck > 0);
+            let mut x = g.s;
+            while x != u {
+                let a = scratch.parent_arc(x);
+                st.cf[a as usize].fetch_sub(bottleneck, Ordering::Relaxed);
+                st.cf[(a ^ 1) as usize].fetch_add(bottleneck, Ordering::Relaxed);
+                x = g.arc_from[a as usize];
+            }
+            st.e[u as usize].fetch_sub(bottleneck, Ordering::Relaxed);
+            st.e[g.s as usize].fetch_add(bottleneck, Ordering::Relaxed);
+        }
+    }
+    Ok(())
+}

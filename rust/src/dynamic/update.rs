@@ -1,0 +1,115 @@
+//! Streaming-update vocabulary: single edits, batches, and timed streams.
+//!
+//! Updates address edges by their index in the *current* edge list of the
+//! engine's normalized network ([`crate::dynamic::DynamicFlow::network`]).
+//! Indices are stable across a session: inserts append, deletes leave a
+//! capacity-0 tombstone in place, so an index handed out once stays valid
+//! for the life of the session.
+
+use crate::graph::{Capacity, VertexId};
+
+/// One mutation of the flow network.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GraphUpdate {
+    /// Raise edge `edge`'s capacity by `delta` (new residual appears; flow
+    /// is repaired by re-seeding the source frontier).
+    IncreaseCap { edge: usize, delta: Capacity },
+    /// Lower edge `edge`'s capacity by `delta` (clamped at zero). Flow
+    /// exceeding the new capacity is canceled along residual flow paths
+    /// and the displaced excess re-routed by push-relabel.
+    DecreaseCap { edge: usize, delta: Capacity },
+    /// Add a new directed edge `u -> v` with capacity `cap`.
+    InsertEdge { u: VertexId, v: VertexId, cap: Capacity },
+    /// Remove edge `edge` (equivalent to decreasing its capacity to zero;
+    /// the slot remains as a tombstone and may be re-grown later).
+    DeleteEdge { edge: usize },
+}
+
+impl GraphUpdate {
+    /// Does this update change the arc topology (forcing a representation
+    /// rebuild) rather than just capacities?
+    pub fn changes_topology(&self) -> bool {
+        matches!(self, GraphUpdate::InsertEdge { .. })
+    }
+}
+
+/// An ordered batch of updates applied atomically between two solves: the
+/// engine applies every edit, then runs one repair pass for the whole
+/// batch (the amortization the dynamic-max-flow papers rely on).
+#[derive(Debug, Clone, Default)]
+pub struct UpdateBatch {
+    pub updates: Vec<GraphUpdate>,
+}
+
+impl UpdateBatch {
+    pub fn new(updates: Vec<GraphUpdate>) -> UpdateBatch {
+        UpdateBatch { updates }
+    }
+
+    pub fn len(&self) -> usize {
+        self.updates.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.updates.is_empty()
+    }
+
+    /// Count of topology-changing updates in the batch.
+    pub fn inserts(&self) -> usize {
+        self.updates.iter().filter(|u| u.changes_topology()).count()
+    }
+}
+
+/// An ordered sequence of batches — the unit a streaming workload is
+/// replayed from. Produced deterministically by
+/// [`crate::graph::generators::update_stream`] and friends; batch `i`'s
+/// edge indices assume batches `0..i` were applied first.
+#[derive(Debug, Clone, Default)]
+pub struct UpdateStream {
+    /// Provenance ("cap-stream(1%,seed=7) over genrmf(...)").
+    pub name: String,
+    pub batches: Vec<UpdateBatch>,
+}
+
+impl UpdateStream {
+    /// Total updates across all batches.
+    pub fn len(&self) -> usize {
+        self.batches.iter().map(UpdateBatch::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.batches.iter().all(UpdateBatch::is_empty)
+    }
+}
+
+/// Outcome of applying one batch.
+#[derive(Debug, Clone)]
+pub struct UpdateReport {
+    /// Max-flow value after the repair.
+    pub value: i64,
+    /// Change versus the value before the batch.
+    pub delta: i64,
+    /// Updates applied (== batch length on success).
+    pub applied: usize,
+    /// Work done by this repair only (pushes/relabels/scans/launches).
+    pub stats: crate::maxflow::SolveStats,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_helpers() {
+        let b = UpdateBatch::new(vec![
+            GraphUpdate::IncreaseCap { edge: 0, delta: 2 },
+            GraphUpdate::InsertEdge { u: 1, v: 2, cap: 3 },
+            GraphUpdate::DeleteEdge { edge: 1 },
+        ]);
+        assert_eq!(b.len(), 3);
+        assert!(!b.is_empty());
+        assert_eq!(b.inserts(), 1);
+        assert!(GraphUpdate::InsertEdge { u: 0, v: 1, cap: 1 }.changes_topology());
+        assert!(!GraphUpdate::DeleteEdge { edge: 0 }.changes_topology());
+    }
+}

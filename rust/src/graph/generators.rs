@@ -264,6 +264,108 @@ pub fn webgraph(scale: u32, edge_factor: usize, seed: u64) -> FlowNetwork {
         .normalized()
 }
 
+/// Parameters of the deterministic update-stream generator.
+///
+/// Operation mix is given as probabilities; the remainder
+/// (`1 - p_increase - p_decrease - p_insert`) is the delete share.
+#[derive(Debug, Clone)]
+pub struct UpdateStreamParams {
+    pub batches: usize,
+    /// Updates per batch (the benches use ~1% of `|E|`).
+    pub batch_size: usize,
+    pub p_increase: f64,
+    pub p_decrease: f64,
+    pub p_insert: f64,
+    /// Capacity deltas drawn uniformly from `[1, max_delta]`.
+    pub max_delta: Capacity,
+    pub seed: u64,
+}
+
+impl UpdateStreamParams {
+    /// Pure capacity churn (no topology changes), `frac`·|E| updates per
+    /// batch — the workload of the Table 3 acceptance criterion.
+    pub fn capacity_only(m: usize, batches: usize, frac: f64, max_delta: Capacity, seed: u64) -> UpdateStreamParams {
+        UpdateStreamParams {
+            batches,
+            batch_size: ((m as f64 * frac).round() as usize).max(1),
+            p_increase: 0.5,
+            p_decrease: 0.5,
+            p_insert: 0.0,
+            max_delta,
+            seed,
+        }
+    }
+}
+
+/// Generate a deterministic stream of update batches for `net`.
+///
+/// `net` must be in normalized form (sorted, merged, loop-free — what
+/// [`FlowNetwork::normalized`] returns and what
+/// [`crate::dynamic::DynamicFlow::network`] exposes), because the stream's
+/// edge indices address *that* edge list; a raw generator output with
+/// parallel edges would make the indices silently point at the wrong
+/// edges. Asserted below.
+///
+/// Edge indices track the engine's in-order semantics: inserts append to
+/// the edge list, deletes tombstone in place, so index validity only
+/// depends on replaying batches in order. Tombstoned edges may be drawn
+/// again (a decrease/delete on them is a no-op; an increase regrows them)
+/// — real churn looks exactly like that.
+pub fn update_stream(net: &FlowNetwork, p: &UpdateStreamParams) -> crate::dynamic::UpdateStream {
+    assert!(
+        net.edges.windows(2).all(|w| (w[0].u, w[0].v) < (w[1].u, w[1].v))
+            && net.edges.iter().all(|e| e.u != e.v),
+        "update_stream needs a normalized network (see FlowNetwork::normalized); \
+         for a warm engine's post-insert edge list use update_stream_unchecked"
+    );
+    update_stream_unchecked(net, p)
+}
+
+/// [`update_stream`] without the normalized-form assertion, for edge
+/// lists that are index-stable but no longer sorted — i.e. a warm
+/// [`crate::dynamic::DynamicFlow::network`] after `InsertEdge` updates
+/// appended to it. The caller guarantees the list is exactly the one the
+/// replaying engine holds.
+pub fn update_stream_unchecked(net: &FlowNetwork, p: &UpdateStreamParams) -> crate::dynamic::UpdateStream {
+    assert!(p.p_increase + p.p_decrease + p.p_insert <= 1.0 + 1e-9);
+    assert!(p.max_delta >= 1);
+    let mut rng = Rng::new(p.seed);
+    let mut m = net.edges.len();
+    let mut batches = Vec::with_capacity(p.batches);
+    for _ in 0..p.batches {
+        let mut ups = Vec::with_capacity(p.batch_size);
+        for _ in 0..p.batch_size {
+            let r = rng.f64();
+            let up = if r < p.p_increase {
+                crate::dynamic::GraphUpdate::IncreaseCap { edge: rng.index(m), delta: rng.range_i64(1, p.max_delta) }
+            } else if r < p.p_increase + p.p_decrease {
+                crate::dynamic::GraphUpdate::DecreaseCap { edge: rng.index(m), delta: rng.range_i64(1, p.max_delta) }
+            } else if r < p.p_increase + p.p_decrease + p.p_insert {
+                // Distinct endpoints, avoiding the terminals as tails is
+                // not required — any non-loop edge is legal.
+                let u = rng.index(net.n) as VertexId;
+                let mut v = rng.index(net.n) as VertexId;
+                while v == u {
+                    v = rng.index(net.n) as VertexId;
+                }
+                m += 1;
+                crate::dynamic::GraphUpdate::InsertEdge { u, v, cap: rng.range_i64(1, p.max_delta) }
+            } else {
+                crate::dynamic::GraphUpdate::DeleteEdge { edge: rng.index(m) }
+            };
+            ups.push(up);
+        }
+        batches.push(crate::dynamic::UpdateBatch::new(ups));
+    }
+    crate::dynamic::UpdateStream {
+        name: format!(
+            "stream(b={},sz={},mix={:.2}/{:.2}/{:.2},seed={}) over {}",
+            p.batches, p.batch_size, p.p_increase, p.p_decrease, p.p_insert, p.seed, net.name
+        ),
+        batches,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -326,5 +428,66 @@ mod tests {
     fn generators_validate() {
         webgraph(8, 4, 1).validate().unwrap();
         erdos_renyi(50, 300, 10, 2).validate().unwrap();
+    }
+
+    #[test]
+    fn update_stream_is_deterministic_and_in_range() {
+        use crate::dynamic::GraphUpdate;
+        let net = erdos_renyi(40, 200, 8, 3);
+        let p = UpdateStreamParams {
+            batches: 6,
+            batch_size: 10,
+            p_increase: 0.4,
+            p_decrease: 0.3,
+            p_insert: 0.2,
+            max_delta: 5,
+            seed: 11,
+        };
+        let a = update_stream(&net, &p);
+        let b = update_stream(&net, &p);
+        assert_eq!(a.len(), 60);
+        assert_eq!(format!("{:?}", a.batches), format!("{:?}", b.batches), "same seed, same stream");
+        // Replaying in order, every index must be valid at its position.
+        let mut m = net.edges.len();
+        for batch in &a.batches {
+            for up in &batch.updates {
+                match *up {
+                    GraphUpdate::IncreaseCap { edge, delta } | GraphUpdate::DecreaseCap { edge, delta } => {
+                        assert!(edge < m && (1..=5).contains(&delta));
+                    }
+                    GraphUpdate::DeleteEdge { edge } => assert!(edge < m),
+                    GraphUpdate::InsertEdge { u, v, cap } => {
+                        assert!(u != v && (u as usize) < net.n && (v as usize) < net.n && cap >= 1);
+                        m += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unchecked_stream_accepts_post_insert_edge_lists() {
+        use crate::dynamic::{DynamicFlow, GraphUpdate, UpdateBatch};
+        let net = erdos_renyi(20, 60, 4, 6);
+        let mut df = DynamicFlow::new(&net, &Default::default());
+        df.apply(&UpdateBatch::new(vec![GraphUpdate::InsertEdge { u: 5, v: 0, cap: 2 }])).unwrap();
+        // network() now carries an appended tail; the unchecked variant
+        // must keep producing valid in-range streams for it.
+        let p = UpdateStreamParams::capacity_only(df.network().m(), 2, 0.05, 3, 1);
+        let s = update_stream_unchecked(df.network(), &p);
+        assert!(!s.is_empty());
+        for b in &s.batches {
+            df.apply(b).unwrap();
+        }
+    }
+
+    #[test]
+    fn capacity_only_stream_has_no_topology_changes() {
+        let net = erdos_renyi(30, 120, 6, 4);
+        let p = UpdateStreamParams::capacity_only(net.m(), 4, 0.01, 3, 9);
+        assert_eq!(p.batch_size, 1, "1% of 120ish edges rounds to 1");
+        let s = update_stream(&net, &p);
+        assert!(s.batches.iter().all(|b| b.inserts() == 0));
+        assert!(!s.is_empty());
     }
 }

@@ -11,10 +11,13 @@
 //! * **L3** — this crate: graph substrates (CSR / RCSR / BCSR), the
 //!   thread-centric and vertex-centric parallel engines, the GPU SIMT
 //!   simulator used to reproduce the paper's workload analysis, the PJRT
-//!   runtime that executes the AOT artifacts, and the job coordinator.
+//!   runtime that executes the AOT artifacts, the job coordinator, and
+//!   the [`dynamic`] subsystem that repairs a solved flow across
+//!   streaming capacity updates instead of re-solving from scratch.
 //!
-//! See `DESIGN.md` for the paper-to-module map and `EXPERIMENTS.md` for the
-//! reproduced tables/figures.
+//! See `DESIGN.md` (repo root) for the paper-to-module map — including
+//! the `dynamic/` extension — and `EXPERIMENTS.md` for how each
+//! table/figure is regenerated.
 //!
 //! ## Quick start
 //!
@@ -29,6 +32,7 @@
 
 pub mod bench;
 pub mod coordinator;
+pub mod dynamic;
 pub mod graph;
 pub mod maxflow;
 pub mod runtime;

@@ -5,7 +5,7 @@
 //! wbpr matching  --nl N --nr N --m M [--skew S] --engine ... --rep ...
 //! wbpr device    --gen <kind>      # run through the PJRT device engine
 //! wbpr serve     --jobs N          # coordinator demo: batched jobs + metrics
-//! wbpr bench     table1|table2|fig3|all [--scale smoke|full]
+//! wbpr bench     table1|table2|table3|fig3|all [--scale smoke|full]
 //! wbpr gen       --kind <...> --out file.dimacs
 //! wbpr info      [--gen <kind>]    # artifacts + memory accounting
 //! ```
@@ -13,7 +13,7 @@
 //! Options may also come from `--config file.ini` with `--set sec.key=val`
 //! overrides (see `configs/default.ini`).
 
-use wbpr::bench::{fig3, table1, table2, Scale};
+use wbpr::bench::{fig3, table1, table2, table3, Scale};
 use wbpr::coordinator::batcher::PairBatcher;
 use wbpr::coordinator::{Coordinator, CoordinatorConfig, Job};
 use wbpr::graph::builder::{select_pairs, ArcGraph, FlowNetwork};
@@ -201,13 +201,20 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     };
     let coord = Coordinator::start(config);
     println!("coordinator up (device: {})", coord.has_device());
-    // Demo workload: batched pair queries over a road network.
+    // Demo workload: batched pair queries over a road network. Between
+    // requests, poll the age-based flush so a trickle of pairs below the
+    // batch size is released instead of stranded.
+    let max_age = std::time::Duration::from_millis(args.opt_u64("batch-age-ms", 50)?);
     let base = generators::grid_road(24, 24, 0.05, 10, 7);
     let mut batcher = PairBatcher::new(base.clone(), 1 << 16, 4);
     let pairs = select_pairs(&base, n_jobs, n_jobs * 2, 11);
     let mut submitted = 0;
     for &(s, t) in pairs.iter().take(n_jobs) {
         if let Some(batch) = batcher.add(s, t) {
+            coord.submit(Job::MaxFlowAuto { net: batch.net });
+            submitted += 1;
+        }
+        if let Some(batch) = batcher.flush_stale(max_age) {
             coord.submit(Job::MaxFlowAuto { net: batch.net });
             submitted += 1;
         }
@@ -239,6 +246,10 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     if what == "table2" || what == "all" {
         println!("# Table 2 — bipartite matching (scaled analogs)\n");
         println!("{}", table2::render(&table2::run(scale, &opts)));
+    }
+    if what == "table3" || what == "all" {
+        println!("# Table 3 — incremental repair vs from-scratch (streaming updates)\n");
+        println!("{}", table3::render(&table3::run(scale, &opts)));
     }
     if what == "fig3" || what == "all" {
         println!("# Figure 3 — workload distribution (TC vs VC on RCSR)\n");

@@ -31,13 +31,40 @@ const MAX_LAUNCHES: u64 = 100_000;
 /// Solve max-flow with the vertex-centric engine over representation `rep`.
 pub fn solve<R: Residual>(g: &ArcGraph, rep: &R, opts: &SolveOptions) -> FlowResult {
     let total_timer = Timer::start();
+    let (st, excess_total) = ParState::preflow(g);
+    let mut acct = ExcessAccounting::new(g.n, excess_total);
+    let mut stats = SolveStats::default();
+    run_from_state(g, rep, &st, &mut acct, opts, &mut stats);
+    stats.total_ms = total_timer.ms();
+    FlowResult { value: st.excess(g.t), cf: st.cf_snapshot(), stats }
+}
+
+/// Run the vertex-centric host loop (kernel launches interleaved with
+/// global relabels) from an *existing* state until the ExcessTotal
+/// accounting proves termination.
+///
+/// This is the warm-restart entry point used by
+/// [`crate::dynamic::DynamicFlow`]: the incremental engine seeds excess at
+/// update sites and re-enters here with warm heights and residuals, so the
+/// kernel only does work proportional to the repair, not to the whole
+/// graph. [`solve`] is exactly `preflow` + this function.
+///
+/// Requirements on entry: `h(s) = n` and `acct.excess_total` accounts for
+/// every unit of excess currently outside `s`/`t` (both are established by
+/// [`ParState::preflow`] or by the caller's seeding pass; a global relabel
+/// right before entry is the easiest way to make heights valid).
+pub fn run_from_state<R: Residual>(
+    g: &ArcGraph,
+    rep: &R,
+    st: &ParState,
+    acct: &mut ExcessAccounting,
+    opts: &SolveOptions,
+    stats: &mut SolveStats,
+) {
     let n = g.n;
     let threads = opts.resolved_threads().min(n.max(1));
     let cycles = opts.resolved_cycles(n);
-    let (st, excess_total) = ParState::preflow(g);
-    let mut acct = ExcessAccounting::new(n, excess_total);
     let counters = AtomicCounters::default();
-    let mut stats = SolveStats::default();
 
     // Shared AVQ: fixed-capacity buffer + atomic length, rebuilt per cycle.
     let avq: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
@@ -50,7 +77,7 @@ pub fn solve<R: Residual>(g: &ArcGraph, rep: &R, opts: &SolveOptions) -> FlowRes
         .map(|w| ((w * chunk).min(n) as u32, ((w + 1) * chunk).min(n) as u32))
         .collect();
 
-    while !acct.done(g, &st) {
+    while !acct.done(g, st) {
         stats.launches += 1;
         if stats.launches > MAX_LAUNCHES {
             panic!("VC engine did not converge after {MAX_LAUNCHES} launches on {n} vertices");
@@ -59,7 +86,7 @@ pub fn solve<R: Residual>(g: &ArcGraph, rep: &R, opts: &SolveOptions) -> FlowRes
         let barrier = Barrier::new(threads);
         std::thread::scope(|scope| {
             for (w, &(lo, hi)) in ranges.iter().enumerate() {
-                let st = &st;
+                let st = &*st;
                 let counters = &counters;
                 let avq = &avq;
                 let avq_len = &avq_len;
@@ -115,14 +142,12 @@ pub fn solve<R: Residual>(g: &ArcGraph, rep: &R, opts: &SolveOptions) -> FlowRes
         });
         stats.kernel_ms += kt.ms();
         // Host step: global relabel + termination accounting.
-        global_relabel(g, rep, &st, &mut acct, opts.global_relabel);
+        global_relabel(g, rep, st, acct, opts.global_relabel);
         stats.global_relabels += 1;
     }
 
-    stats.cycles = executed_cycles.load(Ordering::Relaxed) as u64;
-    counters.merge_into(&mut stats);
-    stats.total_ms = total_timer.ms();
-    FlowResult { value: st.excess(g.t), cf: st.cf_snapshot(), stats }
+    stats.cycles += executed_cycles.load(Ordering::Relaxed) as u64;
+    counters.merge_into(stats);
 }
 
 #[cfg(test)]

@@ -9,6 +9,13 @@
 //!   cache and the typed `run_cycles` entry point.
 
 pub mod artifact;
+#[cfg(feature = "device")]
+pub mod client;
+// Offline CI has no vendored xla/anyhow closure; swap in an
+// API-compatible stub whose constructors fail gracefully so device
+// tests skip instead of failing (see rust/Cargo.toml).
+#[cfg(not(feature = "device"))]
+#[path = "client_stub.rs"]
 pub mod client;
 pub mod pack;
 

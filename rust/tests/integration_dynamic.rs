@@ -1,0 +1,127 @@
+//! Dynamic-subsystem integration: streaming updates through the engine
+//! and the coordinator, plus the PR's acceptance criterion — on a
+//! 1%-of-|E| capacity-update batch the incremental repair must reach the
+//! same verified max-flow value as a from-scratch solve at a 5x+ lower
+//! `pushes + relabels` cost than the from-scratch VC recompute.
+
+use wbpr::coordinator::{Coordinator, CoordinatorConfig, Job};
+use wbpr::dynamic::{DynamicFlow, GraphUpdate, UpdateBatch};
+use wbpr::graph::builder::ArcGraph;
+use wbpr::graph::generators::{self, update_stream, UpdateStreamParams};
+use wbpr::graph::Representation;
+use wbpr::maxflow::{self, EngineKind, SolveOptions};
+
+fn opts() -> SolveOptions {
+    SolveOptions { threads: 2, cycles_per_launch: 128, ..Default::default() }
+}
+
+#[test]
+fn one_percent_batch_is_5x_cheaper_than_scratch_vc() {
+    // The acceptance graph: a generated mesh with a wide capacity range
+    // (the regime where repair locality pays off and from-scratch solves
+    // do real work). One worker thread so the push/relabel counters on
+    // both sides are deterministic — the 5x margin must not depend on
+    // lock-free race interleavings.
+    let opts = SolveOptions { threads: 1, cycles_per_launch: 128, ..Default::default() };
+    let net = generators::genrmf(&generators::GenrmfParams { a: 6, b: 10, c1: 1, c2: 100, seed: 77 });
+    let mut df = DynamicFlow::new(&net, &opts);
+    let stream = update_stream(
+        df.network(),
+        &UpdateStreamParams::capacity_only(df.network().m(), 3, 0.01, 30, 0xACCE),
+    );
+    assert!(stream.batches[0].len() >= 10, "1% of |E| must be a real batch");
+    for batch in &stream.batches {
+        let report = df.apply(batch).expect("valid stream");
+        // Same verified value as a from-scratch solve...
+        let now = df.network().clone();
+        let scratch = maxflow::solve(&now, EngineKind::VertexCentric, Representation::Bcsr, &opts);
+        assert_eq!(report.value, scratch.value, "incremental value differs from scratch VC");
+        let dinic = maxflow::dinic::solve(&ArcGraph::build(&now.normalized()));
+        assert_eq!(report.value, dinic.value, "incremental value differs from Dinic");
+        maxflow::verify(df.arcs(), &df.flow_result()).expect("incremental flow verifies");
+        // ... at >= 5x less push/relabel work than the VC recompute.
+        let inc_ops = report.stats.pushes + report.stats.relabels;
+        let scratch_ops = scratch.stats.pushes + scratch.stats.relabels;
+        assert!(
+            inc_ops * 5 <= scratch_ops,
+            "repair not 5x cheaper: incremental {inc_ops} vs scratch {scratch_ops}"
+        );
+    }
+}
+
+#[test]
+fn mixed_topology_stream_stays_verified() {
+    let net = generators::erdos_renyi(120, 700, 10, 5);
+    let mut df = DynamicFlow::new(&net, &opts());
+    let stream = update_stream(
+        df.network(),
+        &UpdateStreamParams {
+            batches: 6,
+            batch_size: 8,
+            p_increase: 0.35,
+            p_decrease: 0.35,
+            p_insert: 0.15,
+            max_delta: 6,
+            seed: 99,
+        },
+    );
+    for batch in &stream.batches {
+        let report = df.apply(batch).expect("valid stream");
+        let dinic = maxflow::dinic::solve(&ArcGraph::build(&df.network().normalized()));
+        assert_eq!(report.value, dinic.value);
+        maxflow::verify(df.arcs(), &df.flow_result()).unwrap();
+    }
+    assert_eq!(df.batches(), 6);
+}
+
+#[test]
+fn warm_session_serves_update_stream_through_coordinator() {
+    let config = CoordinatorConfig {
+        native_workers: 1,
+        enable_device: false,
+        solve: opts(),
+        router: Default::default(),
+    };
+    let coord = Coordinator::start(config);
+    let net = generators::washington_rlg(&generators::WashingtonParams {
+        levels: 10,
+        width: 10,
+        fanout: 3,
+        max_cap: 20,
+        seed: 13,
+    });
+    let sid = coord.open_session(net.clone());
+    let open = coord.recv().unwrap().result.expect("open ok");
+    let want0 = maxflow::dinic::solve(&ArcGraph::build(&net.normalized())).value;
+    assert_eq!(open.value, want0);
+
+    // Stream three batches; values must track a from-scratch oracle that
+    // replays the same updates.
+    let stream = update_stream(&net.normalized(), &UpdateStreamParams::capacity_only(net.m(), 3, 0.02, 10, 4242));
+    let mut oracle = DynamicFlow::new(&net, &opts());
+    for batch in &stream.batches {
+        let want = oracle.apply(batch).unwrap().value;
+        coord.submit(Job::SessionUpdate { session: sid, batch: batch.clone() });
+        let got = coord.recv().unwrap().result.expect("update ok");
+        assert_eq!(got.value, want, "coordinator session tracks the oracle");
+    }
+    coord.submit(Job::SessionClose { session: sid });
+    let closed = coord.recv().unwrap().result.expect("close ok");
+    assert_eq!(closed.value, oracle.value());
+    coord.shutdown();
+}
+
+#[test]
+fn tombstone_regrow_through_updates() {
+    // Delete every edge on the only path, then regrow via increases.
+    use wbpr::graph::builder::FlowNetwork;
+    use wbpr::graph::Edge;
+    let net = FlowNetwork::new(3, 0, 2, vec![Edge::new(0, 1, 4), Edge::new(1, 2, 4)], "line3");
+    let mut df = DynamicFlow::new(&net, &opts());
+    assert_eq!(df.value(), 4);
+    df.apply(&UpdateBatch::new(vec![GraphUpdate::DeleteEdge { edge: 0 }])).unwrap();
+    assert_eq!(df.value(), 0);
+    df.apply(&UpdateBatch::new(vec![GraphUpdate::IncreaseCap { edge: 0, delta: 2 }])).unwrap();
+    assert_eq!(df.value(), 2);
+    maxflow::verify(df.arcs(), &df.flow_result()).unwrap();
+}

@@ -1,6 +1,7 @@
 //! Property-based invariants (in-repo harness, `util::prop`): randomized
 //! graphs, all the algebraic facts the paper's correctness rests on.
 
+use wbpr::dynamic::{DynamicFlow, GraphUpdate, UpdateBatch};
 use wbpr::graph::builder::{ArcGraph, FlowNetwork};
 use wbpr::graph::residual::Residual;
 use wbpr::graph::{dimacs, generators, Bcsr, Rcsr, Representation};
@@ -185,6 +186,52 @@ fn prop_batcher_conserves_pairs() {
         }
         if submitted != collected {
             return Err(format!("submitted {submitted} != collected {collected}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dynamic_repair_equals_scratch_dinic() {
+    // After every randomized update batch, the incremental engine must
+    // hold a *verified* max flow (maxflow::verify: antisymmetry, value
+    // accounting, no augmenting path) whose value equals a from-scratch
+    // Dinic solve of the mutated network.
+    check("dynamic repair == scratch", 25, 0xDF10, |g| {
+        let net = random_net(g);
+        let opts = SolveOptions { threads: 2, cycles_per_launch: 32, ..Default::default() };
+        let mut df = DynamicFlow::new(&net, &opts);
+        let n_batches = 1 + g.size(1, 5);
+        for bi in 0..n_batches {
+            let m = df.network().edges.len();
+            let n_ups = 1 + g.size(0, 6);
+            let mut ups = Vec::new();
+            for _ in 0..n_ups {
+                let roll = g.rng.f64();
+                if roll < 0.35 {
+                    ups.push(GraphUpdate::IncreaseCap { edge: g.rng.index(m), delta: g.rng.range_i64(1, 9) });
+                } else if roll < 0.70 {
+                    ups.push(GraphUpdate::DecreaseCap { edge: g.rng.index(m), delta: g.rng.range_i64(1, 9) });
+                } else if roll < 0.85 {
+                    let u = g.rng.index(df.network().n) as u32;
+                    let v = g.rng.index(df.network().n) as u32;
+                    if u != v {
+                        ups.push(GraphUpdate::InsertEdge { u, v, cap: g.rng.range_i64(1, 9) });
+                    }
+                } else {
+                    ups.push(GraphUpdate::DeleteEdge { edge: g.rng.index(m) });
+                }
+            }
+            let report = df.apply(&UpdateBatch::new(ups)).map_err(|e| format!("apply failed: {e}"))?;
+            let scratch = maxflow::dinic::solve(&ArcGraph::build(&df.network().normalized()));
+            if report.value != scratch.value {
+                return Err(format!(
+                    "batch {bi} on {}: incremental {} != dinic {}",
+                    net.name, report.value, scratch.value
+                ));
+            }
+            maxflow::verify(df.arcs(), &df.flow_result())
+                .map_err(|e| format!("batch {bi} on {}: verify: {e}", net.name))?;
         }
         Ok(())
     });
