@@ -147,6 +147,84 @@ pub fn render(rows: &[Row]) -> String {
     )
 }
 
+/// One machine-readable measurement for the CI perf tracker
+/// (`BENCH_table1.json`, emitted by the `bench smoke` subcommand).
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    pub graph: String,
+    pub engine: &'static str,
+    pub rep: &'static str,
+    pub wall_ms: f64,
+    pub pushes: u64,
+    pub relabels: u64,
+    pub frontier_len_sum: u64,
+}
+
+/// Run the Table 1 smoke suite natively (no SIMT sims — this is the
+/// fast CI path) and collect one record per graph × engine × rep, with
+/// every flow value cross-checked against Dinic.
+pub fn smoke_records(opts: &SolveOptions) -> Vec<BenchRecord> {
+    let smoke = flow_smoke_ids();
+    let mut out = Vec::new();
+    for case in flow_suite().iter().filter(|c| smoke.contains(&c.id)) {
+        let net = (case.build)();
+        let g = ArcGraph::build(&net.normalized());
+        let rcsr = Rcsr::build(&g);
+        let bcsr = Bcsr::build(&g);
+        let want = maxflow::dinic::solve(&g).value;
+        for (_, vc, rep) in CONFIGS.iter() {
+            let kind = if *vc { EngineKind::VertexCentric } else { EngineKind::ThreadCentric };
+            let r = match rep {
+                Representation::Rcsr => maxflow::tc_or_vc(&g, &rcsr, kind, opts),
+                Representation::Bcsr => maxflow::tc_or_vc(&g, &bcsr, kind, opts),
+            };
+            assert!(
+                r.error.is_none(),
+                "{}: {}+{} did not converge: {:?}",
+                case.id,
+                kind.name(),
+                rep.name(),
+                r.error
+            );
+            assert_eq!(r.value, want, "{}: {}+{} flow mismatch", case.id, kind.name(), rep.name());
+            out.push(BenchRecord {
+                graph: case.id.to_string(),
+                engine: kind.name(),
+                rep: rep.name(),
+                wall_ms: r.stats.total_ms,
+                pushes: r.stats.pushes,
+                relabels: r.stats.relabels,
+                frontier_len_sum: r.stats.frontier_len_sum,
+            });
+        }
+    }
+    out
+}
+
+/// Serialize records as the `BENCH_table1.json` document.
+pub fn records_json(records: &[BenchRecord]) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+    let arr = records
+        .iter()
+        .map(|r| {
+            let mut o = BTreeMap::new();
+            o.insert("graph".to_string(), Json::Str(r.graph.clone()));
+            o.insert("engine".to_string(), Json::Str(r.engine.to_string()));
+            o.insert("rep".to_string(), Json::Str(r.rep.to_string()));
+            o.insert("wall_ms".to_string(), Json::Num(r.wall_ms));
+            o.insert("pushes".to_string(), Json::Num(r.pushes as f64));
+            o.insert("relabels".to_string(), Json::Num(r.relabels as f64));
+            o.insert("frontier_len_sum".to_string(), Json::Num(r.frontier_len_sum as f64));
+            Json::Obj(o)
+        })
+        .collect();
+    let mut doc = BTreeMap::new();
+    doc.insert("schema".to_string(), Json::Str("wbpr/bench_table1/v1".to_string()));
+    doc.insert("records".to_string(), Json::Arr(arr));
+    Json::Obj(doc)
+}
+
 pub fn geo_mean(xs: impl Iterator<Item = f64>) -> f64 {
     let (mut sum, mut n) = (0.0, 0);
     for x in xs {
@@ -188,6 +266,27 @@ mod tests {
         assert!(s.contains("2.00x"));
         assert!(s.contains("3.00x"));
         assert!(s.contains("agrees"));
+    }
+
+    #[test]
+    fn records_serialize_to_json() {
+        let recs = vec![BenchRecord {
+            graph: "R6".into(),
+            engine: "VC",
+            rep: "BCSR",
+            wall_ms: 1.5,
+            pushes: 10,
+            relabels: 4,
+            frontier_len_sum: 7,
+        }];
+        let j = records_json(&recs);
+        let back = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("schema").unwrap().as_str(), Some("wbpr/bench_table1/v1"));
+        let rec = &back.get("records").unwrap().as_arr().unwrap()[0];
+        assert_eq!(rec.get("engine").unwrap().as_str(), Some("VC"));
+        assert_eq!(rec.get("rep").unwrap().as_str(), Some("BCSR"));
+        assert_eq!(rec.get("frontier_len_sum").unwrap().as_i64(), Some(7));
+        assert_eq!(rec.get("pushes").unwrap().as_i64(), Some(10));
     }
 
     #[test]

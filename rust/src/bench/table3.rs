@@ -87,8 +87,19 @@ pub struct Row {
     pub inc_ops: u64,
     /// Σ pushes+relabels of from-scratch VC+BCSR recomputes.
     pub scratch_ops: u64,
+    /// Σ pushes+relabels of the *legacy* (frontier-less, every-launch-GR)
+    /// engine repairing the same stream.
+    pub legacy_ops: u64,
+    /// Σ frontier entries the repairs processed (the new engine's
+    /// per-cycle work metric).
+    pub frontier_len_sum: u64,
+    /// Global relabels the adaptive cadence skipped across the stream.
+    pub gr_skipped: u64,
     /// Wall-clock, ms.
     pub inc_ms: f64,
+    /// Same stream repaired by the pre-frontier engine configuration
+    /// (`frontier: false`, `gr_alpha: 0.0`) — the PR's A/B baseline.
+    pub legacy_ms: f64,
     pub scratch_vc_ms: f64,
     pub scratch_dinic_ms: f64,
     /// Every batch's repaired value matched the from-scratch solve.
@@ -100,13 +111,25 @@ impl Row {
     pub fn ops_speedup(&self) -> f64 {
         self.scratch_ops as f64 / (self.inc_ops.max(1)) as f64
     }
+
+    /// Wall-clock win of the frontier engine over the legacy engine on
+    /// the same repair stream (the PR's ≥ 3x acceptance metric).
+    pub fn wall_speedup(&self) -> f64 {
+        self.legacy_ms / self.inc_ms.max(1e-6)
+    }
 }
 
-/// Replay one case: apply the stream incrementally, re-solving from
-/// scratch after each batch for the comparison columns.
+/// Replay one case: apply the stream incrementally (with the frontier
+/// engine *and* the legacy pre-frontier engine), re-solving from scratch
+/// after each batch for the comparison columns.
 pub fn run_case(case: &DynCase, opts: &SolveOptions) -> Row {
     let net = (case.build)();
     let mut df = DynamicFlow::new(&net, opts);
+    // The A/B baseline: same repair pipeline, but the kernel re-scans all
+    // of V every cycle and the host BFS runs after every launch — the
+    // engine as it was before the frontier/adaptive-relabel work.
+    let legacy_opts = SolveOptions { frontier: false, gr_alpha: 0.0, ..opts.clone() };
+    let mut legacy_df = DynamicFlow::new(&net, &legacy_opts);
     let stream = update_stream(
         df.network(),
         &UpdateStreamParams::capacity_only(df.network().m(), case.batches, case.frac, 25, 0xD11A + case.batches as u64),
@@ -120,7 +143,11 @@ pub fn run_case(case: &DynCase, opts: &SolveOptions) -> Row {
         updates: stream.len(),
         inc_ops: 0,
         scratch_ops: 0,
+        legacy_ops: 0,
+        frontier_len_sum: 0,
+        gr_skipped: 0,
         inc_ms: 0.0,
+        legacy_ms: 0.0,
         scratch_vc_ms: 0.0,
         scratch_dinic_ms: 0.0,
         values_agree: true,
@@ -129,6 +156,11 @@ pub fn run_case(case: &DynCase, opts: &SolveOptions) -> Row {
         let rep = df.apply(batch).expect("stream updates are valid");
         row.inc_ops += rep.stats.pushes + rep.stats.relabels;
         row.inc_ms += rep.stats.total_ms;
+        row.frontier_len_sum += rep.stats.frontier_len_sum;
+        row.gr_skipped += rep.stats.gr_skipped;
+        let legacy = legacy_df.apply(batch).expect("stream updates are valid");
+        row.legacy_ops += legacy.stats.pushes + legacy.stats.relabels;
+        row.legacy_ms += legacy.stats.total_ms;
         // From-scratch re-solve of the *same* post-update instance.
         let now = df.network().clone();
         let scratch = maxflow::solve(&now, EngineKind::VertexCentric, Representation::Bcsr, opts);
@@ -136,7 +168,7 @@ pub fn run_case(case: &DynCase, opts: &SolveOptions) -> Row {
         row.scratch_vc_ms += scratch.stats.total_ms;
         let dinic = maxflow::dinic::solve(&ArcGraph::build(&now.normalized()));
         row.scratch_dinic_ms += dinic.stats.total_ms;
-        if rep.value != scratch.value || rep.value != dinic.value {
+        if rep.value != scratch.value || rep.value != dinic.value || legacy.value != rep.value {
             row.values_agree = false;
         }
     }
@@ -157,7 +189,8 @@ pub fn run(scale: Scale, opts: &SolveOptions) -> Vec<Row> {
 pub fn render(rows: &[Row]) -> String {
     let mut t = Table::new(&[
         "Graph", "V", "E", "batches", "updates", "inc ops", "scratch ops", "ops speedup",
-        "inc ms", "scratch VC ms", "scratch Dinic ms", "values",
+        "inc ms", "legacy ms", "wall speedup", "frontier Σ", "GR skipped",
+        "scratch VC ms", "scratch Dinic ms", "values",
     ]);
     for r in rows {
         t.row(vec![
@@ -170,16 +203,23 @@ pub fn render(rows: &[Row]) -> String {
             r.scratch_ops.to_string(),
             speedup(r.ops_speedup()),
             ms(r.inc_ms),
+            ms(r.legacy_ms),
+            speedup(r.wall_speedup()),
+            r.frontier_len_sum.to_string(),
+            r.gr_skipped.to_string(),
             ms(r.scratch_vc_ms),
             ms(r.scratch_dinic_ms),
             if r.values_agree { "agree".into() } else { "MISMATCH".into() },
         ]);
     }
     let geo = super::table1::geo_mean(rows.iter().map(Row::ops_speedup));
+    let geo_wall = super::table1::geo_mean(rows.iter().map(Row::wall_speedup));
     format!(
-        "{}\ngeomean ops reduction (incremental vs from-scratch VC): {}\n",
+        "{}\ngeomean ops reduction (incremental vs from-scratch VC): {}\n\
+         geomean repair wall speedup (frontier vs legacy engine, target >= 3x): {}\n",
         t.render(),
-        speedup(geo)
+        speedup(geo),
+        speedup(geo_wall)
     )
 }
 
@@ -195,7 +235,7 @@ mod tests {
         let suite = dyn_suite();
         let case = suite.iter().find(|c| c.id == "D0").unwrap();
         let row = run_case(case, &opts);
-        assert!(row.values_agree, "incremental values must match from-scratch");
+        assert!(row.values_agree, "incremental values must match from-scratch (and legacy)");
         assert!(row.updates > 0);
         assert!(
             row.inc_ops * 5 <= row.scratch_ops,
@@ -203,6 +243,10 @@ mod tests {
             row.inc_ops,
             row.scratch_ops
         );
+        // The legacy A/B engine actually ran and the adaptive cadence
+        // actually skipped host BFS passes on the repair stream.
+        assert!(row.legacy_ms > 0.0);
+        assert!(row.gr_skipped > 0, "warm repairs must skip global relabels");
     }
 
     #[test]
@@ -216,14 +260,19 @@ mod tests {
             updates: 4,
             inc_ops: 10,
             scratch_ops: 100,
+            legacy_ops: 12,
+            frontier_len_sum: 40,
+            gr_skipped: 3,
             inc_ms: 1.0,
+            legacy_ms: 4.0,
             scratch_vc_ms: 5.0,
             scratch_dinic_ms: 3.0,
             values_agree: true,
         }];
         let s = render(&rows);
         assert!(s.contains("D9"));
-        assert!(s.contains("10.00x"));
+        assert!(s.contains("10.00x"), "ops speedup column");
+        assert!(s.contains("4.00x"), "wall speedup column");
         assert!(s.contains("agree"));
     }
 }

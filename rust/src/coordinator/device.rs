@@ -91,7 +91,7 @@ impl DeviceEngine {
                     if acct.done(g, &st) || launch.active == 0 {
                         let value = st.excess(g.t);
                         stats.total_ms = total_timer.ms();
-                        return Ok(FlowResult { value, cf: cf_arcs, stats });
+                        return Ok(FlowResult { value, cf: cf_arcs, stats, error: None });
                     }
                     continue;
                 }
@@ -111,7 +111,7 @@ impl DeviceEngine {
             if acct.done(g, &st) || launch.active == 0 {
                 let value = st.excess(g.t);
                 stats.total_ms = total_timer.ms();
-                return Ok(FlowResult { value, cf: cf_arcs, stats });
+                return Ok(FlowResult { value, cf: cf_arcs, stats, error: None });
             }
         }
     }
@@ -171,11 +171,11 @@ fn settle_accounting(g: &ArcGraph, dist: &[i32], st: &ParState, acct: &mut Exces
 /// relabel / accounting code).
 fn mirror_state(g: &ArcGraph, cf_arcs: &[i64], state: &DeviceState) -> ParState {
     use std::sync::atomic::{AtomicI64, AtomicU32};
-    ParState {
-        cf: cf_arcs.iter().map(|&c| AtomicI64::new(c)).collect(),
-        e: (0..g.n).map(|u| AtomicI64::new(state.e[u] as i64)).collect(),
-        h: (0..g.n).map(|u| AtomicU32::new(state.h[u].max(0) as u32)).collect(),
-    }
+    ParState::from_parts(
+        cf_arcs.iter().map(|&c| AtomicI64::new(c)).collect(),
+        (0..g.n).map(|u| AtomicI64::new(state.e[u] as i64)).collect(),
+        (0..g.n).map(|u| AtomicU32::new(state.h[u].max(0) as u32)).collect(),
+    )
 }
 
 #[cfg(test)]

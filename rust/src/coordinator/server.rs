@@ -292,19 +292,25 @@ fn native_worker(
         let (engine, result) = match job {
             Job::MaxFlow { net, kind, rep } => {
                 let label = format!("native:{}+{}", kind.name(), rep.name());
+                // An engine failure (e.g. `SolveError::NoConvergence`) is a
+                // job failure, never a worker abort.
                 let r = maxflow::solve(&net, kind, rep, &solve);
-                (label, Ok(r.value))
+                (label, r.value_or_error())
             }
             Job::MaxFlowAuto { net } => {
                 // Routed native (device absent or graph too big): the
                 // paper's overall best configuration is VC + BCSR.
                 let r = maxflow::solve(&net, EngineKind::VertexCentric, Representation::Bcsr, &solve);
-                ("native:VC+BCSR(auto)".to_string(), Ok(r.value))
+                ("native:VC+BCSR(auto)".to_string(), r.value_or_error())
             }
             Job::Matching { graph, kind, rep } => {
                 let label = format!("native:{}+{}(match)", kind.name(), rep.name());
                 let m = maxflow::matching::solve(&graph, kind, rep, &solve);
-                (label, Ok(m.matching.size as i64))
+                let result = match &m.flow.error {
+                    Some(e) => Err(e.to_string()),
+                    None => Ok(m.matching.size as i64),
+                };
+                (label, result)
             }
             Job::SessionOpen { .. } | Job::SessionUpdate { .. } | Job::SessionClose { .. } => {
                 // The router pins these to the session worker; reaching a

@@ -10,32 +10,52 @@
 
 use crate::dynamic::{DynamicFlow, UpdateBatch, UpdateReport};
 use crate::graph::builder::FlowNetwork;
-use crate::maxflow::SolveOptions;
+use crate::maxflow::{SolveOptions, WorkerPool};
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Owns every live session. Session ids are chosen by the caller (the
 /// coordinator's job id is a convenient source of unique ids).
+///
+/// All sessions share one persistent [`WorkerPool`]: the session worker
+/// serves updates one at a time, so a single pool saturates the machine
+/// while N warm sessions cost N scratch buffers — not N thread pools.
 pub struct SessionManager {
     opts: SolveOptions,
+    pool: Arc<WorkerPool>,
     sessions: HashMap<u64, DynamicFlow>,
 }
 
 impl SessionManager {
     pub fn new(opts: SolveOptions) -> SessionManager {
-        SessionManager { opts, sessions: HashMap::new() }
+        let pool = Arc::new(WorkerPool::new(opts.resolved_threads()));
+        SessionManager { opts, pool, sessions: HashMap::new() }
     }
 
-    /// Solve `net` from scratch and keep it warm under `id`. Returns the
-    /// initial max-flow value.
+    /// Solve `net` from scratch and keep it warm under `id` (on the shared
+    /// pool). Returns the initial max-flow value.
     pub fn open(&mut self, id: u64, net: &FlowNetwork) -> Result<i64, String> {
         if self.sessions.contains_key(&id) {
             return Err(format!("session {id} already open"));
         }
         net.validate()?;
-        let df = DynamicFlow::new(net, &self.opts);
+        let df = DynamicFlow::with_pool(net, &self.opts, self.pool.clone());
+        if df.is_poisoned() {
+            // A failed initial solve (e.g. NoConvergence) is a job
+            // failure, never a session-worker abort.
+            return Err(format!(
+                "session {id} failed to open: {}",
+                df.fault().unwrap_or("engine poisoned during initial solve")
+            ));
+        }
         let value = df.value();
         self.sessions.insert(id, df);
         Ok(value)
+    }
+
+    /// Worker threads backing every session of this manager.
+    pub fn pool_size(&self) -> usize {
+        self.pool.size()
     }
 
     /// Apply a batch to a warm session; returns the repaired value.
@@ -130,6 +150,7 @@ mod tests {
             m.open(seed, &net).unwrap();
         }
         assert_eq!(m.len(), 4);
+        assert_eq!(m.pool_size(), 2, "all sessions ride the one shared pool");
         for seed in 0..4u64 {
             let v = m
                 .update(seed, &UpdateBatch::new(vec![GraphUpdate::IncreaseCap { edge: 1, delta: 2 }]))

@@ -39,10 +39,12 @@ use super::update::{GraphUpdate, UpdateBatch, UpdateReport};
 use crate::graph::builder::{ArcGraph, FlowNetwork};
 use crate::graph::residual::Residual;
 use crate::graph::{Edge, Rcsr};
-use crate::maxflow::global_relabel::{global_relabel, ExcessAccounting};
-use crate::maxflow::{vc, FlowResult, ParState, SolveOptions, SolveStats};
+use crate::maxflow::global_relabel::{global_relabel_with, ExcessAccounting};
+use crate::maxflow::vc::VcContext;
+use crate::maxflow::{vc, FlowResult, ParState, SolveOptions, SolveStats, WorkerPool};
 use crate::util::Timer;
-use std::sync::atomic::{AtomicI64, AtomicU32, Ordering};
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::Arc;
 
 /// A max-flow instance kept warm across streaming updates.
 pub struct DynamicFlow {
@@ -57,8 +59,15 @@ pub struct DynamicFlow {
     /// Set when an internal repair invariant broke mid-batch (state is no
     /// longer a valid flow); every later `apply` refuses to run.
     poisoned: bool,
+    /// Cause of the poisoned state, if any (for serving-side diagnostics).
+    fault: Option<String>,
     /// Reused BFS buffers for the cancel/return walks.
     scratch: BfsScratch,
+    /// Warm kernel context: the persistent worker pool (possibly shared
+    /// with sibling sessions) plus the VC scratch (AVQ buffers, epoch
+    /// stamps, barrier, global-relabel BFS buffers). Batches allocate
+    /// nothing and spawn nothing.
+    ctx: VcContext,
 }
 
 /// Generation-stamped BFS scratch so the repair walks (which run once per
@@ -106,16 +115,25 @@ impl DynamicFlow {
     /// Solve `net` from scratch and keep the state warm. The initial solve
     /// uses the same seed/repair/return pipeline as updates do (with a
     /// cold state it *is* the ordinary preflow-push solve).
+    ///
+    /// A failing initial solve (e.g. [`crate::maxflow::SolveError`] on a
+    /// pathological instance) returns the engine *poisoned*
+    /// ([`DynamicFlow::is_poisoned`] / [`DynamicFlow::fault`]) rather than
+    /// panicking — a serving worker must survive any instance.
     pub fn new(net: &FlowNetwork, opts: &SolveOptions) -> DynamicFlow {
+        DynamicFlow::with_pool(net, opts, Arc::new(WorkerPool::new(opts.resolved_threads())))
+    }
+
+    /// Like [`DynamicFlow::new`] but sharing an existing worker pool —
+    /// the session-worker pattern: one pool serves every warm session, so
+    /// N sessions cost N scratch buffers, not N thread pools.
+    pub fn with_pool(net: &FlowNetwork, opts: &SolveOptions, pool: Arc<WorkerPool>) -> DynamicFlow {
         let net = net.normalized();
         let g = ArcGraph::build(&net);
         let rep = Rcsr::build(&g);
-        let cf: Vec<AtomicI64> = g.arc_cap.iter().map(|&c| AtomicI64::new(c)).collect();
-        let e: Vec<AtomicI64> = (0..g.n).map(|_| AtomicI64::new(0)).collect();
-        let h: Vec<AtomicU32> = (0..g.n).map(|_| AtomicU32::new(0)).collect();
-        h[g.s as usize].store(g.n as u32, Ordering::Relaxed);
-        let st = ParState { cf, e, h };
+        let st = ParState::zeroed(&g);
         let n = g.n;
+        let ctx = VcContext::with_pool(n, pool);
         let mut df = DynamicFlow {
             net,
             g,
@@ -126,14 +144,23 @@ impl DynamicFlow {
             batches: 0,
             total: SolveStats::default(),
             poisoned: false,
+            fault: None,
             scratch: BfsScratch::new(n),
+            ctx,
         };
         let t0 = Timer::start();
         let mut stats = SolveStats::default();
-        df.resolve(&mut stats).expect("initial solve cannot fail on a validated network");
-        stats.total_ms = t0.ms();
-        df.value = df.st.excess(df.g.t);
-        add_stats(&mut df.total, &stats);
+        match df.resolve(&mut stats) {
+            Ok(()) => {
+                stats.total_ms = t0.ms();
+                df.value = df.st.excess(df.g.t);
+                add_stats(&mut df.total, &stats);
+            }
+            Err(e) => {
+                df.poisoned = true;
+                df.fault = Some(e);
+            }
+        }
         df
     }
 
@@ -168,12 +195,17 @@ impl DynamicFlow {
 
     /// Snapshot the state as a [`FlowResult`] (verifier-compatible).
     pub fn flow_result(&self) -> FlowResult {
-        FlowResult { value: self.value, cf: self.st.cf_snapshot(), stats: self.total.clone() }
+        FlowResult { value: self.value, cf: self.st.cf_snapshot(), stats: self.total.clone(), error: None }
     }
 
     /// Did an internal repair invariant break? (See [`DynamicFlow::apply`].)
     pub fn is_poisoned(&self) -> bool {
         self.poisoned
+    }
+
+    /// Why the engine is poisoned (if it is).
+    pub fn fault(&self) -> Option<&str> {
+        self.fault.as_deref()
     }
 
     /// Apply one batch: validate every update, edit the network, repair
@@ -209,6 +241,7 @@ impl DynamicFlow {
         })();
         if let Err(e) = edited {
             self.poisoned = true;
+            self.fault = Some(e.clone());
             return Err(e);
         }
         stats.total_ms = t0.ms();
@@ -340,7 +373,7 @@ impl DynamicFlow {
     /// Phases 2–4: seed the source frontier, repair with the warm kernel,
     /// return stranded excess. Restores the valid-max-flow invariant.
     fn resolve(&mut self, stats: &mut SolveStats) -> Result<(), String> {
-        let (g, rep, st) = (&self.g, &self.rep, &self.st);
+        let (g, rep, st, ctx) = (&self.g, &self.rep, &self.st, &mut self.ctx);
         // Phase 2 — generalized preflow: saturate every residual arc out
         // of s (forward *and* reverse arcs: a reverse arc out of s is
         // inflow circulation whose cancellation can also open paths).
@@ -368,9 +401,9 @@ impl DynamicFlow {
         // (the in-kernel relabels only ever lift heights). The
         // `opts.global_relabel` ablation knob still governs the kernel's
         // own periodic relabels inside `run_from_state`.
-        global_relabel(g, rep, st, &mut acct, true);
+        global_relabel_with(g, rep, st, &mut acct, true, &mut ctx.scratch.gr);
         stats.global_relabels += 1;
-        vc::run_from_state(g, rep, st, &mut acct, &self.opts, stats);
+        vc::run_from_state(g, rep, st, &mut acct, &self.opts, stats, ctx).map_err(|e| e.to_string())?;
         // Phase 4 — return undeliverable excess to s.
         return_excess(g, rep, st, stats, &mut self.scratch)
     }
@@ -386,6 +419,9 @@ fn add_stats(total: &mut SolveStats, s: &SolveStats) {
     total.scan_arcs += s.scan_arcs;
     total.kernel_ms += s.kernel_ms;
     total.total_ms += s.total_ms;
+    total.frontier_len_sum += s.frontier_len_sum;
+    total.gap_cuts += s.gap_cuts;
+    total.gr_skipped += s.gr_skipped;
 }
 
 /// Cancel `amount` units of the flow currently leaving `from` (whose

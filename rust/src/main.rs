@@ -6,6 +6,7 @@
 //! wbpr device    --gen <kind>      # run through the PJRT device engine
 //! wbpr serve     --jobs N          # coordinator demo: batched jobs + metrics
 //! wbpr bench     table1|table2|table3|fig3|all [--scale smoke|full]
+//! wbpr bench     smoke [--out BENCH_table1.json]   # machine-readable perf tracker
 //! wbpr gen       --kind <...> --out file.dimacs
 //! wbpr info      [--gen <kind>]    # artifacts + memory accounting
 //! ```
@@ -25,7 +26,10 @@ use wbpr::util::cli::Args;
 use wbpr::util::config::Config;
 
 fn main() {
-    let args = Args::parse(std::env::args().skip(1), &["verbose", "quiet", "no-device", "no-global-relabel"]);
+    let args = Args::parse(
+        std::env::args().skip(1),
+        &["verbose", "quiet", "no-device", "no-global-relabel", "no-frontier"],
+    );
     if args.flag("quiet") {
         wbpr::util::log::set_level(wbpr::util::log::Level::Error);
     }
@@ -71,6 +75,10 @@ fn solve_options(args: &Args, cfg: &Config) -> Result<SolveOptions, String> {
         threads: args.opt_usize("threads", cfg.get_usize("engine", "threads", 0)?)?,
         cycles_per_launch: args.opt_usize("cycles", cfg.get_usize("engine", "cycles_per_launch", 0)?)?,
         global_relabel: !args.flag("no-global-relabel"),
+        // Relabel cadence: BFS once pushes+relabels reach gr_alpha * |V|
+        // (0 = after every launch, the legacy schedule).
+        gr_alpha: args.opt_f64("gr-alpha", cfg.get_f64("engine", "gr_alpha", 1.0)?)?,
+        frontier: !args.flag("no-frontier") && cfg.get_bool("engine", "frontier", true)?,
     })
 }
 
@@ -132,6 +140,9 @@ fn cmd_maxflow(args: &Args) -> Result<(), String> {
     let net = build_graph(args)?;
     wbpr::info!("maxflow", "{} | V={} E={} engine={}+{}", net.name, net.n, net.m(), kind.name(), rep.name());
     let r = maxflow::solve(&net, kind, rep, &opts);
+    if let Some(e) = &r.error {
+        return Err(format!("{e} (partial value {} is not a max flow)", r.value));
+    }
     println!("graph       : {}", net.name);
     println!("max flow    : {}", r.value);
     println!("total ms    : {:.2}", r.stats.total_ms);
@@ -163,6 +174,9 @@ fn cmd_matching(args: &Args) -> Result<(), String> {
     let seed = args.opt_u64("seed", 42)?;
     let g = bipartite::bipartite_zipf(nl, nr, m, skew, seed);
     let r = maxflow::matching::solve(&g, kind, rep, &opts);
+    if let Some(e) = &r.flow.error {
+        return Err(e.to_string());
+    }
     let hk = maxflow::hopcroft_karp::solve(&g);
     println!("graph        : {}", g.name);
     println!("matching     : {}", r.matching.size);
@@ -239,6 +253,17 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
     let scale: Scale = args.opt("scale").unwrap_or("smoke").parse()?;
     let opts = SolveOptions { threads: args.opt_usize("threads", 0)?, cycles_per_launch: 256, ..Default::default() };
+    if what == "smoke" {
+        // Machine-readable perf tracker: native Table 1 smoke measurements
+        // as JSON, checked into CI artifacts so the wall-clock / counter
+        // trajectory is visible PR over PR.
+        let t = std::time::Instant::now();
+        let records = table1::smoke_records(&opts);
+        let out = args.opt("out").unwrap_or("BENCH_table1.json");
+        std::fs::write(out, table1::records_json(&records).to_string()).map_err(|e| e.to_string())?;
+        println!("wrote {} ({} records in {:.1}s)", out, records.len(), t.elapsed().as_secs_f64());
+        return Ok(());
+    }
     if what == "table1" || what == "all" {
         println!("# Table 1 — max-flow (scaled analogs)\n");
         println!("{}", table1::render(&table1::run(scale, &opts)));

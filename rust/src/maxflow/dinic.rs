@@ -92,6 +92,7 @@ pub fn solve(g: &ArcGraph) -> FlowResult {
         value,
         cf: d.cf,
         stats: SolveStats { total_ms: ms, kernel_ms: ms, ..Default::default() },
+        error: None,
     }
 }
 

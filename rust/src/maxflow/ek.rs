@@ -53,7 +53,7 @@ pub fn solve(g: &ArcGraph) -> FlowResult {
         value += bottleneck;
     }
     let ms = t0.ms();
-    FlowResult { value, cf, stats: SolveStats { total_ms: ms, kernel_ms: ms, ..Default::default() } }
+    FlowResult { value, cf, stats: SolveStats { total_ms: ms, kernel_ms: ms, ..Default::default() }, error: None }
 }
 
 #[cfg(test)]

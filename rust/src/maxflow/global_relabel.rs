@@ -9,11 +9,10 @@
 //! subtracted from `Excess_total`, which makes the host loop's
 //! `e(s) + e(t) ≥ Excess_total` termination test sound (He & Hong).
 
-use super::state::ParState;
+use super::state::{AtomicCounters, ParState, SolveStats};
 use crate::graph::builder::ArcGraph;
 use crate::graph::residual::Residual;
 use std::collections::VecDeque;
-use std::sync::atomic::Ordering;
 
 /// Mutable accounting carried across global relabels.
 #[derive(Debug)]
@@ -64,6 +63,26 @@ pub struct RelabelOutcome {
     pub active: usize,
 }
 
+/// Reusable buffers for the global-relabel BFS, so the host step of a warm
+/// solve never re-allocates O(V) memory per pass.
+#[derive(Debug, Default)]
+pub struct GrScratch {
+    dist: Vec<u32>,
+    queue: VecDeque<u32>,
+}
+
+impl GrScratch {
+    pub fn new(n: usize) -> GrScratch {
+        GrScratch { dist: vec![u32::MAX; n], queue: VecDeque::new() }
+    }
+
+    fn ensure(&mut self, n: usize) {
+        if self.dist.len() < n {
+            self.dist.resize(n, u32::MAX);
+        }
+    }
+}
+
 /// Run one global relabel over the current state. `update_heights=false`
 /// runs only the reachability/accounting part (used to ablate the
 /// heuristic while keeping termination sound).
@@ -74,9 +93,25 @@ pub fn global_relabel<R: Residual>(
     acct: &mut ExcessAccounting,
     update_heights: bool,
 ) -> RelabelOutcome {
+    global_relabel_with(g, rep, st, acct, update_heights, &mut GrScratch::new(g.n))
+}
+
+/// [`global_relabel`] over caller-owned scratch buffers (the warm-session
+/// path: zero allocation per pass).
+pub fn global_relabel_with<R: Residual>(
+    g: &ArcGraph,
+    rep: &R,
+    st: &ParState,
+    acct: &mut ExcessAccounting,
+    update_heights: bool,
+    scratch: &mut GrScratch,
+) -> RelabelOutcome {
     let n = g.n;
-    let mut dist: Vec<u32> = vec![u32::MAX; n];
-    let mut queue = VecDeque::new();
+    scratch.ensure(n);
+    let dist = &mut scratch.dist;
+    dist[..n].fill(u32::MAX);
+    let queue = &mut scratch.queue;
+    queue.clear();
     dist[g.t as usize] = 0;
     queue.push_back(g.t);
     // Backward BFS: u is one step from v if the residual arc u→v exists,
@@ -103,19 +138,127 @@ pub fn global_relabel<R: Residual>(
         if is_reachable {
             reachable += 1;
             if update_heights {
-                st.h[u as usize].store(dist[u as usize], Ordering::Relaxed);
+                st.set_height(u, dist[u as usize]);
             }
             if e_u > 0 && st.height(u) < n as u32 {
                 active += 1;
             }
         } else {
             // Unreachable: deactivate.
-            st.h[u as usize].store(n as u32, Ordering::Relaxed);
+            st.set_height(u, n as u32);
         }
     }
     // Source keeps h = n (it must never be relabeled below n).
-    st.h[g.s as usize].store(n as u32, Ordering::Relaxed);
+    st.set_height(g.s, n as u32);
     RelabelOutcome { reachable, active }
+}
+
+/// Gap heuristic (Goldberg–Tarjan, host form): if some height level in
+/// `1..n` is empty while vertices sit strictly above it (and below `n`),
+/// those vertices can never route to `t` under a valid labeling — lift
+/// them straight to `n` instead of letting them relabel one step per
+/// cycle. Returns the number of vertices lifted.
+///
+/// Deliberately does **not** touch the ExcessTotal accounting: under the
+/// lock-free kernel, stale height reads make the labeling only
+/// approximately valid at quiescence, so the cut is treated as a cheap
+/// deactivation heuristic rather than a reachability proof. The next
+/// global relabel (which the adaptive host loop forces before it can
+/// terminate) settles the accounting from true residual reachability —
+/// canceling the stranded excess, or re-lowering a vertex the cut lifted
+/// conservatively. Either way the accounting stays sound.
+pub fn gap_heuristic(g: &ArcGraph, st: &ParState) -> usize {
+    let n = g.n;
+    // Lowest empty level with at least one occupied level above it.
+    let mut first_empty: Option<usize> = None;
+    let mut gap: Option<usize> = None;
+    for level in 1..n {
+        if st.level_count(level) == 0 {
+            if first_empty.is_none() {
+                first_empty = Some(level);
+            }
+        } else if first_empty.is_some() {
+            gap = first_empty;
+            break;
+        }
+    }
+    let Some(gap) = gap else { return 0 };
+    let mut lifted = 0usize;
+    for u in 0..n as u32 {
+        if u == g.s || u == g.t {
+            continue;
+        }
+        let h = st.height(u) as usize;
+        if h > gap && h < n {
+            st.set_height(u, n as u32);
+            lifted += 1;
+        }
+    }
+    lifted
+}
+
+/// Adaptive global-relabel cadence: fire the BFS once the kernel has done
+/// `alpha · |V|` pushes+relabels since the last pass (the classic
+/// work-triggered schedule), and always after a zero-op launch — the only
+/// way stranded excess gets canceled, so termination stays sound.
+#[derive(Debug)]
+pub struct AdaptiveGr {
+    threshold: u64,
+    work: u64,
+}
+
+impl AdaptiveGr {
+    /// `alpha <= 0` restores the legacy every-launch cadence.
+    pub fn new(n: usize, alpha: f64) -> AdaptiveGr {
+        let threshold = if alpha <= 0.0 { 0 } else { (alpha * n as f64).ceil() as u64 };
+        AdaptiveGr { threshold, work: 0 }
+    }
+
+    /// Record one launch's pushes+relabels; `true` means the host must run
+    /// the global-relabel BFS now.
+    pub fn should_run(&mut self, launch_ops: u64) -> bool {
+        self.work += launch_ops;
+        if launch_ops == 0 || self.work >= self.threshold {
+            self.work = 0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// The full host step shared by the TC and VC engines, run after every
+    /// kernel launch: merge the launch's counters into `stats`, then
+    /// either run the global-relabel BFS (cadence fired) or fall back to
+    /// the O(V) gap cut. `update_heights` is the engines'
+    /// `SolveOptions::global_relabel` — it gates both the BFS height
+    /// rewrite and the gap cut, because the cut relies on the next
+    /// height-updating relabel to re-lower a conservatively lifted vertex
+    /// (see [`gap_heuristic`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn host_step<R: Residual>(
+        &mut self,
+        g: &ArcGraph,
+        rep: &R,
+        st: &ParState,
+        acct: &mut ExcessAccounting,
+        counters: &AtomicCounters,
+        update_heights: bool,
+        stats: &mut SolveStats,
+        scratch: &mut GrScratch,
+    ) {
+        let ops_before = stats.pushes + stats.relabels;
+        counters.merge_into(stats);
+        let launch_ops = stats.pushes + stats.relabels - ops_before;
+        if self.should_run(launch_ops) {
+            global_relabel_with(g, rep, st, acct, update_heights, scratch);
+            stats.global_relabels += 1;
+        } else {
+            if update_heights {
+                stats.gap_cuts += gap_heuristic(g, st) as u64;
+            }
+            stats.gr_skipped += 1;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -123,6 +266,7 @@ mod tests {
     use super::*;
     use crate::graph::builder::FlowNetwork;
     use crate::graph::{Edge, Rcsr};
+    use std::sync::atomic::Ordering;
 
     fn line() -> (ArcGraph, Rcsr) {
         // 0 -> 1 -> 2 -> 3 plus a dead-end 1 -> 4.
@@ -193,6 +337,84 @@ mod tests {
         st.cf[2].store(0, Ordering::Relaxed);
         st.cf[3].store(1, Ordering::Relaxed);
         assert!(acct.done(&g, &st));
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_allocation() {
+        let (g, rep) = line();
+        let (st, total) = ParState::preflow(&g);
+        let mut acct = ExcessAccounting::new(g.n, total);
+        let mut scratch = GrScratch::new(g.n);
+        let a = global_relabel_with(&g, &rep, &st, &mut acct, true, &mut scratch);
+        // Second pass over the same buffers must see the same world.
+        let b = global_relabel_with(&g, &rep, &st, &mut acct, true, &mut scratch);
+        assert_eq!(a, b);
+        assert_eq!(st.height(2), 1);
+    }
+
+    #[test]
+    fn gap_lifts_stranded_plateau_and_stays_sound() {
+        // 0 -> 1 -> 2(sink), plus isolated-by-capacity vertices 3 and 4.
+        let g = ArcGraph::build(&FlowNetwork::new(
+            5,
+            0,
+            2,
+            vec![Edge::new(0, 1, 2), Edge::new(1, 2, 2), Edge::new(0, 3, 1), Edge::new(3, 4, 1)],
+            "plateau",
+        ));
+        let rep = Rcsr::build(&g);
+        let (st, total) = ParState::preflow(&g);
+        // Fabricate a plateau: 1 sits at level 1 (live path to t); 3 and 4
+        // were relabeled up to level 3 with level 2 empty — they can never
+        // descend to t again under a valid labeling.
+        st.set_height(1, 1);
+        st.set_height(3, 3);
+        st.set_height(4, 3);
+        assert_eq!(st.level_count(2), 0);
+        let lifted = gap_heuristic(&g, &st);
+        assert_eq!(lifted, 2, "both plateau vertices lifted");
+        assert_eq!(st.height(3), g.n as u32);
+        assert_eq!(st.height(4), g.n as u32);
+        assert_eq!(st.height(1), 1, "vertices below the gap are untouched");
+        // Accounting stays sound: the cut touched no excess bookkeeping,
+        // and the next global relabel settles it exactly — vertex 3's
+        // stranded preflow unit is canceled there (vertex 3 still has a
+        // residual back-arc to s only).
+        let mut acct = ExcessAccounting::new(g.n, total);
+        global_relabel(&g, &rep, &st, &mut acct, true);
+        assert_eq!(acct.excess_total, total - 1);
+
+        // A second cut finds nothing: the plateau is gone.
+        assert_eq!(gap_heuristic(&g, &st), 0);
+    }
+
+    #[test]
+    fn gap_requires_occupied_level_above_the_hole() {
+        // All heights contiguous from 0 — no gap, nothing lifted.
+        let g = ArcGraph::build(&FlowNetwork::new(
+            4,
+            0,
+            3,
+            vec![Edge::new(0, 1, 1), Edge::new(1, 2, 1), Edge::new(2, 3, 1)],
+            "contiguous",
+        ));
+        let (st, _) = ParState::preflow(&g);
+        st.set_height(1, 1);
+        assert_eq!(gap_heuristic(&g, &st), 0);
+    }
+
+    #[test]
+    fn adaptive_cadence_fires_on_threshold_and_stalls() {
+        let mut ad = AdaptiveGr::new(100, 1.0); // threshold = 100 ops
+        assert!(!ad.should_run(40), "below threshold: skip");
+        assert!(!ad.should_run(40), "still accumulating: skip");
+        assert!(ad.should_run(40), "120 >= 100: fire");
+        assert!(!ad.should_run(99), "counter reset after firing");
+        assert!(ad.should_run(0), "a zero-op launch always fires (termination)");
+        // alpha <= 0 restores the legacy every-launch cadence.
+        let mut legacy = AdaptiveGr::new(100, 0.0);
+        assert!(legacy.should_run(1));
+        assert!(legacy.should_run(1));
     }
 
     #[test]

@@ -32,21 +32,45 @@ impl LocalCounters {
     }
 }
 
+/// Outcome of one local operation, as seen by the frontier bookkeeping in
+/// the vertex-centric engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Discharge {
+    /// Vertex was not active (or could not move) — nothing happened.
+    Idle,
+    /// Pushed to `v`. `activated` means the push raised `e(v)` from ≤ 0
+    /// (and `v` is not a terminal): the pusher owns enqueueing `v` into
+    /// the next-cycle frontier. An already-active `v` is someone else's
+    /// responsibility (its own discharge re-queues it).
+    Pushed { v: u32, activated: bool },
+    /// Relabeled (or lifted out on a zero-residual row); the caller
+    /// re-checks `u`'s activity to decide whether it re-queues itself.
+    Relabeled,
+}
+
 /// One push-relabel local operation on `u`. Returns `true` if it pushed or
 /// relabeled (i.e. the vertex was active and made progress).
 #[inline]
 pub fn discharge_once<R: Residual>(g: &ArcGraph, rep: &R, st: &ParState, u: u32, cnt: &mut LocalCounters) -> bool {
+    discharge_step(g, rep, st, u, cnt) != Discharge::Idle
+}
+
+/// One push-relabel local operation on `u`, reporting what happened so the
+/// vertex-centric frontier can maintain the next-cycle AVQ without a full
+/// O(V) scan.
+#[inline]
+pub fn discharge_step<R: Residual>(g: &ArcGraph, rep: &R, st: &ParState, u: u32, cnt: &mut LocalCounters) -> Discharge {
     let n = g.n as u32;
     if u == g.s || u == g.t {
-        return false;
+        return Discharge::Idle;
     }
     let eu = st.excess(u);
     if eu <= 0 {
-        return false;
+        return Discharge::Idle;
     }
     let hu = st.height(u);
     if hu >= n {
-        return false;
+        return Discharge::Idle;
     }
     // Min-height residual neighbor (Alg. 1 lines 10–13). On the GPU this
     // is the warp/tile parallel reduction; here it is the honest serial
@@ -70,27 +94,30 @@ pub fn discharge_once<R: Residual>(g: &ArcGraph, rep: &R, st: &ParState, u: u32,
         // No residual arc at all: lift out of the active set. (Cannot
         // happen once e(u) > 0 — the arc that delivered the excess has a
         // residual reverse — but be defensive for zero-capacity inputs.)
-        st.h[u as usize].store(n + 1, Ordering::Relaxed);
+        st.set_height(u, n + 1);
         cnt.relabels += 1;
-        return true;
+        return Discharge::Relabeled;
     }
     if hu > min_h {
         // Push (Alg. 1 lines 15–19).
         let d = eu.min(st.residual(best_arc));
-        if d > 0 {
-            let ra = rep.rev_arc(best_arc, u, best_v);
-            st.cf[best_arc as usize].fetch_sub(d, Ordering::Relaxed);
-            st.e[u as usize].fetch_sub(d, Ordering::Relaxed);
-            st.cf[ra as usize].fetch_add(d, Ordering::Relaxed);
-            st.e[best_v as usize].fetch_add(d, Ordering::Relaxed);
-            cnt.pushes += 1;
+        if d == 0 {
+            return Discharge::Idle;
         }
-        d > 0
+        let ra = rep.rev_arc(best_arc, u, best_v);
+        st.cf[best_arc as usize].fetch_sub(d, Ordering::Relaxed);
+        st.e[u as usize].fetch_sub(d, Ordering::Relaxed);
+        st.cf[ra as usize].fetch_add(d, Ordering::Relaxed);
+        // The previous excess decides frontier ownership: exactly one
+        // pusher observes the ≤ 0 → > 0 transition.
+        let prev = st.e[best_v as usize].fetch_add(d, Ordering::Relaxed);
+        cnt.pushes += 1;
+        Discharge::Pushed { v: best_v, activated: prev <= 0 && best_v != g.s && best_v != g.t }
     } else {
         // Relabel (Alg. 1 line 21).
-        st.h[u as usize].store(min_h.saturating_add(1), Ordering::Relaxed);
+        st.set_height(u, min_h.saturating_add(1));
         cnt.relabels += 1;
-        true
+        Discharge::Relabeled
     }
 }
 
@@ -160,6 +187,37 @@ mod tests {
         assert_eq!(cnt.pushes, 1);
         assert_eq!(st.excess(3), 2);
         assert_eq!(st.excess(1), 1);
+    }
+
+    #[test]
+    fn discharge_step_reports_activations() {
+        // Path 0 -> 1 -> 2 -> 3: after preflow, vertex 1 holds excess.
+        let g = ArcGraph::build(&FlowNetwork::new(
+            4,
+            0,
+            3,
+            vec![Edge::new(0, 1, 2), Edge::new(1, 2, 2), Edge::new(2, 3, 2)],
+            "path4",
+        ));
+        let rep = Rcsr::build(&g);
+        let (st, _) = ParState::preflow(&g);
+        let mut cnt = LocalCounters::default();
+        assert_eq!(discharge_step(&g, &rep, &st, 1, &mut cnt), Discharge::Relabeled);
+        // The push that raises e(2) from 0 reports the activation.
+        assert_eq!(
+            discharge_step(&g, &rep, &st, 1, &mut cnt),
+            Discharge::Pushed { v: 2, activated: true }
+        );
+        // 2 routes to t after a relabel; a push into a terminal is never
+        // reported as an activation.
+        assert_eq!(discharge_step(&g, &rep, &st, 2, &mut cnt), Discharge::Relabeled);
+        assert_eq!(
+            discharge_step(&g, &rep, &st, 2, &mut cnt),
+            Discharge::Pushed { v: 3, activated: false }
+        );
+        // Terminals and drained vertices are idle.
+        assert_eq!(discharge_step(&g, &rep, &st, 0, &mut cnt), Discharge::Idle);
+        assert_eq!(discharge_step(&g, &rep, &st, 2, &mut cnt), Discharge::Idle);
     }
 
     #[test]

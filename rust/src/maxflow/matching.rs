@@ -21,6 +21,15 @@ pub fn solve(g: &BipartiteGraph, kind: EngineKind, rep: Representation, opts: &S
     let net = g.to_flow_network();
     let arcs = ArcGraph::build(&net);
     let flow = solve_arcs(&arcs, kind, rep, opts);
+    if flow.error.is_some() {
+        // No converged flow to extract a matching from: surface the engine
+        // failure (callers check `flow.error`) with an empty matching
+        // instead of panicking mid-extraction.
+        return FlowMatching {
+            matching: Matching { size: 0, match_l: vec![u32::MAX; g.nl], match_r: vec![u32::MAX; g.nr] },
+            flow,
+        };
+    }
     // Extraction. The parallel engines compute a maximum *preflow* (phase 1
     // of push-relabel), which may strand excess at R vertices, so "every
     // saturated L→R arc is matched" would over-count. Instead anchor on the

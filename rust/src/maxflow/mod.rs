@@ -12,7 +12,10 @@
 //!   (Algorithm 2): a shared active-vertex queue (AVQ) built by an atomic
 //!   scan, then balanced tile-per-active-vertex processing with early exit.
 //! * [`global_relabel`] — the backward-BFS heuristic + the ExcessTotal
-//!   termination accounting (Algorithm 1, step 2).
+//!   termination accounting (Algorithm 1, step 2), with the adaptive
+//!   work-triggered cadence and the gap heuristic.
+//! * [`pool`] — the persistent worker pool the parallel engines launch
+//!   kernels on (created once per solve / warm session, never per launch).
 //! * [`matching`] / [`hopcroft_karp`] — bipartite matching via max-flow and
 //!   its combinatorial oracle (Table 2).
 
@@ -23,6 +26,7 @@ pub mod hopcroft_karp;
 pub mod lockfree;
 pub mod matching;
 pub mod mincut;
+pub mod pool;
 pub mod seq;
 pub mod state;
 pub mod tc;
@@ -31,6 +35,7 @@ pub mod vc;
 use crate::graph::builder::{ArcGraph, FlowNetwork};
 use crate::graph::{Bcsr, Rcsr, Representation};
 
+pub use pool::WorkerPool;
 pub use state::{ParState, SolveStats};
 
 /// Which engine to run.
@@ -87,11 +92,27 @@ pub struct SolveOptions {
     /// Run the global-relabel heuristic (Alg. 1 step 2). Disabling it is
     /// only safe for the sequential engine, which can terminate on its own.
     pub global_relabel: bool,
+    /// Adaptive global-relabel cadence: run the backward-BFS pass only
+    /// once pushes+relabels since the last pass reach `gr_alpha · |V|`
+    /// (it still always runs after a zero-op launch, which keeps
+    /// termination sound). `0.0` restores the legacy every-launch cadence.
+    pub gr_alpha: f64,
+    /// Frontier-driven AVQ for the VC engine: `discharge` activations feed
+    /// the next cycle's queue, so the per-cycle O(V) scan runs only at
+    /// launch start. `false` restores the legacy full-scan-per-cycle
+    /// engine (kept for A/B benchmarking — see `bench/table3`).
+    pub frontier: bool,
 }
 
 impl Default for SolveOptions {
     fn default() -> Self {
-        SolveOptions { threads: 0, cycles_per_launch: 0, global_relabel: true }
+        SolveOptions {
+            threads: 0,
+            cycles_per_launch: 0,
+            global_relabel: true,
+            gr_alpha: 1.0,
+            frontier: true,
+        }
     }
 }
 
@@ -114,6 +135,27 @@ impl SolveOptions {
     }
 }
 
+/// Engine-level failure that a serving worker must survive (mapped to a
+/// job failure by `coordinator/server.rs`, never a process abort).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SolveError {
+    /// The host loop exhausted its launch budget without the ExcessTotal
+    /// accounting proving termination.
+    NoConvergence { launches: u64 },
+}
+
+impl std::fmt::Display for SolveError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SolveError::NoConvergence { launches } => {
+                write!(f, "engine did not converge after {launches} launches")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SolveError {}
+
 /// Result of a max-flow computation.
 #[derive(Debug, Clone)]
 pub struct FlowResult {
@@ -122,6 +164,20 @@ pub struct FlowResult {
     /// Final residual capacities per arc (for min-cut verification).
     pub cf: Vec<i64>,
     pub stats: SolveStats,
+    /// Set when the engine gave up ([`SolveError`]); `value`/`cf` then
+    /// hold the best-effort partial state, which is *not* a maximum flow.
+    pub error: Option<SolveError>,
+}
+
+impl FlowResult {
+    /// `Ok(value)` for a completed solve, the engine failure otherwise —
+    /// the shape a serving worker reports.
+    pub fn value_or_error(&self) -> Result<i64, String> {
+        match &self.error {
+            Some(e) => Err(e.to_string()),
+            None => Ok(self.value),
+        }
+    }
 }
 
 /// Solve max-flow on `net` with the chosen engine and residual
@@ -252,6 +308,21 @@ mod tests {
         let o2 = SolveOptions { cycles_per_launch: 7, threads: 3, ..Default::default() };
         assert_eq!(o2.resolved_cycles(10), 7);
         assert_eq!(o2.resolved_threads(), 3);
+    }
+
+    #[test]
+    fn flow_result_surfaces_engine_errors() {
+        let ok = FlowResult { value: 7, cf: vec![], stats: SolveStats::default(), error: None };
+        assert_eq!(ok.value_or_error(), Ok(7));
+        let bad = FlowResult {
+            value: 3,
+            cf: vec![],
+            stats: SolveStats::default(),
+            error: Some(SolveError::NoConvergence { launches: 9 }),
+        };
+        let err = bad.value_or_error().unwrap_err();
+        assert!(err.contains("did not converge"), "{err}");
+        assert!(err.contains('9'), "{err}");
     }
 
     #[test]

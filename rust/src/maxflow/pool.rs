@@ -1,0 +1,270 @@
+//! Persistent worker pool for the parallel engines.
+//!
+//! The thread-centric and vertex-centric host loops used to spawn a fresh
+//! `thread::scope` per kernel launch, which charges an OS thread
+//! create/join round-trip to every launch — noise on a cold solve, but the
+//! dominant cost in the warm-restart regime where `dynamic/` repairs a
+//! tiny frontier across hundreds of small launches. A [`WorkerPool`] is
+//! created once per solve (or once per warm session and shared across
+//! update batches) and re-broadcasts each launch body to the same threads.
+//!
+//! [`WorkerPool::run`] hands every worker its index and blocks until all
+//! workers finish the closure, so the closure may freely borrow
+//! launch-local state (the same contract `thread::scope` gives, enforced
+//! here by blocking instead of by lifetimes — see the safety note in
+//! `run`).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Arc<dyn Fn(usize) + Send + Sync + 'static>;
+
+struct PoolState {
+    /// Current job (present while a broadcast is in flight).
+    job: Option<Job>,
+    /// Broadcast sequence number; workers run each sequence exactly once.
+    seq: u64,
+    /// Workers still executing the current sequence.
+    remaining: usize,
+    /// A worker panicked while running the current job.
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// Workers wait here for a new sequence.
+    go: Condvar,
+    /// The caller waits here for `remaining == 0`.
+    done: Condvar,
+}
+
+/// A fixed-size pool of named worker threads, reused across kernel
+/// launches (and, for warm sessions, across update batches).
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    /// Serializes broadcasts: `run` holds this for its whole duration, so
+    /// concurrent callers sharing one pool through an `Arc` queue up
+    /// instead of clobbering an in-flight job — the lifetime erasure in
+    /// `run` is only sound while at most one broadcast borrows the stack.
+    broadcast: Mutex<()>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `size.max(1)` workers (they idle on a condvar until `run`).
+    pub fn new(size: usize) -> WorkerPool {
+        let size = size.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                job: None,
+                seq: 0,
+                remaining: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            go: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (0..size)
+            .map(|w| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("wbpr-pool-{w}"))
+                    .spawn(move || worker_loop(&shared, w))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, broadcast: Mutex::new(()), handles }
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Broadcast `f` to every worker (called with its worker index) and
+    /// block until all workers return. Concurrent `run` calls on a shared
+    /// pool serialize (see `broadcast`). Panics (after all workers
+    /// finished) if any worker's closure panicked.
+    pub fn run<'a, F: Fn(usize) + Send + Sync + 'a>(&self, f: F) {
+        // One broadcast at a time: without this, a second caller could
+        // overwrite `job`/`seq` while the first is in flight and both
+        // would return before every worker finished — freeing borrows a
+        // straggler worker is about to execute against. A poisoned guard
+        // is recovered: the poisoning panic fires at the end of `run`,
+        // after its broadcast fully completed, so the pool state is fine.
+        let _serialize = self.broadcast.lock().unwrap_or_else(|p| p.into_inner());
+        let job: Arc<dyn Fn(usize) + Send + Sync + 'a> = Arc::new(f);
+        // SAFETY: lifetime erasure only — the fat-pointer layout is
+        // identical on both sides. This function does not return until
+        // every worker has finished running (and dropped its clone of)
+        // `job`, so the `'a` borrows captured by `f` strictly outlive all
+        // uses; the same guarantee `thread::scope` encodes in lifetimes.
+        let job: Job = unsafe {
+            std::mem::transmute::<Arc<dyn Fn(usize) + Send + Sync + 'a>, Job>(job)
+        };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert_eq!(st.remaining, 0, "run() while a job is in flight");
+            st.job = Some(job);
+            st.seq += 1;
+            st.remaining = self.handles.len();
+            st.panicked = false;
+        }
+        self.shared.go.notify_all();
+        let mut st = self.shared.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        st.job = None;
+        let panicked = st.panicked;
+        drop(st);
+        if panicked {
+            panic!("a worker-pool job panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.go.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, w: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.seq > seen {
+                    break;
+                }
+                st = shared.go.wait(st).unwrap();
+            }
+            seen = st.seq;
+            st.job.clone().expect("job present while seq advanced")
+        };
+        let outcome = catch_unwind(AssertUnwindSafe(|| job(w)));
+        drop(job);
+        let mut st = shared.state.lock().unwrap();
+        if outcome.is_err() {
+            st.panicked = true;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+    use std::sync::Barrier;
+
+    #[test]
+    fn every_worker_runs_with_its_index() {
+        let pool = WorkerPool::new(4);
+        let hits = AtomicU64::new(0);
+        pool.run(|w| {
+            hits.fetch_add(1 << (8 * w), Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 0x01010101);
+    }
+
+    #[test]
+    fn reuse_across_many_launches_borrowing_locals() {
+        let pool = WorkerPool::new(3);
+        let counter = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.run(|_| {
+                counter.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 150);
+    }
+
+    #[test]
+    fn workers_can_synchronize_on_a_barrier() {
+        let pool = WorkerPool::new(4);
+        let barrier = Barrier::new(4);
+        let phase = AtomicUsize::new(0);
+        let ok = AtomicUsize::new(0);
+        pool.run(|_| {
+            phase.fetch_add(1, Ordering::SeqCst);
+            barrier.wait();
+            // After the barrier every worker must observe all 4 arrivals.
+            if phase.load(Ordering::SeqCst) == 4 {
+                ok.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert_eq!(ok.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn zero_size_clamps_to_one() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.size(), 1);
+        let ran = AtomicUsize::new(0);
+        pool.run(|w| {
+            assert_eq!(w, 0);
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn concurrent_broadcasts_serialize() {
+        // Several threads sharing one pool through an Arc (the session
+        // pattern) must never interleave broadcasts.
+        let pool = Arc::new(WorkerPool::new(2));
+        let counter = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let pool = pool.clone();
+                let counter = &counter;
+                s.spawn(move || {
+                    for _ in 0..25 {
+                        pool.run(|_| {
+                            counter.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 4 * 25 * 2);
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_job() {
+        let pool = WorkerPool::new(2);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(|w| {
+                if w == 0 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "run must propagate the worker panic");
+        // The pool stays usable afterwards.
+        let ran = AtomicUsize::new(0);
+        pool.run(|_| {
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 2);
+    }
+}

@@ -112,7 +112,7 @@ pub fn solve(g: &ArcGraph) -> FlowResult {
     let ms = t0.ms();
     stats.total_ms = ms;
     stats.kernel_ms = ms;
-    FlowResult { value, cf, stats }
+    FlowResult { value, cf, stats, error: None }
 }
 
 #[cfg(test)]

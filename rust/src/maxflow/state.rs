@@ -22,6 +22,16 @@ pub struct SolveStats {
     pub kernel_ms: f64,
     /// Total wall-clock, milliseconds.
     pub total_ms: f64,
+    /// Σ AVQ length over executed VC cycles — the work the frontier-driven
+    /// engine actually processed (the pre-frontier engine's analog is
+    /// `cycles · |V|` of scan checks).
+    pub frontier_len_sum: u64,
+    /// Vertices deactivated by the gap heuristic (lifted to height n after
+    /// their height level emptied).
+    pub gap_cuts: u64,
+    /// Host steps where the adaptive cadence skipped the global-relabel
+    /// BFS because the kernel had not yet done `gr_alpha · |V|` work.
+    pub gr_skipped: u64,
 }
 
 /// Atomic counters accumulated inside parallel kernels, merged into
@@ -53,34 +63,61 @@ pub struct ParState {
     pub e: Vec<AtomicI64>,
     /// Height (label) per vertex.
     pub h: Vec<AtomicU32>,
+    /// Height histogram for levels `0..n` (heights ≥ n are deactivated and
+    /// untracked). Kept consistent with `h` by routing every height write
+    /// through [`ParState::set_height`]; the gap heuristic consumes it via
+    /// [`ParState::level_count`].
+    hist: Vec<AtomicU32>,
 }
 
 impl ParState {
+    /// Assemble a state from raw arrays, rebuilding the height histogram
+    /// from `h`. The entry point for every manual construction (warm
+    /// engines, device mirrors) so the histogram can never start stale.
+    pub fn from_parts(cf: Vec<AtomicI64>, e: Vec<AtomicI64>, h: Vec<AtomicU32>) -> ParState {
+        let n = h.len();
+        let hist: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+        for hu in &h {
+            let hu = hu.load(Ordering::Relaxed) as usize;
+            if hu < n {
+                hist[hu].fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        ParState { cf, e, h, hist }
+    }
+
+    /// A cold state over `g`: residuals = capacities, zero excess, zero
+    /// heights except `h(s) = n`. The warm engine starts here and lets its
+    /// generalized preflow do the seeding.
+    pub fn zeroed(g: &ArcGraph) -> ParState {
+        let cf: Vec<AtomicI64> = g.arc_cap.iter().map(|&c| AtomicI64::new(c)).collect();
+        let e: Vec<AtomicI64> = (0..g.n).map(|_| AtomicI64::new(0)).collect();
+        let h: Vec<AtomicU32> = (0..g.n).map(|_| AtomicU32::new(0)).collect();
+        h[g.s as usize].store(g.n as u32, Ordering::Relaxed);
+        ParState::from_parts(cf, e, h)
+    }
+
     /// Initialise heights/excess and perform the preflow (Alg. 1 step 0):
     /// saturate every arc out of `s`, set `h(s) = n`. Returns
     /// `Excess_total` = total preflow pushed out of the source.
     pub fn preflow(g: &ArcGraph) -> (ParState, i64) {
-        let n = g.n;
         let m2 = g.num_arcs();
-        let cf: Vec<AtomicI64> = g.arc_cap.iter().map(|&c| AtomicI64::new(c)).collect();
-        let e: Vec<AtomicI64> = (0..n).map(|_| AtomicI64::new(0)).collect();
-        let h: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
-        h[g.s as usize].store(n as u32, Ordering::Relaxed);
+        let st = ParState::zeroed(g);
         let mut excess_total = 0i64;
         for a in (0..m2).step_by(2) {
             if g.arc_from[a] == g.s {
                 let c = g.arc_cap[a];
                 if c > 0 {
-                    cf[a].store(0, Ordering::Relaxed);
-                    cf[a + 1].fetch_add(c, Ordering::Relaxed);
-                    e[g.arc_to[a] as usize].fetch_add(c, Ordering::Relaxed);
+                    st.cf[a].store(0, Ordering::Relaxed);
+                    st.cf[a + 1].fetch_add(c, Ordering::Relaxed);
+                    st.e[g.arc_to[a] as usize].fetch_add(c, Ordering::Relaxed);
                     excess_total += c;
                 }
             }
             // Arcs into s (backward preflow) are never saturated at init.
         }
         // Flow pushed straight into t by the preflow already "arrived".
-        (ParState { cf, e, h }, excess_total)
+        (st, excess_total)
     }
 
     pub fn n(&self) -> usize {
@@ -100,6 +137,30 @@ impl ParState {
     #[inline(always)]
     pub fn residual(&self, a: u32) -> i64 {
         self.cf[a as usize].load(Ordering::Relaxed)
+    }
+
+    /// Write `u`'s height, keeping the level histogram consistent. Safe
+    /// under the engines' single-writer-per-vertex discipline (only the
+    /// worker discharging `u`, or the host between launches, writes
+    /// `h(u)`; the per-level counters themselves are atomic).
+    #[inline(always)]
+    pub fn set_height(&self, u: u32, new_h: u32) {
+        let old = self.h[u as usize].swap(new_h, Ordering::Relaxed);
+        if old == new_h {
+            return;
+        }
+        if let Some(c) = self.hist.get(old as usize) {
+            c.fetch_sub(1, Ordering::Relaxed);
+        }
+        if let Some(c) = self.hist.get(new_h as usize) {
+            c.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Vertices currently at height `level` (tracked for `level < n`).
+    #[inline(always)]
+    pub fn level_count(&self, level: usize) -> u32 {
+        self.hist.get(level).map_or(0, |c| c.load(Ordering::Relaxed))
     }
 
     /// Snapshot residuals into a plain vector (after joining workers).
@@ -163,6 +224,21 @@ mod tests {
         assert_eq!(snap.len(), g.num_arcs());
         assert_eq!(snap[0], 0);
         assert_eq!(snap[1], 3);
+    }
+
+    #[test]
+    fn histogram_tracks_heights() {
+        let g = diamond(); // n = 4
+        let (st, _) = ParState::preflow(&g);
+        assert_eq!(st.level_count(0), 3, "vertices 1, 2 and t start at level 0");
+        st.set_height(1, 2);
+        assert_eq!(st.level_count(0), 2);
+        assert_eq!(st.level_count(2), 1);
+        st.set_height(1, 4); // lift to n: leaves the tracked range
+        assert_eq!(st.level_count(2), 0);
+        assert_eq!(st.level_count(4), 0, "heights >= n are untracked");
+        st.set_height(1, 1); // a global relabel can bring it back
+        assert_eq!(st.level_count(1), 1);
     }
 
     #[test]

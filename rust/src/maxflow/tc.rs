@@ -7,71 +7,84 @@
 //! makes the races benign. The workload imbalance the paper analyses
 //! (Eq. 1) shows up here directly: a worker whose range contains the
 //! active, high-degree vertices finishes last while the others idle.
+//!
+//! Launches execute on a persistent [`WorkerPool`] (created once per
+//! solve, not per launch), and the host step uses the same adaptive
+//! global-relabel cadence + gap heuristic as the VC engine.
 
-use super::global_relabel::{global_relabel, ExcessAccounting};
+use super::global_relabel::{AdaptiveGr, ExcessAccounting, GrScratch};
 use super::lockfree::{discharge_once, LocalCounters};
+use super::pool::WorkerPool;
 use super::state::{AtomicCounters, ParState};
-use super::{FlowResult, SolveOptions, SolveStats};
+use super::{FlowResult, SolveError, SolveOptions, SolveStats};
 use crate::graph::builder::ArcGraph;
 use crate::graph::residual::Residual;
 use crate::util::Timer;
 
 /// Hard cap on host launches; hitting it means the engine is not
-/// converging, which is a bug — fail loudly rather than spin forever.
+/// converging — surfaced as [`SolveError::NoConvergence`], never a panic.
 const MAX_LAUNCHES: u64 = 100_000;
 
 /// Solve max-flow with the thread-centric engine over representation `rep`.
 pub fn solve<R: Residual>(g: &ArcGraph, rep: &R, opts: &SolveOptions) -> FlowResult {
     let total_timer = Timer::start();
     let n = g.n;
-    let threads = opts.resolved_threads().min(n.max(1));
+    let pool = WorkerPool::new(opts.resolved_threads());
+    let active_workers = pool.size().min(n.max(1));
     let cycles = opts.resolved_cycles(n);
     let (st, excess_total) = ParState::preflow(g);
     let mut acct = ExcessAccounting::new(n, excess_total);
     let counters = AtomicCounters::default();
     let mut stats = SolveStats::default();
+    let mut gr_scratch = GrScratch::new(n);
+    let mut adaptive = AdaptiveGr::new(n, opts.gr_alpha);
+    let mut error = None;
 
     // Fixed contiguous ranges, one per worker (thread-centric assignment).
-    let chunk = n.div_ceil(threads);
-    let ranges: Vec<(u32, u32)> = (0..threads)
+    let chunk = n.div_ceil(active_workers);
+    let ranges: Vec<(u32, u32)> = (0..active_workers)
         .map(|w| ((w * chunk).min(n) as u32, ((w + 1) * chunk).min(n) as u32))
         .collect();
 
     while !acct.done(g, &st) {
         stats.launches += 1;
         if stats.launches > MAX_LAUNCHES {
-            panic!("TC engine did not converge after {MAX_LAUNCHES} launches on {} vertices", n);
+            error = Some(SolveError::NoConvergence { launches: stats.launches - 1 });
+            break;
         }
         let kt = Timer::start();
-        std::thread::scope(|scope| {
-            for &(lo, hi) in &ranges {
-                let st = &st;
-                let counters = &counters;
-                scope.spawn(move || {
-                    let mut local = LocalCounters::default();
-                    for _ in 0..cycles {
-                        let mut any = false;
-                        for u in lo..hi {
-                            any |= discharge_once(g, rep, st, u, &mut local);
-                        }
-                        if !any {
-                            break; // this worker's range is quiescent
-                        }
+        {
+            let st = &st;
+            let counters = &counters;
+            let ranges = &ranges;
+            pool.run(move |w| {
+                if w >= active_workers {
+                    return;
+                }
+                let (lo, hi) = ranges[w];
+                let mut local = LocalCounters::default();
+                for _ in 0..cycles {
+                    let mut any = false;
+                    for u in lo..hi {
+                        any |= discharge_once(g, rep, st, u, &mut local);
                     }
-                    local.flush(counters);
-                });
-            }
-        });
+                    if !any {
+                        break; // this worker's range is quiescent
+                    }
+                }
+                local.flush(counters);
+            });
+        }
         stats.kernel_ms += kt.ms();
         stats.cycles += cycles as u64;
-        // Host step: global relabel + termination accounting (Alg. 1 §2).
-        global_relabel(g, rep, &st, &mut acct, opts.global_relabel);
-        stats.global_relabels += 1;
+        // Host step: adaptive global relabel + termination accounting
+        // (Alg. 1 §2); skipped passes still get the cheap gap cut.
+        adaptive.host_step(g, rep, &st, &mut acct, &counters, opts.global_relabel, &mut stats, &mut gr_scratch);
     }
 
     counters.merge_into(&mut stats);
     stats.total_ms = total_timer.ms();
-    FlowResult { value: st.excess(g.t), cf: st.cf_snapshot(), stats }
+    FlowResult { value: st.excess(g.t), cf: st.cf_snapshot(), stats, error }
 }
 
 #[cfg(test)]
@@ -87,6 +100,7 @@ mod tests {
         let opts = SolveOptions { threads, cycles_per_launch: 64, ..Default::default() };
         let rc = solve(&g, &Rcsr::build(&g), &opts);
         assert_eq!(rc.value, want, "TC+RCSR on {}", net.name);
+        assert!(rc.error.is_none());
         super::super::verify(&g, &rc).unwrap();
         let bc = solve(&g, &Bcsr::build(&g), &opts);
         assert_eq!(bc.value, want, "TC+BCSR on {}", net.name);
@@ -140,7 +154,10 @@ mod tests {
     fn stats_are_populated() {
         let net = generators::erdos_renyi(40, 250, 6, 7);
         let g = ArcGraph::build(&net.normalized());
-        let r = solve(&g, &Rcsr::build(&g), &SolveOptions::default());
+        // Legacy cadence so at least one global relabel is guaranteed
+        // (with the adaptive cadence a fast solve may legitimately finish
+        // before the work threshold is reached).
+        let r = solve(&g, &Rcsr::build(&g), &SolveOptions { gr_alpha: 0.0, ..Default::default() });
         assert!(r.stats.launches >= 1);
         assert!(r.stats.pushes > 0);
         assert!(r.stats.scan_arcs > 0);

@@ -1,32 +1,166 @@
 //! Vertex-centric workload-balanced push-relabel — the paper's
-//! contribution (Alg. 2, "two-level parallelism").
+//! contribution (Alg. 2, "two-level parallelism") with a frontier-driven
+//! active-vertex queue.
 //!
-//! Per cycle:
-//!   1. **Scan phase** — all workers sweep disjoint vertex ranges and
-//!      append active vertices to the shared **AVQ** with an atomic
-//!      cursor (Alg. 2 lines 1–4). Scan work is perfectly uniform.
+//! Per launch:
+//!   1. **Launch-start scan** — all workers sweep disjoint vertex ranges
+//!      once and append active vertices to the shared **AVQ** with an
+//!      atomic cursor (Alg. 2 lines 1–4). This is the *only* O(V) sweep of
+//!      the launch: later cycles get their AVQ from activations.
 //!   2. `grid_sync()` — a barrier (Alg. 2 line 5).
 //!   3. **Process phase** — workers *pull AVQ entries through a shared
 //!      atomic cursor* (the CPU analog of tile-per-active-vertex: work is
 //!      balanced across workers no matter how skewed the active set or the
 //!      degree distribution is). Each entry gets one lock-free local
-//!      operation. The paper's warp-level min-reduction is charged in the
-//!      SIMT model (`simt::`); on the CPU the scan is sequential but
-//!      *balanced*, which is the property Table 1/2 measure.
+//!      operation, which also maintains the **next-cycle frontier**: a
+//!      push that raises `e(v)` from ≤ 0 enqueues `v` (the pusher owns the
+//!      transition), and a vertex still active after its own discharge
+//!      re-queues itself. A per-vertex epoch stamp dedups the appends, so
+//!      per-cycle work is O(|active| + touched arcs) instead of O(V).
 //!   4. **Early exit** — an empty AVQ ends the launch (Alg. 2's
 //!      early-break of Alg. 1 line 8), skipping redundant cycles.
+//!
+//! Between launches the host runs the **adaptive global relabel**: the
+//! backward BFS fires only once the kernel has done `gr_alpha · |V|` work
+//! since the last pass (or after a zero-op launch, which keeps termination
+//! sound); skipped passes fall back to the O(V) **gap heuristic**.
+//! Launches execute on a persistent [`WorkerPool`] instead of per-launch
+//! `thread::scope` spawns; all per-solve buffers live in [`VcScratch`], so
+//! a warm session re-enters with zero allocation.
 
-use super::global_relabel::{global_relabel, ExcessAccounting};
-use super::lockfree::{discharge_once, LocalCounters};
+use super::global_relabel::{AdaptiveGr, ExcessAccounting, GrScratch};
+use super::lockfree::{discharge_step, Discharge, LocalCounters};
+use super::pool::WorkerPool;
 use super::state::{AtomicCounters, ParState};
-use super::{FlowResult, SolveOptions, SolveStats};
+use super::{FlowResult, SolveError, SolveOptions, SolveStats};
 use crate::graph::builder::ArcGraph;
 use crate::graph::residual::Residual;
 use crate::util::Timer;
-use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
-use std::sync::Barrier;
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier};
 
+/// Hard cap on host launches; hitting it means the engine is not
+/// converging — surfaced as [`SolveError::NoConvergence`], never a panic:
+/// a serving worker must survive a pathological instance.
 const MAX_LAUNCHES: u64 = 100_000;
+
+/// One AVQ buffer: a fixed-capacity vertex array behind an atomic length.
+struct FrontierQueue {
+    buf: Vec<AtomicU32>,
+    len: AtomicUsize,
+}
+
+impl FrontierQueue {
+    fn with_capacity(n: usize) -> FrontierQueue {
+        FrontierQueue { buf: (0..n).map(|_| AtomicU32::new(0)).collect(), len: AtomicUsize::new(0) }
+    }
+
+    fn ensure(&mut self, n: usize) {
+        if self.buf.len() < n {
+            self.buf.resize_with(n, || AtomicU32::new(0));
+        }
+    }
+
+    #[inline(always)]
+    fn push(&self, v: u32) {
+        let i = self.len.fetch_add(1, Ordering::Relaxed);
+        debug_assert!(i < self.buf.len(), "epoch dedup bounds the queue by |V|");
+        self.buf[i].store(v, Ordering::Relaxed);
+    }
+
+    #[inline(always)]
+    fn get(&self, i: usize) -> u32 {
+        self.buf[i].load(Ordering::Relaxed)
+    }
+
+    #[inline(always)]
+    fn len(&self) -> usize {
+        self.len.load(Ordering::Relaxed)
+    }
+
+    #[inline(always)]
+    fn reset(&self) {
+        self.len.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Reusable per-solve scratch for the VC engine: the double-buffered AVQ,
+/// the per-vertex queued-epoch stamps, the cycle barrier and the
+/// global-relabel BFS buffers. Warm sessions hold one and allocate nothing
+/// per update batch.
+pub struct VcScratch {
+    /// Double-buffered AVQ: cycle `c` reads `avq[c % 2]` and appends the
+    /// next frontier into `avq[(c + 1) % 2]`.
+    avq: [FrontierQueue; 2],
+    /// `queued[v] == epoch` ⇔ `v` is already enqueued for that epoch —
+    /// the dedup that guarantees one AVQ slot per vertex per cycle.
+    queued: Vec<AtomicU64>,
+    /// Monotone epoch base; advanced past every epoch a launch used, so
+    /// stale stamps can never collide across launches or warm restarts.
+    epoch: u64,
+    /// Cycle barrier, rebuilt only when the participant count changes.
+    barrier: Barrier,
+    participants: usize,
+    /// Global-relabel BFS buffers (shared with the warm host loop).
+    pub gr: GrScratch,
+}
+
+impl VcScratch {
+    pub fn new(n: usize, threads: usize) -> VcScratch {
+        let participants = threads.max(1);
+        VcScratch {
+            avq: [FrontierQueue::with_capacity(n), FrontierQueue::with_capacity(n)],
+            queued: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            epoch: 1,
+            barrier: Barrier::new(participants),
+            participants,
+            gr: GrScratch::new(n),
+        }
+    }
+
+    /// Resize for a graph/worker count (no-op when already big enough).
+    fn ensure(&mut self, n: usize, participants: usize) {
+        self.avq[0].ensure(n);
+        self.avq[1].ensure(n);
+        if self.queued.len() < n {
+            // Fresh stamps are 0, which never equals a live epoch (≥ 1).
+            self.queued.resize_with(n, || AtomicU64::new(0));
+        }
+        if self.participants != participants {
+            self.barrier = Barrier::new(participants);
+            self.participants = participants;
+        }
+    }
+
+    /// Enqueue `v` for `epoch` unless it is already queued for it.
+    #[inline(always)]
+    fn enqueue(&self, q: &FrontierQueue, v: u32, epoch: u64) {
+        if self.queued[v as usize].swap(epoch, Ordering::Relaxed) != epoch {
+            q.push(v);
+        }
+    }
+}
+
+/// Reusable execution context for the VC engine: the persistent worker
+/// pool plus the per-solve scratch. Created once per solve (or once per
+/// warm session, surviving every update batch).
+pub struct VcContext {
+    pub pool: Arc<WorkerPool>,
+    pub scratch: VcScratch,
+}
+
+impl VcContext {
+    pub fn new(n: usize, threads: usize) -> VcContext {
+        VcContext::with_pool(n, Arc::new(WorkerPool::new(threads)))
+    }
+
+    /// Share an existing pool (e.g. one pool across every warm session of
+    /// a session worker) while keeping per-instance scratch.
+    pub fn with_pool(n: usize, pool: Arc<WorkerPool>) -> VcContext {
+        let threads = pool.size();
+        VcContext { pool, scratch: VcScratch::new(n, threads) }
+    }
+}
 
 /// Solve max-flow with the vertex-centric engine over representation `rep`.
 pub fn solve<R: Residual>(g: &ArcGraph, rep: &R, opts: &SolveOptions) -> FlowResult {
@@ -34,20 +168,22 @@ pub fn solve<R: Residual>(g: &ArcGraph, rep: &R, opts: &SolveOptions) -> FlowRes
     let (st, excess_total) = ParState::preflow(g);
     let mut acct = ExcessAccounting::new(g.n, excess_total);
     let mut stats = SolveStats::default();
-    run_from_state(g, rep, &st, &mut acct, opts, &mut stats);
+    let mut ctx = VcContext::new(g.n, opts.resolved_threads());
+    let error = run_from_state(g, rep, &st, &mut acct, opts, &mut stats, &mut ctx).err();
     stats.total_ms = total_timer.ms();
-    FlowResult { value: st.excess(g.t), cf: st.cf_snapshot(), stats }
+    FlowResult { value: st.excess(g.t), cf: st.cf_snapshot(), stats, error }
 }
 
 /// Run the vertex-centric host loop (kernel launches interleaved with
-/// global relabels) from an *existing* state until the ExcessTotal
-/// accounting proves termination.
+/// adaptive global relabels) from an *existing* state until the
+/// ExcessTotal accounting proves termination.
 ///
 /// This is the warm-restart entry point used by
 /// [`crate::dynamic::DynamicFlow`]: the incremental engine seeds excess at
-/// update sites and re-enters here with warm heights and residuals, so the
-/// kernel only does work proportional to the repair, not to the whole
-/// graph. [`solve`] is exactly `preflow` + this function.
+/// update sites and re-enters here with warm heights and residuals (and a
+/// warm [`VcContext`] — pool threads and scratch buffers survive across
+/// batches), so the kernel only does work proportional to the repair, not
+/// to the whole graph. [`solve`] is exactly `preflow` + this function.
 ///
 /// Requirements on entry: `h(s) = n` and `acct.excess_total` accounts for
 /// every unit of excess currently outside `s`/`t` (both are established by
@@ -60,94 +196,131 @@ pub fn run_from_state<R: Residual>(
     acct: &mut ExcessAccounting,
     opts: &SolveOptions,
     stats: &mut SolveStats,
-) {
+    ctx: &mut VcContext,
+) -> Result<(), SolveError> {
     let n = g.n;
-    let threads = opts.resolved_threads().min(n.max(1));
+    let active_workers = ctx.pool.size().min(n.max(1));
     let cycles = opts.resolved_cycles(n);
     let counters = AtomicCounters::default();
+    let frontier = opts.frontier;
+    let mut adaptive = AdaptiveGr::new(n, opts.gr_alpha);
+    ctx.scratch.ensure(n, active_workers);
 
-    // Shared AVQ: fixed-capacity buffer + atomic length, rebuilt per cycle.
-    let avq: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
-    let avq_len = AtomicUsize::new(0);
-    let cursor = AtomicUsize::new(0);
-    let executed_cycles = AtomicUsize::new(0);
-
-    let chunk = n.div_ceil(threads);
-    let ranges: Vec<(u32, u32)> = (0..threads)
+    let chunk = n.div_ceil(active_workers);
+    let ranges: Vec<(u32, u32)> = (0..active_workers)
         .map(|w| ((w * chunk).min(n) as u32, ((w + 1) * chunk).min(n) as u32))
         .collect();
 
     while !acct.done(g, st) {
         stats.launches += 1;
         if stats.launches > MAX_LAUNCHES {
-            panic!("VC engine did not converge after {MAX_LAUNCHES} launches on {n} vertices");
+            return Err(SolveError::NoConvergence { launches: stats.launches - 1 });
         }
         let kt = Timer::start();
-        let barrier = Barrier::new(threads);
-        std::thread::scope(|scope| {
-            for (w, &(lo, hi)) in ranges.iter().enumerate() {
-                let st = &*st;
-                let counters = &counters;
-                let avq = &avq;
-                let avq_len = &avq_len;
-                let cursor = &cursor;
-                let barrier = &barrier;
-                let executed_cycles = &executed_cycles;
-                scope.spawn(move || {
-                    let mut local = LocalCounters::default();
-                    for c in 0..cycles {
-                        // -- reset (worker 0), then everyone sees it --
-                        if w == 0 {
-                            avq_len.store(0, Ordering::Relaxed);
-                            cursor.store(0, Ordering::Relaxed);
+        let cursor = AtomicUsize::new(0);
+        let executed_cycles = AtomicUsize::new(0);
+        let frontier_sum = AtomicU64::new(0);
+        let base_epoch = ctx.scratch.epoch;
+        {
+            let sc: &VcScratch = &ctx.scratch;
+            let ranges = &ranges;
+            let counters = &counters;
+            let cursor = &cursor;
+            let executed_cycles = &executed_cycles;
+            let frontier_sum = &frontier_sum;
+            ctx.pool.run(move |w| {
+                if w >= active_workers {
+                    return;
+                }
+                let (lo, hi) = ranges[w];
+                let mut local = LocalCounters::default();
+                for c in 0..cycles {
+                    let cur = &sc.avq[c % 2];
+                    let next = &sc.avq[(c + 1) % 2];
+                    // -- reset (worker 0), then everyone sees it --
+                    if w == 0 {
+                        if c == 0 || !frontier {
+                            cur.reset();
                         }
-                        barrier.wait();
-                        // -- scan phase (Alg. 2 lines 1-4) --
+                        next.reset();
+                        cursor.store(0, Ordering::Relaxed);
+                    }
+                    sc.barrier.wait();
+                    // -- scan phase (Alg. 2 lines 1-4): the O(V) sweep
+                    // runs once per launch; with the frontier disabled
+                    // (legacy engine) it runs every cycle --
+                    if c == 0 || !frontier {
                         for u in lo..hi {
                             if st.is_active(g, u) {
-                                let pos = avq_len.fetch_add(1, Ordering::Relaxed);
-                                avq[pos].store(u, Ordering::Relaxed);
+                                cur.push(u);
                             }
                         }
                         // -- grid_sync() (Alg. 2 line 5) --
-                        barrier.wait();
-                        let len = avq_len.load(Ordering::Relaxed);
-                        if len == 0 {
-                            // Early exit: every worker observes the same
-                            // length after the barrier, so all break here.
-                            if w == 0 {
-                                executed_cycles.fetch_add(c + 1, Ordering::Relaxed);
-                            }
-                            local.flush(counters);
-                            return;
-                        }
-                        // -- process phase: balanced pull of AVQ entries --
-                        loop {
-                            let i = cursor.fetch_add(1, Ordering::Relaxed);
-                            if i >= len {
-                                break;
-                            }
-                            let u = avq[i].load(Ordering::Relaxed);
-                            discharge_once(g, rep, st, u, &mut local);
-                        }
-                        // -- cycle boundary barrier (process/scan races) --
-                        barrier.wait();
+                        sc.barrier.wait();
                     }
+                    let len = cur.len();
                     if w == 0 {
-                        executed_cycles.fetch_add(cycles, Ordering::Relaxed);
+                        frontier_sum.fetch_add(len as u64, Ordering::Relaxed);
                     }
-                    local.flush(counters);
-                });
-            }
-        });
+                    if len == 0 {
+                        // Early exit: every worker observes the same
+                        // length after the barrier, so all break here.
+                        if w == 0 {
+                            executed_cycles.fetch_add(c + 1, Ordering::Relaxed);
+                        }
+                        local.flush(counters);
+                        return;
+                    }
+                    // -- process phase: balanced pull of AVQ entries;
+                    // activations feed the next cycle's frontier --
+                    let next_epoch = base_epoch + c as u64 + 1;
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= len {
+                            break;
+                        }
+                        let u = cur.get(i);
+                        match discharge_step(g, rep, st, u, &mut local) {
+                            Discharge::Idle => {}
+                            Discharge::Pushed { v, activated } => {
+                                if frontier {
+                                    // Heights only rise within a launch, so
+                                    // an observed h(v) ≥ n is final until
+                                    // the next global relabel's rescan.
+                                    if activated && st.height(v) < n as u32 {
+                                        sc.enqueue(next, v, next_epoch);
+                                    }
+                                    if st.is_active(g, u) {
+                                        sc.enqueue(next, u, next_epoch);
+                                    }
+                                }
+                            }
+                            Discharge::Relabeled => {
+                                if frontier && st.is_active(g, u) {
+                                    sc.enqueue(next, u, next_epoch);
+                                }
+                            }
+                        }
+                    }
+                    // -- cycle boundary barrier (process/reset races) --
+                    sc.barrier.wait();
+                }
+                if w == 0 {
+                    executed_cycles.fetch_add(cycles, Ordering::Relaxed);
+                }
+                local.flush(counters);
+            });
+        }
+        // Advance past every epoch this launch used.
+        ctx.scratch.epoch = base_epoch + cycles as u64 + 2;
         stats.kernel_ms += kt.ms();
-        // Host step: global relabel + termination accounting.
-        global_relabel(g, rep, st, acct, opts.global_relabel);
-        stats.global_relabels += 1;
+        stats.cycles += executed_cycles.load(Ordering::Relaxed) as u64;
+        stats.frontier_len_sum += frontier_sum.load(Ordering::Relaxed);
+        // Host step: adaptive global relabel + termination accounting; a
+        // skipped pass still gets the cheap gap cut.
+        adaptive.host_step(g, rep, st, acct, &counters, opts.global_relabel, stats, &mut ctx.scratch.gr);
     }
-
-    stats.cycles += executed_cycles.load(Ordering::Relaxed) as u64;
-    counters.merge_into(stats);
+    Ok(())
 }
 
 #[cfg(test)]
@@ -163,6 +336,7 @@ mod tests {
         let opts = SolveOptions { threads, cycles_per_launch: 64, ..Default::default() };
         let rc = solve(&g, &Rcsr::build(&g), &opts);
         assert_eq!(rc.value, want, "VC+RCSR on {}", net.name);
+        assert!(rc.error.is_none());
         super::super::verify(&g, &rc).unwrap();
         let bc = solve(&g, &Bcsr::build(&g), &opts);
         assert_eq!(bc.value, want, "VC+BCSR on {}", net.name);
@@ -223,5 +397,85 @@ mod tests {
         let r = solve(&g, &Rcsr::build(&g), &opts);
         assert_eq!(r.value, 5);
         assert!(r.stats.cycles < 64, "early exit failed: {} cycles", r.stats.cycles);
+    }
+
+    #[test]
+    fn legacy_scan_engine_still_agrees() {
+        // frontier=false + gr_alpha=0 is the pre-frontier engine: full
+        // scan per cycle, global relabel per launch. Both engines must
+        // land on the same value (the A/B pair bench/table3 measures).
+        let net = generators::erdos_renyi(80, 500, 7, 12);
+        let g = ArcGraph::build(&net.normalized());
+        let want = super::super::dinic::solve(&g).value;
+        let legacy = SolveOptions {
+            threads: 4,
+            cycles_per_launch: 64,
+            frontier: false,
+            gr_alpha: 0.0,
+            ..Default::default()
+        };
+        let r = solve(&g, &Rcsr::build(&g), &legacy);
+        assert_eq!(r.value, want);
+        super::super::verify(&g, &r).unwrap();
+        assert_eq!(r.stats.gr_skipped, 0, "legacy cadence never skips");
+    }
+
+    #[test]
+    fn adaptive_cadence_skips_relabel_on_tiny_work() {
+        // A 100-vertex network whose flow resolves with a handful of ops:
+        // the work-triggered cadence (threshold gr_alpha·|V| = 100) must
+        // skip the O(V+E) BFS entirely.
+        let net = FlowNetwork::new(100, 0, 2, vec![Edge::new(0, 1, 5), Edge::new(1, 2, 5)], "sparse100");
+        let g = ArcGraph::build(&net);
+        let r = solve(&g, &Rcsr::build(&g), &SolveOptions { threads: 2, ..Default::default() });
+        assert_eq!(r.value, 5);
+        assert_eq!(r.stats.global_relabels, 0, "below the work threshold: BFS skipped");
+        assert!(r.stats.gr_skipped >= 1);
+    }
+
+    #[test]
+    fn frontier_dedup_one_slot_per_vertex_per_epoch() {
+        let sc = VcScratch::new(8, 2);
+        let q = &sc.avq[0];
+        sc.enqueue(q, 3, 5);
+        sc.enqueue(q, 3, 5);
+        sc.enqueue(q, 4, 5);
+        assert_eq!(q.len(), 2, "duplicate enqueue within an epoch is dropped");
+        assert_eq!(q.get(0), 3);
+        assert_eq!(q.get(1), 4);
+        q.reset();
+        sc.enqueue(q, 3, 6);
+        assert_eq!(q.len(), 1, "a new epoch may re-queue the vertex");
+    }
+
+    #[test]
+    fn frontier_counters_are_populated() {
+        let net = generators::erdos_renyi(60, 350, 6, 21);
+        let g = ArcGraph::build(&net.normalized());
+        let r = solve(&g, &Bcsr::build(&g), &SolveOptions { threads: 2, ..Default::default() });
+        assert!(r.stats.frontier_len_sum > 0, "frontier work must be accounted");
+        assert!(
+            r.stats.frontier_len_sum <= r.stats.cycles * g.n as u64,
+            "frontier work is bounded by the legacy scan volume"
+        );
+    }
+
+    #[test]
+    fn scratch_reuse_across_solves() {
+        // One context serving two different solves (the warm-session
+        // pattern) must not leak state between them.
+        let mut ctx = VcContext::new(64, 2);
+        for seed in 0..3u64 {
+            let net = generators::erdos_renyi(50, 250, 6, seed);
+            let g = ArcGraph::build(&net.normalized());
+            let rep = Rcsr::build(&g);
+            let want = super::super::dinic::solve(&g).value;
+            let (st, excess_total) = ParState::preflow(&g);
+            let mut acct = ExcessAccounting::new(g.n, excess_total);
+            let mut stats = SolveStats::default();
+            let opts = SolveOptions { threads: 2, cycles_per_launch: 64, ..Default::default() };
+            run_from_state(&g, &rep, &st, &mut acct, &opts, &mut stats, &mut ctx).unwrap();
+            assert_eq!(st.excess(g.t), want, "seed {seed}");
+        }
     }
 }

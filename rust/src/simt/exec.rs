@@ -118,12 +118,16 @@ pub fn simulate_tc(trace: &Trace, rep: Representation, model: &GpuModel, c: &Cos
     }
 }
 
-/// Vertex-centric simulation (Alg. 2): per iteration, a uniform scan phase
-/// builds the AVQ (atomic appends), a `grid_sync()`, then one *tile* (warp)
-/// per active vertex streams that vertex's row cooperatively — coalesced
-/// loads, `log2(32)` tree-reduction steps — and the delegated lane applies
-/// the operation; then a second `grid_sync()`. Iteration latency is the
-/// makespan of each phase over the resident warp slots.
+/// Vertex-centric simulation (Alg. 2 + the frontier-driven AVQ): the
+/// launch-start iteration pays the uniform O(V) sweep that builds the AVQ
+/// (atomic appends); every later iteration's AVQ was fed by the previous
+/// iteration's activations, so its scan phase is charged per *frontier
+/// entry* (a cooperative pop + activity re-check + append), not per
+/// vertex. Then a `grid_sync()`, one *tile* (warp) per active vertex
+/// streaming that vertex's row cooperatively — coalesced loads, `log2(32)`
+/// tree-reduction steps — the delegated lane applying the operation, and a
+/// second `grid_sync()`. Iteration latency is the makespan of each phase
+/// over the resident warp slots.
 pub fn simulate_vc(trace: &Trace, rep: Representation, model: &GpuModel, c: &CostParams) -> SimReport {
     let ws = model.warp_size as f64;
     let slots = model.slots();
@@ -134,15 +138,25 @@ pub fn simulate_vc(trace: &Trace, rep: Representation, model: &GpuModel, c: &Cos
     let reduce = (ws.log2()).ceil() * c.c_reduce_step;
 
     let mut scan_tasks = vec![0.0f64; scan_warps];
-    for iter in &trace.iters {
-        // --- scan phase: uniform sweep + AVQ appends ---
-        for t in scan_tasks.iter_mut() {
-            *t = c.c_check + c.mem_tx;
-        }
-        for op in iter {
-            scan_tasks[op.u as usize / model.warp_size] += c.c_avq_append;
-        }
-        let scan = schedule(&scan_tasks, slots);
+    let mut frontier_tasks: Vec<f64> = Vec::new();
+    for (it, iter) in trace.iters.iter().enumerate() {
+        let scan = if it == 0 {
+            // --- launch-start scan: uniform O(V) sweep + AVQ appends ---
+            for t in scan_tasks.iter_mut() {
+                *t = c.c_check + c.mem_tx;
+            }
+            for op in iter {
+                scan_tasks[op.u as usize / model.warp_size] += c.c_avq_append;
+            }
+            schedule(&scan_tasks, slots)
+        } else {
+            // --- frontier maintenance: work ∝ |frontier|, not |V| ---
+            let warps = iter.len().div_ceil(model.warp_size).max(1);
+            let per_warp = c.c_check + c.mem_tx + c.c_avq_append * (iter.len() as f64 / warps as f64);
+            frontier_tasks.clear();
+            frontier_tasks.resize(warps, per_warp);
+            schedule(&frontier_tasks, slots)
+        };
         // --- process phase: one tile per active vertex ---
         let mut tasks = Vec::with_capacity(iter.len());
         for op in iter {
@@ -183,7 +197,7 @@ mod tests {
     use super::*;
     use crate::graph::builder::ArcGraph;
     use crate::graph::{generators, Rcsr};
-    use crate::simt::trace::record;
+    use crate::simt::trace::{record, Op, Trace};
 
     fn trace_of(net: &crate::graph::builder::FlowNetwork) -> Trace {
         let g = ArcGraph::build(&net.normalized());
@@ -255,6 +269,27 @@ mod tests {
         let r = simulate_vc(&t, Representation::Rcsr, &m, &c);
         let b = simulate_vc(&t, Representation::Bcsr, &m, &c);
         assert!(b.total_cycles < r.total_cycles, "BCSR should coalesce better under VC");
+    }
+
+    #[test]
+    fn frontier_scan_is_charged_per_active_vertex() {
+        // Two traces with identical tiny frontiers but 128x different |V|:
+        // after the launch-start sweep, iteration scan cost must not scale
+        // with V (the frontier regime the host engine now implements).
+        let mk = |n: usize| Trace {
+            n,
+            iters: (0..50).map(|_| vec![Op { u: 0, pushed: true }]).collect(),
+            row_len: vec![4; n],
+            value: 1,
+        };
+        let (m, c) = (GpuModel::default(), CostParams::default());
+        let small = simulate_vc(&mk(1 << 10), Representation::Bcsr, &m, &c);
+        let big = simulate_vc(&mk(1 << 17), Representation::Bcsr, &m, &c);
+        let diff = big.total_cycles - small.total_cycles;
+        assert!(
+            diff.abs() < 500.0,
+            "only the one launch-start sweep may scale with V, got Δ = {diff}"
+        );
     }
 
     #[test]

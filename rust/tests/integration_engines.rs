@@ -100,6 +100,45 @@ fn single_thread_equals_many_threads() {
 }
 
 #[test]
+fn frontier_thread_sweep_matches_dinic() {
+    // The frontier AVQ path across thread counts spanning under- and
+    // over-subscription, on the three regime generators the PR targets.
+    let nets = vec![
+        generators::rmat(&generators::RmatParams { scale: 7, edge_factor: 6, a: 0.57, b: 0.19, c: 0.19, seed: 3 }),
+        generators::genrmf(&generators::GenrmfParams { a: 4, b: 4, c1: 1, c2: 40, seed: 12 }),
+        generators::washington_rlg(&generators::WashingtonParams { levels: 6, width: 8, fanout: 3, max_cap: 15, seed: 13 }),
+    ];
+    for net in nets {
+        let g = ArcGraph::build(&net.normalized());
+        let want = maxflow::dinic::solve(&g).value;
+        for threads in [1, 2, 8, 16] {
+            let opts = SolveOptions { threads, cycles_per_launch: 64, ..Default::default() };
+            for rep in [Representation::Rcsr, Representation::Bcsr] {
+                let r = maxflow::solve_arcs(&g, EngineKind::VertexCentric, rep, &opts);
+                assert_eq!(r.value, want, "VC+{}x{threads} on {}", rep.name(), net.name);
+                maxflow::verify(&g, &r)
+                    .unwrap_or_else(|e| panic!("VC+{}x{threads} on {}: {e}", rep.name(), net.name));
+            }
+        }
+    }
+}
+
+#[test]
+fn oversubscribed_pool_more_threads_than_vertices() {
+    // 16 workers on a 3-vertex instance: the launch clamps to |V| active
+    // workers while the rest of the pool idles — values must not change.
+    use wbpr::graph::Edge;
+    let net = FlowNetwork::new(3, 0, 2, vec![Edge::new(0, 1, 5), Edge::new(1, 2, 4)], "tiny3");
+    let g = ArcGraph::build(&net);
+    let opts = SolveOptions { threads: 16, cycles_per_launch: 32, ..Default::default() };
+    for kind in [EngineKind::ThreadCentric, EngineKind::VertexCentric] {
+        let r = maxflow::solve_arcs(&g, kind, Representation::Rcsr, &opts);
+        assert_eq!(r.value, 4, "{} oversubscribed", kind.name());
+        maxflow::verify(&g, &r).unwrap();
+    }
+}
+
+#[test]
 fn stats_reflect_work() {
     let net = generators::genrmf(&generators::GenrmfParams { a: 6, b: 6, c1: 1, c2: 40, seed: 9 });
     let g = ArcGraph::build(&net.normalized());
