@@ -32,7 +32,7 @@ fn main() {
         native_workers: 2,
         enable_device: true,
         solve: SolveOptions::default(),
-        router: Default::default(),
+        ..Default::default()
     };
     let coord = Coordinator::start(config);
     assert!(coord.has_device(), "artifacts missing — run `make artifacts` first");

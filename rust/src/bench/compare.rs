@@ -1,0 +1,237 @@
+//! Perf-regression comparison between two `BENCH_table1.json` documents
+//! (the `bench smoke` perf tracker).
+//!
+//! CI restores the previous main-branch artifact, runs a fresh `bench
+//! smoke`, and calls `wbpr bench compare old.json new.json --fail-above
+//! 1.25`: any per-record wall-clock ratio above the threshold fails the
+//! job, so hot-path regressions land loudly instead of silently (ROADMAP:
+//! "use the new BENCH_table1.json CI artifact to alert on wall-clock
+//! regressions between PRs").
+//!
+//! Wall-clock on shared CI runners is noisy, so the default threshold is
+//! generous (25%) and the counter columns (`pushes`, `relabels`) are
+//! reported alongside — a wall regression with flat counters is machine
+//! noise; one with grown counters is an algorithmic regression.
+
+use super::report::Table;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// One record of a perf-tracker document, keyed by (graph, engine, rep).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Measurement {
+    pub wall_ms: f64,
+    pub pushes: u64,
+    pub relabels: u64,
+}
+
+pub type Key = (String, String, String);
+
+/// Parse a `wbpr/bench_table1/v1` document into keyed measurements.
+pub fn parse_records(doc: &str) -> Result<BTreeMap<Key, Measurement>, String> {
+    let json = Json::parse(doc)?;
+    match json.get("schema").and_then(Json::as_str) {
+        Some("wbpr/bench_table1/v1") => {}
+        other => return Err(format!("unexpected schema {other:?} (want wbpr/bench_table1/v1)")),
+    }
+    let records = json
+        .get("records")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "document has no records array".to_string())?;
+    let mut out = BTreeMap::new();
+    for (i, r) in records.iter().enumerate() {
+        let field = |name: &str| {
+            r.get(name)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("record {i}: missing string field '{name}'"))
+        };
+        let num = |name: &str| {
+            r.get(name)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("record {i}: missing numeric field '{name}'"))
+        };
+        let key = (field("graph")?, field("engine")?, field("rep")?);
+        let m = Measurement {
+            wall_ms: num("wall_ms")?,
+            pushes: num("pushes")? as u64,
+            relabels: num("relabels")? as u64,
+        };
+        out.insert(key, m);
+    }
+    Ok(out)
+}
+
+/// Outcome of one old-vs-new comparison.
+#[derive(Debug)]
+pub struct Comparison {
+    /// Rendered report table.
+    pub report: String,
+    /// Keys whose wall-clock ratio exceeded the threshold.
+    pub regressions: Vec<Key>,
+    /// Records present in only one document (new graphs / removed
+    /// configurations are informational, never failures).
+    pub unmatched: usize,
+}
+
+impl Comparison {
+    pub fn is_regression(&self) -> bool {
+        !self.regressions.is_empty()
+    }
+}
+
+/// Compare two parsed documents. A record regresses when
+/// `new.wall_ms > fail_above * old.wall_ms` (with a 50µs floor on the old
+/// measurement so sub-noise entries can't produce infinite ratios).
+pub fn compare(
+    old: &BTreeMap<Key, Measurement>,
+    new: &BTreeMap<Key, Measurement>,
+    fail_above: f64,
+) -> Comparison {
+    let mut t = Table::new(&[
+        "graph", "engine", "rep", "old ms", "new ms", "ratio", "old ops", "new ops", "verdict",
+    ]);
+    let mut regressions = Vec::new();
+    let mut unmatched = 0;
+    for (key, o) in old {
+        let Some(n) = new.get(key) else {
+            unmatched += 1;
+            continue;
+        };
+        let floor = 0.05; // ms
+        let ratio = n.wall_ms / o.wall_ms.max(floor);
+        let regressed = n.wall_ms > fail_above * o.wall_ms.max(floor);
+        if regressed {
+            regressions.push(key.clone());
+        }
+        t.row(vec![
+            key.0.clone(),
+            key.1.clone(),
+            key.2.clone(),
+            format!("{:.3}", o.wall_ms),
+            format!("{:.3}", n.wall_ms),
+            format!("{ratio:.2}x"),
+            (o.pushes + o.relabels).to_string(),
+            (n.pushes + n.relabels).to_string(),
+            if regressed { "REGRESSED".to_string() } else { "ok".to_string() },
+        ]);
+    }
+    unmatched += new.keys().filter(|k| !old.contains_key(*k)).count();
+    let report = format!(
+        "{}\ncompared {} records (threshold {:.2}x), {} regression(s), {} unmatched\n",
+        t.render(),
+        old.len().min(new.len()),
+        fail_above,
+        regressions.len(),
+        unmatched
+    );
+    Comparison { report, regressions, unmatched }
+}
+
+/// File-level entry point for the CLI: parse both documents, compare, and
+/// return `Err` (with the full report) when anything regressed.
+pub fn compare_files(old_path: &str, new_path: &str, fail_above: f64) -> Result<String, String> {
+    let old_doc = std::fs::read_to_string(old_path).map_err(|e| format!("read {old_path}: {e}"))?;
+    let new_doc = std::fs::read_to_string(new_path).map_err(|e| format!("read {new_path}: {e}"))?;
+    let old = parse_records(&old_doc).map_err(|e| format!("{old_path}: {e}"))?;
+    let new = parse_records(&new_doc).map_err(|e| format!("{new_path}: {e}"))?;
+    if old.is_empty() {
+        return Err(format!("{old_path}: no records to compare"));
+    }
+    let cmp = compare(&old, &new, fail_above);
+    if cmp.is_regression() {
+        let names: Vec<String> = cmp
+            .regressions
+            .iter()
+            .map(|(g, e, r)| format!("{g}/{e}+{r}"))
+            .collect();
+        Err(format!(
+            "{}\nperf regression above {:.2}x in: {}",
+            cmp.report,
+            fail_above,
+            names.join(", ")
+        ))
+    } else {
+        Ok(cmp.report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::table1::{records_json, BenchRecord};
+
+    fn doc(wall: f64, pushes: u64) -> String {
+        records_json(&[BenchRecord {
+            graph: "R6".into(),
+            engine: "VC",
+            rep: "BCSR",
+            wall_ms: wall,
+            pushes,
+            relabels: 10,
+            frontier_len_sum: 5,
+        }])
+        .to_string()
+    }
+
+    #[test]
+    fn flat_run_passes() {
+        let old = parse_records(&doc(10.0, 100)).unwrap();
+        let new = parse_records(&doc(11.0, 100)).unwrap();
+        let cmp = compare(&old, &new, 1.25);
+        assert!(!cmp.is_regression());
+        assert!(cmp.report.contains("ok"));
+    }
+
+    #[test]
+    fn regression_is_flagged() {
+        let old = parse_records(&doc(10.0, 100)).unwrap();
+        let new = parse_records(&doc(15.0, 260)).unwrap();
+        let cmp = compare(&old, &new, 1.25);
+        assert!(cmp.is_regression());
+        assert_eq!(cmp.regressions.len(), 1);
+        assert!(cmp.report.contains("REGRESSED"));
+    }
+
+    #[test]
+    fn sub_noise_measurements_cannot_explode() {
+        // 1µs -> 40µs is a 40x ratio but both are under the 50µs floor.
+        let old = parse_records(&doc(0.001, 5)).unwrap();
+        let new = parse_records(&doc(0.04, 5)).unwrap();
+        assert!(!compare(&old, &new, 1.25).is_regression());
+    }
+
+    #[test]
+    fn unmatched_records_are_informational() {
+        let old = parse_records(&doc(10.0, 100)).unwrap();
+        let renamed = doc(10.0, 100).replace("R6", "R7");
+        let new = parse_records(&renamed).unwrap();
+        let cmp = compare(&old, &new, 1.25);
+        assert!(!cmp.is_regression());
+        assert_eq!(cmp.unmatched, 2, "one old-only + one new-only");
+    }
+
+    #[test]
+    fn parse_rejects_wrong_schema() {
+        assert!(parse_records(r#"{"schema":"other","records":[]}"#).is_err());
+        assert!(parse_records("{}").is_err());
+        assert!(parse_records("not json").is_err());
+    }
+
+    #[test]
+    fn compare_files_roundtrip() {
+        let dir = std::env::temp_dir().join("wbpr-bench-compare-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let old_p = dir.join("old.json");
+        let new_p = dir.join("new.json");
+        std::fs::write(&old_p, doc(10.0, 100)).unwrap();
+        std::fs::write(&new_p, doc(10.5, 100)).unwrap();
+        let report = compare_files(old_p.to_str().unwrap(), new_p.to_str().unwrap(), 1.25).unwrap();
+        assert!(report.contains("ok"));
+        std::fs::write(&new_p, doc(20.0, 300)).unwrap();
+        let err = compare_files(old_p.to_str().unwrap(), new_p.to_str().unwrap(), 1.25).unwrap_err();
+        assert!(err.contains("perf regression"), "{err}");
+        let _ = std::fs::remove_file(&old_p);
+        let _ = std::fs::remove_file(&new_p);
+    }
+}

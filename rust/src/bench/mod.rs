@@ -8,10 +8,14 @@
 //!   from the SIMT cost model.
 //! * [`table2`] — bipartite matching times + max-flow (matching) values.
 //! * [`table3`] — incremental repair vs from-scratch re-solve under
-//!   streaming capacity updates (the dynamic workload; repo extension).
+//!   streaming capacity updates (the dynamic workload; repo extension),
+//!   plus the session shard-scaling sweep.
 //! * [`fig3`] — per-warp workload distribution statistics, TC vs VC.
 //! * [`report`] — markdown table rendering shared by the benches and CLI.
+//! * [`compare`] — perf-regression comparison between two `bench smoke`
+//!   JSON artifacts (the CI `bench-regression` job).
 
+pub mod compare;
 pub mod fig3;
 pub mod report;
 pub mod suite;

@@ -11,11 +11,14 @@
 
 use super::report::{ms, speedup, Table};
 use super::Scale;
+use crate::coordinator::{Coordinator, CoordinatorConfig, Job, ShardPoolConfig};
 use crate::dynamic::DynamicFlow;
 use crate::graph::builder::{ArcGraph, FlowNetwork};
 use crate::graph::generators::{self, update_stream, UpdateStreamParams};
 use crate::graph::Representation;
 use crate::maxflow::{self, EngineKind, SolveOptions};
+use crate::util::Timer;
+use std::collections::HashMap;
 
 /// One dynamic-suite entry.
 pub struct DynCase {
@@ -223,6 +226,203 @@ pub fn render(rows: &[Row]) -> String {
     )
 }
 
+// ---------------------------------------------------------------------------
+// Shard scaling — aggregate session throughput vs. warm-worker count.
+// ---------------------------------------------------------------------------
+
+/// One shard-scaling row: the same multi-tenant update workload replayed
+/// through the coordinator at a given session-shard count.
+#[derive(Debug, Clone)]
+pub struct ShardScaleRow {
+    pub shards: usize,
+    pub sessions: usize,
+    pub batches_per_session: usize,
+    /// Total individual `GraphUpdate`s applied across all sessions.
+    pub updates: usize,
+    /// Wall-clock to open (from-scratch solve) every session, ms.
+    pub open_ms: f64,
+    /// Wall-clock from first update submitted to last result, ms.
+    pub update_ms: f64,
+    /// The headline aggregate throughput: `updates / update_ms`.
+    pub updates_per_sec: f64,
+    /// Every session's final value matched a from-scratch Dinic solve of
+    /// its fully-updated network.
+    pub values_agree: bool,
+}
+
+/// Default sweep for the shard-scaling column ({1, 2, 4} shards; the
+/// acceptance target is ≥ 2.5x aggregate updates/sec at 4 shards vs the
+/// single-worker baseline).
+pub const SHARD_SWEEP: [usize; 3] = [1, 2, 4];
+
+/// Replay `sessions` independent warm sessions × `batches_per_session`
+/// capacity-update batches through a coordinator with `shards` session
+/// workers, measuring aggregate update throughput. Deterministic: graphs
+/// and streams depend only on the session index.
+pub fn run_shard_case(
+    shards: usize,
+    sessions: usize,
+    batches_per_session: usize,
+    opts: &SolveOptions,
+) -> ShardScaleRow {
+    let config = CoordinatorConfig {
+        native_workers: 1,
+        enable_device: false,
+        solve: opts.clone(),
+        session: ShardPoolConfig { shards, ..Default::default() },
+        ..Default::default()
+    };
+    let coord = Coordinator::start(config);
+
+    // Per-session graph + deterministic capacity-only stream (2% of |E|
+    // per batch) over the normalized edge list the session will hold.
+    let mut nets = Vec::with_capacity(sessions);
+    let mut streams = Vec::with_capacity(sessions);
+    for sid in 0..sessions as u64 {
+        let net = generators::erdos_renyi(80, 400, 8, 1000 + sid).normalized();
+        let stream = update_stream(
+            &net,
+            &UpdateStreamParams::capacity_only(net.m(), batches_per_session, 0.02, 9, 0x5A4D + sid),
+        );
+        nets.push(net);
+        streams.push(stream);
+    }
+
+    let t_open = Timer::start();
+    for (sid, net) in nets.iter().enumerate() {
+        coord.submit(Job::SessionOpen { session: sid as u64, net: net.clone() });
+    }
+    for o in coord.collect(sessions) {
+        o.result.expect("session open ok");
+    }
+    let open_ms = t_open.ms();
+
+    // Submit every batch up front, round-robin across sessions, so all
+    // shards have work queued the whole time; per-session order is
+    // preserved by the shard's FIFO queue.
+    let t_upd = Timer::start();
+    let mut job_session: HashMap<u64, usize> = HashMap::new();
+    let mut total_updates = 0usize;
+    let mut expected = 0usize;
+    for b in 0..batches_per_session {
+        for (sid, stream) in streams.iter().enumerate() {
+            let batch = stream.batches[b].clone();
+            total_updates += batch.len();
+            let id = coord.submit(Job::SessionUpdate { session: sid as u64, batch });
+            job_session.insert(id, sid);
+            expected += 1;
+        }
+    }
+    let mut last_value: Vec<(u64, i64)> = vec![(0, 0); sessions]; // (job id, value)
+    for o in coord.collect(expected) {
+        let sid = job_session[&o.id];
+        let v = o.result.expect("session update ok");
+        // The highest job id per session is its last batch (ids ascend in
+        // submission order and per-session order is FIFO).
+        if o.id >= last_value[sid].0 {
+            last_value[sid] = (o.id, v.value);
+        }
+    }
+    let update_ms = t_upd.ms();
+
+    // Reference: apply the whole stream to a local copy, Dinic the result.
+    let mut values_agree = true;
+    for (sid, net) in nets.iter().enumerate() {
+        let mut now = net.clone();
+        for b in &streams[sid].batches {
+            b.apply_to_network(&mut now).expect("stream valid");
+        }
+        let want = maxflow::dinic::solve(&ArcGraph::build(&now)).value;
+        if last_value[sid].1 != want {
+            values_agree = false;
+        }
+    }
+
+    for sid in 0..sessions as u64 {
+        coord.submit(Job::SessionClose { session: sid });
+    }
+    for o in coord.collect(sessions) {
+        o.result.expect("session close ok");
+    }
+    coord.shutdown();
+
+    ShardScaleRow {
+        shards,
+        sessions,
+        batches_per_session,
+        updates: total_updates,
+        open_ms,
+        update_ms,
+        updates_per_sec: total_updates as f64 / (update_ms / 1000.0).max(1e-9),
+        values_agree,
+    }
+}
+
+/// Run the sweep (typically [`SHARD_SWEEP`]).
+pub fn run_shard_scaling(
+    shard_counts: &[usize],
+    sessions: usize,
+    batches_per_session: usize,
+    opts: &SolveOptions,
+) -> Vec<ShardScaleRow> {
+    shard_counts
+        .iter()
+        .map(|&s| run_shard_case(s, sessions, batches_per_session, opts))
+        .collect()
+}
+
+/// Render the shard-scaling column in the repo's table style.
+pub fn render_shard_scaling(rows: &[ShardScaleRow]) -> String {
+    let mut t = Table::new(&[
+        "shards", "sessions", "batches", "updates", "open ms", "update ms", "upd/s",
+        "speedup vs 1 shard", "values",
+    ]);
+    let base = rows.iter().find(|r| r.shards == 1).map(|r| r.updates_per_sec);
+    for r in rows {
+        let sp = r.updates_per_sec / base.unwrap_or(r.updates_per_sec);
+        t.row(vec![
+            r.shards.to_string(),
+            r.sessions.to_string(),
+            r.batches_per_session.to_string(),
+            r.updates.to_string(),
+            ms(r.open_ms),
+            ms(r.update_ms),
+            format!("{:.0}", r.updates_per_sec),
+            speedup(sp),
+            if r.values_agree { "agree".into() } else { "MISMATCH".into() },
+        ]);
+    }
+    format!(
+        "{}\nshard-scaling target: >= 2.5x aggregate updates/sec at 4 shards vs the single-worker baseline\n",
+        t.render()
+    )
+}
+
+/// Serialize shard-scaling rows as the `BENCH_shards.json` CI artifact.
+pub fn shard_records_json(rows: &[ShardScaleRow]) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+    let arr = rows
+        .iter()
+        .map(|r| {
+            let mut o = BTreeMap::new();
+            o.insert("shards".to_string(), Json::Num(r.shards as f64));
+            o.insert("sessions".to_string(), Json::Num(r.sessions as f64));
+            o.insert("batches_per_session".to_string(), Json::Num(r.batches_per_session as f64));
+            o.insert("updates".to_string(), Json::Num(r.updates as f64));
+            o.insert("open_ms".to_string(), Json::Num(r.open_ms));
+            o.insert("update_ms".to_string(), Json::Num(r.update_ms));
+            o.insert("updates_per_sec".to_string(), Json::Num(r.updates_per_sec));
+            o.insert("values_agree".to_string(), Json::Bool(r.values_agree));
+            Json::Obj(o)
+        })
+        .collect();
+    let mut doc = BTreeMap::new();
+    doc.insert("schema".to_string(), Json::Str("wbpr/bench_shards/v1".to_string()));
+    doc.insert("records".to_string(), Json::Arr(arr));
+    Json::Obj(doc)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -247,6 +447,27 @@ mod tests {
         // actually skipped host BFS passes on the repair stream.
         assert!(row.legacy_ms > 0.0);
         assert!(row.gr_skipped > 0, "warm repairs must skip global relabels");
+    }
+
+    #[test]
+    fn shard_scaling_rows_are_correct_and_render() {
+        let opts = SolveOptions { threads: 2, cycles_per_launch: 64, ..Default::default() };
+        // Tiny sweep: correctness of the harness, not throughput claims
+        // (those belong to `wbpr bench shards` on quiet hardware).
+        let rows = run_shard_scaling(&[1, 2], 4, 2, &opts);
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(r.values_agree, "sharded session values must match Dinic ({} shards)", r.shards);
+            assert!(r.updates > 0);
+            assert!(r.updates_per_sec > 0.0);
+        }
+        let s = render_shard_scaling(&rows);
+        assert!(s.contains("shards"));
+        assert!(s.contains("agree"));
+        let j = shard_records_json(&rows);
+        let back = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("schema").unwrap().as_str(), Some("wbpr/bench_shards/v1"));
+        assert_eq!(back.get("records").unwrap().as_arr().unwrap().len(), 2);
     }
 
     #[test]

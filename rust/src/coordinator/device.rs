@@ -14,7 +14,10 @@ use crate::runtime::client::DeviceState;
 use crate::runtime::pack::PackedGraph;
 use crate::runtime::{Runtime, VariantSpec};
 use crate::util::Timer;
-use anyhow::{anyhow, Context, Result};
+// In-repo anyhow shim while the xla closure stays unvendored (see
+// `runtime/client.rs` / `util/error.rs`).
+use crate::anyhow;
+use crate::util::error::{Context, Result};
 use std::sync::atomic::Ordering;
 
 /// Safety cap on device launches (non-convergence = bug).

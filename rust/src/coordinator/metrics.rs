@@ -18,11 +18,31 @@ pub struct EngineMetrics {
 #[derive(Debug, Default)]
 pub struct Metrics {
     inner: Mutex<BTreeMap<String, EngineMetrics>>,
+    /// Serving-policy event counters (evictions, re-hydrations,
+    /// recomputes, …) — things that happen *inside* a job rather than
+    /// being one.
+    events: Mutex<BTreeMap<String, u64>>,
 }
 
 impl Metrics {
     pub fn new() -> Metrics {
         Metrics::default()
+    }
+
+    /// Count one occurrence of a serving-policy event.
+    pub fn bump(&self, event: &str) {
+        self.bump_by(event, 1);
+    }
+
+    /// Count `n` occurrences of a serving-policy event.
+    pub fn bump_by(&self, event: &str, n: u64) {
+        let mut e = self.events.lock().unwrap();
+        *e.entry(event.to_string()).or_insert(0) += n;
+    }
+
+    /// Snapshot of the event counters.
+    pub fn events(&self) -> BTreeMap<String, u64> {
+        self.events.lock().unwrap().clone()
     }
 
     /// Record a completed job.
@@ -58,6 +78,13 @@ impl Metrics {
                 std = v.latency_ms.std(),
             ));
         }
+        let events = self.events();
+        if !events.is_empty() {
+            out.push_str("events:\n");
+            for (k, n) in events {
+                out.push_str(&format!("  {k:<23} {n:>5}\n"));
+            }
+        }
         out
     }
 }
@@ -87,6 +114,20 @@ mod tests {
         let r = m.render();
         assert!(r.contains('x'));
         assert!(r.contains("jobs"));
+    }
+
+    #[test]
+    fn event_counters_accumulate_and_render() {
+        let m = Metrics::new();
+        m.bump("session:evict");
+        m.bump_by("session:evict", 2);
+        m.bump("session:rehydrate");
+        let e = m.events();
+        assert_eq!(e["session:evict"], 3);
+        assert_eq!(e["session:rehydrate"], 1);
+        let r = m.render();
+        assert!(r.contains("session:evict"));
+        assert!(r.contains("events:"));
     }
 
     #[test]

@@ -14,11 +14,16 @@
 //!   source/super-sink reduction (paper §4.1's 20-pair setup), with
 //!   age-based flushing so partial batches are never stranded.
 //! * [`session`] — warm per-graph sessions for the streaming-update
-//!   workload: each session owns a solved [`crate::dynamic::DynamicFlow`]
-//!   and repairs it incrementally across `Job::SessionUpdate` requests.
+//!   workload: each session owns a solved [`crate::dynamic::DynamicFlow`],
+//!   repairs it incrementally (or recomputes, when the cost router
+//!   predicts that's cheaper) across `Job::SessionUpdate` requests, and is
+//!   TTL-evicted to an on-disk snapshot when idle.
+//! * [`shard`] — the session shard pool: consistent hashing (jump hash)
+//!   places each session id on one of N single-owner session workers,
+//!   each with its own slice of the machine's threads.
 //! * [`server`] — the leader event loop: worker threads, job queue,
 //!   result collection, metrics.
-//! * [`metrics`] — counters + latency summaries.
+//! * [`metrics`] — counters + latency summaries + serving-policy events.
 
 pub mod batcher;
 #[cfg(feature = "device")]
@@ -32,7 +37,9 @@ pub mod metrics;
 pub mod router;
 pub mod server;
 pub mod session;
+pub mod shard;
 
-pub use router::{Route, Router};
+pub use router::{Route, Router, RouterConfig, UpdateRoute};
 pub use server::{Coordinator, CoordinatorConfig, Job, JobOutput};
-pub use session::SessionManager;
+pub use session::{SessionConfig, SessionManager};
+pub use shard::{jump_hash, SessionShardPool, ShardPoolConfig};

@@ -30,6 +30,15 @@ impl Route {
     }
 }
 
+/// How a warm session should serve one [`crate::dynamic::UpdateBatch`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UpdateRoute {
+    /// Repair the warm state incrementally ([`crate::dynamic::DynamicFlow::apply`]).
+    Repair,
+    /// Edit the network and re-solve from scratch (predicted cheaper).
+    Recompute,
+}
+
 /// Routing policy.
 #[derive(Debug, Clone)]
 pub struct RouterConfig {
@@ -42,11 +51,41 @@ pub struct RouterConfig {
     pub vc_min_vertices: usize,
     /// Prefer the device when a variant fits.
     pub prefer_device: bool,
+    /// Cost-based update routing for warm sessions: a batch is served by a
+    /// from-scratch re-solve once its predicted repair work (batch size ×
+    /// locality × the session's observed ops-per-update, in the Table 3
+    /// `pushes + relabels` currency) exceeds `recompute_ratio` × the
+    /// session's observed from-scratch cost. `1.0` = recompute exactly
+    /// when repair is predicted more expensive; `f64::INFINITY` = always
+    /// repair (the pre-PR behavior).
+    pub recompute_ratio: f64,
 }
 
 impl Default for RouterConfig {
     fn default() -> Self {
-        RouterConfig { vc_cv_threshold: 0.8, vc_min_vertices: 1024, prefer_device: true }
+        RouterConfig {
+            vc_cv_threshold: 0.8,
+            vc_min_vertices: 1024,
+            prefer_device: true,
+            recompute_ratio: 1.0,
+        }
+    }
+}
+
+impl RouterConfig {
+    /// Decide repair vs recompute for one update batch.
+    ///
+    /// `predicted_repair_ops` is `None` until the session has observed at
+    /// least one repair (no data → repair, which also gathers the datum);
+    /// `scratch_ops` is the session's latest observed from-scratch solve
+    /// cost. Both are in the Table 3 work currency (`pushes + relabels`).
+    pub fn route_update(&self, predicted_repair_ops: Option<f64>, scratch_ops: f64) -> UpdateRoute {
+        match predicted_repair_ops {
+            Some(p) if scratch_ops > 0.0 && p > self.recompute_ratio * scratch_ops => {
+                UpdateRoute::Recompute
+            }
+            _ => UpdateRoute::Repair,
+        }
     }
 }
 
@@ -170,5 +209,24 @@ mod tests {
         let cfg = RouterConfig { prefer_device: false, ..Default::default() };
         let r = Router::new(Some(manifest()), cfg);
         assert!(matches!(r.route(50, 8, &flat(4.0)), Route::Native { .. }));
+    }
+
+    #[test]
+    fn update_routing_is_cost_based_and_tunable() {
+        let cfg = RouterConfig::default(); // recompute_ratio = 1.0
+        // No repair history yet: always repair (gathers the datum).
+        assert_eq!(cfg.route_update(None, 1000.0), UpdateRoute::Repair);
+        // Cheap predicted repair: repair.
+        assert_eq!(cfg.route_update(Some(100.0), 1000.0), UpdateRoute::Repair);
+        // Predicted repair dearer than a fresh solve: recompute.
+        assert_eq!(cfg.route_update(Some(1500.0), 1000.0), UpdateRoute::Recompute);
+        // No scratch baseline: repair.
+        assert_eq!(cfg.route_update(Some(1500.0), 0.0), UpdateRoute::Repair);
+        // The knob is live: infinity disables recomputes entirely...
+        let always_repair = RouterConfig { recompute_ratio: f64::INFINITY, ..Default::default() };
+        assert_eq!(always_repair.route_update(Some(1e12), 1.0), UpdateRoute::Repair);
+        // ... and a tiny ratio flips even cheap batches to recompute.
+        let eager = RouterConfig { recompute_ratio: 0.01, ..Default::default() };
+        assert_eq!(eager.route_update(Some(100.0), 1000.0), UpdateRoute::Recompute);
     }
 }

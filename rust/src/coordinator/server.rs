@@ -1,15 +1,17 @@
 //! The leader event loop: a thread-pool coordinator that routes max-flow /
-//! matching jobs to native engine workers or the PJRT device worker,
-//! collects results, and keeps serving metrics.
+//! matching jobs to native engine workers, the PJRT device worker, or the
+//! sharded session pool, collects results, and keeps serving metrics.
 //!
 //! Topology: N native workers share one queue; the device worker (if the
 //! AOT artifacts are present) owns its own queue because the PJRT client
-//! lives on that thread. The router decides placement per job from the
-//! graph's shape (see [`super::router`]).
+//! lives on that thread; warm sessions live on the
+//! [`super::shard::SessionShardPool`] — consistent-hash-placed
+//! single-owner workers, one queue each. The router decides placement per
+//! job from the graph's shape (see [`super::router`]).
 
 use super::metrics::Metrics;
 use super::router::{Route, Router, RouterConfig};
-use super::session::SessionManager;
+use super::shard::{SessionJob, SessionShardPool, ShardPoolConfig};
 use crate::dynamic::UpdateBatch;
 use crate::graph::bipartite::BipartiteGraph;
 use crate::graph::builder::{ArcGraph, FlowNetwork};
@@ -67,6 +69,8 @@ pub struct CoordinatorConfig {
     pub enable_device: bool,
     pub solve: SolveOptions,
     pub router: RouterConfig,
+    /// Session shard pool shape + TTL/snapshot policy.
+    pub session: ShardPoolConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -76,6 +80,7 @@ impl Default for CoordinatorConfig {
             enable_device: true,
             solve: SolveOptions::default(),
             router: RouterConfig::default(),
+            session: ShardPoolConfig::default(),
         }
     }
 }
@@ -92,7 +97,7 @@ enum Envelope {
 pub struct Coordinator {
     tx_native: Option<mpsc::Sender<Envelope>>,
     tx_device: Option<mpsc::Sender<Envelope>>,
-    tx_session: Option<mpsc::Sender<Envelope>>,
+    sessions: Option<SessionShardPool>,
     rx_out: mpsc::Receiver<JobOutput>,
     next_id: AtomicU64,
     router: Router,
@@ -142,26 +147,23 @@ impl Coordinator {
             None
         };
 
-        // Session worker: owns every warm DynamicFlow, single-threaded by
-        // construction (the warm state is the whole point — no sharing).
-        let (tx_session, rx_session) = mpsc::channel::<Envelope>();
-        {
-            let tx_out = tx_out.clone();
-            let metrics = metrics.clone();
-            let solve = config.solve.clone();
-            handles.push(
-                std::thread::Builder::new()
-                    .name("wbpr-session".into())
-                    .spawn(move || session_worker(rx_session, tx_out, metrics, solve))
-                    .expect("spawn session worker"),
-            );
-        }
+        // Session shard pool: warm DynamicFlow state sharded across
+        // single-owner workers by consistent hashing on the session id
+        // (see `super::shard`); each shard owns a slice of the machine's
+        // threads and runs TTL eviction between jobs.
+        let sessions = SessionShardPool::start(
+            &config.session,
+            &config.solve,
+            &config.router,
+            tx_out.clone(),
+            metrics.clone(),
+        );
 
         let router = Router::new(manifest, config.router.clone());
         Coordinator {
             tx_native: Some(tx_native),
             tx_device,
-            tx_session: Some(tx_session),
+            sessions: Some(sessions),
             rx_out,
             next_id: AtomicU64::new(1),
             router,
@@ -169,6 +171,11 @@ impl Coordinator {
             handles,
             config,
         }
+    }
+
+    /// Session shard count (for benches and introspection).
+    pub fn session_shards(&self) -> usize {
+        self.sessions.as_ref().map_or(0, |s| s.shards())
     }
 
     pub fn metrics(&self) -> &Metrics {
@@ -194,22 +201,35 @@ impl Coordinator {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let timer = Timer::start();
         let route = self.router.place(&job);
-        let env = Envelope::Work(id, job, timer);
         match route {
             Route::Session => {
-                self.tx_session.as_ref().expect("not shut down").send(env).expect("session worker alive");
+                let pool = self.sessions.as_ref().expect("not shut down");
+                match job {
+                    Job::SessionOpen { session, net } => {
+                        pool.submit(id, session, SessionJob::Open { net }, timer)
+                    }
+                    Job::SessionUpdate { session, batch } => {
+                        pool.submit(id, session, SessionJob::Update { batch }, timer)
+                    }
+                    Job::SessionClose { session } => pool.submit(id, session, SessionJob::Close, timer),
+                    other => unreachable!("router placed non-session job on sessions: {other:?}"),
+                }
                 return id;
             }
             Route::Device(_) => {
                 if let Some(tx) = &self.tx_device {
-                    tx.send(env).expect("device worker alive");
+                    tx.send(Envelope::Work(id, job, timer)).expect("device worker alive");
                     return id;
                 }
                 // Device preferred but absent: fall through to native.
             }
             Route::Native { .. } => {}
         }
-        self.tx_native.as_ref().expect("not shut down").send(env).expect("native workers alive");
+        self.tx_native
+            .as_ref()
+            .expect("not shut down")
+            .send(Envelope::Work(id, job, timer))
+            .expect("native workers alive");
         id
     }
 
@@ -222,8 +242,10 @@ impl Coordinator {
     pub fn open_session(&self, net: FlowNetwork) -> u64 {
         let session = SESSION_ID_AUTO_BASE | self.next_id.fetch_add(1, Ordering::Relaxed);
         let timer = Timer::start();
-        let env = Envelope::Work(session, Job::SessionOpen { session, net }, timer);
-        self.tx_session.as_ref().expect("not shut down").send(env).expect("session worker alive");
+        self.sessions
+            .as_ref()
+            .expect("not shut down")
+            .submit(session, session, SessionJob::Open { net }, timer);
         session
     }
 
@@ -242,11 +264,12 @@ impl Coordinator {
         (0..n).filter_map(|_| self.recv()).collect()
     }
 
-    /// Graceful shutdown: close queues, join workers.
+    /// Graceful shutdown: close queues, join workers (the shard pool's
+    /// drop joins its own workers).
     pub fn shutdown(mut self) -> Arc<Metrics> {
         self.tx_native.take();
         self.tx_device.take();
-        self.tx_session.take();
+        self.sessions.take();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -262,7 +285,7 @@ impl Drop for Coordinator {
     fn drop(&mut self) {
         self.tx_native.take();
         self.tx_device.take();
-        self.tx_session.take();
+        self.sessions.take();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -322,30 +345,10 @@ fn native_worker(
     }
 }
 
-/// The session worker: single owner of every warm [`SessionManager`]
-/// state, so streaming updates need no locking at all.
-fn session_worker(
-    rx: mpsc::Receiver<Envelope>,
-    tx_out: mpsc::Sender<JobOutput>,
-    metrics: Arc<Metrics>,
-    solve: SolveOptions,
-) {
-    let mut mgr = SessionManager::new(solve);
-    while let Ok(Envelope::Work(id, job, timer)) = rx.recv() {
-        let (engine, result) = match job {
-            Job::SessionOpen { session, net } => ("session:open", mgr.open(session, &net)),
-            Job::SessionUpdate { session, batch } => ("session:update", mgr.update(session, &batch)),
-            Job::SessionClose { session } => ("session:close", mgr.close(session)),
-            other => {
-                drop(other);
-                ("session", Err("non-session job routed to session worker".to_string()))
-            }
-        };
-        finish(&tx_out, &metrics, id, engine.to_string(), result, timer);
-    }
-}
-
-fn finish(
+/// Deliver one finished job: record metrics, send the output. Shared by
+/// the native/device workers here and the session shard workers
+/// (`super::shard`).
+pub(crate) fn finish(
     tx_out: &mpsc::Sender<JobOutput>,
     metrics: &Metrics,
     id: u64,
@@ -410,7 +413,7 @@ mod tests {
             native_workers: native,
             enable_device: device,
             solve: SolveOptions { threads: 2, cycles_per_launch: 64, ..Default::default() },
-            router: RouterConfig::default(),
+            ..Default::default()
         }
     }
 
@@ -556,6 +559,62 @@ mod tests {
         for o in outs {
             o.result.expect("all jobs ok");
         }
+    }
+
+    #[test]
+    fn sharded_sessions_serve_concurrent_tenants() {
+        // 4 shards, 12 caller-chosen session ids: every shard pins its own
+        // warm state, values stay per-session correct, ids never cross.
+        let mut cfg = config(1, false);
+        cfg.session.shards = 4;
+        let c = Coordinator::start(cfg);
+        assert_eq!(c.session_shards(), 4);
+        let mut nets = std::collections::HashMap::new();
+        let mut job_session = std::collections::HashMap::new();
+        for sid in 0..12u64 {
+            let net = generators::erdos_renyi(30, 150, 4 + (sid % 3) as i64, sid);
+            let id = c.submit(Job::SessionOpen { session: sid, net: net.clone() });
+            job_session.insert(id, sid);
+            nets.insert(sid, net);
+        }
+        for o in c.collect(12) {
+            o.result.expect("open ok");
+        }
+        // One update per session, interleaved.
+        let mut want = std::collections::HashMap::new();
+        for sid in 0..12u64 {
+            let id = c.submit(Job::SessionUpdate {
+                session: sid,
+                batch: UpdateBatch::new(vec![crate::dynamic::GraphUpdate::IncreaseCap {
+                    edge: 0,
+                    delta: 5,
+                }]),
+            });
+            let mut net = nets[&sid].normalized();
+            UpdateBatch::new(vec![crate::dynamic::GraphUpdate::IncreaseCap { edge: 0, delta: 5 }])
+                .apply_to_network(&mut net)
+                .unwrap();
+            let scratch = maxflow::solve(
+                &net,
+                EngineKind::Dinic,
+                Representation::Bcsr,
+                &SolveOptions::default(),
+            )
+            .value;
+            want.insert(id, scratch);
+            job_session.insert(id, sid);
+        }
+        for o in c.collect(12) {
+            let v = o.result.expect("update ok");
+            assert_eq!(v.value, want[&o.id], "session {} value", job_session[&o.id]);
+        }
+        for sid in 0..12u64 {
+            c.submit(Job::SessionClose { session: sid });
+        }
+        for o in c.collect(12) {
+            o.result.expect("close ok");
+        }
+        c.shutdown();
     }
 
     #[test]

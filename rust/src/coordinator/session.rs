@@ -3,39 +3,159 @@
 //! A session pins one solved [`DynamicFlow`] instance in memory so a
 //! client can stream [`UpdateBatch`]es against it and read back repaired
 //! max-flow values without ever re-solving from scratch — the serving-side
-//! face of the [`crate::dynamic`] subsystem. The coordinator owns one
-//! [`SessionManager`] on a dedicated worker thread (state is single-owner
-//! by construction, no locks needed); jobs reach it via
-//! [`super::Route::Session`].
+//! face of the [`crate::dynamic`] subsystem. Each [`SessionManager`] lives
+//! on a dedicated single-owner worker thread (no locks by construction);
+//! the coordinator shards sessions across several managers via
+//! [`super::shard::SessionShardPool`].
+//!
+//! Beyond the PR-1 lifecycle (open / update / close) a manager now runs
+//! two serving-layer policies:
+//!
+//! * **TTL eviction** ([`SessionManager::evict_stale`]) — warm state idle
+//!   past the TTL is persisted to a compact on-disk snapshot
+//!   ([`crate::dynamic::FlowSnapshot`]) and dropped from memory; the next
+//!   touch transparently re-hydrates it with zero solve work. Millions of
+//!   mostly-idle tenants then cost disk, not RAM.
+//! * **Cost-based update routing** — per batch, the predicted repair cost
+//!   (batch size × locality × the session's observed ops-per-update) is
+//!   weighed against the session's observed from-scratch cost
+//!   ([`RouterConfig::route_update`]); the batch is served by warm repair
+//!   or by an index-stable from-scratch re-solve, whichever is predicted
+//!   cheaper (cf. the Table 3 counters and arXiv 2511.01235 / 2511.05895).
 
-use crate::dynamic::{DynamicFlow, UpdateBatch, UpdateReport};
+use super::router::{RouterConfig, UpdateRoute};
+use crate::dynamic::{DynamicFlow, FlowSnapshot, UpdateBatch, UpdateReport};
 use crate::graph::builder::FlowNetwork;
 use crate::maxflow::{SolveOptions, WorkerPool};
 use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-/// Owns every live session. Session ids are chosen by the caller (the
-/// coordinator's job id is a convenient source of unique ids).
+/// EWMA smoothing for the per-session repair-cost estimate.
+const COST_EWMA_ALPHA: f64 = 0.3;
+
+/// Distinguishes this process's default snapshot directories (tests run
+/// many managers concurrently; each gets a private directory).
+static SNAPSHOT_DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Session-layer policy knobs (per manager; the shard pool clones one
+/// config into every shard).
+#[derive(Debug, Clone, Default)]
+pub struct SessionConfig {
+    /// Evict warm sessions idle longer than this (`None` = never — the
+    /// pre-PR behavior).
+    pub ttl: Option<Duration>,
+    /// Where evicted snapshots live. `None` = a fresh per-manager
+    /// directory under the OS temp dir, created on first eviction.
+    pub snapshot_dir: Option<PathBuf>,
+    /// Repair-vs-recompute policy (see [`RouterConfig::route_update`]).
+    pub router: RouterConfig,
+}
+
+/// Serving-policy event counters (exposed so tests and metrics can see
+/// evictions/re-hydrations/recomputes happen rather than infer them).
+#[derive(Debug, Clone, Default)]
+pub struct SessionCounters {
+    pub evictions: u64,
+    pub rehydrations: u64,
+    pub repairs: u64,
+    pub recomputes: u64,
+}
+
+/// Per-session cost model for the update router, in the Table 3 work
+/// currency (`pushes + relabels`).
+#[derive(Debug, Clone, Default)]
+struct CostModel {
+    /// Latest observed from-scratch solve cost (open or recompute).
+    scratch_ops: f64,
+    /// EWMA repair cost per distinct touched edge.
+    repair_per_touch: f64,
+    repair_samples: u64,
+}
+
+impl CostModel {
+    fn observe_scratch(&mut self, ops: u64) {
+        self.scratch_ops = ops as f64;
+    }
+
+    fn observe_repair(&mut self, ops: u64, touches: usize) {
+        let per = ops as f64 / touches.max(1) as f64;
+        self.repair_per_touch = if self.repair_samples == 0 {
+            per
+        } else {
+            (1.0 - COST_EWMA_ALPHA) * self.repair_per_touch + COST_EWMA_ALPHA * per
+        };
+        self.repair_samples += 1;
+    }
+
+    /// Predicted repair cost of `batch`: distinct touches × ops/touch.
+    /// `None` until at least one repair has been observed.
+    fn predict_repair(&self, batch: &UpdateBatch) -> Option<f64> {
+        (self.repair_samples > 0).then(|| batch.distinct_touches() as f64 * self.repair_per_touch)
+    }
+
+    /// Called after a recompute: only the Repair leg feeds the EWMA, so
+    /// without this one inflated sample (e.g. the cold-height repair right
+    /// after re-hydration) could lock a session into from-scratch
+    /// re-solves forever. Halving the estimate makes repeated recomputes
+    /// geometrically re-admit a repair attempt, which re-samples the true
+    /// cost — hysteresis, not memory.
+    fn decay_repair(&mut self) {
+        self.repair_per_touch *= 0.5;
+    }
+}
+
+struct WarmSession {
+    df: DynamicFlow,
+    last_touch: Instant,
+    cost: CostModel,
+}
+
+/// Owns every live session of one shard. Session ids are chosen by the
+/// caller (the coordinator's job id is a convenient source of unique ids).
 ///
-/// All sessions share one persistent [`WorkerPool`]: the session worker
-/// serves updates one at a time, so a single pool saturates the machine
-/// while N warm sessions cost N scratch buffers — not N thread pools.
+/// All sessions share one persistent [`WorkerPool`]: the shard worker
+/// serves updates one at a time, so a single pool saturates the shard's
+/// thread slice while N warm sessions cost N scratch buffers — not N
+/// thread pools.
 pub struct SessionManager {
     opts: SolveOptions,
     pool: Arc<WorkerPool>,
-    sessions: HashMap<u64, DynamicFlow>,
+    cfg: SessionConfig,
+    sessions: HashMap<u64, WarmSession>,
+    /// Evicted-but-resumable sessions: id → snapshot path.
+    evicted: HashMap<u64, PathBuf>,
+    /// Resolved snapshot directory (created on first eviction).
+    snapshot_dir: Option<PathBuf>,
+    counters: SessionCounters,
 }
 
 impl SessionManager {
     pub fn new(opts: SolveOptions) -> SessionManager {
         let pool = Arc::new(WorkerPool::new(opts.resolved_threads()));
-        SessionManager { opts, pool, sessions: HashMap::new() }
+        SessionManager::with_config(opts, pool, SessionConfig::default())
+    }
+
+    /// Full-control constructor: the shard pool hands every shard its own
+    /// thread slice and the shared session policy.
+    pub fn with_config(opts: SolveOptions, pool: Arc<WorkerPool>, cfg: SessionConfig) -> SessionManager {
+        SessionManager {
+            opts,
+            pool,
+            cfg,
+            sessions: HashMap::new(),
+            evicted: HashMap::new(),
+            snapshot_dir: None,
+            counters: SessionCounters::default(),
+        }
     }
 
     /// Solve `net` from scratch and keep it warm under `id` (on the shared
     /// pool). Returns the initial max-flow value.
     pub fn open(&mut self, id: u64, net: &FlowNetwork) -> Result<i64, String> {
-        if self.sessions.contains_key(&id) {
+        if self.sessions.contains_key(&id) || self.evicted.contains_key(&id) {
             return Err(format!("session {id} already open"));
         }
         net.validate()?;
@@ -49,7 +169,10 @@ impl SessionManager {
             ));
         }
         let value = df.value();
-        self.sessions.insert(id, df);
+        let mut cost = CostModel::default();
+        let stats = df.total_stats();
+        cost.observe_scratch(stats.pushes + stats.relabels);
+        self.sessions.insert(id, WarmSession { df, last_touch: Instant::now(), cost });
         Ok(value)
     }
 
@@ -65,39 +188,171 @@ impl SessionManager {
 
     /// Like [`SessionManager::update`] but with the full work report.
     ///
+    /// Transparently re-hydrates a TTL-evicted session first. The batch is
+    /// then served by warm repair or from-scratch recompute, whichever the
+    /// cost router predicts cheaper ([`RouterConfig::route_update`]).
+    ///
     /// A validation error leaves the session untouched; a repair-invariant
-    /// failure poisons the engine, so the session is evicted rather than
+    /// failure poisons the engine, so the session is dropped rather than
     /// kept serving values from an invalid flow — the caller must re-open.
     pub fn update_report(&mut self, id: u64, batch: &UpdateBatch) -> Result<UpdateReport, String> {
-        let df = self.sessions.get_mut(&id).ok_or_else(|| format!("session {id} not open"))?;
-        let result = df.apply(batch);
-        if df.is_poisoned() {
-            self.sessions.remove(&id);
-            let cause = result.err().unwrap_or_default();
-            return Err(format!("session {id} evicted, re-open required: {cause}"));
+        self.rehydrate_if_evicted(id)?;
+        let router = self.cfg.router.clone();
+        let sess = self.sessions.get_mut(&id).ok_or_else(|| format!("session {id} not open"))?;
+        sess.last_touch = Instant::now();
+        match router.route_update(sess.cost.predict_repair(batch), sess.cost.scratch_ops) {
+            UpdateRoute::Repair => {
+                let result = sess.df.apply(batch);
+                if sess.df.is_poisoned() {
+                    self.sessions.remove(&id);
+                    let cause = result.err().unwrap_or_default();
+                    return Err(format!("session {id} evicted, re-open required: {cause}"));
+                }
+                let rep = result?;
+                sess.cost.observe_repair(rep.stats.pushes + rep.stats.relabels, batch.distinct_touches());
+                self.counters.repairs += 1;
+                Ok(rep)
+            }
+            UpdateRoute::Recompute => {
+                // Edit an index-stable copy of the network, then re-solve.
+                // A validation error surfaces before any state changes.
+                let mut net = sess.df.network().clone();
+                batch.apply_to_network(&mut net)?;
+                let before = sess.df.value();
+                let df = DynamicFlow::solve_prepared(net, &self.opts, self.pool.clone());
+                if df.is_poisoned() {
+                    let cause = df.fault().unwrap_or("recompute failed").to_string();
+                    self.sessions.remove(&id);
+                    return Err(format!("session {id} evicted, re-open required: {cause}"));
+                }
+                let stats = df.total_stats().clone();
+                let value = df.value();
+                sess.cost.observe_scratch(stats.pushes + stats.relabels);
+                sess.cost.decay_repair();
+                sess.df = df;
+                self.counters.recomputes += 1;
+                Ok(UpdateReport {
+                    value,
+                    delta: value - before,
+                    applied: batch.len(),
+                    stats,
+                    recomputed: true,
+                })
+            }
         }
-        result
     }
 
-    /// Drop a session, returning its final value.
+    /// Drop a session, returning its final value. Works on evicted
+    /// sessions too (the value is read straight from the snapshot — no
+    /// engine rebuild for a session that is only being closed).
     pub fn close(&mut self, id: u64) -> Result<i64, String> {
-        self.sessions
-            .remove(&id)
-            .map(|df| df.value())
-            .ok_or_else(|| format!("session {id} not open"))
+        if let Some(sess) = self.sessions.remove(&id) {
+            return Ok(sess.df.value());
+        }
+        if let Some(path) = self.evicted.remove(&id) {
+            let snap = FlowSnapshot::read(&path)?;
+            let _ = std::fs::remove_file(&path);
+            return Ok(snap.value);
+        }
+        Err(format!("session {id} not open"))
     }
 
-    /// Read-only view of a live session.
+    /// Read-only view of a live (in-memory) session.
     pub fn get(&self, id: u64) -> Option<&DynamicFlow> {
-        self.sessions.get(&id)
+        self.sessions.get(&id).map(|s| &s.df)
     }
 
+    /// Warm sessions currently in memory.
     pub fn len(&self) -> usize {
         self.sessions.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.sessions.is_empty()
+        self.sessions.is_empty() && self.evicted.is_empty()
+    }
+
+    /// Sessions currently evicted to disk.
+    pub fn evicted_len(&self) -> usize {
+        self.evicted.len()
+    }
+
+    /// Serving-policy event counters.
+    pub fn counters(&self) -> &SessionCounters {
+        &self.counters
+    }
+
+    /// Evict every warm session idle at least the configured TTL
+    /// (`flush_stale`-style last-touched tracking; no-op without a TTL).
+    /// Returns how many sessions were persisted. The shard worker calls
+    /// this between jobs and on idle ticks.
+    pub fn evict_stale(&mut self) -> usize {
+        let Some(ttl) = self.cfg.ttl else { return 0 };
+        let now = Instant::now();
+        let stale: Vec<u64> = self
+            .sessions
+            .iter()
+            .filter(|(_, s)| now.duration_since(s.last_touch) >= ttl)
+            .map(|(&id, _)| id)
+            .collect();
+        let mut evicted = 0;
+        for id in stale {
+            if self.evict(id).is_ok() {
+                evicted += 1;
+            }
+        }
+        evicted
+    }
+
+    /// Persist one session's warm state to disk and drop it from memory.
+    pub fn evict(&mut self, id: u64) -> Result<(), String> {
+        let sess = self.sessions.get(&id).ok_or_else(|| format!("session {id} not open"))?;
+        let mut snap = sess.df.snapshot()?;
+        // Carry the cost router's from-scratch baseline across eviction so
+        // re-hydration doesn't have to guess it (a wrong guess biases the
+        // repair-vs-recompute decision).
+        snap.scratch_ops = sess.cost.scratch_ops as u64;
+        let dir = self.ensure_snapshot_dir()?;
+        let path = dir.join(format!("session-{id}.wbps"));
+        snap.write(&path)?;
+        self.sessions.remove(&id);
+        self.evicted.insert(id, path);
+        self.counters.evictions += 1;
+        Ok(())
+    }
+
+    /// If `id` was TTL-evicted, re-hydrate it from its snapshot (zero
+    /// solve work — see [`DynamicFlow::from_snapshot`]).
+    fn rehydrate_if_evicted(&mut self, id: u64) -> Result<(), String> {
+        let Some(path) = self.evicted.get(&id).cloned() else { return Ok(()) };
+        let snap = FlowSnapshot::read(&path)?;
+        let df = DynamicFlow::from_snapshot(&snap, &self.opts, self.pool.clone())?;
+        let mut cost = CostModel::default();
+        // Restore the persisted from-scratch baseline. If the snapshot
+        // predates one (scratch_ops == 0), `route_update` sees no baseline
+        // and always repairs — the safe default.
+        cost.observe_scratch(snap.scratch_ops);
+        self.evicted.remove(&id);
+        let _ = std::fs::remove_file(&path);
+        self.sessions.insert(id, WarmSession { df, last_touch: Instant::now(), cost });
+        self.counters.rehydrations += 1;
+        Ok(())
+    }
+
+    fn ensure_snapshot_dir(&mut self) -> Result<PathBuf, String> {
+        if let Some(dir) = &self.snapshot_dir {
+            return Ok(dir.clone());
+        }
+        let dir = match &self.cfg.snapshot_dir {
+            Some(d) => d.clone(),
+            None => std::env::temp_dir().join(format!(
+                "wbpr-sessions-{}-{}",
+                std::process::id(),
+                SNAPSHOT_DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+            )),
+        };
+        std::fs::create_dir_all(&dir).map_err(|e| format!("create {}: {e}", dir.display()))?;
+        self.snapshot_dir = Some(dir.clone());
+        Ok(dir)
     }
 }
 
@@ -111,6 +366,12 @@ mod tests {
 
     fn mgr() -> SessionManager {
         SessionManager::new(SolveOptions { threads: 2, cycles_per_launch: 64, ..Default::default() })
+    }
+
+    fn mgr_with(cfg: SessionConfig) -> SessionManager {
+        let opts = SolveOptions { threads: 2, cycles_per_launch: 64, ..Default::default() };
+        let pool = Arc::new(WorkerPool::new(2));
+        SessionManager::with_config(opts, pool, cfg)
     }
 
     #[test]
@@ -129,6 +390,7 @@ mod tests {
         assert_eq!(v1, scratch, "warm session agrees with from-scratch");
         assert_eq!(m.close(7).unwrap(), v1);
         assert!(m.is_empty());
+        assert_eq!(m.counters().repairs, 1);
     }
 
     #[test]
@@ -159,5 +421,91 @@ mod tests {
             assert_eq!(v, df.value());
             maxflow::verify(df.arcs(), &df.flow_result()).unwrap();
         }
+    }
+
+    #[test]
+    fn ttl_eviction_snapshot_rehydration_roundtrip() {
+        // TTL zero: every session is stale immediately.
+        let mut m = mgr_with(SessionConfig { ttl: Some(Duration::ZERO), ..Default::default() });
+        let net = generators::erdos_renyi(40, 200, 6, 5);
+        let v0 = m.open(9, &net).unwrap();
+        assert_eq!(m.evict_stale(), 1);
+        assert_eq!(m.len(), 0, "warm state left memory");
+        assert_eq!(m.evicted_len(), 1);
+        assert!(!m.is_empty(), "evicted sessions still belong to the manager");
+        assert!(m.open(9, &net).is_err(), "evicted id is still taken");
+
+        // Next touch transparently re-hydrates — and the repaired value
+        // matches a from-scratch solve of the updated network.
+        let v1 = m
+            .update(9, &UpdateBatch::new(vec![GraphUpdate::IncreaseCap { edge: 0, delta: 4 }]))
+            .unwrap();
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.evicted_len(), 0);
+        assert_eq!(m.counters().evictions, 1);
+        assert_eq!(m.counters().rehydrations, 1);
+        let df = m.get(9).unwrap();
+        let scratch = maxflow::dinic::solve(&ArcGraph::build(&df.network().normalized())).value;
+        assert_eq!(v1, scratch);
+        assert!(v1 >= v0);
+        maxflow::verify(df.arcs(), &df.flow_result()).unwrap();
+    }
+
+    #[test]
+    fn close_of_evicted_session_reads_the_snapshot() {
+        let mut m = mgr_with(SessionConfig { ttl: Some(Duration::ZERO), ..Default::default() });
+        let net = generators::erdos_renyi(30, 140, 5, 6);
+        let v0 = m.open(4, &net).unwrap();
+        assert_eq!(m.evict_stale(), 1);
+        assert_eq!(m.close(4).unwrap(), v0, "close returns the evicted value");
+        assert!(m.is_empty());
+        assert!(m.close(4).is_err());
+    }
+
+    #[test]
+    fn recompute_route_serves_batches_and_stays_correct() {
+        // Force the recompute leg: any predicted repair beats ratio 0.
+        let cfg = SessionConfig {
+            router: RouterConfig { recompute_ratio: 0.0, ..Default::default() },
+            ..Default::default()
+        };
+        let mut m = mgr_with(cfg);
+        let net = generators::erdos_renyi(40, 200, 6, 7);
+        m.open(2, &net).unwrap();
+        // First batch repairs (no repair history yet -> no prediction).
+        let r1 = m
+            .update_report(2, &UpdateBatch::new(vec![GraphUpdate::IncreaseCap { edge: 2, delta: 3 }]))
+            .unwrap();
+        assert!(!r1.recomputed);
+        // Second batch has a cost estimate and flips to recompute.
+        let r2 = m
+            .update_report(2, &UpdateBatch::new(vec![GraphUpdate::DecreaseCap { edge: 5, delta: 2 }]))
+            .unwrap();
+        assert!(r2.recomputed, "ratio 0 must route to recompute");
+        assert_eq!(m.counters().recomputes, 1);
+        let df = m.get(2).unwrap();
+        let scratch = maxflow::dinic::solve(&ArcGraph::build(&df.network().normalized())).value;
+        assert_eq!(r2.value, scratch, "recompute agrees with reference");
+        maxflow::verify(df.arcs(), &df.flow_result()).unwrap();
+        // Subsequent batches still serve fine on the recomputed engine.
+        let next = m
+            .update_report(2, &UpdateBatch::new(vec![GraphUpdate::IncreaseCap { edge: 1, delta: 1 }]));
+        assert!(next.is_ok());
+    }
+
+    #[test]
+    fn recompute_validation_error_leaves_session_untouched() {
+        let cfg = SessionConfig {
+            router: RouterConfig { recompute_ratio: 0.0, ..Default::default() },
+            ..Default::default()
+        };
+        let mut m = mgr_with(cfg);
+        let net = generators::erdos_renyi(25, 100, 4, 8);
+        m.open(3, &net).unwrap();
+        m.update(3, &UpdateBatch::new(vec![GraphUpdate::IncreaseCap { edge: 0, delta: 1 }])).unwrap();
+        let before = m.get(3).unwrap().value();
+        let err = m.update(3, &UpdateBatch::new(vec![GraphUpdate::DeleteEdge { edge: 9999 }]));
+        assert!(err.is_err());
+        assert_eq!(m.get(3).unwrap().value(), before, "bad batch applied nothing");
     }
 }

@@ -1,0 +1,267 @@
+//! Sharded warm-session serving: N single-owner session workers instead
+//! of one.
+//!
+//! PR 1's session layer pinned every warm [`crate::dynamic::DynamicFlow`]
+//! to one worker thread — lock-free by construction, but a hard ceiling on
+//! multi-tenant throughput: independent sessions queued behind each other.
+//! The dynamic-max-flow literature (arXiv 2511.01235, 2511.05895) gets its
+//! throughput precisely from running independent flow instances in
+//! parallel, so this module shards the session id space:
+//!
+//! * **Placement** is [`jump_hash`] (Lamping & Veach's jump consistent
+//!   hash) on the session id: stateless, uniform, and *stable* — growing
+//!   from `n` to `n+1` shards remaps only ~`1/(n+1)` of the sessions,
+//!   which keeps warm state (and its on-disk snapshots) valid across
+//!   resizes instead of reshuffling everything.
+//! * **Each shard** is still a single-owner worker with its own
+//!   [`SessionManager`] — no locks appear anywhere — and its own
+//!   [`WorkerPool`] over a slice of the machine's threads
+//!   ([`WorkerPool::shard_sizes`]), so repairs on different shards
+//!   genuinely overlap.
+//! * **Idle shards tick**: with a TTL configured, a shard that receives no
+//!   traffic still wakes periodically to run
+//!   [`SessionManager::evict_stale`], so warm state leaves memory on
+//!   schedule, not on the next unrelated request.
+
+use super::metrics::Metrics;
+use super::router::RouterConfig;
+use super::server::JobOutput;
+use super::session::{SessionConfig, SessionManager};
+use crate::dynamic::UpdateBatch;
+use crate::graph::builder::FlowNetwork;
+use crate::maxflow::{SolveOptions, WorkerPool};
+use crate::util::Timer;
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Jump consistent hash (Lamping & Veach, 2014): maps `key` to a bucket in
+/// `0..buckets` such that going from `n` to `n+1` buckets moves only
+/// `~1/(n+1)` of the keys — and every key that moves, moves *to the new
+/// bucket*. O(ln buckets), no ring state.
+pub fn jump_hash(key: u64, buckets: u32) -> u32 {
+    assert!(buckets > 0, "jump_hash needs at least one bucket");
+    let mut k = key;
+    let mut b: i64 = -1;
+    let mut j: i64 = 0;
+    while j < buckets as i64 {
+        b = j;
+        k = k.wrapping_mul(2862933555777941757).wrapping_add(1);
+        j = (((b + 1) as f64) * ((1i64 << 31) as f64 / (((k >> 33) + 1) as f64))) as i64;
+    }
+    b as u32
+}
+
+/// A session-layer request, already stripped of routing concerns.
+#[derive(Debug)]
+pub enum SessionJob {
+    /// Solve and pin (result value = initial max flow).
+    Open { net: FlowNetwork },
+    /// Repair or recompute per the cost router (result value = new flow).
+    Update { batch: UpdateBatch },
+    /// Drop (result value = final flow).
+    Close,
+}
+
+struct ShardMsg {
+    job_id: u64,
+    session: u64,
+    job: SessionJob,
+    timer: Timer,
+}
+
+/// Shard-pool shape and policy (part of
+/// [`super::server::CoordinatorConfig`]).
+#[derive(Debug, Clone)]
+pub struct ShardPoolConfig {
+    /// Warm session workers. 1 reproduces the PR-1 single-worker layout.
+    pub shards: usize,
+    /// Evict warm sessions idle longer than this (`None` = never).
+    pub ttl: Option<Duration>,
+    /// Snapshot root; each shard uses `<dir>/shard-<i>`. `None` = a fresh
+    /// per-worker temp directory.
+    pub snapshot_dir: Option<PathBuf>,
+}
+
+impl Default for ShardPoolConfig {
+    fn default() -> Self {
+        ShardPoolConfig { shards: 1, ttl: None, snapshot_dir: None }
+    }
+}
+
+/// N single-owner session workers behind consistent-hash placement.
+pub struct SessionShardPool {
+    txs: Vec<mpsc::Sender<ShardMsg>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl SessionShardPool {
+    /// Spawn the shard workers. The machine's thread budget
+    /// (`solve.resolved_threads()`) is sliced across shards so shard pools
+    /// don't oversubscribe each other.
+    pub fn start(
+        cfg: &ShardPoolConfig,
+        solve: &SolveOptions,
+        router: &RouterConfig,
+        tx_out: mpsc::Sender<JobOutput>,
+        metrics: Arc<Metrics>,
+    ) -> SessionShardPool {
+        let sizes = WorkerPool::shard_sizes(solve.resolved_threads(), cfg.shards.max(1));
+        let mut txs = Vec::with_capacity(sizes.len());
+        let mut handles = Vec::with_capacity(sizes.len());
+        for (i, threads) in sizes.into_iter().enumerate() {
+            let (tx, rx) = mpsc::channel::<ShardMsg>();
+            let session_cfg = SessionConfig {
+                ttl: cfg.ttl,
+                snapshot_dir: cfg.snapshot_dir.as_ref().map(|d| d.join(format!("shard-{i}"))),
+                router: router.clone(),
+            };
+            let solve = solve.clone();
+            let tx_out = tx_out.clone();
+            let metrics = metrics.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("wbpr-session-{i}"))
+                    .spawn(move || shard_worker(rx, tx_out, metrics, solve, threads, session_cfg))
+                    .expect("spawn session shard worker"),
+            );
+            txs.push(tx);
+        }
+        SessionShardPool { txs, handles }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Which shard owns `session`.
+    pub fn shard_of(&self, session: u64) -> usize {
+        jump_hash(session, self.txs.len() as u32) as usize
+    }
+
+    /// Enqueue a session job on its owning shard.
+    pub fn submit(&self, job_id: u64, session: u64, job: SessionJob, timer: Timer) {
+        let shard = self.shard_of(session);
+        self.txs[shard]
+            .send(ShardMsg { job_id, session, job, timer })
+            .expect("session shard worker alive");
+    }
+}
+
+impl Drop for SessionShardPool {
+    fn drop(&mut self) {
+        self.txs.clear(); // close queues => workers exit their recv loops
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One shard: single owner of its [`SessionManager`], so streaming
+/// updates need no locking at all. Between jobs (and on idle ticks when a
+/// TTL is set) it sweeps for stale sessions to evict.
+fn shard_worker(
+    rx: mpsc::Receiver<ShardMsg>,
+    tx_out: mpsc::Sender<JobOutput>,
+    metrics: Arc<Metrics>,
+    solve: SolveOptions,
+    threads: usize,
+    cfg: SessionConfig,
+) {
+    let ttl = cfg.ttl;
+    let pool = Arc::new(WorkerPool::new(threads));
+    let mut mgr = SessionManager::with_config(solve, pool, cfg);
+    // Idle tick at half the TTL so eviction lags the deadline by at most
+    // ~TTL/2 even on a completely quiet shard.
+    let tick = ttl.map(|t| (t / 2).max(Duration::from_millis(5)));
+    loop {
+        let msg = match tick {
+            Some(tk) => match rx.recv_timeout(tk) {
+                Ok(m) => Some(m),
+                Err(mpsc::RecvTimeoutError::Timeout) => None,
+                Err(mpsc::RecvTimeoutError::Disconnected) => return,
+            },
+            None => match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => return,
+            },
+        };
+        if let Some(ShardMsg { job_id, session, job, timer }) = msg {
+            let before = mgr.counters().clone();
+            let (engine, result) = match job {
+                SessionJob::Open { net } => ("session:open", mgr.open(session, &net)),
+                SessionJob::Update { batch } => ("session:update", mgr.update(session, &batch)),
+                SessionJob::Close => ("session:close", mgr.close(session)),
+            };
+            let after = mgr.counters();
+            if after.rehydrations > before.rehydrations {
+                metrics.bump_by("session:rehydrate", after.rehydrations - before.rehydrations);
+            }
+            if after.recomputes > before.recomputes {
+                metrics.bump_by("session:recompute", after.recomputes - before.recomputes);
+            }
+            super::server::finish(&tx_out, &metrics, job_id, engine.to_string(), result, timer);
+        }
+        // Sweep *after* serving: the request just refreshed its session's
+        // last-touch, so a touch arriving exactly at the TTL boundary is
+        // served warm instead of paying an evict → re-hydrate round trip.
+        let evicted = mgr.evict_stale();
+        if evicted > 0 {
+            metrics.bump_by("session:evict", evicted as u64);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jump_hash_is_uniform_enough() {
+        let buckets = 4u32;
+        let mut counts = [0usize; 4];
+        for key in 0..4000u64 {
+            counts[jump_hash(key, buckets) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((700..=1300).contains(&c), "skewed shard distribution: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn jump_hash_is_stable_under_resize() {
+        // Growing n -> n+1 buckets must move only ~1/(n+1) of the keys,
+        // and every moved key must land in the new bucket.
+        let keys: Vec<u64> = (0..10_000).map(|i| i * 2654435761 + 11).collect();
+        for n in [1u32, 2, 4, 8] {
+            let mut moved = 0;
+            for &k in &keys {
+                let a = jump_hash(k, n);
+                let b = jump_hash(k, n + 1);
+                if a != b {
+                    moved += 1;
+                    assert_eq!(b, n, "a moved key must move to the new bucket");
+                }
+            }
+            let expected = keys.len() / (n as usize + 1);
+            assert!(
+                moved < expected * 2,
+                "resize {n}->{} moved {moved} keys (expected ~{expected})",
+                n + 1
+            );
+        }
+    }
+
+    #[test]
+    fn jump_hash_matches_reference_vectors() {
+        // Determinism guard: placement must never change across refactors,
+        // or evicted-session snapshots would strand on the wrong shard.
+        for key in [0u64, 1, 42, u64::MAX] {
+            assert_eq!(jump_hash(key, 1), 0);
+            let b = jump_hash(key, 16);
+            assert!(b < 16);
+            assert_eq!(jump_hash(key, 16), b, "deterministic");
+        }
+    }
+}

@@ -35,6 +35,7 @@
 //! "dead" region behind the min cut), so they cannot create an augmenting
 //! path; maximality at exit follows from the kernel's termination proof.
 
+use super::snapshot::FlowSnapshot;
 use super::update::{GraphUpdate, UpdateBatch, UpdateReport};
 use crate::graph::builder::{ArcGraph, FlowNetwork};
 use crate::graph::residual::Residual;
@@ -43,7 +44,7 @@ use crate::maxflow::global_relabel::{global_relabel_with, ExcessAccounting};
 use crate::maxflow::vc::VcContext;
 use crate::maxflow::{vc, FlowResult, ParState, SolveOptions, SolveStats, WorkerPool};
 use crate::util::Timer;
-use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU32, Ordering};
 use std::sync::Arc;
 
 /// A max-flow instance kept warm across streaming updates.
@@ -128,7 +129,16 @@ impl DynamicFlow {
     /// the session-worker pattern: one pool serves every warm session, so
     /// N sessions cost N scratch buffers, not N thread pools.
     pub fn with_pool(net: &FlowNetwork, opts: &SolveOptions, pool: Arc<WorkerPool>) -> DynamicFlow {
-        let net = net.normalized();
+        DynamicFlow::solve_prepared(net.normalized(), opts, pool)
+    }
+
+    /// From-scratch solve over an *already prepared* network: loop-free,
+    /// parallel edges acceptable, and — critically — **index-stable**, so
+    /// it is never re-normalized (normalization sorts and merges, which
+    /// would dangle every edge index a session has handed out). This is
+    /// the session layer's recompute route: the engine-evolved edge list
+    /// (tombstones in place, inserts appended) goes straight in.
+    pub fn solve_prepared(net: FlowNetwork, opts: &SolveOptions, pool: Arc<WorkerPool>) -> DynamicFlow {
         let g = ArcGraph::build(&net);
         let rep = Rcsr::build(&g);
         let st = ParState::zeroed(&g);
@@ -162,6 +172,92 @@ impl DynamicFlow {
             }
         }
         df
+    }
+
+    /// Re-hydrate an engine from an evicted-session snapshot — **no
+    /// solve, no kernel launches**: residuals come straight from the
+    /// per-edge flows, terminal excesses from the stored value, and
+    /// heights start cold because the next batch's forced warm-height
+    /// refresh (phase 3) rebuilds them anyway. `total_stats()` restarts
+    /// at zero (the work was paid before eviction).
+    pub fn from_snapshot(
+        snap: &FlowSnapshot,
+        opts: &SolveOptions,
+        pool: Arc<WorkerPool>,
+    ) -> Result<DynamicFlow, String> {
+        if snap.edges.len() != snap.flow.len() {
+            return Err(format!(
+                "snapshot has {} edges but {} flows",
+                snap.edges.len(),
+                snap.flow.len()
+            ));
+        }
+        // Rebuild the network verbatim — index-stable, never re-normalized.
+        let net = FlowNetwork {
+            n: snap.n,
+            s: snap.s,
+            t: snap.t,
+            edges: snap.edges.clone(),
+            name: snap.name.clone(),
+        };
+        let g = ArcGraph::build(&net);
+        let rep = Rcsr::build(&g);
+        let n = g.n;
+        let mut cf = Vec::with_capacity(2 * snap.edges.len());
+        for (e, &f) in snap.edges.iter().zip(&snap.flow) {
+            cf.push(AtomicI64::new(e.cap - f));
+            cf.push(AtomicI64::new(f));
+        }
+        let e: Vec<AtomicI64> = (0..n).map(|_| AtomicI64::new(0)).collect();
+        e[snap.s as usize].store(snap.e_source, Ordering::Relaxed);
+        e[snap.t as usize].store(snap.value, Ordering::Relaxed);
+        let h: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+        h[snap.s as usize].store(n as u32, Ordering::Relaxed);
+        let st = ParState::from_parts(cf, e, h);
+        let ctx = VcContext::with_pool(n, pool);
+        Ok(DynamicFlow {
+            net,
+            g,
+            rep,
+            st,
+            opts: opts.clone(),
+            value: snap.value,
+            batches: snap.batches,
+            total: SolveStats::default(),
+            poisoned: false,
+            fault: None,
+            scratch: BfsScratch::new(n),
+            ctx,
+        })
+    }
+
+    /// Capture the warm state as a [`FlowSnapshot`] (the session layer's
+    /// TTL-eviction path). Fails on a poisoned engine — its state is not a
+    /// valid flow and must never be re-hydrated.
+    pub fn snapshot(&self) -> Result<FlowSnapshot, String> {
+        if self.poisoned {
+            return Err(format!(
+                "cannot snapshot a poisoned engine: {}",
+                self.fault.as_deref().unwrap_or("unknown fault")
+            ));
+        }
+        // Net shipment of edge e is the backward residual cf[2e+1]
+        // (antisymmetry: cf[a] + cf[a^1] == cap).
+        let flow = (0..self.net.edges.len()).map(|e| self.st.residual(2 * e as u32 + 1)).collect();
+        Ok(FlowSnapshot {
+            n: self.g.n,
+            s: self.g.s,
+            t: self.g.t,
+            name: self.net.name.clone(),
+            edges: self.net.edges.clone(),
+            flow,
+            value: self.value,
+            e_source: self.st.excess(self.g.s),
+            batches: self.batches,
+            // The engine has no cost model; the session layer overwrites
+            // this with its observed baseline before persisting.
+            scratch_ops: 0,
+        })
     }
 
     /// Current max-flow value.
@@ -253,43 +349,16 @@ impl DynamicFlow {
             delta: self.value - before,
             applied: batch.updates.len(),
             stats,
+            recomputed: false,
         })
     }
 
     /// Pre-flight check so a bad update cannot leave the batch half
-    /// applied. Tracks in-batch inserts so later updates may address them.
+    /// applied — shared with the recompute leg via
+    /// [`UpdateBatch::validate_against`], so both routes accept exactly
+    /// the same batches.
     fn validate(&self, batch: &UpdateBatch) -> Result<(), String> {
-        let mut len = self.net.edges.len();
-        for (i, up) in batch.updates.iter().enumerate() {
-            match *up {
-                GraphUpdate::IncreaseCap { edge, delta } | GraphUpdate::DecreaseCap { edge, delta } => {
-                    if edge >= len {
-                        return Err(format!("update {i}: edge {edge} out of range ({len} edges)"));
-                    }
-                    if delta < 0 {
-                        return Err(format!("update {i}: negative delta {delta}"));
-                    }
-                }
-                GraphUpdate::DeleteEdge { edge } => {
-                    if edge >= len {
-                        return Err(format!("update {i}: edge {edge} out of range ({len} edges)"));
-                    }
-                }
-                GraphUpdate::InsertEdge { u, v, cap } => {
-                    if u as usize >= self.g.n || v as usize >= self.g.n {
-                        return Err(format!("update {i}: endpoint out of range"));
-                    }
-                    if u == v {
-                        return Err(format!("update {i}: self loop"));
-                    }
-                    if cap < 0 {
-                        return Err(format!("update {i}: negative capacity"));
-                    }
-                    len += 1;
-                }
-            }
-        }
-        Ok(())
+        batch.validate_against(self.g.n, self.net.edges.len())
     }
 
     fn apply_one(

@@ -27,9 +27,11 @@
 //!   [`crate::coordinator::session`].
 
 pub mod engine;
+pub mod snapshot;
 pub mod update;
 
 pub use engine::DynamicFlow;
+pub use snapshot::FlowSnapshot;
 pub use update::{GraphUpdate, UpdateBatch, UpdateReport, UpdateStream};
 
 #[cfg(test)]
@@ -183,6 +185,65 @@ mod tests {
             check(&df);
         }
         assert_eq!(df.batches(), 12);
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip_without_resolving() {
+        let net = generators::erdos_renyi(50, 250, 7, 11);
+        let mut df = DynamicFlow::new(&net, &opts());
+        // Age the state: a few batches so the snapshot is genuinely warm.
+        df.apply(&UpdateBatch::new(vec![GraphUpdate::IncreaseCap { edge: 3, delta: 5 }])).unwrap();
+        df.apply(&UpdateBatch::new(vec![GraphUpdate::DecreaseCap { edge: 9, delta: 2 }])).unwrap();
+        let want = df.value();
+        let snap = df.snapshot().unwrap();
+        let pool = std::sync::Arc::new(crate::maxflow::WorkerPool::new(2));
+        let back = DynamicFlow::from_snapshot(&snap, &opts(), pool).unwrap();
+        // Same value, valid flow, and *zero* solve work on restore.
+        assert_eq!(back.value(), want);
+        assert_eq!(back.batches(), df.batches());
+        assert_eq!(back.total_stats().launches, 0, "restore must not re-solve");
+        assert_eq!(back.total_stats().pushes, 0);
+        check(&back);
+        // The restored engine keeps repairing correctly.
+        let mut back = back;
+        back.apply(&UpdateBatch::new(vec![GraphUpdate::IncreaseCap { edge: 0, delta: 4 }])).unwrap();
+        check(&back);
+    }
+
+    #[test]
+    fn snapshot_binary_roundtrip_through_disk() {
+        let net = generators::erdos_renyi(30, 140, 5, 13);
+        let df = DynamicFlow::new(&net, &opts());
+        let snap = df.snapshot().unwrap();
+        let dir = std::env::temp_dir().join("wbpr-dynamic-snap-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("warm.wbps");
+        snap.write(&path).unwrap();
+        let loaded = FlowSnapshot::read(&path).unwrap();
+        assert_eq!(loaded, snap);
+        std::fs::remove_file(&path).unwrap();
+        let pool = std::sync::Arc::new(crate::maxflow::WorkerPool::new(1));
+        let back = DynamicFlow::from_snapshot(&loaded, &opts(), pool).unwrap();
+        assert_eq!(back.value(), df.value());
+        check(&back);
+    }
+
+    #[test]
+    fn solve_prepared_keeps_edge_indices_stable() {
+        // A tombstoned + appended edge list (what a session evolves into)
+        // must survive a from-scratch re-solve without re-normalization.
+        let mut net = diamond().normalized();
+        let batch = UpdateBatch::new(vec![
+            GraphUpdate::DeleteEdge { edge: 0 },
+            GraphUpdate::InsertEdge { u: 0, v: 3, cap: 5 },
+        ]);
+        batch.apply_to_network(&mut net).unwrap();
+        let m_before = net.edges.len();
+        let pool = std::sync::Arc::new(crate::maxflow::WorkerPool::new(1));
+        let df = DynamicFlow::solve_prepared(net, &opts(), pool);
+        assert_eq!(df.network().edges.len(), m_before, "no merge, no reorder");
+        assert_eq!(df.network().edges[0].cap, 0, "tombstone still in slot 0");
+        check(&df);
     }
 
     #[test]

@@ -1,0 +1,255 @@
+//! Compact on-disk snapshots of warm [`super::DynamicFlow`] state.
+//!
+//! When the session layer evicts an idle warm session (TTL), re-solving on
+//! the next touch would forfeit everything the warm regime buys. Instead
+//! the engine's state is persisted as a snapshot and *re-hydrated* without
+//! any kernel work: because the engine maintains a valid maximum flow
+//! between batches (`e(u) = 0` off the terminals, `cf[a] + cf[a^1] = cap`),
+//! the whole `ParState` is reconstructible from one i64 per edge — the net
+//! shipment `flow(e) = cf[2e+1]` — plus the edge list itself. Heights are
+//! *not* stored: the first post-restore batch starts with the forced
+//! warm-height refresh (`dynamic/engine.rs` phase 3) that every batch runs
+//! anyway, so cold heights cost nothing extra.
+//!
+//! The binary layout follows `runtime/pack.rs`'s philosophy (fixed-width
+//! little-endian fields, no self-describing fluff): a 4-byte magic +
+//! version header, scalar fields, then `m` records of `(u, v, cap, flow)`.
+//! Roughly 24 bytes per edge — compare a JSON dump at ~4x that.
+
+use crate::graph::Edge;
+use std::path::Path;
+
+/// File magic: "WBPS" (WorkBalanced Push-relabel Snapshot).
+const MAGIC: [u8; 4] = *b"WBPS";
+const VERSION: u16 = 1;
+
+/// Everything needed to re-hydrate a [`super::DynamicFlow`] without
+/// re-solving. The edge list is the engine's *index-stable* evolved list
+/// (tombstones in place, inserts appended) — it must not be re-normalized
+/// on restore or session edge indices would dangle.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlowSnapshot {
+    pub n: usize,
+    pub s: u32,
+    pub t: u32,
+    /// Provenance of the underlying network.
+    pub name: String,
+    /// Index-stable edge list (`u`, `v`, current capacity).
+    pub edges: Vec<Edge>,
+    /// Net shipment per edge (`cf[2e+1]` of the warm state).
+    pub flow: Vec<i64>,
+    /// Max-flow value at snapshot time (= `e(t)`).
+    pub value: i64,
+    /// Source-side excess bookkeeping (`e(s)`), preserved so the restored
+    /// ExcessTotal accounting matches the evicted engine exactly.
+    pub e_source: i64,
+    /// Batches the evicted engine had applied.
+    pub batches: u64,
+    /// Session-layer cost baseline: the last observed from-scratch solve
+    /// cost (`pushes + relabels`), so the repair-vs-recompute router keeps
+    /// a truthful baseline across eviction instead of guessing. `0` =
+    /// unknown (the router then always repairs, the safe default). The
+    /// engine itself leaves this 0; the session layer fills it in before
+    /// persisting.
+    pub scratch_ops: u64,
+}
+
+impl FlowSnapshot {
+    /// Serialize to the compact binary layout.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let name = self.name.as_bytes();
+        let mut out = Vec::with_capacity(64 + name.len() + self.edges.len() * 24);
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.n as u64).to_le_bytes());
+        out.extend_from_slice(&self.s.to_le_bytes());
+        out.extend_from_slice(&self.t.to_le_bytes());
+        out.extend_from_slice(&self.value.to_le_bytes());
+        out.extend_from_slice(&self.e_source.to_le_bytes());
+        out.extend_from_slice(&self.batches.to_le_bytes());
+        out.extend_from_slice(&self.scratch_ops.to_le_bytes());
+        out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        out.extend_from_slice(name);
+        out.extend_from_slice(&(self.edges.len() as u64).to_le_bytes());
+        for (e, &f) in self.edges.iter().zip(&self.flow) {
+            out.extend_from_slice(&e.u.to_le_bytes());
+            out.extend_from_slice(&e.v.to_le_bytes());
+            out.extend_from_slice(&e.cap.to_le_bytes());
+            out.extend_from_slice(&f.to_le_bytes());
+        }
+        out
+    }
+
+    /// Parse and validate a snapshot (bounds, flow-in-capacity, terminal
+    /// indices). A snapshot that fails here must not be restored — the
+    /// caller should fall back to a from-scratch solve.
+    pub fn from_bytes(b: &[u8]) -> Result<FlowSnapshot, String> {
+        let mut r = Reader { b, i: 0 };
+        if r.take(4)? != MAGIC {
+            return Err("not a WBPS snapshot (bad magic)".into());
+        }
+        let version = r.u16()?;
+        if version != VERSION {
+            return Err(format!("unsupported snapshot version {version}"));
+        }
+        let n = r.u64()? as usize;
+        let s = r.u32()?;
+        let t = r.u32()?;
+        let value = r.i64()?;
+        let e_source = r.i64()?;
+        let batches = r.u64()?;
+        let scratch_ops = r.u64()?;
+        let name_len = r.u32()? as usize;
+        let name = String::from_utf8(r.take(name_len)?.to_vec())
+            .map_err(|_| "snapshot name is not utf-8".to_string())?;
+        let m = r.u64()? as usize;
+        if (s as usize) >= n || (t as usize) >= n || s == t {
+            return Err(format!("snapshot terminals out of range (n={n} s={s} t={t})"));
+        }
+        // Guard against a truncated/corrupt length before allocating.
+        if r.remaining() != m * 24 {
+            return Err(format!(
+                "snapshot length mismatch: {} bytes left for {m} edges",
+                r.remaining()
+            ));
+        }
+        let mut edges = Vec::with_capacity(m);
+        let mut flow = Vec::with_capacity(m);
+        for k in 0..m {
+            let u = r.u32()?;
+            let v = r.u32()?;
+            let cap = r.i64()?;
+            let f = r.i64()?;
+            if u as usize >= n || v as usize >= n || u == v {
+                return Err(format!("snapshot edge {k}: endpoints ({u},{v}) invalid for n={n}"));
+            }
+            if cap < 0 || f < 0 || f > cap {
+                return Err(format!("snapshot edge {k}: flow {f} outside [0, cap={cap}]"));
+            }
+            edges.push(Edge::new(u, v, cap));
+            flow.push(f);
+        }
+        Ok(FlowSnapshot { n, s, t, name, edges, flow, value, e_source, batches, scratch_ops })
+    }
+
+    /// Write to `path` (atomically via a sibling temp file, so a crash
+    /// mid-eviction never leaves a half-written snapshot to re-hydrate).
+    pub fn write(&self, path: &Path) -> Result<(), String> {
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, self.to_bytes()).map_err(|e| format!("write {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path).map_err(|e| format!("rename {}: {e}", path.display()))
+    }
+
+    /// Read and validate a snapshot file.
+    pub fn read(path: &Path) -> Result<FlowSnapshot, String> {
+        let bytes = std::fs::read(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        FlowSnapshot::from_bytes(&bytes)
+    }
+
+    /// On-disk size in bytes (58-byte fixed header + name + edge records).
+    pub fn byte_len(&self) -> usize {
+        58 + self.name.len() + 8 + self.edges.len() * 24
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, len: usize) -> Result<&'a [u8], String> {
+        if self.i + len > self.b.len() {
+            return Err(format!("snapshot truncated at byte {}", self.i));
+        }
+        let s = &self.b[self.i..self.i + len];
+        self.i += len;
+        Ok(s)
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+
+    fn u16(&mut self) -> Result<u16, String> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn i64(&mut self) -> Result<i64, String> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> FlowSnapshot {
+        FlowSnapshot {
+            n: 4,
+            s: 0,
+            t: 3,
+            name: "diamond".into(),
+            edges: vec![
+                Edge::new(0, 1, 3),
+                Edge::new(0, 2, 2),
+                Edge::new(1, 3, 2),
+                Edge::new(2, 3, 3),
+            ],
+            flow: vec![2, 2, 2, 2],
+            value: 4,
+            e_source: 1,
+            batches: 7,
+            scratch_ops: 123,
+        }
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let s = sample();
+        let b = s.to_bytes();
+        assert_eq!(b.len(), s.byte_len());
+        let back = FlowSnapshot::from_bytes(&b).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn roundtrip_file() {
+        let s = sample();
+        let dir = std::env::temp_dir().join("wbpr-snapshot-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.wbps");
+        s.write(&path).unwrap();
+        assert_eq!(FlowSnapshot::read(&path).unwrap(), s);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let s = sample();
+        let good = s.to_bytes();
+        // Bad magic.
+        let mut b = good.clone();
+        b[0] = b'X';
+        assert!(FlowSnapshot::from_bytes(&b).is_err());
+        // Truncated.
+        assert!(FlowSnapshot::from_bytes(&good[..good.len() - 3]).is_err());
+        // Flow above capacity.
+        let mut bad = s.clone();
+        bad.flow[0] = 99;
+        assert!(FlowSnapshot::from_bytes(&bad.to_bytes()).is_err());
+        // Self-loop edge.
+        let mut bad = s.clone();
+        bad.edges[1] = Edge::new(2, 2, 1);
+        bad.flow[1] = 0;
+        assert!(FlowSnapshot::from_bytes(&bad.to_bytes()).is_err());
+    }
+}

@@ -58,6 +58,95 @@ impl UpdateBatch {
     pub fn inserts(&self) -> usize {
         self.updates.iter().filter(|u| u.changes_topology()).count()
     }
+
+    /// Distinct edge slots this batch touches (inserts each count as a new
+    /// slot). The cost router's unit of predicted repair work: repeated
+    /// edits of one edge amortize into a single repair frontier, so
+    /// `distinct_touches = len × locality` is a better size proxy than
+    /// `len` alone.
+    pub fn distinct_touches(&self) -> usize {
+        let mut slots = std::collections::HashSet::new();
+        let mut inserts = 0usize;
+        for up in &self.updates {
+            match *up {
+                GraphUpdate::IncreaseCap { edge, .. }
+                | GraphUpdate::DecreaseCap { edge, .. }
+                | GraphUpdate::DeleteEdge { edge } => {
+                    slots.insert(edge);
+                }
+                GraphUpdate::InsertEdge { .. } => inserts += 1,
+            }
+        }
+        slots.len() + inserts
+    }
+
+    /// Pre-flight validation against a network with `n` vertices and
+    /// `edge_count` edges, tracking in-batch inserts so later updates may
+    /// address them. The single source of truth shared by both route
+    /// legs — the engine's warm repair ([`crate::dynamic::DynamicFlow::apply`])
+    /// and the session layer's recompute ([`UpdateBatch::apply_to_network`])
+    /// — so the two can never drift on what constitutes a valid batch.
+    pub fn validate_against(&self, n: usize, edge_count: usize) -> Result<(), String> {
+        let mut len = edge_count;
+        for (i, up) in self.updates.iter().enumerate() {
+            match *up {
+                GraphUpdate::IncreaseCap { edge, delta } | GraphUpdate::DecreaseCap { edge, delta } => {
+                    if edge >= len {
+                        return Err(format!("update {i}: edge {edge} out of range ({len} edges)"));
+                    }
+                    if delta < 0 {
+                        return Err(format!("update {i}: negative delta {delta}"));
+                    }
+                }
+                GraphUpdate::DeleteEdge { edge } => {
+                    if edge >= len {
+                        return Err(format!("update {i}: edge {edge} out of range ({len} edges)"));
+                    }
+                }
+                GraphUpdate::InsertEdge { u, v, cap } => {
+                    if u as usize >= n || v as usize >= n {
+                        return Err(format!("update {i}: endpoint out of range"));
+                    }
+                    if u == v {
+                        return Err(format!("update {i}: self loop"));
+                    }
+                    if cap < 0 {
+                        return Err(format!("update {i}: negative capacity"));
+                    }
+                    len += 1;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply this batch's *edits* to a plain network — capacities only, no
+    /// flow repair — with exactly the engine's semantics: decreases clamp
+    /// at zero, deletes leave a capacity-0 tombstone in place, inserts
+    /// append (so edge indices stay stable). Validation
+    /// ([`UpdateBatch::validate_against`]) rejects the whole batch before
+    /// anything is touched.
+    ///
+    /// This is the from-scratch leg of the session layer's cost-based
+    /// update routing: edit the network, then re-solve it, instead of
+    /// repairing the warm state.
+    pub fn apply_to_network(&self, net: &mut crate::graph::builder::FlowNetwork) -> Result<(), String> {
+        self.validate_against(net.n, net.edges.len())?;
+        for up in &self.updates {
+            match *up {
+                GraphUpdate::IncreaseCap { edge, delta } => net.edges[edge].cap += delta,
+                GraphUpdate::DecreaseCap { edge, delta } => {
+                    let e = &mut net.edges[edge];
+                    e.cap -= delta.min(e.cap);
+                }
+                GraphUpdate::DeleteEdge { edge } => net.edges[edge].cap = 0,
+                GraphUpdate::InsertEdge { u, v, cap } => {
+                    net.edges.push(crate::graph::Edge::new(u, v, cap));
+                }
+            }
+        }
+        Ok(())
+    }
 }
 
 /// An ordered sequence of batches — the unit a streaming workload is
@@ -93,6 +182,10 @@ pub struct UpdateReport {
     pub applied: usize,
     /// Work done by this repair only (pushes/relabels/scans/launches).
     pub stats: crate::maxflow::SolveStats,
+    /// Whether the cost router served this batch by a from-scratch
+    /// re-solve instead of a warm repair (`false` for direct
+    /// [`crate::dynamic::DynamicFlow::apply`] calls).
+    pub recomputed: bool,
 }
 
 #[cfg(test)]
@@ -111,5 +204,49 @@ mod tests {
         assert_eq!(b.inserts(), 1);
         assert!(GraphUpdate::InsertEdge { u: 0, v: 1, cap: 1 }.changes_topology());
         assert!(!GraphUpdate::DeleteEdge { edge: 0 }.changes_topology());
+    }
+
+    #[test]
+    fn distinct_touches_dedups_edge_slots() {
+        let b = UpdateBatch::new(vec![
+            GraphUpdate::IncreaseCap { edge: 3, delta: 1 },
+            GraphUpdate::DecreaseCap { edge: 3, delta: 1 },
+            GraphUpdate::DeleteEdge { edge: 5 },
+            GraphUpdate::InsertEdge { u: 0, v: 1, cap: 2 },
+            GraphUpdate::InsertEdge { u: 1, v: 2, cap: 2 },
+        ]);
+        assert_eq!(b.distinct_touches(), 4, "edge 3 counted once, 2 inserts, 1 delete");
+    }
+
+    #[test]
+    fn apply_to_network_mirrors_engine_semantics() {
+        use crate::graph::builder::FlowNetwork;
+        use crate::graph::Edge;
+        let mut net = FlowNetwork::new(
+            3,
+            0,
+            2,
+            vec![Edge::new(0, 1, 4), Edge::new(1, 2, 4)],
+            "line",
+        );
+        let b = UpdateBatch::new(vec![
+            GraphUpdate::IncreaseCap { edge: 0, delta: 2 },
+            GraphUpdate::DecreaseCap { edge: 1, delta: 100 }, // clamps to 0
+            GraphUpdate::InsertEdge { u: 0, v: 2, cap: 7 },
+            GraphUpdate::IncreaseCap { edge: 2, delta: 1 }, // in-batch insert addressable
+        ]);
+        b.apply_to_network(&mut net).unwrap();
+        assert_eq!(net.edges[0].cap, 6);
+        assert_eq!(net.edges[1].cap, 0, "decrease clamps, tombstone stays in place");
+        assert_eq!(net.edges[2], Edge::new(0, 2, 8));
+
+        // Invalid batches reject whole, leaving the network untouched.
+        let before = net.edges.clone();
+        let bad = UpdateBatch::new(vec![
+            GraphUpdate::IncreaseCap { edge: 0, delta: 1 },
+            GraphUpdate::DeleteEdge { edge: 42 },
+        ]);
+        assert!(bad.apply_to_network(&mut net).is_err());
+        assert_eq!(net.edges, before);
     }
 }

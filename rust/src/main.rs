@@ -4,9 +4,11 @@
 //! wbpr maxflow   --gen <kind>|--input <dimacs> --engine <seq|dinic|ek|tc|vc> --rep <rcsr|bcsr>
 //! wbpr matching  --nl N --nr N --m M [--skew S] --engine ... --rep ...
 //! wbpr device    --gen <kind>      # run through the PJRT device engine
-//! wbpr serve     --jobs N          # coordinator demo: batched jobs + metrics
+//! wbpr serve     --jobs N [--session-shards N] [--session-ttl-ms MS] [--recompute-ratio R]
 //! wbpr bench     table1|table2|table3|fig3|all [--scale smoke|full]
 //! wbpr bench     smoke [--out BENCH_table1.json]   # machine-readable perf tracker
+//! wbpr bench     shards [--shards 1,2,4] [--sessions 64] [--batches 4] [--out BENCH_shards.json]
+//! wbpr bench     compare old.json new.json [--fail-above 1.25]  # perf-regression gate
 //! wbpr gen       --kind <...> --out file.dimacs
 //! wbpr info      [--gen <kind>]    # artifacts + memory accounting
 //! ```
@@ -14,9 +16,9 @@
 //! Options may also come from `--config file.ini` with `--set sec.key=val`
 //! overrides (see `configs/default.ini`).
 
-use wbpr::bench::{fig3, table1, table2, table3, Scale};
+use wbpr::bench::{compare, fig3, table1, table2, table3, Scale};
 use wbpr::coordinator::batcher::PairBatcher;
-use wbpr::coordinator::{Coordinator, CoordinatorConfig, Job};
+use wbpr::coordinator::{Coordinator, CoordinatorConfig, Job, RouterConfig, ShardPoolConfig};
 use wbpr::graph::builder::{select_pairs, ArcGraph, FlowNetwork};
 use wbpr::graph::csr::DegreeStats;
 use wbpr::graph::residual::Residual as _;
@@ -203,6 +205,32 @@ fn cmd_device(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// Router policy from config + CLI (`--recompute-ratio` is the session
+/// layer's repair-vs-recompute knob, tunable like `vc_cv_threshold`).
+fn router_config(args: &Args, cfg: &Config) -> Result<RouterConfig, String> {
+    let d = RouterConfig::default();
+    Ok(RouterConfig {
+        vc_cv_threshold: args
+            .opt_f64("vc-cv-threshold", cfg.get_f64("router", "vc_cv_threshold", d.vc_cv_threshold)?)?,
+        vc_min_vertices: cfg.get_usize("router", "vc_min_vertices", d.vc_min_vertices)?,
+        prefer_device: d.prefer_device,
+        recompute_ratio: args
+            .opt_f64("recompute-ratio", cfg.get_f64("router", "recompute_ratio", d.recompute_ratio)?)?,
+    })
+}
+
+/// Session shard-pool shape from config + CLI (`--session-ttl-ms 0`
+/// disables eviction).
+fn session_config(args: &Args, cfg: &Config) -> Result<ShardPoolConfig, String> {
+    let shards = args.opt_usize("session-shards", cfg.get_usize("coordinator", "session_shards", 1)?)?;
+    let ttl_ms = args.opt_u64("session-ttl-ms", cfg.get_usize("coordinator", "session_ttl_ms", 0)? as u64)?;
+    Ok(ShardPoolConfig {
+        shards: shards.max(1),
+        ttl: (ttl_ms > 0).then(|| std::time::Duration::from_millis(ttl_ms)),
+        snapshot_dir: args.opt("snapshot-dir").map(std::path::PathBuf::from),
+    })
+}
+
 fn cmd_serve(args: &Args) -> Result<(), String> {
     let cfg = load_config(args)?;
     let opts = solve_options(args, &cfg)?;
@@ -211,10 +239,15 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         native_workers: args.opt_usize("workers", cfg.get_usize("coordinator", "native_workers", 2)?)?,
         enable_device: !args.flag("no-device"),
         solve: opts,
-        router: Default::default(),
+        router: router_config(args, &cfg)?,
+        session: session_config(args, &cfg)?,
     };
     let coord = Coordinator::start(config);
-    println!("coordinator up (device: {})", coord.has_device());
+    println!(
+        "coordinator up (device: {}, session shards: {})",
+        coord.has_device(),
+        coord.session_shards()
+    );
     // Demo workload: batched pair queries over a road network. Between
     // requests, poll the age-based flush so a trickle of pairs below the
     // batch size is released instead of stranded.
@@ -253,6 +286,40 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
     let scale: Scale = args.opt("scale").unwrap_or("smoke").parse()?;
     let opts = SolveOptions { threads: args.opt_usize("threads", 0)?, cycles_per_launch: 256, ..Default::default() };
+    if what == "compare" {
+        // Perf-regression gate: compare two `bench smoke` artifacts; a
+        // wall-clock ratio above --fail-above on any record is an error
+        // (non-zero exit), which is what fails the CI job.
+        let old = args.positional.get(2).ok_or("usage: bench compare old.json new.json")?;
+        let new = args.positional.get(3).ok_or("usage: bench compare old.json new.json")?;
+        let fail_above = args.opt_f64("fail-above", 1.25)?;
+        let report = compare::compare_files(old, new, fail_above)?;
+        print!("{report}");
+        return Ok(());
+    }
+    if what == "shards" {
+        // Session shard-scaling sweep (the Table 3 shard column): N warm
+        // sessions streaming update batches through 1/2/4 session workers.
+        let shard_counts: Vec<usize> = args
+            .opt("shards")
+            .unwrap_or("1,2,4")
+            .split(',')
+            .map(|s| s.trim().parse::<usize>().map_err(|e| format!("bad shard count '{s}': {e}")))
+            .collect::<Result<_, _>>()?;
+        let sessions = args.opt_usize("sessions", 64)?;
+        let batches = args.opt_usize("batches", 4)?;
+        let rows = table3::run_shard_scaling(&shard_counts, sessions, batches, &opts);
+        println!("# Table 3 (cont.) — session shard scaling\n");
+        println!("{}", table3::render_shard_scaling(&rows));
+        if let Some(out) = args.opt("out") {
+            std::fs::write(out, table3::shard_records_json(&rows).to_string()).map_err(|e| e.to_string())?;
+            println!("wrote {out} ({} rows)", rows.len());
+        }
+        if rows.iter().any(|r| !r.values_agree) {
+            return Err("shard-scaling value mismatch (see table)".into());
+        }
+        return Ok(());
+    }
     if what == "smoke" {
         // Machine-readable perf tracker: native Table 1 smoke measurements
         // as JSON, checked into CI artifacts so the wall-clock / counter
@@ -275,6 +342,22 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     if what == "table3" || what == "all" {
         println!("# Table 3 — incremental repair vs from-scratch (streaming updates)\n");
         println!("{}", table3::render(&table3::run(scale, &opts)));
+        // Shard-scaling column: smoke keeps it light; full runs the
+        // acceptance shape (64 sessions, the {1,2,4} sweep).
+        let (sessions, batches) = match scale {
+            Scale::Smoke => (8, 2),
+            Scale::Full => (64, 4),
+        };
+        println!("## Session shard scaling\n");
+        println!(
+            "{}",
+            table3::render_shard_scaling(&table3::run_shard_scaling(
+                &table3::SHARD_SWEEP,
+                sessions,
+                batches,
+                &opts
+            ))
+        );
     }
     if what == "fig3" || what == "all" {
         println!("# Figure 3 — workload distribution (TC vs VC on RCSR)\n");

@@ -84,6 +84,19 @@ impl WorkerPool {
         self.handles.len()
     }
 
+    /// Split `total` machine threads across `shards` single-owner session
+    /// workers: every shard gets an equal slice (at least 1), and the
+    /// first `total % shards` shards absorb the remainder. Oversubscribing
+    /// (`shards > total`) degrades to one thread per shard — correctness
+    /// never depends on the split, only throughput.
+    pub fn shard_sizes(total: usize, shards: usize) -> Vec<usize> {
+        let shards = shards.max(1);
+        let total = total.max(1);
+        let base = total / shards;
+        let rem = total % shards;
+        (0..shards).map(|i| (base + usize::from(i < rem)).max(1)).collect()
+    }
+
     /// Broadcast `f` to every worker (called with its worker index) and
     /// block until all workers return. Concurrent `run` calls on a shared
     /// pool serialize (see `broadcast`). Panics (after all workers
@@ -247,6 +260,15 @@ mod tests {
             }
         });
         assert_eq!(counter.load(Ordering::Relaxed), 4 * 25 * 2);
+    }
+
+    #[test]
+    fn shard_sizes_cover_all_threads() {
+        assert_eq!(WorkerPool::shard_sizes(8, 4), vec![2, 2, 2, 2]);
+        assert_eq!(WorkerPool::shard_sizes(7, 4), vec![2, 2, 2, 1]);
+        assert_eq!(WorkerPool::shard_sizes(2, 4), vec![1, 1, 1, 1], "oversubscribed: 1 each");
+        assert_eq!(WorkerPool::shard_sizes(5, 1), vec![5]);
+        assert_eq!(WorkerPool::shard_sizes(0, 0), vec![1], "degenerate inputs clamp");
     }
 
     #[test]

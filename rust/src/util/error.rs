@@ -1,0 +1,110 @@
+//! An `anyhow`-compatible error shim for the `device` feature.
+//!
+//! The real PJRT client (`runtime/client.rs`) was written against
+//! `anyhow::{anyhow, Context, Result}` from the vendored closure. Offline
+//! builds don't have that closure, but CI still type-checks the device
+//! path (`cargo check --features device`), so this module reimplements the
+//! three names the device code uses with identical call-site syntax. When
+//! the `xla` closure is vendored, swapping the `use` lines in
+//! `runtime/client.rs` / `coordinator/device.rs` back to the real crates
+//! is the only change needed.
+
+use std::fmt;
+
+/// A string-backed error with `anyhow`-style context chaining.
+pub struct Error {
+    msg: String,
+    context: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from anything displayable (what `anyhow!` lowers to).
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string(), context: Vec::new() }
+    }
+
+    fn push_context(mut self, c: impl fmt::Display) -> Error {
+        self.context.push(c.to_string());
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Outermost context first, like anyhow's single-line rendering.
+        for c in self.context.iter().rev() {
+            write!(f, "{c}: ")?;
+        }
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Drop-in for `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Drop-in for `anyhow::Context` on `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).push_context(c))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+}
+
+/// Drop-in for `anyhow::anyhow!`: a format string (inline captures work,
+/// they lower to `format!`) or any single displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::util::error::Error::msg(format!($msg))
+    };
+    ($msg:literal, $($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($msg, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::util::error::Error::msg($err)
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn macro_forms_and_display() {
+        let world = "pjrt";
+        let a = anyhow!("plain");
+        let b = anyhow!("fmt {world} {}", 7);
+        let c = anyhow!(String::from("owned"));
+        assert_eq!(a.to_string(), "plain");
+        assert_eq!(b.to_string(), "fmt pjrt 7");
+        assert_eq!(c.to_string(), "owned");
+        assert_eq!(format!("{b:?}"), "fmt pjrt 7");
+    }
+
+    #[test]
+    fn context_on_option_and_result() {
+        let none: Option<u32> = None;
+        assert_eq!(none.context("missing").unwrap_err().to_string(), "missing");
+        let err: std::result::Result<u32, String> = Err("inner".into());
+        assert_eq!(err.context("outer").unwrap_err().to_string(), "outer: inner");
+        let ok: std::result::Result<u32, String> = Ok(3);
+        assert_eq!(ok.context("ignored").unwrap(), 3);
+    }
+}

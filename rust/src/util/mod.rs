@@ -7,6 +7,7 @@
 
 pub mod cli;
 pub mod config;
+pub mod error;
 pub mod json;
 pub mod log;
 pub mod prop;

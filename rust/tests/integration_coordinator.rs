@@ -14,7 +14,7 @@ fn config(native: usize, device: bool) -> CoordinatorConfig {
         native_workers: native,
         enable_device: device,
         solve: SolveOptions { threads: 2, cycles_per_launch: 64, ..Default::default() },
-        router: Default::default(),
+        ..Default::default()
     }
 }
 

@@ -80,7 +80,7 @@ fn warm_session_serves_update_stream_through_coordinator() {
         native_workers: 1,
         enable_device: false,
         solve: opts(),
-        router: Default::default(),
+        ..Default::default()
     };
     let coord = Coordinator::start(config);
     let net = generators::washington_rlg(&generators::WashingtonParams {
