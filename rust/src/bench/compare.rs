@@ -170,6 +170,9 @@ mod tests {
             pushes,
             relabels: 10,
             frontier_len_sum: 5,
+            launches: 4,
+            rescan_launches: 1,
+            carried_frontier_len: 12,
         }])
         .to_string()
     }

@@ -158,6 +158,13 @@ pub struct BenchRecord {
     pub pushes: u64,
     pub relabels: u64,
     pub frontier_len_sum: u64,
+    /// Host launches of the solve.
+    pub launches: u64,
+    /// Launches that paid the O(V) active-vertex rescan (VC only; the
+    /// rest started from the carried frontier).
+    pub rescan_launches: u64,
+    /// Σ carried-frontier length over the carried launches.
+    pub carried_frontier_len: u64,
 }
 
 /// Run the Table 1 smoke suite natively (no SIMT sims — this is the
@@ -195,6 +202,9 @@ pub fn smoke_records(opts: &SolveOptions) -> Vec<BenchRecord> {
                 pushes: r.stats.pushes,
                 relabels: r.stats.relabels,
                 frontier_len_sum: r.stats.frontier_len_sum,
+                launches: r.stats.launches,
+                rescan_launches: r.stats.rescan_launches,
+                carried_frontier_len: r.stats.carried_frontier_len,
             });
         }
     }
@@ -216,6 +226,9 @@ pub fn records_json(records: &[BenchRecord]) -> crate::util::json::Json {
             o.insert("pushes".to_string(), Json::Num(r.pushes as f64));
             o.insert("relabels".to_string(), Json::Num(r.relabels as f64));
             o.insert("frontier_len_sum".to_string(), Json::Num(r.frontier_len_sum as f64));
+            o.insert("launches".to_string(), Json::Num(r.launches as f64));
+            o.insert("rescan_launches".to_string(), Json::Num(r.rescan_launches as f64));
+            o.insert("carried_frontier_len".to_string(), Json::Num(r.carried_frontier_len as f64));
             Json::Obj(o)
         })
         .collect();
@@ -223,6 +236,19 @@ pub fn records_json(records: &[BenchRecord]) -> crate::util::json::Json {
     doc.insert("schema".to_string(), Json::Str("wbpr/bench_table1/v1".to_string()));
     doc.insert("records".to_string(), Json::Arr(arr));
     Json::Obj(doc)
+}
+
+/// Aggregate rescan fraction of the VC records: Σ rescan_launches /
+/// Σ launches. The PR-4 acceptance metric — with the carried frontier and
+/// the auto-tuned cadence this must stay **< 0.15** on the smoke suite
+/// (the legacy engine sits at exactly 1.0).
+pub fn vc_rescan_fraction(records: &[BenchRecord]) -> f64 {
+    let (mut rescans, mut launches) = (0u64, 0u64);
+    for r in records.iter().filter(|r| r.engine == "VC") {
+        rescans += r.rescan_launches;
+        launches += r.launches;
+    }
+    rescans as f64 / launches.max(1) as f64
 }
 
 pub fn geo_mean(xs: impl Iterator<Item = f64>) -> f64 {
@@ -278,6 +304,9 @@ mod tests {
             pushes: 10,
             relabels: 4,
             frontier_len_sum: 7,
+            launches: 20,
+            rescan_launches: 2,
+            carried_frontier_len: 90,
         }];
         let j = records_json(&recs);
         let back = crate::util::json::Json::parse(&j.to_string()).unwrap();
@@ -287,6 +316,29 @@ mod tests {
         assert_eq!(rec.get("rep").unwrap().as_str(), Some("BCSR"));
         assert_eq!(rec.get("frontier_len_sum").unwrap().as_i64(), Some(7));
         assert_eq!(rec.get("pushes").unwrap().as_i64(), Some(10));
+        assert_eq!(rec.get("launches").unwrap().as_i64(), Some(20));
+        assert_eq!(rec.get("rescan_launches").unwrap().as_i64(), Some(2));
+        assert_eq!(rec.get("carried_frontier_len").unwrap().as_i64(), Some(90));
+    }
+
+    #[test]
+    fn rescan_fraction_aggregates_vc_records_only() {
+        let mk = |engine: &'static str, launches: u64, rescans: u64| BenchRecord {
+            graph: "G".into(),
+            engine,
+            rep: "BCSR",
+            wall_ms: 1.0,
+            pushes: 0,
+            relabels: 0,
+            frontier_len_sum: 0,
+            launches,
+            rescan_launches: rescans,
+            carried_frontier_len: 0,
+        };
+        let recs = vec![mk("VC", 80, 8), mk("VC", 20, 2), mk("TC", 1000, 1000)];
+        let f = vc_rescan_fraction(&recs);
+        assert!((f - 0.1).abs() < 1e-9, "TC records must not dilute the fraction: {f}");
+        assert_eq!(vc_rescan_fraction(&[]), 0.0);
     }
 
     #[test]

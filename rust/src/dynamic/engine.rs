@@ -24,8 +24,11 @@
 //! 3. **Repair** — one host global relabel refreshes the warm heights and
 //!    cancels stranded excess from the ExcessTotal accounting, then the
 //!    vertex-centric kernel ([`crate::maxflow::vc::run_from_state`]) runs
-//!    from the warm state. Work is proportional to the new augmenting
-//!    structure, not to the graph.
+//!    from the warm state, with its first launch seeded from the batch's
+//!    *touched vertices* (decrease tails + source seeds, filtered by
+//!    post-refresh activity) as a carried frontier — so even the launch
+//!    start costs O(|touched|), not O(V). Work is proportional to the new
+//!    augmenting structure, not to the graph.
 //! 4. **Return** — leftover excess (units that no longer fit through the
 //!    min cut) walks back to `s` along positive-flow arcs, restoring flow
 //!    conservation so the state is again a valid flow — and a valid
@@ -64,6 +67,12 @@ pub struct DynamicFlow {
     fault: Option<String>,
     /// Reused BFS buffers for the cancel/return walks.
     scratch: BfsScratch,
+    /// Vertices that gained excess during the current batch (decrease
+    /// overflow tails + the phase-2 source seeds): after the warm-height
+    /// refresh these are exactly the candidates for the active set, so
+    /// the kernel's first launch starts from them as a carried frontier
+    /// instead of the O(V) rescan. Reused across batches.
+    touched: Vec<u32>,
     /// Warm kernel context: the persistent worker pool (possibly shared
     /// with sibling sessions) plus the VC scratch (AVQ buffers, epoch
     /// stamps, barrier, global-relabel BFS buffers). Batches allocate
@@ -156,6 +165,7 @@ impl DynamicFlow {
             poisoned: false,
             fault: None,
             scratch: BfsScratch::new(n),
+            touched: Vec::new(),
             ctx,
         };
         let t0 = Timer::start();
@@ -227,6 +237,7 @@ impl DynamicFlow {
             poisoned: false,
             fault: None,
             scratch: BfsScratch::new(n),
+            touched: Vec::new(),
             ctx,
         })
     }
@@ -426,6 +437,10 @@ impl DynamicFlow {
         // for the kernel to re-route; at t it directly adjusts the value),
         if u != self.g.s {
             self.st.e[u as usize].fetch_add(over, Ordering::Relaxed);
+            if u != self.g.t {
+                // Candidate for the repair kernel's seeded frontier.
+                self.touched.push(u);
+            }
         }
         // ... and the head forwards `over` units it no longer receives:
         // cancel them along downstream flow paths.
@@ -442,7 +457,7 @@ impl DynamicFlow {
     /// Phases 2–4: seed the source frontier, repair with the warm kernel,
     /// return stranded excess. Restores the valid-max-flow invariant.
     fn resolve(&mut self, stats: &mut SolveStats) -> Result<(), String> {
-        let (g, rep, st, ctx) = (&self.g, &self.rep, &self.st, &mut self.ctx);
+        let (g, rep, st, ctx, touched) = (&self.g, &self.rep, &self.st, &mut self.ctx, &mut self.touched);
         // Phase 2 — generalized preflow: saturate every residual arc out
         // of s (forward *and* reverse arcs: a reverse arc out of s is
         // inflow circulation whose cancellation can also open paths).
@@ -453,6 +468,9 @@ impl DynamicFlow {
                 st.cf[(a ^ 1) as usize].fetch_add(c, Ordering::Relaxed);
                 st.e[y as usize].fetch_add(c, Ordering::Relaxed);
                 stats.pushes += 1;
+                if y != g.t {
+                    touched.push(y);
+                }
             }
         }
         // ExcessTotal = everything at the terminals plus everything in
@@ -472,6 +490,22 @@ impl DynamicFlow {
         // own periodic relabels inside `run_from_state`.
         global_relabel_with(g, rep, st, &mut acct, true, &mut ctx.scratch.gr);
         stats.global_relabels += 1;
+        // Seed the kernel's carried frontier straight from this batch's
+        // touched vertices (filtered by post-refresh activity): phase 1
+        // overflow tails plus the phase-2 source seeds are exactly the
+        // candidates for `e > 0`, so the first repair launch starts from
+        // them and skips the O(V) active-vertex rescan entirely.
+        ctx.scratch.seed_carried(touched.iter().copied().filter(|&v| st.is_active(g, v)));
+        touched.clear();
+        // The relabel above collected the exact active set for free
+        // (`GrScratch::active`); the touched-derived frontier must match
+        // it — a length mismatch means some update path deposited excess
+        // without recording the vertex, which would strand it forever.
+        debug_assert_eq!(
+            ctx.scratch.carried_frontier().map(|f| f.len()),
+            Some(ctx.scratch.gr.active.len()),
+            "touched-vertex seeding must cover the exact post-refresh active set"
+        );
         vc::run_from_state(g, rep, st, &mut acct, &self.opts, stats, ctx).map_err(|e| e.to_string())?;
         // Phase 4 — return undeliverable excess to s.
         return_excess(g, rep, st, stats, &mut self.scratch)
@@ -491,6 +525,8 @@ fn add_stats(total: &mut SolveStats, s: &SolveStats) {
     total.frontier_len_sum += s.frontier_len_sum;
     total.gap_cuts += s.gap_cuts;
     total.gr_skipped += s.gr_skipped;
+    total.rescan_launches += s.rescan_launches;
+    total.carried_frontier_len += s.carried_frontier_len;
 }
 
 /// Cancel `amount` units of the flow currently leaving `from` (whose

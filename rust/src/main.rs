@@ -73,14 +73,23 @@ fn load_config(args: &Args) -> Result<Config, String> {
 }
 
 fn solve_options(args: &Args, cfg: &Config) -> Result<SolveOptions, String> {
+    let defaults = SolveOptions::default();
     Ok(SolveOptions {
         threads: args.opt_usize("threads", cfg.get_usize("engine", "threads", 0)?)?,
         cycles_per_launch: args.opt_usize("cycles", cfg.get_usize("engine", "cycles_per_launch", 0)?)?,
         global_relabel: !args.flag("no-global-relabel"),
         // Relabel cadence: BFS once pushes+relabels reach gr_alpha * |V|
-        // (0 = after every launch, the legacy schedule).
+        // (0 = after every launch, the legacy schedule). With auto-tuning
+        // (--gr-spacing > 0) this is only the starting alpha.
         gr_alpha: args.opt_f64("gr-alpha", cfg.get_f64("engine", "gr_alpha", 1.0)?)?,
+        // Auto-tune the cadence toward one BFS every gr-spacing launches,
+        // clamped to the [--gr-alpha-min, --gr-alpha-max] band
+        // (0 = pin the cadence at --gr-alpha).
+        gr_spacing: args.opt_f64("gr-spacing", cfg.get_f64("engine", "gr_spacing", defaults.gr_spacing)?)?,
+        gr_alpha_min: args.opt_f64("gr-alpha-min", cfg.get_f64("engine", "gr_alpha_min", defaults.gr_alpha_min)?)?,
+        gr_alpha_max: args.opt_f64("gr-alpha-max", cfg.get_f64("engine", "gr_alpha_max", defaults.gr_alpha_max)?)?,
         frontier: !args.flag("no-frontier") && cfg.get_bool("engine", "frontier", true)?,
+        verify_frontier: false,
     })
 }
 
@@ -325,10 +334,28 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
         // as JSON, checked into CI artifacts so the wall-clock / counter
         // trajectory is visible PR over PR.
         let t = std::time::Instant::now();
+        // Smoke defaults to a small launch budget: many launch boundaries
+        // is exactly what exercises the cross-launch carry-over (and what
+        // makes the rescan fraction below statistically meaningful). An
+        // explicit --cycles still wins. Baselines compare like for like —
+        // the bench-regression cache key hashes the smoke sources.
+        let opts = if args.opt("cycles").is_some() {
+            opts.clone()
+        } else {
+            SolveOptions { cycles_per_launch: 64, ..opts.clone() }
+        };
         let records = table1::smoke_records(&opts);
         let out = args.opt("out").unwrap_or("BENCH_table1.json");
         std::fs::write(out, table1::records_json(&records).to_string()).map_err(|e| e.to_string())?;
         println!("wrote {} ({} records in {:.1}s)", out, records.len(), t.elapsed().as_secs_f64());
+        // PR-4 acceptance metric: with the carried frontier + auto-tuned
+        // cadence, the O(V) rescans must stay below 15% of VC launches
+        // (the legacy engine rescans on 100% of them).
+        let frac = table1::vc_rescan_fraction(&records);
+        println!("VC rescan fraction: {:.1}% of launches (target < 15%)", frac * 100.0);
+        if frac >= 0.15 {
+            return Err(format!("VC rescan fraction {:.1}% breaches the <15% target", frac * 100.0));
+        }
         return Ok(());
     }
     if what == "table1" || what == "all" {

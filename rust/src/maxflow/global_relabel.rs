@@ -10,6 +10,7 @@
 //! `e(s) + e(t) ≥ Excess_total` termination test sound (He & Hong).
 
 use super::state::{AtomicCounters, ParState, SolveStats};
+use super::SolveOptions;
 use crate::graph::builder::ArcGraph;
 use crate::graph::residual::Residual;
 use std::collections::VecDeque;
@@ -69,11 +70,17 @@ pub struct RelabelOutcome {
 pub struct GrScratch {
     dist: Vec<u32>,
     queue: VecDeque<u32>,
+    /// Active vertices (`e > 0`, `h < n`, non-terminal) as of the end of
+    /// the last [`global_relabel_with`] pass — collected for free during
+    /// the O(V) settle loop the BFS runs anyway. The vertex-centric
+    /// engine re-seeds its carried frontier from this instead of paying a
+    /// separate launch-start rescan after every relabel.
+    pub active: Vec<u32>,
 }
 
 impl GrScratch {
     pub fn new(n: usize) -> GrScratch {
-        GrScratch { dist: vec![u32::MAX; n], queue: VecDeque::new() }
+        GrScratch { dist: vec![u32::MAX; n], queue: VecDeque::new(), active: Vec::new() }
     }
 
     fn ensure(&mut self, n: usize) {
@@ -128,6 +135,7 @@ pub fn global_relabel_with<R: Residual>(
     }
     let mut reachable = 0usize;
     let mut active = 0usize;
+    scratch.active.clear();
     for u in 0..n as u32 {
         if u == g.s || u == g.t {
             continue;
@@ -142,6 +150,7 @@ pub fn global_relabel_with<R: Residual>(
             }
             if e_u > 0 && st.height(u) < n as u32 {
                 active += 1;
+                scratch.active.push(u);
             }
         } else {
             // Unreachable: deactivate.
@@ -197,21 +206,139 @@ pub fn gap_heuristic(g: &ArcGraph, st: &ParState) -> usize {
     lifted
 }
 
+/// What one host step did — the signal the VC engine's frontier
+/// carry-over keys on: a pending AVQ survives a host step only if the step
+/// left every height untouched.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HostStep {
+    /// The global-relabel BFS ran (heights may have been rewritten — even
+    /// the accounting-only pass lifts unreachable vertices).
+    pub relabeled: bool,
+    /// Vertices the gap cut lifted to height `n` this step.
+    pub gap_lifted: u64,
+    /// The ExcessTotal accounting already proved termination, so no
+    /// heuristic ran at all — the final launch of a solve never pays a
+    /// BFS (or even the O(V) gap scan) that cannot change the outcome.
+    pub converged: bool,
+}
+
+impl HostStep {
+    /// Must the next launch rebuild its frontier (rescan, or adopt the
+    /// relabel's own active-set collection)? True exactly when the BFS
+    /// ran: a global relabel can *lower* heights, re-activating vertices
+    /// the carried frontier no longer tracks — breaking
+    /// `frontier ⊇ active`. A gap cut, by contrast, only *lifts* heights:
+    /// it can only shrink the active set, so the carry stays a valid
+    /// superset and the lifted vertices decay as one-time idle entries.
+    pub fn invalidates_carry(&self) -> bool {
+        self.relabeled
+    }
+}
+
+/// EWMA decay for the auto-tuner's ops-per-frontier-vertex estimate.
+const TUNE_EWMA_DECAY: f64 = 0.25;
+
 /// Adaptive global-relabel cadence: fire the BFS once the kernel has done
 /// `alpha · |V|` pushes+relabels since the last pass (the classic
 /// work-triggered schedule), and always after a zero-op launch — the only
 /// way stranded excess gets canceled, so termination stays sound.
+///
+/// With a `spacing` target (see [`AdaptiveGr::from_opts`]) the alpha is
+/// **auto-tuned** instead of hand-picked: the tuner keeps an EWMA of the
+/// observed discharge ops per launch-start frontier vertex (`r̄`) and of
+/// the launch-start frontier size (`s̄`), and retargets
+/// `threshold = spacing · r̄ · s̄` — i.e. one BFS every ~`spacing`
+/// launches — clamped to the `[alpha_min, alpha_max] · |V|` band so the
+/// cadence can neither thrash (BFS more often than `alpha_min·|V|` ops)
+/// nor let heights go unboundedly stale.
 #[derive(Debug)]
 pub struct AdaptiveGr {
+    n: usize,
+    /// Current alpha (threshold / n). Fixed unless auto-tuning is on.
+    alpha: f64,
     threshold: u64,
     work: u64,
+    /// Target launches between BFS passes; `0.0` = auto-tuning off.
+    spacing: f64,
+    band: (f64, f64),
+    /// EWMA of launch ops per launch-start frontier vertex.
+    ewma_ops_per_vertex: f64,
+    /// EWMA of the launch-start frontier size.
+    ewma_frontier: f64,
+    samples: u64,
 }
 
 impl AdaptiveGr {
-    /// `alpha <= 0` restores the legacy every-launch cadence.
+    /// Fixed cadence at `alpha` (no auto-tuning); `alpha <= 0` restores
+    /// the legacy every-launch cadence.
     pub fn new(n: usize, alpha: f64) -> AdaptiveGr {
         let threshold = if alpha <= 0.0 { 0 } else { (alpha * n as f64).ceil() as u64 };
-        AdaptiveGr { threshold, work: 0 }
+        AdaptiveGr {
+            n,
+            alpha: alpha.max(0.0),
+            threshold,
+            work: 0,
+            spacing: 0.0,
+            band: (alpha.max(0.0), alpha.max(0.0)),
+            ewma_ops_per_vertex: 0.0,
+            ewma_frontier: 0.0,
+            samples: 0,
+        }
+    }
+
+    /// Cadence from [`SolveOptions`]: starts at `gr_alpha` and, when
+    /// `gr_spacing > 0` (and the cadence is adaptive at all), auto-tunes
+    /// within `[gr_alpha_min, gr_alpha_max]`.
+    pub fn from_opts(n: usize, opts: &SolveOptions) -> AdaptiveGr {
+        let mut a = AdaptiveGr::new(n, opts.gr_alpha);
+        if opts.gr_alpha > 0.0 && opts.gr_spacing > 0.0 {
+            let lo = opts.gr_alpha_min.max(1e-3);
+            let hi = opts.gr_alpha_max.max(lo);
+            a.spacing = opts.gr_spacing;
+            a.band = (lo, hi);
+        }
+        a
+    }
+
+    /// The alpha the cadence is currently running at (exposed for tests
+    /// and the bench tables).
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    /// Feed the tuner one launch's observation: `launch_ops` discharge
+    /// ops (pushes + relabels) cascaded from a launch-start frontier of
+    /// `frontier_start` vertices. No-op when auto-tuning is off or the
+    /// launch carried no frontier signal (`frontier_start == 0` — e.g.
+    /// the thread-centric engine, which has no frontier).
+    pub fn observe(&mut self, launch_ops: u64, frontier_start: u64) {
+        if self.spacing <= 0.0 || frontier_start == 0 {
+            return;
+        }
+        let r = launch_ops as f64 / frontier_start as f64;
+        let s = frontier_start as f64;
+        if self.samples == 0 {
+            self.ewma_ops_per_vertex = r;
+            self.ewma_frontier = s;
+        } else {
+            self.ewma_ops_per_vertex = TUNE_EWMA_DECAY * r + (1.0 - TUNE_EWMA_DECAY) * self.ewma_ops_per_vertex;
+            self.ewma_frontier = TUNE_EWMA_DECAY * s + (1.0 - TUNE_EWMA_DECAY) * self.ewma_frontier;
+        }
+        self.samples += 1;
+        // One BFS every ~spacing launches: spacing × (EWMA ops/launch),
+        // expressed as an alpha and clamped to the configured band.
+        let ops_per_launch = self.ewma_ops_per_vertex * self.ewma_frontier;
+        let alpha = (self.spacing * ops_per_launch / self.n.max(1) as f64).clamp(self.band.0, self.band.1);
+        self.alpha = alpha;
+        self.threshold = (alpha * self.n as f64).ceil() as u64;
+    }
+
+    /// Tell the cadence a global relabel just ran *outside* the host step
+    /// (e.g. the VC engine's direct pass on an empty carried frontier):
+    /// resets the work accumulator so the freshly refreshed heights are
+    /// not immediately re-refreshed by a back-to-back BFS.
+    pub fn note_external_relabel(&mut self) {
+        self.work = 0;
     }
 
     /// Record one launch's pushes+relabels; `true` means the host must run
@@ -234,6 +361,14 @@ impl AdaptiveGr {
     /// rewrite and the gap cut, because the cut relies on the next
     /// height-updating relabel to re-lower a conservatively lifted vertex
     /// (see [`gap_heuristic`]).
+    ///
+    /// Convergence is checked *first*: once the accounting proves
+    /// termination, neither heuristic can change the result, so the final
+    /// launch of a solve skips both (this also neuters the zero-op force,
+    /// which used to burn one full BFS on an already-converged state).
+    ///
+    /// `frontier_start` is the launch-start frontier size (the auto-tune
+    /// signal; pass `0` from engines without a frontier).
     #[allow(clippy::too_many_arguments)]
     pub fn host_step<R: Residual>(
         &mut self,
@@ -245,18 +380,24 @@ impl AdaptiveGr {
         update_heights: bool,
         stats: &mut SolveStats,
         scratch: &mut GrScratch,
-    ) {
+        frontier_start: u64,
+    ) -> HostStep {
         let ops_before = stats.pushes + stats.relabels;
         counters.merge_into(stats);
         let launch_ops = stats.pushes + stats.relabels - ops_before;
+        if acct.done(g, st) {
+            return HostStep { relabeled: false, gap_lifted: 0, converged: true };
+        }
+        self.observe(launch_ops, frontier_start);
         if self.should_run(launch_ops) {
             global_relabel_with(g, rep, st, acct, update_heights, scratch);
             stats.global_relabels += 1;
+            HostStep { relabeled: true, gap_lifted: 0, converged: false }
         } else {
-            if update_heights {
-                stats.gap_cuts += gap_heuristic(g, st) as u64;
-            }
+            let lifted = if update_heights { gap_heuristic(g, st) as u64 } else { 0 };
+            stats.gap_cuts += lifted;
             stats.gr_skipped += 1;
+            HostStep { relabeled: false, gap_lifted: lifted, converged: false }
         }
     }
 }
@@ -415,6 +556,97 @@ mod tests {
         let mut legacy = AdaptiveGr::new(100, 0.0);
         assert!(legacy.should_run(1));
         assert!(legacy.should_run(1));
+    }
+
+    #[test]
+    fn auto_tune_tracks_ops_per_launch_within_band() {
+        let opts = SolveOptions {
+            gr_alpha: 1.0,
+            gr_spacing: 10.0,
+            gr_alpha_min: 0.25,
+            gr_alpha_max: 8.0,
+            ..Default::default()
+        };
+        let mut ad = AdaptiveGr::from_opts(1000, &opts);
+        assert_eq!(ad.alpha(), 1.0, "starts at the configured alpha");
+        // Launches doing ~200 ops from 100-vertex frontiers: the tuner
+        // targets 10 launches × 200 ops = 2000 ops = alpha 2.0.
+        for _ in 0..32 {
+            ad.observe(200, 100);
+        }
+        assert!((ad.alpha() - 2.0).abs() < 0.05, "alpha {} should settle near 2.0", ad.alpha());
+        // Huge launches saturate at the band ceiling...
+        for _ in 0..32 {
+            ad.observe(100_000, 5_000);
+        }
+        assert_eq!(ad.alpha(), 8.0);
+        // ...and tiny ones at the floor.
+        for _ in 0..64 {
+            ad.observe(1, 1);
+        }
+        assert_eq!(ad.alpha(), 0.25);
+        // No frontier signal (TC engine) leaves the cadence untouched.
+        let before = ad.alpha();
+        ad.observe(10_000, 0);
+        assert_eq!(ad.alpha(), before);
+    }
+
+    #[test]
+    fn auto_tune_disabled_keeps_alpha_pinned() {
+        let mut fixed = AdaptiveGr::new(100, 1.5);
+        fixed.observe(100_000, 100);
+        assert_eq!(fixed.alpha(), 1.5, "AdaptiveGr::new never tunes");
+        let opts = SolveOptions { gr_alpha: 1.5, gr_spacing: 0.0, ..Default::default() };
+        let mut off = AdaptiveGr::from_opts(100, &opts);
+        off.observe(100_000, 100);
+        assert_eq!(off.alpha(), 1.5, "gr_spacing = 0 disables tuning");
+        // Legacy every-launch cadence is never tuned either.
+        let legacy = AdaptiveGr::from_opts(100, &SolveOptions { gr_alpha: 0.0, ..Default::default() });
+        assert_eq!(legacy.alpha(), 0.0);
+    }
+
+    #[test]
+    fn host_step_skips_everything_once_converged() {
+        // A converged state (all excess at the terminals): even a zero-op
+        // launch — which normally *forces* the BFS — must not relabel.
+        let (g, rep) = line();
+        let (st, total) = ParState::preflow(&g);
+        // Route everything by hand: 2 units s -> 1 -> 2 -> t.
+        st.e[1].store(0, Ordering::Relaxed);
+        st.e[3].store(2, Ordering::Relaxed);
+        let mut acct = ExcessAccounting::new(g.n, total);
+        assert!(acct.done(&g, &st));
+        let mut ad = AdaptiveGr::new(g.n, 1.0);
+        let counters = AtomicCounters::default();
+        let mut stats = SolveStats::default();
+        let mut scratch = GrScratch::new(g.n);
+        let out = ad.host_step(&g, &rep, &st, &mut acct, &counters, true, &mut stats, &mut scratch, 0);
+        assert!(out.converged);
+        assert!(!out.invalidates_carry());
+        assert_eq!(stats.global_relabels, 0, "no BFS on a converged state");
+        assert_eq!(stats.gap_cuts, 0, "no gap scan either");
+        assert_eq!(stats.gr_skipped, 0, "converged is not an adaptive skip");
+    }
+
+    #[test]
+    fn host_step_outcome_reports_invalidation() {
+        let (g, rep) = line();
+        let (st, total) = ParState::preflow(&g);
+        let mut acct = ExcessAccounting::new(g.n, total);
+        let counters = AtomicCounters::default();
+        let mut stats = SolveStats::default();
+        let mut scratch = GrScratch::new(g.n);
+        // Zero-op launch on an unconverged state: the forced BFS runs and
+        // invalidates any carried frontier.
+        let mut ad = AdaptiveGr::new(g.n, 100.0);
+        let out = ad.host_step(&g, &rep, &st, &mut acct, &counters, true, &mut stats, &mut scratch, 0);
+        assert!(out.relabeled && out.invalidates_carry() && !out.converged);
+        assert_eq!(stats.global_relabels, 1);
+        // A skipped step with no gap lift leaves the carry intact.
+        counters.pushes.fetch_add(1, Ordering::Relaxed);
+        let out = ad.host_step(&g, &rep, &st, &mut acct, &counters, true, &mut stats, &mut scratch, 1);
+        assert!(!out.relabeled && !out.invalidates_carry());
+        assert_eq!(stats.gr_skipped, 1);
     }
 
     #[test]

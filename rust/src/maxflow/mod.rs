@@ -18,6 +18,9 @@
 //!   kernels on (created once per solve / warm session, never per launch).
 //! * [`matching`] / [`hopcroft_karp`] — bipartite matching via max-flow and
 //!   its combinatorial oracle (Table 2).
+//! * [`oracle`] — the differential test oracle: a seeded sweep of graph
+//!   families on which every engine must agree byte-for-byte, plus full
+//!   capacity/conservation validation of the residuals.
 
 pub mod dinic;
 pub mod ek;
@@ -26,6 +29,7 @@ pub mod hopcroft_karp;
 pub mod lockfree;
 pub mod matching;
 pub mod mincut;
+pub mod oracle;
 pub mod pool;
 pub mod seq;
 pub mod state;
@@ -96,12 +100,36 @@ pub struct SolveOptions {
     /// once pushes+relabels since the last pass reach `gr_alpha · |V|`
     /// (it still always runs after a zero-op launch, which keeps
     /// termination sound). `0.0` restores the legacy every-launch cadence.
+    /// With auto-tuning enabled ([`SolveOptions::gr_spacing`]) this is
+    /// only the *starting* alpha.
     pub gr_alpha: f64,
+    /// Auto-tune target: aim the work-triggered cadence at one
+    /// global-relabel BFS every `gr_spacing` launches, by retuning
+    /// `gr_alpha` from the observed ops/launch ratio (an EWMA of discharge
+    /// ops per launch-start frontier vertex — see
+    /// [`global_relabel::AdaptiveGr::observe`]). The retuned alpha is
+    /// clamped to `[gr_alpha_min, gr_alpha_max]`. `0.0` disables
+    /// auto-tuning (the cadence stays pinned at `gr_alpha`).
+    pub gr_spacing: f64,
+    /// Lower clamp of the auto-tuned alpha band: the BFS never fires more
+    /// often than every `gr_alpha_min · |V|` kernel ops.
+    pub gr_alpha_min: f64,
+    /// Upper clamp of the auto-tuned alpha band: heights never go more
+    /// than `gr_alpha_max · |V|` kernel ops stale.
+    pub gr_alpha_max: f64,
     /// Frontier-driven AVQ for the VC engine: `discharge` activations feed
     /// the next cycle's queue, so the per-cycle O(V) scan runs only at
-    /// launch start. `false` restores the legacy full-scan-per-cycle
-    /// engine (kept for A/B benchmarking — see `bench/table3`).
+    /// launch start — and the pending queue is *carried across launches*
+    /// (or re-seeded for free by the height-updating global relabel), so
+    /// a cold solve pays the O(V) scan exactly once. `false` restores the
+    /// legacy full-scan-per-cycle engine (kept for A/B benchmarking — see
+    /// `bench/table3`).
     pub frontier: bool,
+    /// Test hook: after every launch whose carried frontier survives the
+    /// host step, run an O(V) reference scan asserting the carry-over
+    /// invariant (every active vertex is queued; no duplicates or
+    /// terminals). Panics on violation. Off (and free) by default.
+    pub verify_frontier: bool,
 }
 
 impl Default for SolveOptions {
@@ -111,7 +139,11 @@ impl Default for SolveOptions {
             cycles_per_launch: 0,
             global_relabel: true,
             gr_alpha: 1.0,
+            gr_spacing: 12.0,
+            gr_alpha_min: 0.25,
+            gr_alpha_max: 64.0,
             frontier: true,
+            verify_frontier: false,
         }
     }
 }

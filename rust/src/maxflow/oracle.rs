@@ -1,0 +1,214 @@
+//! Differential test oracle for the max-flow engines.
+//!
+//! Four independent implementations — the paper's frontier-driven
+//! vertex-centric engine, its pre-frontier legacy configuration, Dinic,
+//! and Edmonds–Karp — run over a seeded sweep of graph families
+//! (rmat / genrmf / washington / bipartite) and must agree on the exact
+//! max-flow value. On top of the value, every result's residual array is
+//! validated as a *flow decomposition*: per-arc capacity/antisymmetry
+//! bounds, per-vertex conservation, the claimed value at the sink, and
+//! maximality (no residual augmenting path) — see [`validate_flow`].
+//!
+//! The sweep is what hardens the carry-over/auto-tune work in the kernel:
+//! any dropped frontier vertex, stale epoch stamp, or unsound cadence skip
+//! surfaces as a value mismatch or a broken decomposition on some seed.
+//! `rust/tests/oracle.rs` drives the full seed list (tier-1 and a
+//! dedicated CI job); the unit tests here keep a couple of seeds per
+//! family in the fast path.
+
+use super::{dinic, ek, vc, verify, FlowResult, SolveOptions};
+use crate::graph::bipartite::bipartite_zipf;
+use crate::graph::builder::{add_super_terminals, select_pairs, ArcGraph, FlowNetwork};
+use crate::graph::generators::{self, GenrmfParams, RmatParams, WashingtonParams};
+use crate::graph::{Bcsr, Rcsr};
+use crate::util::rng::Rng;
+
+/// One oracle case: a named network every engine must agree on.
+pub struct OracleCase {
+    pub name: String,
+    pub net: FlowNetwork,
+}
+
+/// Outcome of one agreed case (for reporting/aggregation).
+#[derive(Debug, Clone)]
+pub struct OracleReport {
+    pub name: String,
+    /// The agreed max-flow value.
+    pub value: i64,
+}
+
+/// Build the sweep: one case per seed, cycling the four families. Sizes
+/// are kept small enough that Edmonds–Karp stays cheap in debug builds —
+/// the point is diversity of structure, not scale.
+pub fn sweep(seeds: &[u64]) -> Vec<OracleCase> {
+    seeds.iter().map(|&s| build_case(s)).collect()
+}
+
+/// Deterministically derive one case from a seed. `seed % 4` picks the
+/// family; everything else (dimensions, capacities, sub-seeds) comes from
+/// an rng keyed on the seed, so the case list is stable given the seed
+/// list.
+pub fn build_case(seed: u64) -> OracleCase {
+    let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0x0DD5_EED5);
+    let net = match seed % 4 {
+        0 => {
+            // Heavy-tailed rmat; BFS-selected super terminals guarantee
+            // s→t structure (the paper's §4.1 terminal selection).
+            let base = generators::rmat(&RmatParams {
+                scale: 6 + rng.below(2) as u32,
+                edge_factor: 4 + rng.index(4),
+                a: 0.5 + rng.f64() * 0.1,
+                b: 0.19,
+                c: 0.19,
+                seed: rng.next_u64(),
+            });
+            with_terminals(base, &mut rng)
+        }
+        1 => generators::genrmf(&GenrmfParams {
+            a: 3 + rng.index(3),
+            b: 3 + rng.index(4),
+            c1: 1,
+            c2: 10 + rng.below(50) as i64,
+            seed: rng.next_u64(),
+        }),
+        2 => generators::washington_rlg(&WashingtonParams {
+            levels: 4 + rng.index(5),
+            width: 4 + rng.index(7),
+            fanout: 2 + rng.index(2),
+            max_cap: 4 + rng.below(16) as i64,
+            seed: rng.next_u64(),
+        }),
+        _ => bipartite_zipf(
+            20 + rng.index(40),
+            15 + rng.index(30),
+            80 + rng.index(200),
+            rng.f64(),
+            rng.next_u64(),
+        )
+        .to_flow_network(),
+    };
+    OracleCase { name: format!("seed{seed}:{}", net.name), net }
+}
+
+fn with_terminals(base: FlowNetwork, rng: &mut Rng) -> FlowNetwork {
+    let pairs = select_pairs(&base, 4, 12, rng.next_u64());
+    if pairs.is_empty() {
+        return base;
+    }
+    let sources: Vec<u32> = pairs.iter().map(|p| p.0).collect();
+    let sinks: Vec<u32> = pairs.iter().map(|p| p.1).collect();
+    add_super_terminals(&base, &sources, &sinks, 1 << 16)
+}
+
+/// Per-vertex conservation over a residual array: the net shipment into
+/// every non-terminal vertex must be zero. Complements
+/// [`crate::maxflow::verify`], which checks per-arc bounds, the sink
+/// value, and maximality but not vertex balance.
+pub fn check_conservation(g: &ArcGraph, cf: &[i64]) -> Result<(), String> {
+    if cf.len() != g.num_arcs() {
+        return Err(format!("cf length {} != arcs {}", cf.len(), g.num_arcs()));
+    }
+    let mut net = vec![0i64; g.n];
+    for e in 0..g.num_arcs() / 2 {
+        let f = 2 * e;
+        // Signed net shipment along the original edge direction.
+        let ship = g.arc_cap[f] - cf[f];
+        net[g.arc_to[f] as usize] += ship;
+        net[g.arc_from[f] as usize] -= ship;
+    }
+    for v in 0..g.n as u32 {
+        if v == g.s || v == g.t {
+            continue;
+        }
+        if net[v as usize] != 0 {
+            return Err(format!("conservation broken at vertex {v}: net inflow {}", net[v as usize]));
+        }
+    }
+    Ok(())
+}
+
+/// Full decomposition validation: capacity/antisymmetry bounds, the
+/// claimed value, maximality ([`crate::maxflow::verify`]) *and* per-vertex
+/// conservation ([`check_conservation`]).
+pub fn validate_flow(g: &ArcGraph, r: &FlowResult) -> Result<(), String> {
+    verify(g, r)?;
+    check_conservation(g, &r.cf)
+}
+
+/// Run one case through all four engines. Every engine must converge,
+/// report the same value, and hand back a valid flow decomposition.
+pub fn run_case(case: &OracleCase, threads: usize) -> Result<OracleReport, String> {
+    let g = ArcGraph::build(&case.net.normalized());
+    let reference = dinic::solve(&g);
+    validate_flow(&g, &reference).map_err(|e| format!("{}: DINIC: {e}", case.name))?;
+    let want = reference.value;
+    let check = |label: &str, r: &FlowResult| -> Result<(), String> {
+        if let Some(err) = &r.error {
+            return Err(format!("{}: {label}: engine error: {err}", case.name));
+        }
+        if r.value != want {
+            return Err(format!("{}: {label}: value {} != DINIC {want}", case.name, r.value));
+        }
+        validate_flow(&g, r).map_err(|e| format!("{}: {label}: {e}", case.name))
+    };
+    check("EK", &ek::solve(&g))?;
+    let frontier = SolveOptions { threads, cycles_per_launch: 32, ..Default::default() };
+    check("VC+RCSR(frontier)", &vc::solve(&g, &Rcsr::build(&g), &frontier))?;
+    check("VC+BCSR(frontier)", &vc::solve(&g, &Bcsr::build(&g), &frontier))?;
+    let legacy = SolveOptions {
+        threads,
+        cycles_per_launch: 32,
+        frontier: false,
+        gr_alpha: 0.0,
+        ..Default::default()
+    };
+    check("VC+RCSR(legacy)", &vc::solve(&g, &Rcsr::build(&g), &legacy))?;
+    Ok(OracleReport { name: case.name.clone(), value: want })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_seed_per_family_agrees() {
+        // The fast-path slice of the sweep; the full seed list lives in
+        // rust/tests/oracle.rs.
+        for seed in [0u64, 1, 2, 3] {
+            let case = build_case(seed);
+            let report = run_case(&case, 2).unwrap();
+            assert!(report.value >= 0, "{}", report.name);
+        }
+    }
+
+    #[test]
+    fn case_derivation_is_deterministic() {
+        let a = build_case(7);
+        let b = build_case(7);
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.net.edges, b.net.edges);
+        assert_ne!(build_case(11).name, a.name);
+    }
+
+    #[test]
+    fn conservation_check_rejects_imbalance() {
+        // s=0 -> 1 -> t=2, solved; then corrupt one arc's residual.
+        let net = FlowNetwork::new(
+            3,
+            0,
+            2,
+            vec![crate::graph::Edge::new(0, 1, 4), crate::graph::Edge::new(1, 2, 4)],
+            "line",
+        );
+        let g = ArcGraph::build(&net);
+        let good = dinic::solve(&g);
+        validate_flow(&g, &good).unwrap();
+        let mut bad = good.clone();
+        // Push 1 extra unit into vertex 1 on arc 0 without forwarding it:
+        // keeps antisymmetry (adjust both arcs of the pair) but breaks
+        // conservation at vertex 1.
+        bad.cf[0] -= 1;
+        bad.cf[1] += 1;
+        assert!(check_conservation(&g, &bad.cf).is_err());
+    }
+}

@@ -101,6 +101,15 @@ impl WorkerPool {
     /// block until all workers return. Concurrent `run` calls on a shared
     /// pool serialize (see `broadcast`). Panics (after all workers
     /// finished) if any worker's closure panicked.
+    ///
+    /// **Hand-back guarantee:** every memory write a worker performs
+    /// inside `f` happens-before `run` returns (each worker's completion
+    /// is published through the `state` mutex the caller re-acquires
+    /// while waiting on `done`). The vertex-centric engine leans on this
+    /// to *carry its live AVQ across launches*: the frontier the workers
+    /// built during launch `k` — including plain `Relaxed` stores into
+    /// the queue buffers — is fully visible to the host step and to
+    /// launch `k + 1`'s workers without any extra synchronization.
     pub fn run<'a, F: Fn(usize) + Send + Sync + 'a>(&self, f: F) {
         // One broadcast at a time: without this, a second caller could
         // overwrite `job`/`seq` while the first is in flight and both
@@ -269,6 +278,32 @@ mod tests {
         assert_eq!(WorkerPool::shard_sizes(2, 4), vec![1, 1, 1, 1], "oversubscribed: 1 each");
         assert_eq!(WorkerPool::shard_sizes(5, 1), vec![5]);
         assert_eq!(WorkerPool::shard_sizes(0, 0), vec![1], "degenerate inputs clamp");
+    }
+
+    #[test]
+    fn queue_built_by_workers_is_handed_back_to_the_caller() {
+        // The carry-over contract: a queue the workers fill with Relaxed
+        // stores during one launch must be completely visible to the
+        // caller after run() returns — and to the *next* launch's
+        // workers, which append to it from where the last launch left
+        // off. Model exactly that with a shared cursor + buffer.
+        let pool = WorkerPool::new(4);
+        let buf: Vec<AtomicU64> = (0..1024).map(|_| AtomicU64::new(0)).collect();
+        let len = AtomicUsize::new(0);
+        for launch in 1..=4u64 {
+            pool.run(|w| {
+                for i in 0..32 {
+                    let slot = len.fetch_add(1, Ordering::Relaxed);
+                    buf[slot].store(launch * 1000 + w as u64 * 100 + i, Ordering::Relaxed);
+                }
+            });
+            // Caller observes every slot the launch appended, populated.
+            let n = len.load(Ordering::Relaxed);
+            assert_eq!(n as u64, launch * 4 * 32, "launch {launch} handed back its queue");
+            for s in 0..n {
+                assert_ne!(buf[s].load(Ordering::Relaxed), 0, "slot {s} visible after launch {launch}");
+            }
+        }
     }
 
     #[test]

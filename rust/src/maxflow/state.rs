@@ -32,6 +32,19 @@ pub struct SolveStats {
     /// Host steps where the adaptive cadence skipped the global-relabel
     /// BFS because the kernel had not yet done `gr_alpha · |V|` work.
     pub gr_skipped: u64,
+    /// VC launches that started with the O(V) active-vertex rescan: the
+    /// first launch of an unseeded solve, plus every launch whose carried
+    /// frontier was invalidated without a replacement — a global relabel
+    /// running with height updates disabled (a height-updating relabel
+    /// rebuilds the frontier for free from its own sweep, and a gap cut
+    /// only shrinks the active set, so neither forces a rescan). The
+    /// complement (`launches - rescan_launches`) started straight from
+    /// the carried/seeded AVQ.
+    pub rescan_launches: u64,
+    /// Σ carried-frontier length over launches that skipped the rescan —
+    /// the work the carry-over saved charges per *pending vertex*, not
+    /// per graph vertex.
+    pub carried_frontier_len: u64,
 }
 
 /// Atomic counters accumulated inside parallel kernels, merged into

@@ -78,8 +78,10 @@ pub fn solve<R: Residual>(g: &ArcGraph, rep: &R, opts: &SolveOptions) -> FlowRes
         stats.kernel_ms += kt.ms();
         stats.cycles += cycles as u64;
         // Host step: adaptive global relabel + termination accounting
-        // (Alg. 1 §2); skipped passes still get the cheap gap cut.
-        adaptive.host_step(g, rep, &st, &mut acct, &counters, opts.global_relabel, &mut stats, &mut gr_scratch);
+        // (Alg. 1 §2); skipped passes still get the cheap gap cut. TC has
+        // no frontier, so it reports no auto-tune signal (`0`) and
+        // ignores the carry outcome.
+        adaptive.host_step(g, rep, &st, &mut acct, &counters, opts.global_relabel, &mut stats, &mut gr_scratch, 0);
     }
 
     counters.merge_into(&mut stats);
@@ -154,10 +156,11 @@ mod tests {
     fn stats_are_populated() {
         let net = generators::erdos_renyi(40, 250, 6, 7);
         let g = ArcGraph::build(&net.normalized());
-        // Legacy cadence so at least one global relabel is guaranteed
-        // (with the adaptive cadence a fast solve may legitimately finish
-        // before the work threshold is reached).
-        let r = solve(&g, &Rcsr::build(&g), &SolveOptions { gr_alpha: 0.0, ..Default::default() });
+        // Legacy cadence + a tiny launch budget so at least one
+        // *mid-solve* global relabel is guaranteed (the converged final
+        // launch no longer runs one, and with the adaptive cadence a fast
+        // solve may finish before the work threshold is reached).
+        let r = solve(&g, &Rcsr::build(&g), &SolveOptions { gr_alpha: 0.0, cycles_per_launch: 4, ..Default::default() });
         assert!(r.stats.launches >= 1);
         assert!(r.stats.pushes > 0);
         assert!(r.stats.scan_arcs > 0);

@@ -3,10 +3,20 @@
 //! active-vertex queue.
 //!
 //! Per launch:
-//!   1. **Launch-start scan** — all workers sweep disjoint vertex ranges
-//!      once and append active vertices to the shared **AVQ** with an
-//!      atomic cursor (Alg. 2 lines 1–4). This is the *only* O(V) sweep of
-//!      the launch: later cycles get their AVQ from activations.
+//!   1. **Launch start** — if the previous launch's pending frontier is
+//!      still valid (the host step between them moved no heights), the
+//!      launch starts straight from that **carried AVQ**: no O(V) work at
+//!      all. Otherwise all workers sweep disjoint vertex ranges once and
+//!      append active vertices to the shared AVQ with an atomic cursor
+//!      (Alg. 2 lines 1–4) — the *rescan*, now needed only on the first
+//!      launch of an unseeded solve and after an accounting-only relabel
+//!      (the `global_relabel = false` ablation, whose collection can miss
+//!      re-activations). A height-updating global relabel re-seeds the
+//!      frontier for free from its own O(V) settle sweep, and a gap cut
+//!      only shrinks the active set (lifted vertices decay as one-time
+//!      idle entries), so neither costs a rescan
+//!      (`SolveStats::rescan_launches` counts the launches that still
+//!      paid the sweep).
 //!   2. `grid_sync()` — a barrier (Alg. 2 line 5).
 //!   3. **Process phase** — workers *pull AVQ entries through a shared
 //!      atomic cursor* (the CPU analog of tile-per-active-vertex: work is
@@ -28,7 +38,7 @@
 //! `thread::scope` spawns; all per-solve buffers live in [`VcScratch`], so
 //! a warm session re-enters with zero allocation.
 
-use super::global_relabel::{AdaptiveGr, ExcessAccounting, GrScratch};
+use super::global_relabel::{global_relabel_with, AdaptiveGr, ExcessAccounting, GrScratch};
 use super::lockfree::{discharge_step, Discharge, LocalCounters};
 use super::pool::WorkerPool;
 use super::state::{AtomicCounters, ParState};
@@ -89,8 +99,8 @@ impl FrontierQueue {
 /// global-relabel BFS buffers. Warm sessions hold one and allocate nothing
 /// per update batch.
 pub struct VcScratch {
-    /// Double-buffered AVQ: cycle `c` reads `avq[c % 2]` and appends the
-    /// next frontier into `avq[(c + 1) % 2]`.
+    /// Double-buffered AVQ: cycle `c` reads `avq[(carried + c) % 2]` and
+    /// appends the next frontier into the other buffer.
     avq: [FrontierQueue; 2],
     /// `queued[v] == epoch` ⇔ `v` is already enqueued for that epoch —
     /// the dedup that guarantees one AVQ slot per vertex per cycle.
@@ -98,6 +108,18 @@ pub struct VcScratch {
     /// Monotone epoch base; advanced past every epoch a launch used, so
     /// stale stamps can never collide across launches or warm restarts.
     epoch: u64,
+    /// Which buffer holds the pending frontier the last launch handed
+    /// back (meaningful while `carry_valid`; also the parity base the
+    /// next launch's cycles index from).
+    carried: usize,
+    /// The pending frontier in `avq[carried]` is still a superset of the
+    /// active set: the next launch may start from it and skip the O(V)
+    /// rescan. Invalidated by anything that can *lower* heights between
+    /// launches without handing back a replacement frontier (an
+    /// accounting-only relabel) and by graph changes
+    /// ([`VcScratch::invalidate_carry`]); height-updating relabels
+    /// re-seed instead, and gap cuts only shrink the active set.
+    carry_valid: bool,
     /// Cycle barrier, rebuilt only when the participant count changes.
     barrier: Barrier,
     participants: usize,
@@ -112,6 +134,8 @@ impl VcScratch {
             avq: [FrontierQueue::with_capacity(n), FrontierQueue::with_capacity(n)],
             queued: (0..n).map(|_| AtomicU64::new(0)).collect(),
             epoch: 1,
+            carried: 0,
+            carry_valid: false,
             barrier: Barrier::new(participants),
             participants,
             gr: GrScratch::new(n),
@@ -119,12 +143,15 @@ impl VcScratch {
     }
 
     /// Resize for a graph/worker count (no-op when already big enough).
+    /// Growing drops any carried frontier — a size change means a
+    /// different graph.
     fn ensure(&mut self, n: usize, participants: usize) {
-        self.avq[0].ensure(n);
-        self.avq[1].ensure(n);
         if self.queued.len() < n {
+            self.avq[0].ensure(n);
+            self.avq[1].ensure(n);
             // Fresh stamps are 0, which never equals a live epoch (≥ 1).
             self.queued.resize_with(n, || AtomicU64::new(0));
+            self.carry_valid = false;
         }
         if self.participants != participants {
             self.barrier = Barrier::new(participants);
@@ -138,6 +165,45 @@ impl VcScratch {
         if self.queued[v as usize].swap(epoch, Ordering::Relaxed) != epoch {
             q.push(v);
         }
+    }
+
+    /// Drop the carried frontier: the next launch starts with the O(V)
+    /// active-vertex rescan. Callers reusing one scratch across
+    /// *different* graphs of the same size must call this between solves
+    /// (the engine calls it itself after every invalidating host step).
+    pub fn invalidate_carry(&mut self) {
+        self.carry_valid = false;
+    }
+
+    /// Install an externally computed frontier as the carried AVQ, so the
+    /// next [`run_from_state`] starts from it instead of the O(V) rescan.
+    /// The caller owns the invariant that `verts` covers **every** active
+    /// vertex (`e > 0`, `h < n`, non-terminal) of the state the kernel
+    /// will run on — the warm-repair path satisfies it by seeding from
+    /// the update batch's touched vertices after the height refresh.
+    /// Duplicates are deduplicated; inactive entries are harmless (the
+    /// discharge finds them idle).
+    pub fn seed_carried<I: IntoIterator<Item = u32>>(&mut self, verts: I) {
+        let epoch = self.epoch;
+        self.epoch += 1;
+        let q = &self.avq[self.carried];
+        q.reset();
+        for v in verts {
+            if self.queued[v as usize].swap(epoch, Ordering::Relaxed) != epoch {
+                q.push(v);
+            }
+        }
+        self.carry_valid = true;
+    }
+
+    /// The pending frontier the last launch handed back (`None` once
+    /// invalidated). Exposed for the carry-over property tests.
+    pub fn carried_frontier(&self) -> Option<Vec<u32>> {
+        if !self.carry_valid {
+            return None;
+        }
+        let q = &self.avq[self.carried];
+        Some((0..q.len()).map(|i| q.get(i)).collect())
     }
 }
 
@@ -189,6 +255,13 @@ pub fn solve<R: Residual>(g: &ArcGraph, rep: &R, opts: &SolveOptions) -> FlowRes
 /// every unit of excess currently outside `s`/`t` (both are established by
 /// [`ParState::preflow`] or by the caller's seeding pass; a global relabel
 /// right before entry is the easiest way to make heights valid).
+///
+/// Frontier carry-over contract: if `ctx.scratch` holds a valid carried
+/// frontier on entry (e.g. seeded via [`VcScratch::seed_carried`] by the
+/// warm-repair path), the first launch starts from it and skips the O(V)
+/// rescan — the caller owns that frontier's `⊇ active` invariant. A
+/// caller reusing one context across *different* graphs must call
+/// [`VcScratch::invalidate_carry`] between solves.
 pub fn run_from_state<R: Residual>(
     g: &ArcGraph,
     rep: &R,
@@ -203,8 +276,13 @@ pub fn run_from_state<R: Residual>(
     let cycles = opts.resolved_cycles(n);
     let counters = AtomicCounters::default();
     let frontier = opts.frontier;
-    let mut adaptive = AdaptiveGr::new(n, opts.gr_alpha);
+    let mut adaptive = AdaptiveGr::from_opts(n, opts);
     ctx.scratch.ensure(n, active_workers);
+    if !frontier {
+        // The legacy engine rebuilds its queue every cycle; a pending
+        // frontier from an earlier frontier-mode launch means nothing.
+        ctx.scratch.invalidate_carry();
+    }
 
     let chunk = n.div_ceil(active_workers);
     let ranges: Vec<(u32, u32)> = (0..active_workers)
@@ -212,14 +290,40 @@ pub fn run_from_state<R: Residual>(
         .collect();
 
     while !acct.done(g, st) {
+        let carry = frontier && ctx.scratch.carry_valid;
+        let base = ctx.scratch.carried;
+        if carry && ctx.scratch.avq[base].len() == 0 {
+            // Carried frontier empty but the accounting is unsettled:
+            // only the global relabel can make progress (cancel stranded
+            // excess / re-lower heights). Run it directly instead of
+            // paying a zero-op launch to discover the same thing, and
+            // adopt the active set it collected as the next frontier.
+            global_relabel_with(g, rep, st, acct, opts.global_relabel, &mut ctx.scratch.gr);
+            stats.global_relabels += 1;
+            adaptive.note_external_relabel();
+            if opts.global_relabel && !ctx.scratch.gr.active.is_empty() {
+                let active = std::mem::take(&mut ctx.scratch.gr.active);
+                ctx.scratch.seed_carried(active.iter().copied());
+                ctx.scratch.gr.active = active;
+            } else {
+                ctx.scratch.invalidate_carry();
+            }
+            continue;
+        }
         stats.launches += 1;
         if stats.launches > MAX_LAUNCHES {
             return Err(SolveError::NoConvergence { launches: stats.launches - 1 });
+        }
+        if carry {
+            stats.carried_frontier_len += ctx.scratch.avq[base].len() as u64;
+        } else {
+            stats.rescan_launches += 1;
         }
         let kt = Timer::start();
         let cursor = AtomicUsize::new(0);
         let executed_cycles = AtomicUsize::new(0);
         let frontier_sum = AtomicU64::new(0);
+        let frontier_start = AtomicU64::new(0);
         let base_epoch = ctx.scratch.epoch;
         {
             let sc: &VcScratch = &ctx.scratch;
@@ -228,6 +332,7 @@ pub fn run_from_state<R: Residual>(
             let cursor = &cursor;
             let executed_cycles = &executed_cycles;
             let frontier_sum = &frontier_sum;
+            let frontier_start = &frontier_start;
             ctx.pool.run(move |w| {
                 if w >= active_workers {
                     return;
@@ -235,11 +340,12 @@ pub fn run_from_state<R: Residual>(
                 let (lo, hi) = ranges[w];
                 let mut local = LocalCounters::default();
                 for c in 0..cycles {
-                    let cur = &sc.avq[c % 2];
-                    let next = &sc.avq[(c + 1) % 2];
+                    let cur = &sc.avq[(base + c) % 2];
+                    let next = &sc.avq[(base + c + 1) % 2];
+                    let rescan = (c == 0 && !carry) || !frontier;
                     // -- reset (worker 0), then everyone sees it --
                     if w == 0 {
-                        if c == 0 || !frontier {
+                        if rescan {
                             cur.reset();
                         }
                         next.reset();
@@ -247,9 +353,10 @@ pub fn run_from_state<R: Residual>(
                     }
                     sc.barrier.wait();
                     // -- scan phase (Alg. 2 lines 1-4): the O(V) sweep
-                    // runs once per launch; with the frontier disabled
-                    // (legacy engine) it runs every cycle --
-                    if c == 0 || !frontier {
+                    // runs only when there is no carried frontier; with
+                    // the frontier disabled (legacy engine) it runs
+                    // every cycle --
+                    if rescan {
                         for u in lo..hi {
                             if st.is_active(g, u) {
                                 cur.push(u);
@@ -261,6 +368,9 @@ pub fn run_from_state<R: Residual>(
                     let len = cur.len();
                     if w == 0 {
                         frontier_sum.fetch_add(len as u64, Ordering::Relaxed);
+                        if c == 0 {
+                            frontier_start.store(len as u64, Ordering::Relaxed);
+                        }
                     }
                     if len == 0 {
                         // Early exit: every worker observes the same
@@ -311,16 +421,82 @@ pub fn run_from_state<R: Residual>(
                 local.flush(counters);
             });
         }
+        let exec = executed_cycles.load(Ordering::Relaxed);
         // Advance past every epoch this launch used.
         ctx.scratch.epoch = base_epoch + cycles as u64 + 2;
+        // Hand the live queue back: after `exec` cycles the pending
+        // frontier sits in the buffer the final cycle appended to. It
+        // stays valid for the next launch unless the host step below
+        // moves heights.
+        ctx.scratch.carried = (base + exec) % 2;
+        ctx.scratch.carry_valid = frontier;
         stats.kernel_ms += kt.ms();
-        stats.cycles += executed_cycles.load(Ordering::Relaxed) as u64;
+        stats.cycles += exec as u64;
         stats.frontier_len_sum += frontier_sum.load(Ordering::Relaxed);
         // Host step: adaptive global relabel + termination accounting; a
-        // skipped pass still gets the cheap gap cut.
-        adaptive.host_step(g, rep, st, acct, &counters, opts.global_relabel, stats, &mut ctx.scratch.gr);
+        // skipped pass still gets the cheap gap cut, and anything that
+        // moved heights invalidates the carried frontier.
+        let outcome = adaptive.host_step(
+            g,
+            rep,
+            st,
+            acct,
+            &counters,
+            opts.global_relabel,
+            stats,
+            &mut ctx.scratch.gr,
+            frontier_start.load(Ordering::Relaxed),
+        );
+        if outcome.relabeled && opts.global_relabel {
+            // The BFS just settled every vertex and collected the exact
+            // post-relabel active set: adopt it as the carried frontier
+            // (a free rebuild — no separate launch-start rescan). Without
+            // height updates (the ablation path) the collection can miss
+            // re-activations, so fall through to the honest rescan.
+            let active = std::mem::take(&mut ctx.scratch.gr.active);
+            ctx.scratch.seed_carried(active.iter().copied());
+            ctx.scratch.gr.active = active;
+        } else if outcome.invalidates_carry() {
+            ctx.scratch.invalidate_carry();
+        }
+        if opts.verify_frontier && ctx.scratch.carry_valid {
+            verify_carry(g, st, &ctx.scratch);
+        }
     }
     Ok(())
+}
+
+/// Test hook behind [`SolveOptions::verify_frontier`]: O(V) reference
+/// check of the carry-over invariant after a launch whose pending queue
+/// survived the host step.
+///
+/// The exact guarantee is a sandwich, not equality: the carried frontier
+/// **covers every active vertex** (`e > 0`, `h < n`, non-terminal — the
+/// correctness-critical direction: a lost active vertex would strand
+/// excess forever), contains **no terminals and no duplicates**, and may
+/// additionally hold a bounded number of stale entries — vertices that
+/// were active when enqueued but were drained or lifted to `h ≥ n` later
+/// in the same cycle. Stale entries cost one idle discharge each and
+/// nothing else.
+fn verify_carry(g: &ArcGraph, st: &ParState, sc: &VcScratch) {
+    let Some(front) = sc.carried_frontier() else { return };
+    let mut queued = vec![false; g.n];
+    for &v in &front {
+        assert!(v != g.s && v != g.t, "terminal {v} in carried frontier");
+        assert!(!queued[v as usize], "duplicate carried-frontier entry {v}");
+        queued[v as usize] = true;
+    }
+    for u in 0..g.n as u32 {
+        if st.is_active(g, u) {
+            assert!(
+                queued[u as usize],
+                "active vertex {u} (e={}, h={}) missing from carried frontier of {} entries",
+                st.excess(u),
+                st.height(u),
+                front.len()
+            );
+        }
+    }
 }
 
 #[cfg(test)]
@@ -430,7 +606,8 @@ mod tests {
         let r = solve(&g, &Rcsr::build(&g), &SolveOptions { threads: 2, ..Default::default() });
         assert_eq!(r.value, 5);
         assert_eq!(r.stats.global_relabels, 0, "below the work threshold: BFS skipped");
-        assert!(r.stats.gr_skipped >= 1);
+        // (The final launch converges, so it is not counted as an
+        // adaptive *skip* — see HostStep::converged.)
     }
 
     #[test]
@@ -463,7 +640,9 @@ mod tests {
     #[test]
     fn scratch_reuse_across_solves() {
         // One context serving two different solves (the warm-session
-        // pattern) must not leak state between them.
+        // pattern) must not leak state between them. Different graphs, so
+        // the carried frontier is dropped between solves (the documented
+        // run_from_state contract).
         let mut ctx = VcContext::new(64, 2);
         for seed in 0..3u64 {
             let net = generators::erdos_renyi(50, 250, 6, seed);
@@ -474,8 +653,111 @@ mod tests {
             let mut acct = ExcessAccounting::new(g.n, excess_total);
             let mut stats = SolveStats::default();
             let opts = SolveOptions { threads: 2, cycles_per_launch: 64, ..Default::default() };
+            ctx.scratch.invalidate_carry();
             run_from_state(&g, &rep, &st, &mut acct, &opts, &mut stats, &mut ctx).unwrap();
             assert_eq!(st.excess(g.t), want, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn warm_start_on_solved_state_runs_no_relabel() {
+        // Regression (ISSUE 4 satellite): re-entering the host loop on an
+        // already-solved warm state must cost zero launches and zero BFS
+        // passes — the old zero-op force burned one full BFS per solve
+        // here.
+        let net = generators::erdos_renyi(50, 300, 6, 4);
+        let g = ArcGraph::build(&net.normalized());
+        let rep = Rcsr::build(&g);
+        let opts = SolveOptions { threads: 2, ..Default::default() };
+        let (st, excess_total) = ParState::preflow(&g);
+        let mut acct = ExcessAccounting::new(g.n, excess_total);
+        let mut ctx = VcContext::new(g.n, 2);
+        let mut stats = SolveStats::default();
+        run_from_state(&g, &rep, &st, &mut acct, &opts, &mut stats, &mut ctx).unwrap();
+        assert_eq!(st.excess(g.t), super::super::dinic::solve(&g).value);
+        let mut warm = SolveStats::default();
+        run_from_state(&g, &rep, &st, &mut acct, &opts, &mut warm, &mut ctx).unwrap();
+        assert_eq!(warm.launches, 0, "solved state: no kernel work");
+        assert_eq!(warm.global_relabels, 0, "gr_runs on an already-solved warm start must be 0");
+    }
+
+    #[test]
+    fn converged_final_launch_skips_the_forced_relabel() {
+        // gr_alpha so small that every launch crosses the work threshold:
+        // without the convergence-first check the single-launch solve
+        // below would still pay one full BFS after routing everything.
+        let net = FlowNetwork::new(3, 0, 2, vec![Edge::new(0, 1, 5), Edge::new(1, 2, 5)], "line3");
+        let g = ArcGraph::build(&net);
+        let opts = SolveOptions { threads: 2, gr_alpha: 1e-6, gr_spacing: 0.0, ..Default::default() };
+        let r = solve(&g, &Rcsr::build(&g), &opts);
+        assert_eq!(r.value, 5);
+        assert_eq!(r.stats.launches, 1);
+        assert_eq!(r.stats.global_relabels, 0, "the converged final launch must not relabel");
+    }
+
+    #[test]
+    fn carried_frontier_skips_rescans_on_multi_launch_solves() {
+        // A launch budget small enough to force many launches: with the
+        // carry-over, only the first launch and post-invalidation
+        // launches pay the O(V) rescan.
+        let net = generators::genrmf(&generators::GenrmfParams { a: 5, b: 6, c1: 1, c2: 40, seed: 9 });
+        let g = ArcGraph::build(&net.normalized());
+        let want = super::super::dinic::solve(&g).value;
+        let opts = SolveOptions { threads: 4, cycles_per_launch: 8, verify_frontier: true, ..Default::default() };
+        let r = solve(&g, &Rcsr::build(&g), &opts);
+        assert_eq!(r.value, want);
+        assert!(r.error.is_none());
+        super::super::verify(&g, &r).unwrap();
+        assert!(r.stats.launches >= 4, "want a multi-launch solve, got {}", r.stats.launches);
+        // With height-updating relabels (the default), the only rescan is
+        // the cold first launch: every relabel re-seeds the frontier from
+        // its own sweep and gap cuts leave the carry valid.
+        assert_eq!(
+            r.stats.rescan_launches, 1,
+            "cold solve pays exactly one rescan ({} rescans / {} launches)",
+            r.stats.rescan_launches, r.stats.launches
+        );
+        assert!(r.stats.carried_frontier_len > 0, "carried launches account their frontier");
+    }
+
+    #[test]
+    fn legacy_engine_counts_every_launch_as_rescan() {
+        let net = generators::erdos_renyi(80, 500, 7, 3);
+        let g = ArcGraph::build(&net.normalized());
+        let legacy = SolveOptions { threads: 2, frontier: false, gr_alpha: 0.0, ..Default::default() };
+        let r = solve(&g, &Rcsr::build(&g), &legacy);
+        assert_eq!(r.stats.rescan_launches, r.stats.launches, "no carry without the frontier");
+        assert_eq!(r.stats.carried_frontier_len, 0);
+    }
+
+    #[test]
+    fn seed_carried_dedups_and_feeds_first_launch() {
+        let mut sc = VcScratch::new(8, 2);
+        sc.seed_carried([3u32, 5, 3, 7, 5]);
+        let front = sc.carried_frontier().expect("seed makes the carry valid");
+        assert_eq!(front, vec![3, 5, 7], "duplicates collapse to one slot");
+        sc.invalidate_carry();
+        assert!(sc.carried_frontier().is_none());
+        // Re-seeding after invalidation works (fresh epoch).
+        sc.seed_carried([3u32]);
+        assert_eq!(sc.carried_frontier().unwrap(), vec![3]);
+    }
+
+    #[test]
+    fn verify_frontier_hook_accepts_real_solves() {
+        // The O(V) reference check runs after every carried launch across
+        // a thread sweep including oversubscription; any violation panics.
+        for threads in [1usize, 3, 16] {
+            let net = generators::erdos_renyi(60, 400, 8, 2);
+            let g = ArcGraph::build(&net.normalized());
+            let opts = SolveOptions {
+                threads,
+                cycles_per_launch: 16,
+                verify_frontier: true,
+                ..Default::default()
+            };
+            let r = solve(&g, &Rcsr::build(&g), &opts);
+            assert_eq!(r.value, super::super::dinic::solve(&g).value, "threads={threads}");
         }
     }
 }

@@ -118,12 +118,14 @@ pub fn simulate_tc(trace: &Trace, rep: Representation, model: &GpuModel, c: &Cos
     }
 }
 
-/// Vertex-centric simulation (Alg. 2 + the frontier-driven AVQ): the
-/// launch-start iteration pays the uniform O(V) sweep that builds the AVQ
-/// (atomic appends); every later iteration's AVQ was fed by the previous
-/// iteration's activations, so its scan phase is charged per *frontier
-/// entry* (a cooperative pop + activity re-check + append), not per
-/// vertex. Then a `grid_sync()`, one *tile* (warp) per active vertex
+/// Vertex-centric simulation (Alg. 2 + the frontier-driven AVQ with
+/// cross-launch carry-over): only *invalidation* iterations — the first,
+/// and each one right after a global relabel moved heights
+/// ([`Trace::is_rescan`]) — pay the uniform O(V) sweep that rebuilds the
+/// AVQ (atomic appends); every other iteration's AVQ was fed by the
+/// previous iteration's activations (or carried across the launch
+/// boundary), so its scan phase is charged per *frontier entry* (a
+/// cooperative pop + activity re-check + append), not per vertex. Then a `grid_sync()`, one *tile* (warp) per active vertex
 /// streaming that vertex's row cooperatively — coalesced loads, `log2(32)`
 /// tree-reduction steps — the delegated lane applying the operation, and a
 /// second `grid_sync()`. Iteration latency is the makespan of each phase
@@ -140,8 +142,11 @@ pub fn simulate_vc(trace: &Trace, rep: Representation, model: &GpuModel, c: &Cos
     let mut scan_tasks = vec![0.0f64; scan_warps];
     let mut frontier_tasks: Vec<f64> = Vec::new();
     for (it, iter) in trace.iters.iter().enumerate() {
-        let scan = if it == 0 {
-            // --- launch-start scan: uniform O(V) sweep + AVQ appends ---
+        let scan = if trace.is_rescan(it) {
+            // --- invalidation launch: uniform O(V) sweep + AVQ appends.
+            // Charged only on the first iteration and right after a
+            // global relabel moved heights; every other iteration starts
+            // from the frontier carried across the launch boundary ---
             for t in scan_tasks.iter_mut() {
                 *t = c.c_check + c.mem_tx;
             }
@@ -279,6 +284,7 @@ mod tests {
         let mk = |n: usize| Trace {
             n,
             iters: (0..50).map(|_| vec![Op { u: 0, pushed: true }]).collect(),
+            rescan: vec![],
             row_len: vec![4; n],
             value: 1,
         };

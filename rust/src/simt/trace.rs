@@ -24,6 +24,14 @@ pub struct Trace {
     pub n: usize,
     /// Per-iteration active-vertex operations.
     pub iters: Vec<Vec<Op>>,
+    /// Per-iteration invalidation flag: `true` when the iteration starts
+    /// with the O(V) active-vertex rescan (the first iteration, and every
+    /// iteration right after a global relabel moved heights). All other
+    /// iterations start from the carried frontier, so the cost model
+    /// charges their scan per frontier entry, mirroring the host engine's
+    /// cross-launch carry-over. Empty = treat only iteration 0 as a
+    /// rescan (hand-built traces).
+    pub rescan: Vec<bool>,
     /// Row length (in + out arcs) per vertex — the scan cost `d(v)` of
     /// Eq. 1 (the full row is always examined by the min-height search).
     pub row_len: Vec<u32>,
@@ -35,6 +43,12 @@ impl Trace {
     /// Total local operations.
     pub fn total_ops(&self) -> usize {
         self.iters.iter().map(|i| i.len()).sum()
+    }
+
+    /// Does iteration `it` start with the O(V) rescan (vs. the carried
+    /// frontier)?
+    pub fn is_rescan(&self, it: usize) -> bool {
+        self.rescan.get(it).copied().unwrap_or(it == 0)
     }
 }
 
@@ -52,10 +66,17 @@ pub fn record<R: Residual>(g: &ArcGraph, rep: &R, gr_interval: usize) -> Trace {
     let mut acct = ExcessAccounting::new(n, excess_total);
     let row_len: Vec<u32> = (0..n as u32).map(|u| rep.degree(u) as u32).collect();
     let mut iters: Vec<Vec<Op>> = Vec::new();
+    let mut rescan: Vec<bool> = Vec::new();
     let gr = gr_interval.max(1);
     let mut cnt = LocalCounters::default();
     global_relabel(g, rep, &st, &mut acct, true);
+    // The first iteration always rescans; afterwards only an iteration
+    // following a global relabel does (heights moved → carried frontier
+    // invalid), matching the host engine's carry-over.
+    let mut next_rescan = true;
     while !acct.done(g, &st) && iters.len() < MAX_TRACE_ITERS {
+        rescan.push(next_rescan);
+        next_rescan = false;
         let mut ops = Vec::new();
         for u in 0..n as u32 {
             if st.is_active(g, u) {
@@ -67,9 +88,10 @@ pub fn record<R: Residual>(g: &ArcGraph, rep: &R, gr_interval: usize) -> Trace {
         iters.push(ops);
         if iters.len() % gr == 0 {
             global_relabel(g, rep, &st, &mut acct, true);
+            next_rescan = true;
         }
     }
-    Trace { n, iters, row_len, value: st.excess(g.t) }
+    Trace { n, iters, rescan, row_len, value: st.excess(g.t) }
 }
 
 #[cfg(test)]
@@ -113,6 +135,23 @@ mod tests {
                 assert!(t.row_len[op.u as usize] > 0);
             }
         }
+    }
+
+    #[test]
+    fn rescan_flags_follow_global_relabels() {
+        let net = generators::erdos_renyi(40, 250, 6, 3);
+        let g = ArcGraph::build(&net.normalized());
+        let rep = Rcsr::build(&g);
+        let t = record(&g, &rep, 4);
+        assert_eq!(t.rescan.len(), t.iters.len());
+        assert!(t.is_rescan(0), "iteration 0 always rescans");
+        for i in 1..t.iters.len() {
+            assert_eq!(t.is_rescan(i), i % 4 == 0, "only post-relabel iterations rescan (it {i})");
+        }
+        // Hand-built traces without flags fall back to it == 0.
+        let bare = Trace { n: 4, iters: vec![vec![], vec![]], rescan: vec![], row_len: vec![1; 4], value: 0 };
+        assert!(bare.is_rescan(0));
+        assert!(!bare.is_rescan(1));
     }
 
     #[test]

@@ -139,6 +139,37 @@ fn oversubscribed_pool_more_threads_than_vertices() {
 }
 
 #[test]
+fn carried_frontier_keeps_rescans_under_15_percent() {
+    // ISSUE 4 acceptance shape: with the cross-launch frontier carry-over
+    // and the auto-tuned global-relabel cadence, the O(V) rescan must be
+    // the exception, not the rule. Aggregate over multi-launch solves on
+    // the PR's regime generators with a deliberately small launch budget
+    // (many launch boundaries = many chances to rescan).
+    let nets = vec![
+        generators::rmat(&generators::RmatParams { scale: 8, edge_factor: 6, a: 0.57, b: 0.19, c: 0.19, seed: 31 }),
+        generators::genrmf(&generators::GenrmfParams { a: 5, b: 8, c1: 1, c2: 60, seed: 32 }),
+        generators::washington_rlg(&generators::WashingtonParams { levels: 12, width: 12, fanout: 3, max_cap: 30, seed: 33 }),
+    ];
+    let (mut launches, mut rescans) = (0u64, 0u64);
+    for net in nets {
+        let g = ArcGraph::build(&net.normalized());
+        let want = maxflow::dinic::solve(&g).value;
+        let opts = SolveOptions { threads: 4, cycles_per_launch: 8, ..Default::default() };
+        let r = maxflow::solve_arcs(&g, EngineKind::VertexCentric, Representation::Bcsr, &opts);
+        assert_eq!(r.value, want, "on {}", net.name);
+        launches += r.stats.launches;
+        rescans += r.stats.rescan_launches;
+    }
+    assert!(launches >= 10, "want a multi-launch workload, got {launches} launches");
+    let frac = rescans as f64 / launches as f64;
+    assert!(
+        frac < 0.15,
+        "rescan fraction {:.1}% >= 15% target ({rescans}/{launches} launches)",
+        frac * 100.0
+    );
+}
+
+#[test]
 fn stats_reflect_work() {
     let net = generators::genrmf(&generators::GenrmfParams { a: 6, b: 6, c1: 1, c2: 40, seed: 9 });
     let g = ArcGraph::build(&net.normalized());

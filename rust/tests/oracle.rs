@@ -1,0 +1,71 @@
+//! Differential test oracle (ISSUE 4 satellite): the full seeded sweep of
+//! `wbpr::maxflow::oracle` cases — frontier-VC, legacy-VC, Dinic and
+//! Edmonds–Karp must produce identical max-flow values and valid flow
+//! decompositions (capacity + conservation + maximality on the residual)
+//! on every case.
+//!
+//! Part of tier-1 (`cargo test -q`); CI additionally runs it as its own
+//! release-mode job (`cargo test --release -q --test oracle`). The seed
+//! list lives in `tests/data/oracle_seeds.txt`, which the bench-regression
+//! job hashes into its cache key so a baseline and a candidate always
+//! compare identical cases.
+
+use wbpr::maxflow::oracle::{build_case, run_case, sweep};
+
+/// Parse the checked-in seed list (one or more seeds per line, `#`
+/// comments).
+fn seeds() -> Vec<u64> {
+    let raw = include_str!("data/oracle_seeds.txt");
+    let seeds: Vec<u64> = raw
+        .lines()
+        .map(|l| l.split('#').next().unwrap_or(""))
+        .flat_map(|l| l.split_whitespace().map(|t| t.parse::<u64>().expect("seed list: bad token")))
+        .collect();
+    assert!(seeds.len() >= 40, "oracle sweep must keep ~40 cases, got {}", seeds.len());
+    seeds
+}
+
+#[test]
+fn oracle_sweep_all_engines_agree() {
+    let cases = sweep(&seeds());
+    let mut nonzero = 0usize;
+    for case in &cases {
+        let report = run_case(case, 3).unwrap_or_else(|e| panic!("oracle disagreement: {e}"));
+        if report.value > 0 {
+            nonzero += 1;
+        }
+    }
+    // The sweep must actually exercise flow routing, not degenerate to
+    // empty instances.
+    assert!(
+        nonzero * 2 >= cases.len(),
+        "only {nonzero}/{} oracle cases carried flow — sweep too weak",
+        cases.len()
+    );
+}
+
+#[test]
+fn oracle_sweep_covers_every_family() {
+    let seeds = seeds();
+    for family in 0..4u64 {
+        assert!(
+            seeds.iter().any(|s| s % 4 == family),
+            "seed list lost family {family} (rmat/genrmf/washington/bipartite)"
+        );
+    }
+    // Case derivation stays deterministic run over run (the property the
+    // CI cache key relies on).
+    let again = sweep(&seeds);
+    for (a, b) in sweep(&seeds).iter().zip(again.iter()) {
+        assert_eq!(a.name, b.name);
+    }
+}
+
+#[test]
+fn oracle_thread_oversubscription_still_agrees() {
+    // A thread count far above |V| on the smallest family exercises the
+    // pool's oversubscription path (workers with no vertex range) inside
+    // the differential harness.
+    let case = build_case(2); // washington family: tiny
+    run_case(&case, 64).unwrap_or_else(|e| panic!("oversubscribed oracle run: {e}"));
+}

@@ -238,6 +238,114 @@ fn prop_dynamic_repair_equals_scratch_dinic() {
 }
 
 #[test]
+fn prop_carried_frontier_covers_active_set() {
+    // ISSUE 4 satellite: after any launch whose carried frontier survives
+    // the host step, the frontier must cover exactly the live active set
+    // — `SolveOptions::verify_frontier` runs the O(V) reference scan
+    // (every active vertex queued, no terminals, no duplicates) inside
+    // the engine after each such launch and panics on violation; the prop
+    // harness converts the panic into a failing case. The thread sweep
+    // {1, 8, threads > n} includes oversubscription to shake out
+    // epoch-stamp races.
+    check("carried frontier == active set", 20, 0xF407, |g| {
+        let net = random_net(g);
+        let arcs = ArcGraph::build(&net.normalized());
+        let want = maxflow::dinic::solve(&arcs).value;
+        for threads in [1usize, 8, arcs.n + 3] {
+            // A tiny launch budget maximizes launch boundaries (the thing
+            // under test).
+            let opts = SolveOptions {
+                threads,
+                cycles_per_launch: 4,
+                verify_frontier: true,
+                ..Default::default()
+            };
+            let r = maxflow::solve_arcs(&arcs, EngineKind::VertexCentric, Representation::Rcsr, &opts);
+            if r.value != want {
+                return Err(format!("threads={threads} on {}: {} != {want}", net.name, r.value));
+            }
+            // With height-updating relabels only the cold first launch
+            // rescans — relabels re-seed, gap cuts leave the carry valid.
+            if r.stats.rescan_launches > 1 {
+                return Err(format!(
+                    "threads={threads} on {}: unexplained rescans ({} rescans / {} launches)",
+                    net.name, r.stats.rescan_launches, r.stats.launches
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_snapshot_roundtrip_preserves_session_behavior() {
+    // ISSUE 4 satellite: FlowSnapshot -> from_snapshot -> one more update
+    // batch must produce the same value *and* the same
+    // `UpdateReport.recomputed` routing decision as the session that was
+    // never evicted, for a random eviction point mid-stream.
+    check("snapshot roundtrip == never-evicted", 15, 0x5A9, |g| {
+        let net = random_net(g);
+        // threads = 1 keeps the ops counters (and hence both sessions'
+        // cost models) deterministic; the generous recompute margin keeps
+        // the routing comparison meaningful without making it knife-edge
+        // on the EWMA the eviction legitimately resets.
+        let opts = SolveOptions { threads: 1, cycles_per_launch: 32, ..Default::default() };
+        let pool = std::sync::Arc::new(maxflow::WorkerPool::new(1));
+        let cfg = wbpr::coordinator::SessionConfig {
+            router: wbpr::coordinator::RouterConfig { recompute_ratio: 8.0, ..Default::default() },
+            ..Default::default()
+        };
+        let mut live = wbpr::coordinator::SessionManager::with_config(opts.clone(), pool.clone(), cfg.clone());
+        let mut evicting = wbpr::coordinator::SessionManager::with_config(opts.clone(), pool, cfg);
+        live.open(1, &net)?;
+        evicting.open(1, &net)?;
+        let n_batches = 2 + g.size(0, 4);
+        let evict_at = g.rng.index(n_batches);
+        for bi in 0..n_batches {
+            if bi == evict_at {
+                evicting.evict(1).map_err(|e| format!("evict: {e}"))?;
+                if evicting.evicted_len() != 1 {
+                    return Err("eviction did not persist a snapshot".into());
+                }
+            }
+            // Capacity-only batch over the shared (index-stable) edge list.
+            let m = live.get(1).expect("live session").network().edges.len();
+            let n_ups = 1 + g.size(0, 4);
+            let mut ups = Vec::new();
+            for _ in 0..n_ups {
+                if g.rng.chance(0.5) {
+                    ups.push(GraphUpdate::IncreaseCap { edge: g.rng.index(m), delta: g.rng.range_i64(1, 6) });
+                } else {
+                    ups.push(GraphUpdate::DecreaseCap { edge: g.rng.index(m), delta: g.rng.range_i64(1, 6) });
+                }
+            }
+            let batch = UpdateBatch::new(ups);
+            let a = live.update_report(1, &batch).map_err(|e| format!("live: {e}"))?;
+            let b = evicting.update_report(1, &batch).map_err(|e| format!("evicted: {e}"))?;
+            if a.value != b.value {
+                return Err(format!(
+                    "batch {bi} (evict at {evict_at}) on {}: live {} != roundtrip {}",
+                    net.name, a.value, b.value
+                ));
+            }
+            if a.recomputed != b.recomputed {
+                return Err(format!(
+                    "batch {bi} (evict at {evict_at}) on {}: routing diverged (live recomputed={}, roundtrip={})",
+                    net.name, a.recomputed, b.recomputed
+                ));
+            }
+        }
+        // Both sessions hold verified, identical flows at the end.
+        let va = live.close(1)?;
+        let vb = evicting.close(1)?;
+        if va != vb {
+            return Err(format!("final values differ: {va} != {vb}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_excess_never_negative_midway() {
     // Run the trace recorder (a legal lock-free schedule) and check the
     // invariants the Jacobi-combine proof relies on.
