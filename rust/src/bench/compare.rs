@@ -23,6 +23,20 @@ pub struct Measurement {
     pub wall_ms: f64,
     pub pushes: u64,
     pub relabels: u64,
+    /// Per-worker arc-scan max/mean (0/0 on baselines that predate the
+    /// imbalance counters — the imbalance gate then stays off for that
+    /// record).
+    pub scan_arcs_max_worker: u64,
+    pub scan_arcs_mean_worker: u64,
+}
+
+impl Measurement {
+    /// Worker arc-scan imbalance ratio (`max / mean`; `None` without the
+    /// counters — pre-PR baselines).
+    pub fn imbalance(&self) -> Option<f64> {
+        (self.scan_arcs_mean_worker > 0)
+            .then(|| crate::maxflow::state::scan_imbalance(self.scan_arcs_max_worker, self.scan_arcs_mean_worker))
+    }
 }
 
 pub type Key = (String, String, String);
@@ -51,11 +65,15 @@ pub fn parse_records(doc: &str) -> Result<BTreeMap<Key, Measurement>, String> {
                 .and_then(Json::as_f64)
                 .ok_or_else(|| format!("record {i}: missing numeric field '{name}'"))
         };
+        // New counters are optional so pre-PR baselines still parse.
+        let opt_num = |name: &str| r.get(name).and_then(Json::as_f64).unwrap_or(0.0);
         let key = (field("graph")?, field("engine")?, field("rep")?);
         let m = Measurement {
             wall_ms: num("wall_ms")?,
             pushes: num("pushes")? as u64,
             relabels: num("relabels")? as u64,
+            scan_arcs_max_worker: opt_num("scan_arcs_max_worker") as u64,
+            scan_arcs_mean_worker: opt_num("scan_arcs_mean_worker") as u64,
         };
         out.insert(key, m);
     }
@@ -89,7 +107,8 @@ pub fn compare(
     fail_above: f64,
 ) -> Comparison {
     let mut t = Table::new(&[
-        "graph", "engine", "rep", "old ms", "new ms", "ratio", "old ops", "new ops", "verdict",
+        "graph", "engine", "rep", "old ms", "new ms", "ratio", "old ops", "new ops",
+        "old imb", "new imb", "verdict",
     ]);
     let mut regressions = Vec::new();
     let mut unmatched = 0;
@@ -100,10 +119,21 @@ pub fn compare(
         };
         let floor = 0.05; // ms
         let ratio = n.wall_ms / o.wall_ms.max(floor);
-        let regressed = n.wall_ms > fail_above * o.wall_ms.max(floor);
-        if regressed {
+        let wall_regressed = n.wall_ms > fail_above * o.wall_ms.max(floor);
+        // Imbalance gate (hub-regression alarm): the worker arc-scan
+        // max/mean ratio must not grow past the same threshold. The old
+        // ratio is floored at 1.0 (perfect balance) so a baseline at 1.02
+        // doesn't flag a harmless 1.3. Counter-based, so CI machine noise
+        // cannot trip it — only a real work-distribution change can.
+        let (oi, ni) = (o.imbalance(), n.imbalance());
+        let imb_regressed = match (oi, ni) {
+            (Some(oi), Some(ni)) => ni > fail_above * oi.max(1.0),
+            _ => false, // baseline predates the counters: gate off
+        };
+        if wall_regressed || imb_regressed {
             regressions.push(key.clone());
         }
+        let imb_cell = |i: Option<f64>| i.map_or("-".to_string(), |i| format!("{i:.2}"));
         t.row(vec![
             key.0.clone(),
             key.1.clone(),
@@ -113,7 +143,14 @@ pub fn compare(
             format!("{ratio:.2}x"),
             (o.pushes + o.relabels).to_string(),
             (n.pushes + n.relabels).to_string(),
-            if regressed { "REGRESSED".to_string() } else { "ok".to_string() },
+            imb_cell(oi),
+            imb_cell(ni),
+            match (wall_regressed, imb_regressed) {
+                (false, false) => "ok".to_string(),
+                (true, false) => "REGRESSED".to_string(),
+                (false, true) => "REGRESSED(imbalance)".to_string(),
+                (true, true) => "REGRESSED(wall+imbalance)".to_string(),
+            },
         ]);
     }
     unmatched += new.keys().filter(|k| !old.contains_key(*k)).count();
@@ -161,7 +198,7 @@ mod tests {
     use super::*;
     use crate::bench::table1::{records_json, BenchRecord};
 
-    fn doc(wall: f64, pushes: u64) -> String {
+    fn doc_with_imbalance(wall: f64, pushes: u64, scan_max: u64, scan_mean: u64) -> String {
         records_json(&[BenchRecord {
             graph: "R6".into(),
             engine: "VC",
@@ -169,12 +206,21 @@ mod tests {
             wall_ms: wall,
             pushes,
             relabels: 10,
+            scan_arcs: 100,
+            scan_arcs_max_worker: scan_max,
+            scan_arcs_mean_worker: scan_mean,
             frontier_len_sum: 5,
             launches: 4,
             rescan_launches: 1,
             carried_frontier_len: 12,
+            gr_alpha_final: 1.0,
+            gr_alpha_trace: vec![1.0],
         }])
         .to_string()
+    }
+
+    fn doc(wall: f64, pushes: u64) -> String {
+        doc_with_imbalance(wall, pushes, 10, 10)
     }
 
     #[test]
@@ -212,6 +258,36 @@ mod tests {
         let cmp = compare(&old, &new, 1.25);
         assert!(!cmp.is_regression());
         assert_eq!(cmp.unmatched, 2, "one old-only + one new-only");
+    }
+
+    #[test]
+    fn imbalance_growth_is_gated() {
+        // Flat wall-clock, but the worker arc-scan imbalance jumped from
+        // balanced (1.0) to 4x — a hub regression the wall gate (noisy on
+        // shared runners) could miss.
+        let old = parse_records(&doc_with_imbalance(10.0, 100, 10, 10)).unwrap();
+        let new = parse_records(&doc_with_imbalance(10.0, 100, 40, 10)).unwrap();
+        let cmp = compare(&old, &new, 1.25);
+        assert!(cmp.is_regression());
+        assert!(cmp.report.contains("REGRESSED(imbalance)"), "{}", cmp.report);
+        // Mild growth below the threshold (relative to the 1.0 floor)
+        // passes.
+        let mild = parse_records(&doc_with_imbalance(10.0, 100, 12, 10)).unwrap();
+        assert!(!compare(&old, &mild, 1.25).is_regression());
+    }
+
+    #[test]
+    fn baselines_without_imbalance_counters_still_compare() {
+        // A pre-PR baseline has no scan_arcs_* fields: parsing must not
+        // fail, and the imbalance gate must stay off for that record.
+        let old_doc = r#"{"schema":"wbpr/bench_table1/v1","records":[
+            {"graph":"R6","engine":"VC","rep":"BCSR","wall_ms":10.0,"pushes":100,"relabels":10}
+        ]}"#;
+        let old = parse_records(old_doc).unwrap();
+        assert_eq!(old.values().next().unwrap().imbalance(), None);
+        let new = parse_records(&doc_with_imbalance(10.5, 100, 90, 10)).unwrap();
+        let cmp = compare(&old, &new, 1.25);
+        assert!(!cmp.is_regression(), "no baseline ratio → no imbalance gate: {}", cmp.report);
     }
 
     #[test]

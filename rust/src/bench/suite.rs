@@ -165,6 +165,40 @@ pub fn flow_suite() -> Vec<FlowCase> {
     ]
 }
 
+/// Hub-skewed extension suite (no paper analog — the cooperative-discharge
+/// acceptance graphs): rows big enough that vertex-granular work
+/// assignment measurably serializes one worker. Kept separate from
+/// [`flow_suite`] so Table 1 stays the paper's 13 graphs; `bench smoke`
+/// runs these with the imbalance/pushes-per-arc gates on top.
+pub fn hub_suite() -> Vec<FlowCase> {
+    vec![
+        FlowCase {
+            id: "H0",
+            paper_name: "hub-skewed rmat",
+            regime: "power-law with pronounced hubs: coop chunking target",
+            paper_vc_wins: true,
+            build: || {
+                with_pairs(
+                    generators::rmat(&RmatParams { scale: 11, edge_factor: 8, a: 0.66, b: 0.15, c: 0.15, seed: 113 }),
+                    8,
+                    1013,
+                )
+            },
+        },
+        FlowCase {
+            id: "H1",
+            paper_name: "star overlay",
+            regime: "one giant hub row: the degenerate serialization case",
+            paper_vc_wins: true,
+            build: || generators::star_hub(3000, 2000, 114),
+        },
+    ]
+}
+
+pub fn hub_smoke_ids() -> &'static [&'static str] {
+    &["H0", "H1"]
+}
+
 /// One bipartite suite entry (Table 2 row).
 pub struct MatchCase {
     pub id: &'static str,
@@ -311,6 +345,30 @@ mod tests {
     fn suites_have_paper_cardinality() {
         assert_eq!(flow_suite().len(), 13);
         assert_eq!(match_suite().len(), 13);
+    }
+
+    #[test]
+    fn hub_suite_builds_with_genuine_hubs() {
+        use crate::graph::csr::{Csr, DegreeStats};
+        for case in hub_suite() {
+            let net = (case.build)();
+            net.validate().unwrap_or_else(|e| panic!("{}: {e}", case.id));
+            let csr = Csr::from_edges(net.n, net.edges.iter().map(|e| (e.u, e.v)));
+            let deg = DegreeStats::of(&csr);
+            // Residual degree ≈ 2x out-degree; the default coop threshold
+            // is 128, so a max out-degree above it guarantees the
+            // cooperative path actually runs on these graphs.
+            assert!(
+                deg.max >= 128,
+                "{}: max degree {} too small to exercise the coop path",
+                case.id,
+                deg.max
+            );
+        }
+        let ids: Vec<&str> = hub_suite().iter().map(|c| c.id).collect();
+        for id in hub_smoke_ids() {
+            assert!(ids.contains(id));
+        }
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //!   engines (the lock-free algorithms actually executing).
 
 use super::report::{ms, speedup, Table};
-use super::suite::{flow_smoke_ids, flow_suite, FlowCase};
+use super::suite::{flow_smoke_ids, flow_suite, hub_smoke_ids, hub_suite, FlowCase};
 use super::Scale;
 use crate::graph::builder::ArcGraph;
 use crate::graph::{Bcsr, Rcsr, Representation};
@@ -157,6 +157,14 @@ pub struct BenchRecord {
     pub wall_ms: f64,
     pub pushes: u64,
     pub relabels: u64,
+    /// Residual arcs examined by min-height/admissibility scans — the
+    /// denominator of the pushes-per-scanned-arc ratio the multi-push
+    /// discharge is measured by.
+    pub scan_arcs: u64,
+    /// Most arcs any one worker scanned (imbalance numerator).
+    pub scan_arcs_max_worker: u64,
+    /// Mean arcs scanned per worker (imbalance denominator).
+    pub scan_arcs_mean_worker: u64,
     pub frontier_len_sum: u64,
     /// Host launches of the solve.
     pub launches: u64,
@@ -165,50 +173,142 @@ pub struct BenchRecord {
     pub rescan_launches: u64,
     /// Σ carried-frontier length over the carried launches.
     pub carried_frontier_len: u64,
+    /// Final adaptive global-relabel alpha of the solve (0 when the
+    /// trajectory is empty).
+    pub gr_alpha_final: f64,
+    /// Per-host-step alpha samples (the auto-tune trajectory).
+    pub gr_alpha_trace: Vec<f64>,
 }
+
+impl BenchRecord {
+    fn of(graph: &str, engine: &'static str, rep: &'static str, r: &maxflow::FlowResult) -> BenchRecord {
+        BenchRecord {
+            graph: graph.to_string(),
+            engine,
+            rep,
+            wall_ms: r.stats.total_ms,
+            pushes: r.stats.pushes,
+            relabels: r.stats.relabels,
+            scan_arcs: r.stats.scan_arcs,
+            scan_arcs_max_worker: r.stats.scan_arcs_max_worker,
+            scan_arcs_mean_worker: r.stats.scan_arcs_mean_worker,
+            frontier_len_sum: r.stats.frontier_len_sum,
+            launches: r.stats.launches,
+            rescan_launches: r.stats.rescan_launches,
+            carried_frontier_len: r.stats.carried_frontier_len,
+            gr_alpha_final: r.stats.gr_alpha_trace.last().copied().unwrap_or(0.0),
+            gr_alpha_trace: r.stats.gr_alpha_trace.clone(),
+        }
+    }
+
+    /// Worker arc-scan imbalance ratio (max / mean; 0 before any work).
+    pub fn scan_imbalance(&self) -> f64 {
+        crate::maxflow::state::scan_imbalance(self.scan_arcs_max_worker, self.scan_arcs_mean_worker)
+    }
+
+    /// Pushes per scanned residual arc — the multi-push payoff metric.
+    pub fn pushes_per_arc(&self) -> f64 {
+        self.pushes as f64 / self.scan_arcs.max(1) as f64
+    }
+}
+
+/// Engine label of the PR-4 ablation arm recorded on hub graphs:
+/// single-push discharge, cooperative path off — the baseline the hub
+/// gates compare against.
+pub const PR4_ENGINE: &str = "VC-pr4";
 
 /// Run the Table 1 smoke suite natively (no SIMT sims — this is the
 /// fast CI path) and collect one record per graph × engine × rep, with
 /// every flow value cross-checked against Dinic.
+///
+/// On top of the paper's smoke graphs this also runs the hub-skewed
+/// extension suite ([`hub_suite`]) at a **pinned thread count** (so the
+/// imbalance ratios are comparable across machines), adding one extra
+/// [`PR4_ENGINE`] arm per hub graph — the pre-multi-push, pre-coop engine
+/// the `bench smoke` hub gates measure against.
 pub fn smoke_records(opts: &SolveOptions) -> Vec<BenchRecord> {
     let smoke = flow_smoke_ids();
     let mut out = Vec::new();
     for case in flow_suite().iter().filter(|c| smoke.contains(&c.id)) {
-        let net = (case.build)();
-        let g = ArcGraph::build(&net.normalized());
-        let rcsr = Rcsr::build(&g);
-        let bcsr = Bcsr::build(&g);
-        let want = maxflow::dinic::solve(&g).value;
-        for (_, vc, rep) in CONFIGS.iter() {
-            let kind = if *vc { EngineKind::VertexCentric } else { EngineKind::ThreadCentric };
-            let r = match rep {
-                Representation::Rcsr => maxflow::tc_or_vc(&g, &rcsr, kind, opts),
-                Representation::Bcsr => maxflow::tc_or_vc(&g, &bcsr, kind, opts),
-            };
-            assert!(
-                r.error.is_none(),
-                "{}: {}+{} did not converge: {:?}",
-                case.id,
-                kind.name(),
-                rep.name(),
-                r.error
-            );
-            assert_eq!(r.value, want, "{}: {}+{} flow mismatch", case.id, kind.name(), rep.name());
-            out.push(BenchRecord {
-                graph: case.id.to_string(),
-                engine: kind.name(),
-                rep: rep.name(),
-                wall_ms: r.stats.total_ms,
-                pushes: r.stats.pushes,
-                relabels: r.stats.relabels,
-                frontier_len_sum: r.stats.frontier_len_sum,
-                launches: r.stats.launches,
-                rescan_launches: r.stats.rescan_launches,
-                carried_frontier_len: r.stats.carried_frontier_len,
-            });
-        }
+        run_smoke_case(case, opts, false, &mut out);
+    }
+    // Hub sweep: pinned threads for machine-comparable imbalance ratios.
+    let hub_opts = SolveOptions { threads: HUB_GATE_THREADS, ..opts.clone() };
+    let hub_smoke = hub_smoke_ids();
+    for case in hub_suite().iter().filter(|c| hub_smoke.contains(&c.id)) {
+        run_smoke_case(case, &hub_opts, true, &mut out);
     }
     out
+}
+
+/// Thread count the hub-gate records are pinned to.
+pub const HUB_GATE_THREADS: usize = 8;
+
+fn run_smoke_case(case: &FlowCase, opts: &SolveOptions, pr4_arm: bool, out: &mut Vec<BenchRecord>) {
+    let net = (case.build)();
+    let g = ArcGraph::build(&net.normalized());
+    let rcsr = Rcsr::build(&g);
+    let bcsr = Bcsr::build(&g);
+    let want = maxflow::dinic::solve(&g).value;
+    for (_, vc, rep) in CONFIGS.iter() {
+        let kind = if *vc { EngineKind::VertexCentric } else { EngineKind::ThreadCentric };
+        let r = match rep {
+            Representation::Rcsr => maxflow::tc_or_vc(&g, &rcsr, kind, opts),
+            Representation::Bcsr => maxflow::tc_or_vc(&g, &bcsr, kind, opts),
+        };
+        assert!(
+            r.error.is_none(),
+            "{}: {}+{} did not converge: {:?}",
+            case.id,
+            kind.name(),
+            rep.name(),
+            r.error
+        );
+        assert_eq!(r.value, want, "{}: {}+{} flow mismatch", case.id, kind.name(), rep.name());
+        out.push(BenchRecord::of(case.id, kind.name(), rep.name(), &r));
+    }
+    if pr4_arm {
+        let pr4 = SolveOptions { multi_push: false, coop_degree: 0, ..opts.clone() };
+        let r = maxflow::tc_or_vc(&g, &bcsr, EngineKind::VertexCentric, &pr4);
+        assert!(r.error.is_none(), "{}: {PR4_ENGINE} did not converge", case.id);
+        assert_eq!(r.value, want, "{}: {PR4_ENGINE} flow mismatch", case.id);
+        out.push(BenchRecord::of(case.id, PR4_ENGINE, "BCSR", &r));
+    }
+}
+
+/// One hub-graph gate row: the default VC engine vs the PR-4 ablation arm
+/// on the same graph/representation/threads. `bench smoke` enforces
+/// `imbalance <= 2.0` and `pushes_per_arc > baseline_pushes_per_arc`
+/// (wall speedup is reported, not gated — CI wall-clock is noisy).
+#[derive(Debug, Clone)]
+pub struct HubGate {
+    pub graph: String,
+    pub imbalance: f64,
+    pub baseline_imbalance: f64,
+    pub pushes_per_arc: f64,
+    pub baseline_pushes_per_arc: f64,
+    pub wall_speedup: f64,
+}
+
+/// Pair each hub graph's default-VC record with its [`PR4_ENGINE`] arm.
+pub fn hub_gates(records: &[BenchRecord]) -> Vec<HubGate> {
+    records
+        .iter()
+        .filter(|r| r.engine == "VC" && r.rep == "BCSR" && r.graph.starts_with('H'))
+        .filter_map(|r| {
+            let base = records
+                .iter()
+                .find(|b| b.engine == PR4_ENGINE && b.graph == r.graph && b.rep == r.rep)?;
+            Some(HubGate {
+                graph: r.graph.clone(),
+                imbalance: r.scan_imbalance(),
+                baseline_imbalance: base.scan_imbalance(),
+                pushes_per_arc: r.pushes_per_arc(),
+                baseline_pushes_per_arc: base.pushes_per_arc(),
+                wall_speedup: base.wall_ms / r.wall_ms.max(1e-9),
+            })
+        })
+        .collect()
 }
 
 /// Serialize records as the `BENCH_table1.json` document.
@@ -225,10 +325,18 @@ pub fn records_json(records: &[BenchRecord]) -> crate::util::json::Json {
             o.insert("wall_ms".to_string(), Json::Num(r.wall_ms));
             o.insert("pushes".to_string(), Json::Num(r.pushes as f64));
             o.insert("relabels".to_string(), Json::Num(r.relabels as f64));
+            o.insert("scan_arcs".to_string(), Json::Num(r.scan_arcs as f64));
+            o.insert("scan_arcs_max_worker".to_string(), Json::Num(r.scan_arcs_max_worker as f64));
+            o.insert("scan_arcs_mean_worker".to_string(), Json::Num(r.scan_arcs_mean_worker as f64));
             o.insert("frontier_len_sum".to_string(), Json::Num(r.frontier_len_sum as f64));
             o.insert("launches".to_string(), Json::Num(r.launches as f64));
             o.insert("rescan_launches".to_string(), Json::Num(r.rescan_launches as f64));
             o.insert("carried_frontier_len".to_string(), Json::Num(r.carried_frontier_len as f64));
+            o.insert("gr_alpha_final".to_string(), Json::Num(r.gr_alpha_final));
+            o.insert(
+                "gr_alpha_trace".to_string(),
+                Json::Arr(r.gr_alpha_trace.iter().map(|&a| Json::Num(a)).collect()),
+            );
             Json::Obj(o)
         })
         .collect();
@@ -294,51 +402,85 @@ mod tests {
         assert!(s.contains("agrees"));
     }
 
-    #[test]
-    fn records_serialize_to_json() {
-        let recs = vec![BenchRecord {
-            graph: "R6".into(),
-            engine: "VC",
+    /// Test-record builder with all the new counters defaulted.
+    fn rec(graph: &str, engine: &'static str) -> BenchRecord {
+        BenchRecord {
+            graph: graph.into(),
+            engine,
             rep: "BCSR",
             wall_ms: 1.5,
             pushes: 10,
             relabels: 4,
+            scan_arcs: 100,
+            scan_arcs_max_worker: 30,
+            scan_arcs_mean_worker: 25,
             frontier_len_sum: 7,
             launches: 20,
             rescan_launches: 2,
             carried_frontier_len: 90,
-        }];
+            gr_alpha_final: 1.5,
+            gr_alpha_trace: vec![1.0, 1.25, 1.5],
+        }
+    }
+
+    #[test]
+    fn records_serialize_to_json() {
+        let recs = vec![rec("R6", "VC")];
         let j = records_json(&recs);
         let back = crate::util::json::Json::parse(&j.to_string()).unwrap();
         assert_eq!(back.get("schema").unwrap().as_str(), Some("wbpr/bench_table1/v1"));
-        let rec = &back.get("records").unwrap().as_arr().unwrap()[0];
-        assert_eq!(rec.get("engine").unwrap().as_str(), Some("VC"));
-        assert_eq!(rec.get("rep").unwrap().as_str(), Some("BCSR"));
-        assert_eq!(rec.get("frontier_len_sum").unwrap().as_i64(), Some(7));
-        assert_eq!(rec.get("pushes").unwrap().as_i64(), Some(10));
-        assert_eq!(rec.get("launches").unwrap().as_i64(), Some(20));
-        assert_eq!(rec.get("rescan_launches").unwrap().as_i64(), Some(2));
-        assert_eq!(rec.get("carried_frontier_len").unwrap().as_i64(), Some(90));
+        let r = &back.get("records").unwrap().as_arr().unwrap()[0];
+        assert_eq!(r.get("engine").unwrap().as_str(), Some("VC"));
+        assert_eq!(r.get("rep").unwrap().as_str(), Some("BCSR"));
+        assert_eq!(r.get("frontier_len_sum").unwrap().as_i64(), Some(7));
+        assert_eq!(r.get("pushes").unwrap().as_i64(), Some(10));
+        assert_eq!(r.get("launches").unwrap().as_i64(), Some(20));
+        assert_eq!(r.get("rescan_launches").unwrap().as_i64(), Some(2));
+        assert_eq!(r.get("carried_frontier_len").unwrap().as_i64(), Some(90));
+        assert_eq!(r.get("scan_arcs").unwrap().as_i64(), Some(100));
+        assert_eq!(r.get("scan_arcs_max_worker").unwrap().as_i64(), Some(30));
+        assert_eq!(r.get("scan_arcs_mean_worker").unwrap().as_i64(), Some(25));
+        assert_eq!(r.get("gr_alpha_final").unwrap().as_f64(), Some(1.5));
+        assert_eq!(r.get("gr_alpha_trace").unwrap().as_arr().unwrap().len(), 3);
     }
 
     #[test]
     fn rescan_fraction_aggregates_vc_records_only() {
         let mk = |engine: &'static str, launches: u64, rescans: u64| BenchRecord {
-            graph: "G".into(),
-            engine,
-            rep: "BCSR",
-            wall_ms: 1.0,
-            pushes: 0,
-            relabels: 0,
-            frontier_len_sum: 0,
             launches,
             rescan_launches: rescans,
-            carried_frontier_len: 0,
+            ..rec("G", engine)
         };
         let recs = vec![mk("VC", 80, 8), mk("VC", 20, 2), mk("TC", 1000, 1000)];
         let f = vc_rescan_fraction(&recs);
         assert!((f - 0.1).abs() < 1e-9, "TC records must not dilute the fraction: {f}");
         assert_eq!(vc_rescan_fraction(&[]), 0.0);
+    }
+
+    #[test]
+    fn hub_gates_pair_vc_with_the_pr4_arm() {
+        let mut vc = rec("H1", "VC");
+        vc.scan_arcs_max_worker = 120;
+        vc.scan_arcs_mean_worker = 100;
+        vc.pushes = 50;
+        vc.scan_arcs = 100;
+        vc.wall_ms = 1.0;
+        let mut pr4 = rec("H1", PR4_ENGINE);
+        pr4.scan_arcs_max_worker = 500;
+        pr4.scan_arcs_mean_worker = 100;
+        pr4.pushes = 10;
+        pr4.scan_arcs = 1000;
+        pr4.wall_ms = 3.0;
+        // Non-hub graphs and unpaired hub records produce no gate.
+        let gates = hub_gates(&[rec("R6", "VC"), rec("H2", "VC"), vc.clone(), pr4]);
+        assert_eq!(gates.len(), 1);
+        let g = &gates[0];
+        assert_eq!(g.graph, "H1");
+        assert!((g.imbalance - 1.2).abs() < 1e-9);
+        assert!((g.baseline_imbalance - 5.0).abs() < 1e-9);
+        assert!(g.pushes_per_arc > g.baseline_pushes_per_arc);
+        assert!((g.wall_speedup - 3.0).abs() < 1e-9);
+        assert!(vc.scan_imbalance() >= 1.0);
     }
 
     #[test]

@@ -114,6 +114,13 @@ pub struct Row {
     /// Same stream repaired by the pre-frontier engine configuration
     /// (`frontier: false`, `gr_alpha: 0.0`) — the PR's A/B baseline.
     pub legacy_ms: f64,
+    /// Same stream with the frontier carry-over on but the cadence
+    /// auto-tune **off** (`gr_spacing: 0.0`, alpha pinned) — attributes
+    /// the frontier-vs-legacy win between the carry and the tuned
+    /// cadence (ROADMAP leftover from PR 4).
+    pub carry_only_ms: f64,
+    /// Σ pushes+relabels of the carry-only arm.
+    pub carry_only_ops: u64,
     pub scratch_vc_ms: f64,
     pub scratch_dinic_ms: f64,
     /// Every batch's repaired value matched the from-scratch solve.
@@ -131,6 +138,12 @@ impl Row {
     pub fn wall_speedup(&self) -> f64 {
         self.legacy_ms / self.inc_ms.max(1e-6)
     }
+
+    /// Carry-only arm's win over legacy: what the frontier carry buys
+    /// *before* the auto-tuned cadence is layered on top.
+    pub fn carry_only_speedup(&self) -> f64 {
+        self.legacy_ms / self.carry_only_ms.max(1e-6)
+    }
 }
 
 /// Replay one case: apply the stream incrementally (with the frontier
@@ -144,6 +157,10 @@ pub fn run_case(case: &DynCase, opts: &SolveOptions) -> Row {
     // engine as it was before the frontier/adaptive-relabel work.
     let legacy_opts = SolveOptions { frontier: false, gr_alpha: 0.0, ..opts.clone() };
     let mut legacy_df = DynamicFlow::new(&net, &legacy_opts);
+    // Carry-only arm: frontier carry-over on, cadence auto-tune off — the
+    // configuration that attributes the win between the two mechanisms.
+    let carry_opts = SolveOptions { gr_spacing: 0.0, ..opts.clone() };
+    let mut carry_df = DynamicFlow::new(&net, &carry_opts);
     let stream = update_stream(
         df.network(),
         &UpdateStreamParams::capacity_only(df.network().m(), case.batches, case.frac, 25, 0xD11A + case.batches as u64),
@@ -166,6 +183,8 @@ pub fn run_case(case: &DynCase, opts: &SolveOptions) -> Row {
         carried_frontier_len: 0,
         inc_ms: 0.0,
         legacy_ms: 0.0,
+        carry_only_ms: 0.0,
+        carry_only_ops: 0,
         scratch_vc_ms: 0.0,
         scratch_dinic_ms: 0.0,
         values_agree: true,
@@ -183,6 +202,9 @@ pub fn run_case(case: &DynCase, opts: &SolveOptions) -> Row {
         let legacy = legacy_df.apply(batch).expect("stream updates are valid");
         row.legacy_ops += legacy.stats.pushes + legacy.stats.relabels;
         row.legacy_ms += legacy.stats.total_ms;
+        let carry = carry_df.apply(batch).expect("stream updates are valid");
+        row.carry_only_ops += carry.stats.pushes + carry.stats.relabels;
+        row.carry_only_ms += carry.stats.total_ms;
         // From-scratch re-solve of the *same* post-update instance.
         let now = df.network().clone();
         let scratch = maxflow::solve(&now, EngineKind::VertexCentric, Representation::Bcsr, opts);
@@ -190,7 +212,11 @@ pub fn run_case(case: &DynCase, opts: &SolveOptions) -> Row {
         row.scratch_vc_ms += scratch.stats.total_ms;
         let dinic = maxflow::dinic::solve(&ArcGraph::build(&now.normalized()));
         row.scratch_dinic_ms += dinic.stats.total_ms;
-        if rep.value != scratch.value || rep.value != dinic.value || legacy.value != rep.value {
+        if rep.value != scratch.value
+            || rep.value != dinic.value
+            || legacy.value != rep.value
+            || carry.value != rep.value
+        {
             row.values_agree = false;
         }
     }
@@ -211,7 +237,7 @@ pub fn run(scale: Scale, opts: &SolveOptions) -> Vec<Row> {
 pub fn render(rows: &[Row]) -> String {
     let mut t = Table::new(&[
         "Graph", "V", "E", "batches", "updates", "inc ops", "scratch ops", "ops speedup",
-        "inc ms", "legacy ms", "wall speedup", "frontier Σ", "GR skipped",
+        "inc ms", "legacy ms", "carry-only ms", "wall speedup", "frontier Σ", "GR skipped",
         "launches", "rescans", "carried Σ",
         "scratch VC ms", "scratch Dinic ms", "values",
     ]);
@@ -227,6 +253,7 @@ pub fn render(rows: &[Row]) -> String {
             speedup(r.ops_speedup()),
             ms(r.inc_ms),
             ms(r.legacy_ms),
+            ms(r.carry_only_ms),
             speedup(r.wall_speedup()),
             r.frontier_len_sum.to_string(),
             r.gr_skipped.to_string(),
@@ -240,12 +267,15 @@ pub fn render(rows: &[Row]) -> String {
     }
     let geo = super::table1::geo_mean(rows.iter().map(Row::ops_speedup));
     let geo_wall = super::table1::geo_mean(rows.iter().map(Row::wall_speedup));
+    let geo_carry = super::table1::geo_mean(rows.iter().map(Row::carry_only_speedup));
     format!(
         "{}\ngeomean ops reduction (incremental vs from-scratch VC): {}\n\
-         geomean repair wall speedup (frontier vs legacy engine, target >= 3x): {}\n",
+         geomean repair wall speedup (frontier+auto-tune vs legacy engine, target >= 3x): {}\n\
+         geomean carry-only wall speedup (auto-tune off — attributes carry vs cadence): {}\n",
         t.render(),
         speedup(geo),
-        speedup(geo_wall)
+        speedup(geo_wall),
+        speedup(geo_carry)
     )
 }
 
@@ -471,6 +501,7 @@ mod tests {
         // one per launch — the cadence skips (or convergence
         // short-circuits) the rest.
         assert!(row.legacy_ms > 0.0);
+        assert!(row.carry_only_ms > 0.0 && row.carry_only_ops > 0, "carry-only arm must run");
         assert!(
             row.global_relabels <= 3 * row.batches as u64,
             "repairs must not re-walk the BFS per launch: {} relabels over {} batches ({} launches)",
@@ -529,6 +560,8 @@ mod tests {
             carried_frontier_len: 25,
             inc_ms: 1.0,
             legacy_ms: 4.0,
+            carry_only_ms: 2.0,
+            carry_only_ops: 11,
             scratch_vc_ms: 5.0,
             scratch_dinic_ms: 3.0,
             values_agree: true,
@@ -537,6 +570,8 @@ mod tests {
         assert!(s.contains("D9"));
         assert!(s.contains("10.00x"), "ops speedup column");
         assert!(s.contains("4.00x"), "wall speedup column");
+        assert!(s.contains("carry-only"), "carry-only attribution column");
+        assert!(s.contains("2.00x"), "carry-only speedup geomean");
         assert!(s.contains("agree"));
     }
 }

@@ -12,6 +12,10 @@ pub struct EngineMetrics {
     pub failures: u64,
     pub latency_ms: Welford,
     pub total_value: i64,
+    /// Auto-tuned global-relabel alpha samples (one per host step of each
+    /// solve this engine served) — the trajectory, not just a final
+    /// value, so a drifting cadence is visible from the serving side.
+    pub gr_alpha: Welford,
 }
 
 /// Thread-safe metrics registry keyed by engine label.
@@ -54,6 +58,20 @@ impl Metrics {
         e.total_value += value;
     }
 
+    /// Feed one solve's per-host-step alpha samples into the engine's
+    /// trajectory (no-op for engines without an adaptive cadence — their
+    /// trace is empty).
+    pub fn observe_gr_alpha(&self, engine: &str, samples: &[f64]) {
+        if samples.is_empty() {
+            return;
+        }
+        let mut m = self.inner.lock().unwrap();
+        let e = m.entry(engine.to_string()).or_default();
+        for &a in samples {
+            e.gr_alpha.push(a);
+        }
+    }
+
     /// Record a failed job.
     pub fn record_failure(&self, engine: &str) {
         let mut m = self.inner.lock().unwrap();
@@ -68,10 +86,15 @@ impl Metrics {
     /// Human-readable table.
     pub fn render(&self) -> String {
         let snap = self.snapshot();
-        let mut out = String::from("engine                     jobs  fail   mean ms    std ms\n");
+        let mut out = String::from("engine                     jobs  fail   mean ms    std ms   gr alpha\n");
         for (k, v) in snap {
+            let alpha = if v.gr_alpha.n() > 0 {
+                format!("{:>6.2}~{:.2}", v.gr_alpha.mean(), v.gr_alpha.std())
+            } else {
+                "     -".to_string()
+            };
             out.push_str(&format!(
-                "{k:<25} {jobs:>5} {fail:>5} {mean:>9.3} {std:>9.3}\n",
+                "{k:<25} {jobs:>5} {fail:>5} {mean:>9.3} {std:>9.3} {alpha:>10}\n",
                 jobs = v.jobs,
                 fail = v.failures,
                 mean = v.latency_ms.mean(),
@@ -114,6 +137,21 @@ mod tests {
         let r = m.render();
         assert!(r.contains('x'));
         assert!(r.contains("jobs"));
+    }
+
+    #[test]
+    fn alpha_trajectory_feeds_the_engine_summary() {
+        let m = Metrics::new();
+        m.record("native:VC+BCSR", 1.0, 3);
+        m.observe_gr_alpha("native:VC+BCSR", &[1.0, 2.0, 3.0]);
+        m.observe_gr_alpha("native:VC+BCSR", &[]); // no-op
+        let snap = m.snapshot();
+        let e = &snap["native:VC+BCSR"];
+        assert_eq!(e.gr_alpha.n(), 3);
+        assert!((e.gr_alpha.mean() - 2.0).abs() < 1e-9);
+        let r = m.render();
+        assert!(r.contains("gr alpha"), "{r}");
+        assert!(r.contains("2.00"), "{r}");
     }
 
     #[test]

@@ -318,12 +318,14 @@ fn native_worker(
                 // An engine failure (e.g. `SolveError::NoConvergence`) is a
                 // job failure, never a worker abort.
                 let r = maxflow::solve(&net, kind, rep, &solve);
+                metrics.observe_gr_alpha(&label, &r.stats.gr_alpha_trace);
                 (label, r.value_or_error())
             }
             Job::MaxFlowAuto { net } => {
                 // Routed native (device absent or graph too big): the
                 // paper's overall best configuration is VC + BCSR.
                 let r = maxflow::solve(&net, EngineKind::VertexCentric, Representation::Bcsr, &solve);
+                metrics.observe_gr_alpha("native:VC+BCSR(auto)", &r.stats.gr_alpha_trace);
                 ("native:VC+BCSR(auto)".to_string(), r.value_or_error())
             }
             Job::Matching { graph, kind, rep } => {

@@ -305,12 +305,19 @@ impl SessionManager {
 
     /// Persist one session's warm state to disk and drop it from memory.
     pub fn evict(&mut self, id: u64) -> Result<(), String> {
-        let sess = self.sessions.get(&id).ok_or_else(|| format!("session {id} not open"))?;
+        let sess = self.sessions.get_mut(&id).ok_or_else(|| format!("session {id} not open"))?;
         let mut snap = sess.df.snapshot()?;
         // Carry the cost router's from-scratch baseline across eviction so
         // re-hydration doesn't have to guess it (a wrong guess biases the
         // repair-vs-recompute decision).
         snap.scratch_ops = sess.cost.scratch_ops as u64;
+        // Release the engine's kernel scratch (AVQ buffers, epoch stamps,
+        // hub slots, BFS scratch) *before* the snapshot write: otherwise a
+        // huge graph's warm buffers and its serialized snapshot coexist
+        // for the duration of the disk write, and the eviction — whose
+        // whole point is returning memory — briefly *raises* peak RSS.
+        // A rehydrated engine re-grows the scratch on its next batch.
+        sess.df.release_scratch();
         let dir = self.ensure_snapshot_dir()?;
         let path = dir.join(format!("session-{id}.wbps"));
         snap.write(&path)?;

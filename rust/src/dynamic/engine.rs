@@ -305,6 +305,18 @@ impl DynamicFlow {
         FlowResult { value: self.value, cf: self.st.cf_snapshot(), stats: self.total.clone(), error: None }
     }
 
+    /// Release the kernel scratch's O(V)+ buffers (AVQ double buffer,
+    /// epoch stamps, hub slots, global-relabel BFS scratch, the touched
+    /// list) without tearing the engine down — the TTL-eviction hook: a
+    /// session headed for disk should not keep a huge graph's worth of
+    /// warm buffers resident while the snapshot is written. The next
+    /// `apply` transparently re-grows everything through the scratch's
+    /// `ensure` path, so releasing is always safe.
+    pub fn release_scratch(&mut self) {
+        self.ctx.scratch.release();
+        self.touched = Vec::new();
+    }
+
     /// Did an internal repair invariant break? (See [`DynamicFlow::apply`].)
     pub fn is_poisoned(&self) -> bool {
         self.poisoned
@@ -495,6 +507,9 @@ impl DynamicFlow {
         // overflow tails plus the phase-2 source seeds are exactly the
         // candidates for `e > 0`, so the first repair launch starts from
         // them and skips the O(V) active-vertex rescan entirely.
+        // (`ensure_vertices` re-grows the per-vertex buffers in case the
+        // scratch was released by a TTL eviction since the last batch.)
+        ctx.scratch.ensure_vertices(g.n);
         ctx.scratch.seed_carried(touched.iter().copied().filter(|&v| st.is_active(g, v)));
         touched.clear();
         // The relabel above collected the exact active set for free
@@ -527,6 +542,14 @@ fn add_stats(total: &mut SolveStats, s: &SolveStats) {
     total.gr_skipped += s.gr_skipped;
     total.rescan_launches += s.rescan_launches;
     total.carried_frontier_len += s.carried_frontier_len;
+    total.coop_chunks += s.coop_chunks;
+    // Summing per-batch maxes/means keeps the stream-level imbalance
+    // ratio (Σmax / Σmean) meaningful without storing every batch.
+    total.scan_arcs_max_worker += s.scan_arcs_max_worker;
+    total.scan_arcs_mean_worker += s.scan_arcs_mean_worker;
+    for &a in &s.gr_alpha_trace {
+        total.record_gr_alpha(a);
+    }
 }
 
 /// Cancel `amount` units of the flow currently leaving `from` (whose

@@ -247,6 +247,31 @@ mod tests {
     }
 
     #[test]
+    fn release_scratch_then_apply_regrows_and_stays_correct() {
+        // The TTL-eviction hook: releasing the kernel scratch must be
+        // transparent — the next batch re-grows everything and repairs
+        // correctly (including through the cooperative hub path).
+        let net = generators::star_hub(120, 80, 5);
+        let mut df = DynamicFlow::new(
+            &net,
+            &SolveOptions { threads: 2, cycles_per_launch: 32, coop_degree: 8, coop_chunk: 4, ..Default::default() },
+        );
+        check(&df);
+        df.release_scratch();
+        let m = df.network().edges.len();
+        df.apply(&UpdateBatch::new(vec![
+            GraphUpdate::IncreaseCap { edge: 0, delta: 5 },
+            GraphUpdate::DecreaseCap { edge: m - 1, delta: 2 },
+        ]))
+        .unwrap();
+        check(&df);
+        // Release again after use, then another batch — idempotent.
+        df.release_scratch();
+        df.apply(&UpdateBatch::new(vec![GraphUpdate::IncreaseCap { edge: 2, delta: 3 }])).unwrap();
+        check(&df);
+    }
+
+    #[test]
     fn source_and_sink_adjacent_updates() {
         let mut df = DynamicFlow::new(&diamond(), &opts());
         // Shrink a source edge below its flow, then restore it.

@@ -264,6 +264,38 @@ pub fn webgraph(scale: u32, edge_factor: usize, seed: u64) -> FlowNetwork {
         .normalized()
 }
 
+/// Star-overlay hub network: every unit of flow funnels through one
+/// in-hub and one out-hub, each with a `leaves`-arc row — the degenerate
+/// power-law case where vertex-granular work assignment serializes a
+/// single worker on an O(leaves) scan while the rest idle (the regime the
+/// cooperative hub discharge targets). `extra_edges` random leaf-to-leaf
+/// arcs add residual structure so the instance is not a pure matching.
+///
+/// Layout: `s = 0`, `t = 1`, in-hub `2`, out-hub `3`, leaves `4..4+leaves`.
+pub fn star_hub(leaves: usize, extra_edges: usize, seed: u64) -> FlowNetwork {
+    assert!(leaves >= 2);
+    let mut rng = Rng::new(seed);
+    let n = 4 + leaves;
+    let mut edges = Vec::with_capacity(2 * leaves + extra_edges + 2);
+    let big = 4 * leaves as Capacity;
+    edges.push(Edge::new(0, 2, big));
+    edges.push(Edge::new(3, 1, big));
+    for i in 0..leaves {
+        let leaf = (4 + i) as VertexId;
+        edges.push(Edge::new(2, leaf, rng.range_i64(1, 8)));
+        edges.push(Edge::new(leaf, 3, rng.range_i64(1, 8)));
+    }
+    for _ in 0..extra_edges {
+        let u = (4 + rng.index(leaves)) as VertexId;
+        let v = (4 + rng.index(leaves)) as VertexId;
+        if u != v {
+            edges.push(Edge::new(u, v, rng.range_i64(1, 6)));
+        }
+    }
+    FlowNetwork::new(n, 0, 1, edges, format!("star_hub(leaves={leaves},extra={extra_edges},seed={seed})"))
+        .normalized()
+}
+
 /// Parameters of the deterministic update-stream generator.
 ///
 /// Operation mix is given as probabilities; the remainder

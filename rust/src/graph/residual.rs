@@ -42,6 +42,49 @@ impl<'a> RowSegs<'a> {
         let [(a0, c0), (a1, c1)] = self.segs;
         a0.iter().copied().zip(c0.iter().copied()).chain(a1.iter().copied().zip(c1.iter().copied()))
     }
+
+    /// Iterate `(arc, target)` over the positions `lo..hi` of the row, in
+    /// the same order as [`RowSegs::iter`], but with O(1) positioning into
+    /// the underlying segments — the cooperative hub discharge slices one
+    /// row into fixed-size arc chunks, and `iter().skip(lo)` would re-walk
+    /// every earlier chunk (quadratic over the row).
+    pub fn slice(&self, lo: usize, hi: usize) -> impl Iterator<Item = (u32, VertexId)> + 'a {
+        let [(a0, c0), (a1, c1)] = self.segs;
+        let l0 = a0.len();
+        let r0 = lo.min(l0)..hi.min(l0);
+        let r1 = lo.saturating_sub(l0).min(a1.len())..hi.saturating_sub(l0).min(a1.len());
+        a0[r0.clone()]
+            .iter()
+            .copied()
+            .zip(c0[r0].iter().copied())
+            .chain(a1[r1.clone()].iter().copied().zip(c1[r1].iter().copied()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_matches_iter_windows() {
+        let a0 = [0u32, 1, 2];
+        let c0 = [10u32, 11, 12];
+        let a1 = [3u32, 4];
+        let c1 = [13u32, 14];
+        let row = RowSegs::two((&a0, &c0), (&a1, &c1));
+        let all: Vec<(u32, u32)> = row.iter().collect();
+        assert_eq!(all.len(), 5);
+        for lo in 0..=5 {
+            for hi in lo..=5 {
+                let want: Vec<(u32, u32)> = all[lo..hi].to_vec();
+                let got: Vec<(u32, u32)> = row.slice(lo, hi).collect();
+                assert_eq!(got, want, "slice({lo}, {hi})");
+            }
+        }
+        // Single-segment rows slice the same way.
+        let one = RowSegs::one(&a0, &c0);
+        assert_eq!(one.slice(1, 3).collect::<Vec<_>>(), vec![(1, 11), (2, 12)]);
+    }
 }
 
 /// A residual-graph representation over the shared arc arena.

@@ -30,7 +30,7 @@ use wbpr::util::config::Config;
 fn main() {
     let args = Args::parse(
         std::env::args().skip(1),
-        &["verbose", "quiet", "no-device", "no-global-relabel", "no-frontier"],
+        &["verbose", "quiet", "no-device", "no-global-relabel", "no-frontier", "no-multi-push"],
     );
     if args.flag("quiet") {
         wbpr::util::log::set_level(wbpr::util::log::Level::Error);
@@ -90,6 +90,14 @@ fn solve_options(args: &Args, cfg: &Config) -> Result<SolveOptions, String> {
         gr_alpha_max: args.opt_f64("gr-alpha-max", cfg.get_f64("engine", "gr_alpha_max", defaults.gr_alpha_max)?)?,
         frontier: !args.flag("no-frontier") && cfg.get_bool("engine", "frontier", true)?,
         verify_frontier: false,
+        // Multi-push discharge (one scan drains excess to every admissible
+        // neighbor); --no-multi-push restores the PR-4 single-push op.
+        multi_push: !args.flag("no-multi-push") && cfg.get_bool("engine", "multi_push", true)?,
+        // Cooperative hub discharge: rows with at least --coop-degree arcs
+        // are sliced into --coop-chunk-arc tiles shared across workers
+        // (0 disables, the coop_degree = ∞ ablation).
+        coop_degree: args.opt_usize("coop-degree", cfg.get_usize("engine", "coop_degree", defaults.coop_degree)?)?,
+        coop_chunk: args.opt_usize("coop-chunk", cfg.get_usize("engine", "coop_chunk", defaults.coop_chunk)?)?,
     })
 }
 
@@ -355,6 +363,33 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
         println!("VC rescan fraction: {:.1}% of launches (target < 15%)", frac * 100.0);
         if frac >= 0.15 {
             return Err(format!("VC rescan fraction {:.1}% breaches the <15% target", frac * 100.0));
+        }
+        // Cooperative-discharge acceptance gates, on the hub-skewed suite
+        // at a pinned thread count: worker arc-scan imbalance (max/mean)
+        // must stay <= 2.0 with the cooperative path on, and multi-push
+        // must strictly improve pushes-per-scanned-arc over the PR-4 arm.
+        // Wall speedup is reported but not gated (CI wall-clock is noisy);
+        // the counter gates are deterministic-enough stand-ins.
+        let gates = table1::hub_gates(&records);
+        for g in &gates {
+            println!(
+                "hub {}: arc-scan imbalance {:.2} (pr4 {:.2}) | pushes/arc {:.4} (pr4 {:.4}) | wall speedup {:.2}x (target >= 1.5x)",
+                g.graph, g.imbalance, g.baseline_imbalance, g.pushes_per_arc, g.baseline_pushes_per_arc, g.wall_speedup
+            );
+        }
+        for g in &gates {
+            if g.imbalance > 2.0 {
+                return Err(format!(
+                    "hub {}: arc-scan imbalance {:.2} breaches the <= 2.0 target (coop path on)",
+                    g.graph, g.imbalance
+                ));
+            }
+            if g.pushes_per_arc <= g.baseline_pushes_per_arc {
+                return Err(format!(
+                    "hub {}: multi-push did not improve pushes/arc ({:.4} vs pr4 {:.4})",
+                    g.graph, g.pushes_per_arc, g.baseline_pushes_per_arc
+                ));
+            }
         }
         return Ok(());
     }

@@ -88,6 +88,15 @@ impl GrScratch {
             self.dist.resize(n, u32::MAX);
         }
     }
+
+    /// Drop the O(V) BFS buffers (TTL-eviction hook; see
+    /// [`crate::maxflow::vc::VcScratch::release`]). The next pass re-grows
+    /// them through `ensure`.
+    pub fn release(&mut self) {
+        self.dist = Vec::new();
+        self.queue = VecDeque::new();
+        self.active = Vec::new();
+    }
 }
 
 /// Run one global relabel over the current state. `update_heights=false`
@@ -304,6 +313,13 @@ impl AdaptiveGr {
     /// and the bench tables).
     pub fn alpha(&self) -> f64 {
         self.alpha
+    }
+
+    /// Is the cadence auto-tuning (`gr_spacing > 0`)? A pinned cadence's
+    /// alpha trajectory is constant, so callers skip the per-step samples
+    /// and record one final value instead.
+    pub fn tuning(&self) -> bool {
+        self.spacing > 0.0
     }
 
     /// Feed the tuner one launch's observation: `launch_ops` discharge

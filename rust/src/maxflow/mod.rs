@@ -130,6 +130,26 @@ pub struct SolveOptions {
     /// invariant (every active vertex is queued; no duplicates or
     /// terminals). Panics on violation. Off (and free) by default.
     pub verify_frontier: bool,
+    /// Multi-push discharge for the frontier VC engine: one row traversal
+    /// drains excess to every admissible neighbor instead of paying the
+    /// full O(deg) min-height scan per single push. `false` restores the
+    /// one-push-per-scan local operation (the PR-4 engine, kept for A/B —
+    /// the `bench smoke` hub gate measures pushes-per-scanned-arc against
+    /// it) **and disables the cooperative hub path** — the hub owner
+    /// applies pushes multi-push-wise, so single-push semantics require
+    /// vertex-granular work.
+    pub multi_push: bool,
+    /// Cooperative hub discharge threshold: frontier vertices whose
+    /// residual degree is at least this are not scanned by a single
+    /// worker — their row is sliced into [`SolveOptions::coop_chunk`]-arc
+    /// chunks placed on the shared work cursor, workers partial-reduce
+    /// into a per-hub scratch slot, and the last finisher (the owner)
+    /// applies the pushes/relabel — the CPU analog of the paper's
+    /// tile-per-vertex reduction. `0` disables the cooperative path
+    /// entirely (the `coop_degree = ∞` ablation).
+    pub coop_degree: usize,
+    /// Arcs per cooperative chunk (the tile width of the hub slicing).
+    pub coop_chunk: usize,
 }
 
 impl Default for SolveOptions {
@@ -144,6 +164,9 @@ impl Default for SolveOptions {
             gr_alpha_max: 64.0,
             frontier: true,
             verify_frontier: false,
+            multi_push: true,
+            coop_degree: 128,
+            coop_chunk: 32,
         }
     }
 }
@@ -164,6 +187,23 @@ impl SolveOptions {
         } else {
             n.clamp(32, 4096)
         }
+    }
+
+    /// Cooperative-discharge threshold with `0 = disabled` resolved to
+    /// "never" (the `coop_degree = ∞` ablation spelling).
+    pub fn resolved_coop_degree(&self) -> usize {
+        if self.coop_degree == 0 {
+            usize::MAX
+        } else {
+            // A hub must span at least two chunks, or slicing it buys
+            // nothing over the one-worker scan.
+            self.coop_degree.max(2 * self.resolved_coop_chunk())
+        }
+    }
+
+    /// Chunk width clamped away from degenerate 0/1-arc tiles.
+    pub fn resolved_coop_chunk(&self) -> usize {
+        self.coop_chunk.max(4)
     }
 }
 
@@ -340,6 +380,18 @@ mod tests {
         let o2 = SolveOptions { cycles_per_launch: 7, threads: 3, ..Default::default() };
         assert_eq!(o2.resolved_cycles(10), 7);
         assert_eq!(o2.resolved_threads(), 3);
+    }
+
+    #[test]
+    fn coop_options_resolve() {
+        let off = SolveOptions { coop_degree: 0, ..Default::default() };
+        assert_eq!(off.resolved_coop_degree(), usize::MAX, "0 spells the ∞ ablation");
+        let o = SolveOptions { coop_degree: 8, coop_chunk: 16, ..Default::default() };
+        assert_eq!(o.resolved_coop_chunk(), 16);
+        assert_eq!(o.resolved_coop_degree(), 32, "a hub must span >= 2 chunks");
+        let d = SolveOptions::default();
+        assert!(d.multi_push);
+        assert!(d.resolved_coop_degree() >= 2 * d.resolved_coop_chunk());
     }
 
     #[test]

@@ -45,6 +45,52 @@ pub struct SolveStats {
     /// the work the carry-over saved charges per *pending vertex*, not
     /// per graph vertex.
     pub carried_frontier_len: u64,
+    /// Most residual arcs any single worker scanned over the solve — the
+    /// numerator of the workload-imbalance ratio (paper Eq. 1's `max` over
+    /// workers). With vertex-granular assignment a hub row lands on one
+    /// worker and this diverges from the mean; the cooperative discharge
+    /// path is what keeps `max/mean` near 1.
+    pub scan_arcs_max_worker: u64,
+    /// Mean residual arcs scanned per worker (Σ scan_arcs / workers) —
+    /// the denominator of the imbalance ratio.
+    pub scan_arcs_mean_worker: u64,
+    /// Cooperative hub-row chunks processed (each one partial-scan of at
+    /// most `SolveOptions::coop_chunk` arcs, reduced into the hub's
+    /// scratch slot).
+    pub coop_chunks: u64,
+    /// Per-host-step samples of the adaptive global-relabel alpha
+    /// (capped at [`GR_ALPHA_TRACE_CAP`]) — the auto-tune trajectory,
+    /// not just the final value.
+    pub gr_alpha_trace: Vec<f64>,
+}
+
+/// Cap on [`SolveStats::gr_alpha_trace`] so a long-lived warm session's
+/// accumulated stats cannot grow without bound.
+pub const GR_ALPHA_TRACE_CAP: usize = 4096;
+
+impl SolveStats {
+    /// Append one host-step alpha sample (drops samples past the cap).
+    pub fn record_gr_alpha(&mut self, alpha: f64) {
+        if self.gr_alpha_trace.len() < GR_ALPHA_TRACE_CAP {
+            self.gr_alpha_trace.push(alpha);
+        }
+    }
+
+    /// Worker arc-scan imbalance ratio `max / mean` (1.0 = perfectly
+    /// balanced; meaningless 0.0 before any scan work).
+    pub fn scan_imbalance(&self) -> f64 {
+        scan_imbalance(self.scan_arcs_max_worker, self.scan_arcs_mean_worker)
+    }
+}
+
+/// The worker arc-scan imbalance ratio `max / mean` — the one definition
+/// shared by [`SolveStats`], the bench records, and the `bench compare`
+/// regression gate (0.0 when no scan work was recorded).
+pub fn scan_imbalance(max: u64, mean: u64) -> f64 {
+    if mean == 0 {
+        return 0.0;
+    }
+    max as f64 / mean as f64
 }
 
 /// Atomic counters accumulated inside parallel kernels, merged into
@@ -54,6 +100,7 @@ pub struct AtomicCounters {
     pub pushes: AtomicU64,
     pub relabels: AtomicU64,
     pub scan_arcs: AtomicU64,
+    pub coop_chunks: AtomicU64,
 }
 
 impl AtomicCounters {
@@ -61,6 +108,7 @@ impl AtomicCounters {
         s.pushes += self.pushes.swap(0, Ordering::Relaxed);
         s.relabels += self.relabels.swap(0, Ordering::Relaxed);
         s.scan_arcs += self.scan_arcs.swap(0, Ordering::Relaxed);
+        s.coop_chunks += self.coop_chunks.swap(0, Ordering::Relaxed);
     }
 }
 

@@ -20,6 +20,7 @@ use super::{FlowResult, SolveError, SolveOptions, SolveStats};
 use crate::graph::builder::ArcGraph;
 use crate::graph::residual::Residual;
 use crate::util::Timer;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Hard cap on host launches; hitting it means the engine is not
 /// converging — surfaced as [`SolveError::NoConvergence`], never a panic.
@@ -46,6 +47,12 @@ pub fn solve<R: Residual>(g: &ArcGraph, rep: &R, opts: &SolveOptions) -> FlowRes
         .map(|w| ((w * chunk).min(n) as u32, ((w + 1) * chunk).min(n) as u32))
         .collect();
 
+    // Per-worker arc-scan totals: under fixed ranges the worker that owns
+    // the hub rows scans far more than the mean — the baseline imbalance
+    // the VC engine's cooperative discharge is measured against
+    // (`SolveStats::{scan_arcs_max_worker, scan_arcs_mean_worker}`).
+    let worker_scan: Vec<AtomicU64> = (0..active_workers).map(|_| AtomicU64::new(0)).collect();
+
     while !acct.done(g, &st) {
         stats.launches += 1;
         if stats.launches > MAX_LAUNCHES {
@@ -57,6 +64,7 @@ pub fn solve<R: Residual>(g: &ArcGraph, rep: &R, opts: &SolveOptions) -> FlowRes
             let st = &st;
             let counters = &counters;
             let ranges = &ranges;
+            let worker_scan = &worker_scan;
             pool.run(move |w| {
                 if w >= active_workers {
                     return;
@@ -72,6 +80,7 @@ pub fn solve<R: Residual>(g: &ArcGraph, rep: &R, opts: &SolveOptions) -> FlowRes
                         break; // this worker's range is quiescent
                     }
                 }
+                worker_scan[w].fetch_add(local.scan_arcs, Ordering::Relaxed);
                 local.flush(counters);
             });
         }
@@ -84,6 +93,14 @@ pub fn solve<R: Residual>(g: &ArcGraph, rep: &R, opts: &SolveOptions) -> FlowRes
         adaptive.host_step(g, rep, &st, &mut acct, &counters, opts.global_relabel, &mut stats, &mut gr_scratch, 0);
     }
 
+    // TC's cadence never auto-tunes (no frontier signal), so its alpha
+    // trajectory is one point, not one sample per launch.
+    if stats.launches > 0 {
+        stats.record_gr_alpha(adaptive.alpha());
+    }
+    let per_worker: Vec<u64> = worker_scan.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+    stats.scan_arcs_max_worker = per_worker.iter().copied().max().unwrap_or(0);
+    stats.scan_arcs_mean_worker = per_worker.iter().sum::<u64>() / active_workers.max(1) as u64;
     counters.merge_into(&mut stats);
     stats.total_ms = total_timer.ms();
     FlowResult { value: st.excess(g.t), cf: st.cf_snapshot(), stats, error }

@@ -19,14 +19,20 @@
 //!      paid the sweep).
 //!   2. `grid_sync()` — a barrier (Alg. 2 line 5).
 //!   3. **Process phase** — workers *pull AVQ entries through a shared
-//!      atomic cursor* (the CPU analog of tile-per-active-vertex: work is
-//!      balanced across workers no matter how skewed the active set or the
-//!      degree distribution is). Each entry gets one lock-free local
-//!      operation, which also maintains the **next-cycle frontier**: a
-//!      push that raises `e(v)` from ≤ 0 enqueues `v` (the pusher owns the
-//!      transition), and a vertex still active after its own discharge
-//!      re-queues itself. A per-vertex epoch stamp dedups the appends, so
-//!      per-cycle work is O(|active| + touched arcs) instead of O(V).
+//!      atomic cursor*, in **degree buckets** (DESIGN.md §3c): small
+//!      vertices get one lock-free *multi-push* local operation in place
+//!      (one row traversal drains excess through every admissible arc);
+//!      hub rows at or above [`SolveOptions::coop_degree`] are sliced
+//!      into [`SolveOptions::coop_chunk`]-arc chunks on a shared chunk
+//!      queue, partial-reduced by all workers into per-hub scratch slots,
+//!      and applied by the last-finishing worker as designated owner —
+//!      the CPU analog of the paper's tile-per-vertex reduction, so work
+//!      balances no matter how skewed the degree distribution is. Both
+//!      paths maintain the **next-cycle frontier**: a push that raises
+//!      `e(v)` from ≤ 0 enqueues `v` (the pusher owns the transition),
+//!      and a vertex still active after its own discharge re-queues
+//!      itself. A per-vertex epoch stamp dedups the appends, so per-cycle
+//!      work is O(|active| + touched arcs) instead of O(V).
 //!   4. **Early exit** — an empty AVQ ends the launch (Alg. 2's
 //!      early-break of Alg. 1 line 8), skipping redundant cycles.
 //!
@@ -39,7 +45,7 @@
 //! a warm session re-enters with zero allocation.
 
 use super::global_relabel::{global_relabel_with, AdaptiveGr, ExcessAccounting, GrScratch};
-use super::lockfree::{discharge_step, Discharge, LocalCounters};
+use super::lockfree::{discharge_multi, discharge_step, Discharge, DischargeOutcome, LocalCounters};
 use super::pool::WorkerPool;
 use super::state::{AtomicCounters, ParState};
 use super::{FlowResult, SolveError, SolveOptions, SolveStats};
@@ -48,6 +54,11 @@ use crate::graph::residual::Residual;
 use crate::util::Timer;
 use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Barrier};
+
+/// Admissible-arc candidates recorded per hub row scan. Overflow is safe:
+/// the owner pushes what was recorded, the hub stays active and re-queues,
+/// and the next cycle's scan records a fresh batch.
+const COOP_CAND_CAP: usize = 64;
 
 /// Hard cap on host launches; hitting it means the engine is not
 /// converging — surfaced as [`SolveError::NoConvergence`], never a panic:
@@ -94,6 +105,88 @@ impl FrontierQueue {
     }
 }
 
+/// The cooperative work queue: one `u64` unit per hub-row chunk
+/// (`hub slot << 32 | chunk index`), pulled through a shared cursor so
+/// chunk work balances across workers exactly like small-vertex pops do.
+struct ChunkQueue {
+    buf: Vec<AtomicU64>,
+    len: AtomicUsize,
+}
+
+impl ChunkQueue {
+    fn with_capacity(n: usize) -> ChunkQueue {
+        ChunkQueue { buf: (0..n).map(|_| AtomicU64::new(0)).collect(), len: AtomicUsize::new(0) }
+    }
+
+    fn ensure(&mut self, n: usize) {
+        if self.buf.len() < n {
+            self.buf.resize_with(n, || AtomicU64::new(0));
+        }
+    }
+
+    #[inline(always)]
+    fn push(&self, unit: u64) {
+        let i = self.len.fetch_add(1, Ordering::Relaxed);
+        debug_assert!(i < self.buf.len(), "chunk capacity covers every hub row once per cycle");
+        self.buf[i].store(unit, Ordering::Relaxed);
+    }
+
+    #[inline(always)]
+    fn get(&self, i: usize) -> u64 {
+        self.buf[i].load(Ordering::Relaxed)
+    }
+
+    #[inline(always)]
+    fn len(&self) -> usize {
+        self.len.load(Ordering::Relaxed)
+    }
+
+    #[inline(always)]
+    fn reset(&self) {
+        self.len.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Per-hub reduction slot: the scratch the cooperative chunk scans reduce
+/// into — the CPU analog of the paper's per-tile shared-memory reduction.
+///
+/// Lifecycle per cycle: the expanding worker initializes the slot and
+/// appends one [`ChunkQueue`] unit per chunk; scanning workers fold their
+/// chunk's minimum residual-neighbor height into `min_h` and append
+/// admissible arcs to `cand`; the **last** chunk to finish (the
+/// `done.fetch_add(AcqRel)` that reaches `chunks`) becomes the designated
+/// owner and applies the multi-push/relabel. The release sequence on
+/// `done` is the happens-before edge that makes every earlier chunk's
+/// `Relaxed` candidate/min writes visible to the owner.
+struct HubSlot {
+    u: AtomicU32,
+    /// Chunks this row was sliced into (set at expansion).
+    chunks: AtomicU32,
+    /// Chunks finished so far; the increment that reaches `chunks` elects
+    /// the owner.
+    done: AtomicU32,
+    /// Minimum height over the row's residual neighbors (fetch_min).
+    min_h: AtomicU32,
+    /// Admissible candidates recorded (may exceed `cand.len()`; only the
+    /// first `COOP_CAND_CAP` are stored).
+    cand_len: AtomicU32,
+    /// Candidate arcs, packed `arc << 32 | target`.
+    cand: Vec<AtomicU64>,
+}
+
+impl HubSlot {
+    fn new() -> HubSlot {
+        HubSlot {
+            u: AtomicU32::new(0),
+            chunks: AtomicU32::new(0),
+            done: AtomicU32::new(0),
+            min_h: AtomicU32::new(u32::MAX),
+            cand_len: AtomicU32::new(0),
+            cand: (0..COOP_CAND_CAP).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+}
+
 /// Reusable per-solve scratch for the VC engine: the double-buffered AVQ,
 /// the per-vertex queued-epoch stamps, the cycle barrier and the
 /// global-relabel BFS buffers. Warm sessions hold one and allocate nothing
@@ -123,6 +216,12 @@ pub struct VcScratch {
     /// Cycle barrier, rebuilt only when the participant count changes.
     barrier: Barrier,
     participants: usize,
+    /// Per-hub reduction slots for the cooperative discharge (sized to
+    /// the number of hub vertices of the current graph — each can appear
+    /// in a cycle's frontier at most once, thanks to the epoch dedup).
+    hubs: Vec<HubSlot>,
+    /// Chunk work units of the current cycle.
+    chunkq: ChunkQueue,
     /// Global-relabel BFS buffers (shared with the warm host loop).
     pub gr: GrScratch,
 }
@@ -138,24 +237,60 @@ impl VcScratch {
             carry_valid: false,
             barrier: Barrier::new(participants),
             participants,
+            hubs: Vec::new(),
+            chunkq: ChunkQueue::with_capacity(0),
             gr: GrScratch::new(n),
         }
+    }
+
+    /// Size the cooperative-discharge buffers: `hubs` slots (one per hub
+    /// vertex of the graph) and room for `chunks` work units (Σ over hub
+    /// rows of ceil(deg / chunk)). No-op when already big enough.
+    fn ensure_coop(&mut self, hubs: usize, chunks: usize) {
+        if self.hubs.len() < hubs {
+            self.hubs.resize_with(hubs, HubSlot::new);
+        }
+        self.chunkq.ensure(chunks);
+    }
+
+    /// Drop every O(V)-and-larger buffer (AVQ double buffer, epoch
+    /// stamps, hub slots, chunk queue, global-relabel BFS scratch) and
+    /// invalidate the carry. The next solve re-grows them through
+    /// [`VcScratch::ensure`]/`ensure_coop`, so a released scratch stays
+    /// fully usable — this is the warm-session TTL-eviction hook that
+    /// returns a huge graph's kernel memory instead of holding it for an
+    /// idle tenant.
+    pub fn release(&mut self) {
+        self.avq = [FrontierQueue::with_capacity(0), FrontierQueue::with_capacity(0)];
+        self.queued = Vec::new();
+        self.carry_valid = false;
+        self.hubs = Vec::new();
+        self.chunkq = ChunkQueue::with_capacity(0);
+        self.gr.release();
     }
 
     /// Resize for a graph/worker count (no-op when already big enough).
     /// Growing drops any carried frontier — a size change means a
     /// different graph.
     fn ensure(&mut self, n: usize, participants: usize) {
+        self.ensure_vertices(n);
+        if self.participants != participants {
+            self.barrier = Barrier::new(participants);
+            self.participants = participants;
+        }
+    }
+
+    /// Grow just the per-vertex buffers (AVQ + epoch stamps). Public so
+    /// warm callers that seed a frontier *before* entering
+    /// [`run_from_state`] (the dynamic repair path) stay safe after a
+    /// [`VcScratch::release`].
+    pub fn ensure_vertices(&mut self, n: usize) {
         if self.queued.len() < n {
             self.avq[0].ensure(n);
             self.avq[1].ensure(n);
             // Fresh stamps are 0, which never equals a live epoch (≥ 1).
             self.queued.resize_with(n, || AtomicU64::new(0));
             self.carry_valid = false;
-        }
-        if self.participants != participants {
-            self.barrier = Barrier::new(participants);
-            self.participants = participants;
         }
     }
 
@@ -276,6 +411,7 @@ pub fn run_from_state<R: Residual>(
     let cycles = opts.resolved_cycles(n);
     let counters = AtomicCounters::default();
     let frontier = opts.frontier;
+    let multi_push = opts.multi_push;
     let mut adaptive = AdaptiveGr::from_opts(n, opts);
     ctx.scratch.ensure(n, active_workers);
     if !frontier {
@@ -284,11 +420,42 @@ pub fn run_from_state<R: Residual>(
         ctx.scratch.invalidate_carry();
     }
 
+    // Degree-bucket census for the cooperative hub discharge: count the
+    // graph's hub vertices (rows at or above the coop threshold) and the
+    // chunk units their rows slice into, so the per-cycle expansion can
+    // run against fixed-capacity shared buffers. One O(V) pass of O(1)
+    // degree reads per solve — far below the per-batch BFS the warm
+    // repair path already pays. The cooperative path rides the frontier
+    // engine *and* multi-push (the hub owner applies pushes
+    // multi-push-wise, so a single-push ablation must fall back to
+    // vertex-granular work to really be the PR-4 engine); the legacy
+    // ablation keeps vertex-granular work too.
+    let coop_degree =
+        if frontier && multi_push { opts.resolved_coop_degree() } else { usize::MAX };
+    let coop_chunk = opts.resolved_coop_chunk();
+    let (mut hub_count, mut chunk_cap) = (0usize, 0usize);
+    if coop_degree != usize::MAX {
+        for u in 0..n as u32 {
+            let d = rep.degree(u);
+            if d >= coop_degree {
+                hub_count += 1;
+                chunk_cap += d.div_ceil(coop_chunk);
+            }
+        }
+    }
+    let coop_on = hub_count > 0;
+    ctx.scratch.ensure_coop(hub_count, chunk_cap);
+
+    // Per-worker arc-scan totals — the workload-imbalance signal
+    // (`SolveStats::{scan_arcs_max_worker, scan_arcs_mean_worker}`).
+    let worker_scan: Vec<AtomicU64> = (0..active_workers).map(|_| AtomicU64::new(0)).collect();
+
     let chunk = n.div_ceil(active_workers);
     let ranges: Vec<(u32, u32)> = (0..active_workers)
         .map(|w| ((w * chunk).min(n) as u32, ((w + 1) * chunk).min(n) as u32))
         .collect();
 
+    let mut failure: Option<SolveError> = None;
     while !acct.done(g, st) {
         let carry = frontier && ctx.scratch.carry_valid;
         let base = ctx.scratch.carried;
@@ -301,6 +468,9 @@ pub fn run_from_state<R: Residual>(
             global_relabel_with(g, rep, st, acct, opts.global_relabel, &mut ctx.scratch.gr);
             stats.global_relabels += 1;
             adaptive.note_external_relabel();
+            if adaptive.tuning() {
+                stats.record_gr_alpha(adaptive.alpha());
+            }
             if opts.global_relabel && !ctx.scratch.gr.active.is_empty() {
                 let active = std::mem::take(&mut ctx.scratch.gr.active);
                 ctx.scratch.seed_carried(active.iter().copied());
@@ -312,7 +482,8 @@ pub fn run_from_state<R: Residual>(
         }
         stats.launches += 1;
         if stats.launches > MAX_LAUNCHES {
-            return Err(SolveError::NoConvergence { launches: stats.launches - 1 });
+            failure = Some(SolveError::NoConvergence { launches: stats.launches - 1 });
+            break;
         }
         if carry {
             stats.carried_frontier_len += ctx.scratch.avq[base].len() as u64;
@@ -321,6 +492,8 @@ pub fn run_from_state<R: Residual>(
         }
         let kt = Timer::start();
         let cursor = AtomicUsize::new(0);
+        let chunk_cursor = AtomicUsize::new(0);
+        let hub_alloc = AtomicUsize::new(0);
         let executed_cycles = AtomicUsize::new(0);
         let frontier_sum = AtomicU64::new(0);
         let frontier_start = AtomicU64::new(0);
@@ -330,9 +503,12 @@ pub fn run_from_state<R: Residual>(
             let ranges = &ranges;
             let counters = &counters;
             let cursor = &cursor;
+            let chunk_cursor = &chunk_cursor;
+            let hub_alloc = &hub_alloc;
             let executed_cycles = &executed_cycles;
             let frontier_sum = &frontier_sum;
             let frontier_start = &frontier_start;
+            let worker_scan = &worker_scan;
             ctx.pool.run(move |w| {
                 if w >= active_workers {
                     return;
@@ -350,6 +526,11 @@ pub fn run_from_state<R: Residual>(
                         }
                         next.reset();
                         cursor.store(0, Ordering::Relaxed);
+                        if coop_on {
+                            chunk_cursor.store(0, Ordering::Relaxed);
+                            hub_alloc.store(0, Ordering::Relaxed);
+                            sc.chunkq.reset();
+                        }
                     }
                     sc.barrier.wait();
                     // -- scan phase (Alg. 2 lines 1-4): the O(V) sweep
@@ -378,11 +559,15 @@ pub fn run_from_state<R: Residual>(
                         if w == 0 {
                             executed_cycles.fetch_add(c + 1, Ordering::Relaxed);
                         }
+                        worker_scan[w].fetch_add(local.scan_arcs, Ordering::Relaxed);
                         local.flush(counters);
                         return;
                     }
-                    // -- process phase: balanced pull of AVQ entries;
-                    // activations feed the next cycle's frontier --
+                    // -- process phase A: balanced pull of AVQ entries.
+                    // Small vertices discharge in place (one worker, whole
+                    // row); hub rows are *expanded* into fixed-size arc
+                    // chunks on the shared chunk queue instead of
+                    // serializing one worker on an O(10^5) scan --
                     let next_epoch = base_epoch + c as u64 + 1;
                     loop {
                         let i = cursor.fetch_add(1, Ordering::Relaxed);
@@ -390,26 +575,86 @@ pub fn run_from_state<R: Residual>(
                             break;
                         }
                         let u = cur.get(i);
-                        match discharge_step(g, rep, st, u, &mut local) {
-                            Discharge::Idle => {}
-                            Discharge::Pushed { v, activated } => {
-                                if frontier {
-                                    // Heights only rise within a launch, so
-                                    // an observed h(v) ≥ n is final until
-                                    // the next global relabel's rescan.
-                                    if activated && st.height(v) < n as u32 {
-                                        sc.enqueue(next, v, next_epoch);
-                                    }
+                        if coop_on && rep.degree(u) >= coop_degree && st.is_active(g, u) {
+                            // Degree-bucketed: slice the hub row. The slot
+                            // index is unique per cycle (epoch dedup means
+                            // one AVQ entry per vertex), so the Relaxed
+                            // init is published to the chunk scanners by
+                            // the phase A/B barrier below.
+                            let h = hub_alloc.fetch_add(1, Ordering::Relaxed);
+                            let slot = &sc.hubs[h];
+                            slot.u.store(u, Ordering::Relaxed);
+                            slot.done.store(0, Ordering::Relaxed);
+                            slot.min_h.store(u32::MAX, Ordering::Relaxed);
+                            slot.cand_len.store(0, Ordering::Relaxed);
+                            let nch = rep.degree(u).div_ceil(coop_chunk);
+                            slot.chunks.store(nch as u32, Ordering::Relaxed);
+                            for ci in 0..nch {
+                                sc.chunkq.push(((h as u64) << 32) | ci as u64);
+                            }
+                        } else if multi_push && frontier {
+                            match discharge_multi(g, rep, st, u, &mut local, |v| {
+                                // Heights only rise within a launch, so an
+                                // observed h(v) ≥ n is final until the next
+                                // global relabel's rescan.
+                                if st.height(v) < n as u32 {
+                                    sc.enqueue(next, v, next_epoch);
+                                }
+                            }) {
+                                DischargeOutcome::Idle => {}
+                                DischargeOutcome::Pushed | DischargeOutcome::Relabeled => {
                                     if st.is_active(g, u) {
                                         sc.enqueue(next, u, next_epoch);
                                     }
                                 }
                             }
-                            Discharge::Relabeled => {
-                                if frontier && st.is_active(g, u) {
-                                    sc.enqueue(next, u, next_epoch);
+                        } else {
+                            match discharge_step(g, rep, st, u, &mut local) {
+                                Discharge::Idle => {}
+                                Discharge::Pushed { v, activated } => {
+                                    if frontier {
+                                        if activated && st.height(v) < n as u32 {
+                                            sc.enqueue(next, v, next_epoch);
+                                        }
+                                        if st.is_active(g, u) {
+                                            sc.enqueue(next, u, next_epoch);
+                                        }
+                                    }
+                                }
+                                Discharge::Relabeled => {
+                                    if frontier && st.is_active(g, u) {
+                                        sc.enqueue(next, u, next_epoch);
+                                    }
                                 }
                             }
+                        }
+                    }
+                    // -- process phase B (hub rows only): cooperative
+                    // chunk scans. The barrier publishes every slot init
+                    // and chunk unit from phase A; the pull cursor then
+                    // balances the sliced hub work across all workers —
+                    // the paper's tile reduction, with the last finisher
+                    // of each hub applying the push/relabel as owner --
+                    if coop_on {
+                        sc.barrier.wait();
+                        let clen = sc.chunkq.len();
+                        loop {
+                            let j = chunk_cursor.fetch_add(1, Ordering::Relaxed);
+                            if j >= clen {
+                                break;
+                            }
+                            coop_process_chunk(
+                                g,
+                                rep,
+                                st,
+                                sc,
+                                sc.chunkq.get(j),
+                                coop_chunk,
+                                frontier,
+                                next,
+                                next_epoch,
+                                &mut local,
+                            );
                         }
                     }
                     // -- cycle boundary barrier (process/reset races) --
@@ -418,6 +663,7 @@ pub fn run_from_state<R: Residual>(
                 if w == 0 {
                     executed_cycles.fetch_add(cycles, Ordering::Relaxed);
                 }
+                worker_scan[w].fetch_add(local.scan_arcs, Ordering::Relaxed);
                 local.flush(counters);
             });
         }
@@ -447,6 +693,12 @@ pub fn run_from_state<R: Residual>(
             &mut ctx.scratch.gr,
             frontier_start.load(Ordering::Relaxed),
         );
+        // One trajectory sample per host step — but only when the cadence
+        // is actually tuning; a pinned alpha gets a single final sample
+        // below instead of a constant vector.
+        if adaptive.tuning() {
+            stats.record_gr_alpha(adaptive.alpha());
+        }
         if outcome.relabeled && opts.global_relabel {
             // The BFS just settled every vertex and collected the exact
             // post-relabel active set: adopt it as the carried frontier
@@ -463,7 +715,154 @@ pub fn run_from_state<R: Residual>(
             verify_carry(g, st, &ctx.scratch);
         }
     }
-    Ok(())
+    // Workload-imbalance counters: the max/mean per-worker arc-scan totals
+    // over the whole solve (paper Eq. 1's numerator/denominator). Written
+    // on the error path too — a non-converging solve's imbalance is
+    // exactly the diagnostic one wants.
+    let per_worker: Vec<u64> = worker_scan.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+    stats.scan_arcs_max_worker = per_worker.iter().copied().max().unwrap_or(0);
+    stats.scan_arcs_mean_worker = per_worker.iter().sum::<u64>() / active_workers.max(1) as u64;
+    // A pinned (non-tuning) cadence still reports its one-point
+    // trajectory so `gr_alpha_final` is meaningful in the bench records.
+    if stats.gr_alpha_trace.is_empty() && stats.launches > 0 {
+        stats.record_gr_alpha(adaptive.alpha());
+    }
+    match failure {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+/// One cooperative chunk of a hub row (process phase B): partial-scan the
+/// arc window, reduce the admissible candidates and the minimum residual
+/// height into the hub's slot, and — if this chunk is the row's last to
+/// finish — apply the multi-push/relabel as the designated owner.
+///
+/// Ownership/happens-before contract (DESIGN.md §3c): only the owner
+/// touches `e(u)`/`cf(u,·)` downward, so Hong's single-writer condition
+/// holds for hubs exactly as it does for small vertices; the
+/// `done.fetch_add(AcqRel)` release sequence hands every chunk's `Relaxed`
+/// scratch writes to the owner.
+#[allow(clippy::too_many_arguments)]
+fn coop_process_chunk<R: Residual>(
+    g: &ArcGraph,
+    rep: &R,
+    st: &ParState,
+    sc: &VcScratch,
+    unit: u64,
+    coop_chunk: usize,
+    frontier: bool,
+    next: &FrontierQueue,
+    next_epoch: u64,
+    local: &mut LocalCounters,
+) {
+    let h = (unit >> 32) as usize;
+    let ci = (unit & 0xFFFF_FFFF) as usize;
+    let slot = &sc.hubs[h];
+    let u = slot.u.load(Ordering::Relaxed);
+    let hu = st.height(u);
+    let row = rep.row(u);
+    let lo = ci * coop_chunk;
+    let hi = (lo + coop_chunk).min(row.len());
+    let mut local_min = u32::MAX;
+    for (a, v) in row.slice(lo, hi) {
+        local.scan_arcs += 1;
+        if st.residual(a) > 0 {
+            let hv = st.height(v);
+            if hv < local_min {
+                local_min = hv;
+            }
+            if hv < hu {
+                // Admissible candidate: record for the owner (overflow
+                // beyond the cap just drops candidates — the hub stays
+                // active and retries next cycle).
+                let idx = slot.cand_len.fetch_add(1, Ordering::Relaxed) as usize;
+                if idx < slot.cand.len() {
+                    slot.cand[idx].store(((a as u64) << 32) | v as u64, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+    local.coop_chunks += 1;
+    if local_min != u32::MAX {
+        slot.min_h.fetch_min(local_min, Ordering::Relaxed);
+    }
+    // AcqRel: the increment that completes the row acquires every earlier
+    // chunk's candidate/min writes through the release sequence on `done`.
+    let prev = slot.done.fetch_add(1, Ordering::AcqRel);
+    if prev + 1 == slot.chunks.load(Ordering::Relaxed) {
+        apply_hub(g, rep, st, sc, slot, frontier, next, next_epoch, local);
+    }
+}
+
+/// Owner step of the cooperative hub discharge: drain `e(u)` through the
+/// recorded admissible candidates (multi-push), or fall back to the
+/// min-height relabel when the whole row had nothing admissible — the
+/// same decision [`discharge_multi`] makes, fed by the tile reduction
+/// instead of a serial scan.
+#[allow(clippy::too_many_arguments)]
+fn apply_hub<R: Residual>(
+    g: &ArcGraph,
+    rep: &R,
+    st: &ParState,
+    sc: &VcScratch,
+    slot: &HubSlot,
+    frontier: bool,
+    next: &FrontierQueue,
+    next_epoch: u64,
+    local: &mut LocalCounters,
+) {
+    let n = g.n as u32;
+    let u = slot.u.load(Ordering::Relaxed);
+    let mut eu = st.excess(u);
+    let hu = st.height(u);
+    if eu <= 0 || hu >= n {
+        // Defensive: expansion pre-checked activity and nobody else
+        // decreases e(u), so this should be unreachable — but a stale
+        // read must degrade to a no-op, never to an overdraw.
+        return;
+    }
+    let cand_n = (slot.cand_len.load(Ordering::Relaxed) as usize).min(slot.cand.len());
+    let min_h = slot.min_h.load(Ordering::Relaxed);
+    let mut pushed = false;
+    for cand in slot.cand.iter().take(cand_n) {
+        let packed = cand.load(Ordering::Relaxed);
+        let a = (packed >> 32) as u32;
+        let v = packed as u32;
+        let cf = st.residual(a);
+        if cf <= 0 {
+            continue;
+        }
+        let d = eu.min(cf);
+        let activated = super::lockfree::push_arc(g, rep, st, u, a, v, d, local);
+        pushed = true;
+        if frontier && activated && st.height(v) < n {
+            sc.enqueue(next, v, next_epoch);
+        }
+        eu -= d;
+        if eu == 0 {
+            break;
+        }
+    }
+    if !pushed {
+        if min_h == u32::MAX {
+            // No residual arc anywhere in the row: lift out.
+            st.set_height(u, n + 1);
+            local.relabels += 1;
+            return;
+        }
+        if hu <= min_h {
+            st.set_height(u, min_h.saturating_add(1));
+            local.relabels += 1;
+        }
+        // else: an admissible arc existed but its candidate record was
+        // dropped (cap overflow) or raced away — do not relabel on a
+        // height we know is not the row minimum; the re-queue below
+        // retries next cycle.
+    }
+    if frontier && st.is_active(g, u) {
+        sc.enqueue(next, u, next_epoch);
+    }
 }
 
 /// Test hook behind [`SolveOptions::verify_frontier`]: O(V) reference
@@ -741,6 +1140,132 @@ mod tests {
         // Re-seeding after invalidation works (fresh epoch).
         sc.seed_carried([3u32]);
         assert_eq!(sc.carried_frontier().unwrap(), vec![3]);
+    }
+
+    #[test]
+    fn coop_hub_discharge_matches_dinic_on_star() {
+        // A giant hub row, coop threshold forced low so the cooperative
+        // chunk path does essentially all the work, across a thread sweep
+        // including oversubscription.
+        let net = generators::star_hub(300, 200, 7);
+        let g = ArcGraph::build(&net);
+        let want = super::super::dinic::solve(&g).value;
+        for threads in [1usize, 4, 16] {
+            let opts = SolveOptions {
+                threads,
+                cycles_per_launch: 32,
+                coop_degree: 8,
+                coop_chunk: 4,
+                verify_frontier: true,
+                ..Default::default()
+            };
+            let r = solve(&g, &Rcsr::build(&g), &opts);
+            assert_eq!(r.value, want, "coop VC+RCSR threads={threads}");
+            assert!(r.error.is_none());
+            super::super::verify(&g, &r).unwrap();
+            assert!(r.stats.coop_chunks > 0, "hub rows must go through the chunk path");
+            let b = solve(&g, &Bcsr::build(&g), &opts);
+            assert_eq!(b.value, want, "coop VC+BCSR threads={threads}");
+            super::super::verify(&g, &b).unwrap();
+        }
+    }
+
+    #[test]
+    fn coop_disabled_and_multi_push_ablations_agree() {
+        // The three A/B arms — default (multi-push + coop), coop off
+        // (`coop_degree = 0`, the ∞ ablation), and the PR-4 single-push
+        // engine — must land on the same value.
+        let net = generators::star_hub(150, 120, 11);
+        let g = ArcGraph::build(&net);
+        let rep = Rcsr::build(&g);
+        let want = super::super::dinic::solve(&g).value;
+        let base = SolveOptions { threads: 4, cycles_per_launch: 32, coop_degree: 8, coop_chunk: 4, ..Default::default() };
+        assert_eq!(solve(&g, &rep, &base).value, want);
+        let nocoop = SolveOptions { coop_degree: 0, ..base.clone() };
+        let r = solve(&g, &rep, &nocoop);
+        assert_eq!(r.value, want);
+        assert_eq!(r.stats.coop_chunks, 0, "coop_degree = 0 disables the chunk path");
+        let pr4 = SolveOptions { coop_degree: 0, multi_push: false, ..base.clone() };
+        let r4 = solve(&g, &rep, &pr4);
+        assert_eq!(r4.value, want);
+        super::super::verify(&g, &r4).unwrap();
+    }
+
+    #[test]
+    fn multi_push_improves_pushes_per_scanned_arc() {
+        // Same graph, same thread count: the multi-push engine must get
+        // strictly more pushes out of each scanned arc than the
+        // single-push PR-4 engine (the bench smoke hub gate, in-unit).
+        let net = generators::star_hub(200, 150, 3);
+        let g = ArcGraph::build(&net);
+        let rep = Bcsr::build(&g);
+        let multi = SolveOptions { threads: 2, cycles_per_launch: 32, coop_degree: 0, ..Default::default() };
+        let single = SolveOptions { multi_push: false, ..multi.clone() };
+        let rm = solve(&g, &rep, &multi);
+        let rs = solve(&g, &rep, &single);
+        assert_eq!(rm.value, rs.value);
+        let ppa_multi = rm.stats.pushes as f64 / rm.stats.scan_arcs.max(1) as f64;
+        let ppa_single = rs.stats.pushes as f64 / rs.stats.scan_arcs.max(1) as f64;
+        assert!(
+            ppa_multi > ppa_single,
+            "multi-push must improve pushes/arc: {ppa_multi:.4} !> {ppa_single:.4}"
+        );
+    }
+
+    #[test]
+    fn imbalance_counters_are_populated_and_consistent() {
+        let net = generators::erdos_renyi(80, 500, 7, 5);
+        let g = ArcGraph::build(&net.normalized());
+        let r = solve(&g, &Rcsr::build(&g), &SolveOptions { threads: 4, ..Default::default() });
+        assert!(r.stats.scan_arcs_max_worker > 0);
+        assert!(r.stats.scan_arcs_mean_worker > 0);
+        assert!(
+            r.stats.scan_arcs_max_worker >= r.stats.scan_arcs_mean_worker,
+            "max is at least the mean"
+        );
+        assert!(r.stats.scan_imbalance() >= 1.0);
+        // Single worker: max == mean == total.
+        let r1 = solve(&g, &Rcsr::build(&g), &SolveOptions { threads: 1, ..Default::default() });
+        assert_eq!(r1.stats.scan_arcs_max_worker, r1.stats.scan_arcs_mean_worker);
+        assert_eq!(r1.stats.scan_arcs_max_worker, r1.stats.scan_arcs);
+    }
+
+    #[test]
+    fn gr_alpha_trace_samples_every_host_step() {
+        // A tiny launch budget forces many host steps; each one must leave
+        // an alpha sample (the auto-tune trajectory satellite).
+        let net = generators::genrmf(&generators::GenrmfParams { a: 5, b: 6, c1: 1, c2: 40, seed: 9 });
+        let g = ArcGraph::build(&net.normalized());
+        let r = solve(&g, &Rcsr::build(&g), &SolveOptions { threads: 2, cycles_per_launch: 8, ..Default::default() });
+        assert!(
+            r.stats.gr_alpha_trace.len() as u64 >= r.stats.launches.min(crate::maxflow::state::GR_ALPHA_TRACE_CAP as u64),
+            "one sample per host step ({} samples / {} launches)",
+            r.stats.gr_alpha_trace.len(),
+            r.stats.launches
+        );
+        assert!(r.stats.gr_alpha_trace.iter().all(|a| *a >= 0.0));
+    }
+
+    #[test]
+    fn released_scratch_regrows_and_solves() {
+        // The TTL-eviction release hook: a released scratch must re-grow
+        // through ensure() and keep solving correctly.
+        let mut ctx = VcContext::new(64, 2);
+        for round in 0u64..2 {
+            let net = generators::star_hub(100, 80, 21 + round);
+            let g = ArcGraph::build(&net);
+            let rep = Rcsr::build(&g);
+            let want = super::super::dinic::solve(&g).value;
+            let (st, excess_total) = ParState::preflow(&g);
+            let mut acct = ExcessAccounting::new(g.n, excess_total);
+            let mut stats = SolveStats::default();
+            let opts = SolveOptions { threads: 2, cycles_per_launch: 32, coop_degree: 8, coop_chunk: 4, ..Default::default() };
+            ctx.scratch.invalidate_carry();
+            run_from_state(&g, &rep, &st, &mut acct, &opts, &mut stats, &mut ctx).unwrap();
+            assert_eq!(st.excess(g.t), want, "round {round}");
+            ctx.scratch.release();
+            assert!(ctx.scratch.carried_frontier().is_none(), "release drops the carry");
+        }
     }
 
     #[test]

@@ -162,14 +162,33 @@ pub fn simulate_vc(trace: &Trace, rep: Representation, model: &GpuModel, c: &Cos
             frontier_tasks.resize(warps, per_warp);
             schedule(&frontier_tasks, slots)
         };
-        // --- process phase: one tile per active vertex ---
+        // --- process phase: one tile per active vertex — except hub
+        // rows past the coop split, which are charged as *several*
+        // independent chunk tasks plus one owner-apply task (the
+        // cooperative discharge: slicing lets the scheduler spread one
+        // huge row across idle slots instead of serializing a tile on
+        // it, which is exactly the paper's workload-balance argument
+        // taken one level down) ---
         let mut tasks = Vec::with_capacity(iter.len());
         for op in iter {
             let d = trace.row_len[op.u as usize] as f64;
-            // Cooperative scan: d/32 lane-steps of compute, coalesced
-            // transactions for the whole row, then the tree reduction.
-            let cost = (d / ws).ceil() * c.c_arc + coop_scan_tx(d, rep, c) * c.mem_tx + reduce + op_cost(op.pushed, d, rep, c);
-            tasks.push(cost);
+            if c.coop_row_split.is_finite() && d > c.coop_row_split {
+                let nch = (d / c.coop_row_split).ceil();
+                let dc = d / nch;
+                for _ in 0..nch as usize {
+                    tasks.push(
+                        (dc / ws).ceil() * c.c_arc + coop_scan_tx(dc, rep, c) * c.mem_tx + reduce + c.c_combine,
+                    );
+                }
+                // The designated owner applies the push/relabel once.
+                tasks.push(op_cost(op.pushed, d, rep, c));
+            } else {
+                // Cooperative scan: d/32 lane-steps of compute, coalesced
+                // transactions for the whole row, then the tree reduction.
+                tasks.push(
+                    (d / ws).ceil() * c.c_arc + coop_scan_tx(d, rep, c) * c.mem_tx + reduce + op_cost(op.pushed, d, rep, c),
+                );
+            }
             ops_count += 1;
         }
         let proc = schedule(&tasks, slots);
@@ -295,6 +314,38 @@ mod tests {
         assert!(
             diff.abs() < 500.0,
             "only the one launch-start sweep may scale with V, got Δ = {diff}"
+        );
+    }
+
+    #[test]
+    fn chunked_hub_rows_beat_monolithic_tiles() {
+        // One 100k-arc hub op per iteration: charged as ~100 chunk tasks
+        // it spreads over the resident slots; as one tile it serializes.
+        let t = Trace {
+            n: 64,
+            iters: (0..10).map(|_| vec![Op { u: 0, pushed: true }]).collect(),
+            rescan: vec![],
+            row_len: {
+                let mut r = vec![4u32; 64];
+                r[0] = 100_000;
+                r
+            },
+            value: 1,
+        };
+        let (m, c) = (GpuModel::default(), CostParams::default());
+        let split = simulate_vc(&t, Representation::Bcsr, &m, &c);
+        let mono = simulate_vc(
+            &t,
+            Representation::Bcsr,
+            &m,
+            &CostParams { coop_row_split: f64::INFINITY, ..c.clone() },
+        );
+        assert_eq!(split.ops, mono.ops, "chunking changes scheduling, not the op count");
+        assert!(
+            split.total_cycles < mono.total_cycles / 4.0,
+            "chunked {} should be far below monolithic {}",
+            split.total_cycles,
+            mono.total_cycles
         );
     }
 

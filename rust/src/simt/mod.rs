@@ -95,6 +95,15 @@ pub struct CostParams {
     pub c_avq_append: f64,
     /// One grid synchronization (the VC approach pays 2 per iteration).
     pub c_sync: f64,
+    /// Rows longer than this many arcs are charged as *multiple*
+    /// independent chunk tasks (the cooperative hub discharge: several
+    /// tiles partial-reduce one row) instead of one monolithic warp task —
+    /// mirroring `SolveOptions::coop_degree`. Non-finite disables the
+    /// split (the `coop_degree = ∞` ablation).
+    pub coop_row_split: f64,
+    /// Cross-tile combine per chunk (folding the partial min/admissible
+    /// reduction into the hub's scratch slot).
+    pub c_combine: f64,
 }
 
 impl Default for CostParams {
@@ -112,6 +121,8 @@ impl Default for CostParams {
             c_reduce_step: 8.0,
             c_avq_append: 12.0,
             c_sync: 4000.0,
+            coop_row_split: 1024.0,
+            c_combine: 16.0,
         }
     }
 }

@@ -49,8 +49,16 @@ fn oracle_sweep_covers_every_family() {
     let seeds = seeds();
     for family in 0..4u64 {
         assert!(
-            seeds.iter().any(|s| s % 4 == family),
+            seeds.iter().any(|s| *s < 1000 && s % 4 == family),
             "seed list lost family {family} (rmat/genrmf/washington/bipartite)"
+        );
+    }
+    // The hub band (>= 1000) must keep both cooperative-discharge
+    // families: hub-skewed rmat (even) and star/bipartite-hub (odd).
+    for parity in 0..2u64 {
+        assert!(
+            seeds.iter().any(|s| *s >= 1000 && s % 2 == parity),
+            "seed list lost hub family parity {parity}"
         );
     }
     // Case derivation stays deterministic run over run (the property the

@@ -278,6 +278,49 @@ fn prop_carried_frontier_covers_active_set() {
 }
 
 #[test]
+fn prop_coop_multipush_preserves_carry_invariant_on_hubs() {
+    // ISSUE 5 satellite: multi-push + cooperative hub discharge must
+    // preserve the `verify_frontier` carry-over invariant (every active
+    // vertex queued, no terminals/duplicates) across threads {1, 8, n+3},
+    // on hub-skewed instances where the chunk path does the bulk of the
+    // work. The in-engine O(V) reference scan panics on violation; the
+    // prop harness converts that into a failing case.
+    check("coop+multi-push carry invariant on hubs", 12, 0xC0B5, |g| {
+        let leaves = 40 + g.size(0, 80);
+        let extra = 30 + g.size(0, 60);
+        let net = generators::star_hub(leaves, extra, g.rng.next_u64());
+        let arcs = ArcGraph::build(&net);
+        let want = maxflow::dinic::solve(&arcs).value;
+        for threads in [1usize, 8, arcs.n + 3] {
+            // coop_degree forced low + a tiny launch budget: maximal
+            // chunk traffic across maximal launch boundaries.
+            let opts = SolveOptions {
+                threads,
+                cycles_per_launch: 4,
+                coop_degree: 8,
+                coop_chunk: 4,
+                verify_frontier: true,
+                ..Default::default()
+            };
+            let r = maxflow::solve_arcs(&arcs, EngineKind::VertexCentric, Representation::Rcsr, &opts);
+            if r.value != want {
+                return Err(format!("threads={threads} on {}: {} != {want}", net.name, r.value));
+            }
+            if r.stats.coop_chunks == 0 {
+                return Err(format!("threads={threads} on {}: coop path never ran", net.name));
+            }
+            // Single-push ablation under the same schedule pressure.
+            let single = SolveOptions { multi_push: false, ..opts };
+            let rs = maxflow::solve_arcs(&arcs, EngineKind::VertexCentric, Representation::Bcsr, &single);
+            if rs.value != want {
+                return Err(format!("threads={threads} single-push on {}: {} != {want}", net.name, rs.value));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_snapshot_roundtrip_preserves_session_behavior() {
     // ISSUE 4 satellite: FlowSnapshot -> from_snapshot -> one more update
     // batch must produce the same value *and* the same
