@@ -17,6 +17,13 @@ use super::report::Table;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 
+/// Tracing-overhead ceiling: a record carrying a traced-vs-untraced A/B
+/// measurement fails when `trace_on_ms > 1.03 * trace_base_ms` — the
+/// "near-zero cost" contract of `SolveOptions::trace`, enforced on the
+/// new document alone (both arms ran in the same job, so runner noise
+/// largely cancels; no baseline needed).
+pub const TRACE_OVERHEAD_GATE: f64 = 1.03;
+
 /// One record of a perf-tracker document, keyed by (graph, engine, rep).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Measurement {
@@ -28,6 +35,10 @@ pub struct Measurement {
     /// record).
     pub scan_arcs_max_worker: u64,
     pub scan_arcs_mean_worker: u64,
+    /// Tracing-overhead A/B walls (0/0 on records without the
+    /// measurement — only the hub-gate VC+BCSR records carry it).
+    pub trace_base_ms: f64,
+    pub trace_on_ms: f64,
 }
 
 impl Measurement {
@@ -36,6 +47,13 @@ impl Measurement {
     pub fn imbalance(&self) -> Option<f64> {
         (self.scan_arcs_mean_worker > 0)
             .then(|| crate::maxflow::state::scan_imbalance(self.scan_arcs_max_worker, self.scan_arcs_mean_worker))
+    }
+
+    /// Traced / untraced wall ratio (`None` without the A/B arm). The
+    /// denominator is floored at 50µs like the wall gate, so sub-noise
+    /// solves cannot produce an explosive ratio.
+    pub fn trace_overhead(&self) -> Option<f64> {
+        (self.trace_base_ms > 0.0).then(|| self.trace_on_ms / self.trace_base_ms.max(0.05))
     }
 }
 
@@ -74,6 +92,8 @@ pub fn parse_records(doc: &str) -> Result<BTreeMap<Key, Measurement>, String> {
             relabels: num("relabels")? as u64,
             scan_arcs_max_worker: opt_num("scan_arcs_max_worker") as u64,
             scan_arcs_mean_worker: opt_num("scan_arcs_mean_worker") as u64,
+            trace_base_ms: opt_num("trace_base_ms"),
+            trace_on_ms: opt_num("trace_on_ms"),
         };
         out.insert(key, m);
     }
@@ -108,7 +128,7 @@ pub fn compare(
 ) -> Comparison {
     let mut t = Table::new(&[
         "graph", "engine", "rep", "old ms", "new ms", "ratio", "old ops", "new ops",
-        "old imb", "new imb", "verdict",
+        "old imb", "new imb", "trace ovh", "verdict",
     ]);
     let mut regressions = Vec::new();
     let mut unmatched = 0;
@@ -130,10 +150,27 @@ pub fn compare(
             (Some(oi), Some(ni)) => ni > fail_above * oi.max(1.0),
             _ => false, // baseline predates the counters: gate off
         };
-        if wall_regressed || imb_regressed {
+        // Trace-overhead gate: intra-record on the *new* side (both arms
+        // of the A/B ran in the same job), against the fixed
+        // [`TRACE_OVERHEAD_GATE`] — not `fail_above`, which is sized for
+        // cross-job wall noise.
+        let tovh = n.trace_overhead();
+        let trace_regressed =
+            tovh.is_some() && n.trace_on_ms > TRACE_OVERHEAD_GATE * n.trace_base_ms.max(floor);
+        if wall_regressed || imb_regressed || trace_regressed {
             regressions.push(key.clone());
         }
         let imb_cell = |i: Option<f64>| i.map_or("-".to_string(), |i| format!("{i:.2}"));
+        let mut why = Vec::new();
+        if wall_regressed {
+            why.push("wall");
+        }
+        if imb_regressed {
+            why.push("imbalance");
+        }
+        if trace_regressed {
+            why.push("trace");
+        }
         t.row(vec![
             key.0.clone(),
             key.1.clone(),
@@ -145,11 +182,13 @@ pub fn compare(
             (n.pushes + n.relabels).to_string(),
             imb_cell(oi),
             imb_cell(ni),
-            match (wall_regressed, imb_regressed) {
-                (false, false) => "ok".to_string(),
-                (true, false) => "REGRESSED".to_string(),
-                (false, true) => "REGRESSED(imbalance)".to_string(),
-                (true, true) => "REGRESSED(wall+imbalance)".to_string(),
+            tovh.map_or("-".to_string(), |t| format!("{t:.3}x")),
+            if why.is_empty() {
+                "ok".to_string()
+            } else if why == ["wall"] {
+                "REGRESSED".to_string()
+            } else {
+                format!("REGRESSED({})", why.join("+"))
             },
         ]);
     }
@@ -198,8 +237,8 @@ mod tests {
     use super::*;
     use crate::bench::table1::{records_json, BenchRecord};
 
-    fn doc_with_imbalance(wall: f64, pushes: u64, scan_max: u64, scan_mean: u64) -> String {
-        records_json(&[BenchRecord {
+    fn record(wall: f64, pushes: u64, scan_max: u64, scan_mean: u64) -> BenchRecord {
+        BenchRecord {
             graph: "R6".into(),
             engine: "VC",
             rep: "BCSR",
@@ -215,8 +254,20 @@ mod tests {
             carried_frontier_len: 12,
             gr_alpha_final: 1.0,
             gr_alpha_trace: vec![1.0],
-        }])
-        .to_string()
+            trace_base_ms: 0.0,
+            trace_on_ms: 0.0,
+        }
+    }
+
+    fn doc_with_imbalance(wall: f64, pushes: u64, scan_max: u64, scan_mean: u64) -> String {
+        records_json(&[record(wall, pushes, scan_max, scan_mean)]).to_string()
+    }
+
+    fn doc_with_trace(wall: f64, pushes: u64, base_ms: f64, on_ms: f64) -> String {
+        let mut r = record(wall, pushes, 10, 10);
+        r.trace_base_ms = base_ms;
+        r.trace_on_ms = on_ms;
+        records_json(&[r]).to_string()
     }
 
     fn doc(wall: f64, pushes: u64) -> String {
@@ -288,6 +339,25 @@ mod tests {
         let new = parse_records(&doc_with_imbalance(10.5, 100, 90, 10)).unwrap();
         let cmp = compare(&old, &new, 1.25);
         assert!(!cmp.is_regression(), "no baseline ratio → no imbalance gate: {}", cmp.report);
+    }
+
+    #[test]
+    fn trace_overhead_above_the_gate_fails() {
+        // The baseline predates the trace fields entirely — the gate reads
+        // only the new document's intra-record A/B pair. 5% > 3% fails...
+        let old = parse_records(&doc(10.0, 100)).unwrap();
+        let new = parse_records(&doc_with_trace(10.0, 100, 2.0, 2.1)).unwrap();
+        let m = new.values().next().unwrap();
+        assert!((m.trace_overhead().unwrap() - 1.05).abs() < 1e-9);
+        let cmp = compare(&old, &new, 1.25);
+        assert!(cmp.is_regression());
+        assert!(cmp.report.contains("REGRESSED(trace)"), "{}", cmp.report);
+        // ...2.5% passes, and records without the arm stay ungated.
+        let ok = parse_records(&doc_with_trace(10.0, 100, 2.0, 2.05)).unwrap();
+        assert!(!compare(&old, &ok, 1.25).is_regression());
+        let none = parse_records(&doc(10.0, 100)).unwrap();
+        assert_eq!(none.values().next().unwrap().trace_overhead(), None);
+        assert!(!compare(&old, &none, 1.25).is_regression());
     }
 
     #[test]

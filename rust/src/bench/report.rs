@@ -68,6 +68,33 @@ pub fn speedup(v: f64) -> String {
     format!("{v:.2}x")
 }
 
+/// Render a series as a fixed-width unicode sparkline (8 levels), scaled
+/// to the series max — the `wbpr trace` timeline's frontier column. When
+/// the series is longer than `width`, consecutive samples are bucketed
+/// and each cell shows its bucket max (spikes must stay visible). An
+/// all-zero or empty series renders as spaces.
+pub fn sparkline(xs: &[f64], width: usize) -> String {
+    const LEVELS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    if xs.is_empty() || width == 0 {
+        return String::new();
+    }
+    let max = xs.iter().cloned().fold(0.0f64, f64::max);
+    let cells = width.min(xs.len());
+    let mut out = String::with_capacity(cells * 3);
+    for c in 0..cells {
+        let lo = c * xs.len() / cells;
+        let hi = ((c + 1) * xs.len() / cells).max(lo + 1);
+        let bucket_max = xs[lo..hi].iter().cloned().fold(0.0f64, f64::max);
+        if max <= 0.0 || bucket_max <= 0.0 {
+            out.push(' ');
+        } else {
+            let lvl = ((bucket_max / max) * 8.0).ceil() as usize;
+            out.push(LEVELS[lvl.clamp(1, 8) - 1]);
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -95,5 +122,23 @@ mod tests {
         assert_eq!(ms(12.34), "12.3");
         assert_eq!(ms(0.1234), "0.123");
         assert_eq!(speedup(2.288), "2.29x");
+    }
+
+    #[test]
+    fn sparkline_scales_buckets_and_keeps_spikes() {
+        assert_eq!(sparkline(&[], 10), "");
+        assert_eq!(sparkline(&[0.0, 0.0], 2), "  ");
+        // Max maps to the full block, zero to a space.
+        let s = sparkline(&[1.0, 8.0, 0.0], 3);
+        assert_eq!(s.chars().count(), 3);
+        assert_eq!(s.chars().last(), Some(' '));
+        assert_eq!(s.chars().nth(1), Some('█'));
+        // Longer than width: bucketed by max, so one spike among many
+        // small samples still renders a full block somewhere.
+        let mut xs = vec![1.0; 64];
+        xs[40] = 100.0;
+        let s = sparkline(&xs, 16);
+        assert_eq!(s.chars().count(), 16);
+        assert!(s.contains('█'), "{s}");
     }
 }

@@ -195,6 +195,10 @@ pub fn hub_suite() -> Vec<FlowCase> {
     ]
 }
 
+/// Hub cases run by `bench smoke` — both the coop-discharge gates and
+/// the tracing-overhead A/B arm (`table1::trace_captures`) measure on
+/// exactly this set: they are the launch-heaviest smoke cases, so a
+/// per-launch tracing cost that hides on the R-suite shows up here.
 pub fn hub_smoke_ids() -> &'static [&'static str] {
     &["H0", "H1"]
 }

@@ -178,6 +178,12 @@ pub struct BenchRecord {
     pub gr_alpha_final: f64,
     /// Per-host-step alpha samples (the auto-tune trajectory).
     pub gr_alpha_trace: Vec<f64>,
+    /// Min-of-N untraced wall of the tracing-overhead A/B arm (0 when the
+    /// record carries no overhead measurement — only the hub-gate VC+BCSR
+    /// records do). `bench compare` gates `trace_on_ms / trace_base_ms`.
+    pub trace_base_ms: f64,
+    /// Min-of-N traced (`SolveOptions::trace`) wall of the same arm.
+    pub trace_on_ms: f64,
 }
 
 impl BenchRecord {
@@ -198,6 +204,8 @@ impl BenchRecord {
             carried_frontier_len: r.stats.carried_frontier_len,
             gr_alpha_final: r.stats.gr_alpha_trace.last().copied().unwrap_or(0.0),
             gr_alpha_trace: r.stats.gr_alpha_trace.clone(),
+            trace_base_ms: 0.0,
+            trace_on_ms: 0.0,
         }
     }
 
@@ -311,6 +319,142 @@ pub fn hub_gates(records: &[BenchRecord]) -> Vec<HubGate> {
         .collect()
 }
 
+/// Per-graph traced-arm measurement behind `BENCH_trace.jsonl`: the full
+/// launch trace of one traced solve, plus matched min-of-
+/// [`TRACE_ARM_REPS`] walls for the untraced and traced arms — the A/B
+/// pair `bench compare` holds under its 3% overhead gate.
+#[derive(Debug, Clone)]
+pub struct TraceCapture {
+    pub graph: String,
+    /// Events of the traced solve, oldest → newest.
+    pub events: Vec<crate::obs::LaunchEvent>,
+    /// Min-of-N wall with tracing off, ms.
+    pub base_ms: f64,
+    /// Min-of-N wall with tracing on, ms.
+    pub traced_ms: f64,
+}
+
+impl TraceCapture {
+    /// Traced / untraced wall ratio (the overhead the 3% gate bounds).
+    pub fn overhead(&self) -> f64 {
+        self.traced_ms / self.base_ms.max(1e-9)
+    }
+}
+
+/// Repetitions per arm of the tracing-overhead measurement; min-of-N
+/// because CI wall-clock noise is one-sided.
+pub const TRACE_ARM_REPS: usize = 3;
+
+/// Check the reconciliation invariant on one traced cold solve: the
+/// per-event deltas must sum to the final `SolveStats` counters exactly.
+fn reconcile_trace(graph: &str, r: &maxflow::FlowResult) -> Result<(), String> {
+    use crate::obs::EventKind;
+    let st = &r.stats;
+    if st.trace.dropped() > 0 {
+        return Err(format!("{graph}: trace ring overflowed ({} dropped)", st.trace.dropped()));
+    }
+    let (mut pushes, mut relabels, mut scan, mut launches, mut grs) = (0u64, 0u64, 0u64, 0u64, 0u64);
+    for ev in st.trace.iter() {
+        pushes += ev.pushes;
+        relabels += ev.relabels;
+        scan += ev.scan_arcs;
+        if ev.kind == EventKind::Launch {
+            launches += 1;
+        }
+        if ev.gr {
+            grs += 1;
+        }
+    }
+    let checks = [
+        ("pushes", pushes, st.pushes),
+        ("relabels", relabels, st.relabels),
+        ("scan_arcs", scan, st.scan_arcs),
+        ("launches", launches, st.launches),
+        ("global_relabels", grs, st.global_relabels),
+    ];
+    for (name, got, want) in checks {
+        if got != want {
+            return Err(format!("{graph}: trace {name} do not reconcile: Σevents={got} final={want}"));
+        }
+    }
+    Ok(())
+}
+
+/// Run the tracing-overhead A/B arm on the hub smoke suite (H0/H1 — the
+/// launch-heaviest smoke cases, at the pinned [`HUB_GATE_THREADS`]):
+/// min-of-N untraced walls, min-of-N traced walls, and the traced run's
+/// full launch trace, with the reconciliation invariant checked on every
+/// traced solve. Errors instead of panicking so `bench smoke` can print
+/// the offending graph.
+pub fn trace_captures(opts: &SolveOptions) -> Result<Vec<TraceCapture>, String> {
+    let base_opts = SolveOptions { threads: HUB_GATE_THREADS, ..opts.clone() };
+    let traced_opts = SolveOptions { trace: true, ..base_opts.clone() };
+    let hub_smoke = hub_smoke_ids();
+    let mut out = Vec::new();
+    for case in hub_suite().iter().filter(|c| hub_smoke.contains(&c.id)) {
+        let net = (case.build)();
+        let g = ArcGraph::build(&net.normalized());
+        let bcsr = Bcsr::build(&g);
+        let mut base_ms = f64::INFINITY;
+        for _ in 0..TRACE_ARM_REPS {
+            let r = maxflow::tc_or_vc(&g, &bcsr, EngineKind::VertexCentric, &base_opts);
+            if let Some(e) = &r.error {
+                return Err(format!("{}: untraced arm did not converge: {e:?}", case.id));
+            }
+            base_ms = base_ms.min(r.stats.total_ms);
+        }
+        let mut traced_ms = f64::INFINITY;
+        let mut events = Vec::new();
+        for _ in 0..TRACE_ARM_REPS {
+            let r = maxflow::tc_or_vc(&g, &bcsr, EngineKind::VertexCentric, &traced_opts);
+            if let Some(e) = &r.error {
+                return Err(format!("{}: traced arm did not converge: {e:?}", case.id));
+            }
+            reconcile_trace(case.id, &r)?;
+            if r.stats.total_ms < traced_ms {
+                traced_ms = r.stats.total_ms;
+                events = r.stats.trace.iter().cloned().collect();
+            }
+        }
+        out.push(TraceCapture { graph: case.id.to_string(), events, base_ms, traced_ms });
+    }
+    Ok(out)
+}
+
+/// Copy each capture's A/B walls onto the matching hub-gate VC+BCSR
+/// record, so `BENCH_table1.json` carries the overhead measurement the
+/// compare gate reads.
+pub fn attach_trace_overhead(records: &mut [BenchRecord], captures: &[TraceCapture]) {
+    for c in captures {
+        if let Some(r) = records
+            .iter_mut()
+            .find(|r| r.engine == "VC" && r.rep == "BCSR" && r.graph == c.graph)
+        {
+            r.trace_base_ms = c.base_ms;
+            r.trace_on_ms = c.traced_ms;
+        }
+    }
+}
+
+/// Render captures as `BENCH_trace.jsonl`: one JSON object per launch
+/// event, each tagged with its graph id (the only key the event schema
+/// itself does not carry).
+pub fn trace_jsonl(captures: &[TraceCapture]) -> String {
+    use crate::util::json::Json;
+    let mut out = String::new();
+    for c in captures {
+        for ev in &c.events {
+            let mut j = ev.to_json();
+            if let Json::Obj(o) = &mut j {
+                o.insert("graph".to_string(), Json::Str(c.graph.clone()));
+            }
+            out.push_str(&j.to_string());
+            out.push('\n');
+        }
+    }
+    out
+}
+
 /// Serialize records as the `BENCH_table1.json` document.
 pub fn records_json(records: &[BenchRecord]) -> crate::util::json::Json {
     use crate::util::json::Json;
@@ -337,6 +481,13 @@ pub fn records_json(records: &[BenchRecord]) -> crate::util::json::Json {
                 "gr_alpha_trace".to_string(),
                 Json::Arr(r.gr_alpha_trace.iter().map(|&a| Json::Num(a)).collect()),
             );
+            // Optional fields: only the records carrying a tracing-overhead
+            // A/B measurement emit them (`bench compare` treats absence as
+            // "no gate" via its opt_num pattern).
+            if r.trace_base_ms > 0.0 {
+                o.insert("trace_base_ms".to_string(), Json::Num(r.trace_base_ms));
+                o.insert("trace_on_ms".to_string(), Json::Num(r.trace_on_ms));
+            }
             Json::Obj(o)
         })
         .collect();
@@ -420,6 +571,8 @@ mod tests {
             carried_frontier_len: 90,
             gr_alpha_final: 1.5,
             gr_alpha_trace: vec![1.0, 1.25, 1.5],
+            trace_base_ms: 0.0,
+            trace_on_ms: 0.0,
         }
     }
 
@@ -487,5 +640,60 @@ mod tests {
     fn geo_mean_sane() {
         assert!((geo_mean([2.0, 8.0].into_iter()) - 4.0).abs() < 1e-9);
         assert_eq!(geo_mean(std::iter::empty()), 0.0);
+    }
+
+    #[test]
+    fn trace_overhead_fields_are_optional_in_json() {
+        let mut recs = vec![rec("H0", "VC")];
+        let j = records_json(&recs);
+        let r0 = &j.get("records").unwrap().as_arr().unwrap()[0];
+        assert!(r0.get("trace_base_ms").is_none(), "absent without a measurement");
+        let cap = TraceCapture { graph: "H0".into(), events: Vec::new(), base_ms: 2.0, traced_ms: 2.04 };
+        assert!((cap.overhead() - 1.02).abs() < 1e-9);
+        attach_trace_overhead(&mut recs, &[cap]);
+        let j = records_json(&recs);
+        let r0 = &j.get("records").unwrap().as_arr().unwrap()[0];
+        assert_eq!(r0.get("trace_base_ms").unwrap().as_f64(), Some(2.0));
+        assert_eq!(r0.get("trace_on_ms").unwrap().as_f64(), Some(2.04));
+    }
+
+    #[test]
+    fn trace_jsonl_tags_each_event_with_its_graph() {
+        use crate::obs::LaunchEvent;
+        let cap = TraceCapture {
+            graph: "H1".into(),
+            events: vec![
+                LaunchEvent { launch: 1, pushes: 5, ..Default::default() },
+                LaunchEvent { launch: 2, pushes: 7, ..Default::default() },
+            ],
+            base_ms: 1.0,
+            traced_ms: 1.0,
+        };
+        let jsonl = trace_jsonl(&[cap]);
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), 2, "one object per event");
+        for (i, line) in lines.iter().enumerate() {
+            let v = crate::util::json::Json::parse(line).unwrap();
+            assert_eq!(v.get("graph").unwrap().as_str(), Some("H1"));
+            assert_eq!(v.get("launch").unwrap().as_i64(), Some(i as i64 + 1));
+            // The viewer must be able to parse the tagged line back.
+            let ev = LaunchEvent::from_json(&v).unwrap();
+            assert_eq!(ev.pushes, if i == 0 { 5 } else { 7 });
+        }
+    }
+
+    #[test]
+    fn trace_captures_reconcile_on_the_hub_smoke_suite() {
+        // The acceptance invariant, end to end on the real H0/H1 cases
+        // (single rep arms would be enough to test reconciliation, but
+        // the public entry point is what bench smoke calls — keep the
+        // smoke path honest).
+        let opts = SolveOptions { threads: 2, cycles_per_launch: 128, ..Default::default() };
+        let caps = trace_captures(&opts).expect("traces reconcile");
+        assert!(!caps.is_empty(), "hub smoke suite must produce captures");
+        for c in &caps {
+            assert!(!c.events.is_empty(), "{}: traced solve recorded no events", c.graph);
+            assert!(c.base_ms > 0.0 && c.traced_ms > 0.0);
+        }
     }
 }

@@ -1,21 +1,38 @@
 //! Coordinator metrics: per-engine job counters and latency summaries,
 //! cheap enough to sit on the serving path.
 
-use crate::util::stats::Welford;
+use crate::util::stats::{Histogram, Welford};
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 
 /// One engine's accumulated metrics.
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Clone)]
 pub struct EngineMetrics {
     pub jobs: u64,
     pub failures: u64,
     pub latency_ms: Welford,
+    /// Fixed-bucket latency histogram (the [`Histogram::latency`] preset)
+    /// backing the p50/p99/p999 the table and the Prometheus exposition
+    /// report — a Welford mean/std cannot see the tail.
+    pub latency_hist: Histogram,
     pub total_value: i64,
     /// Auto-tuned global-relabel alpha samples (one per host step of each
     /// solve this engine served) — the trajectory, not just a final
     /// value, so a drifting cadence is visible from the serving side.
     pub gr_alpha: Welford,
+}
+
+impl Default for EngineMetrics {
+    fn default() -> EngineMetrics {
+        EngineMetrics {
+            jobs: 0,
+            failures: 0,
+            latency_ms: Welford::default(),
+            latency_hist: Histogram::latency(),
+            total_value: 0,
+            gr_alpha: Welford::default(),
+        }
+    }
 }
 
 /// Thread-safe metrics registry keyed by engine label.
@@ -55,6 +72,7 @@ impl Metrics {
         let e = m.entry(engine.to_string()).or_default();
         e.jobs += 1;
         e.latency_ms.push(latency_ms);
+        e.latency_hist.record(latency_ms);
         e.total_value += value;
     }
 
@@ -86,7 +104,9 @@ impl Metrics {
     /// Human-readable table.
     pub fn render(&self) -> String {
         let snap = self.snapshot();
-        let mut out = String::from("engine                     jobs  fail   mean ms    std ms   gr alpha\n");
+        let mut out = String::from(
+            "engine                     jobs  fail   mean ms    std ms    p50 ms    p99 ms   p999 ms  total_value   gr alpha\n",
+        );
         for (k, v) in snap {
             let alpha = if v.gr_alpha.n() > 0 {
                 format!("{:>6.2}~{:.2}", v.gr_alpha.mean(), v.gr_alpha.std())
@@ -94,11 +114,15 @@ impl Metrics {
                 "     -".to_string()
             };
             out.push_str(&format!(
-                "{k:<25} {jobs:>5} {fail:>5} {mean:>9.3} {std:>9.3} {alpha:>10}\n",
+                "{k:<25} {jobs:>5} {fail:>5} {mean:>9.3} {std:>9.3} {p50:>9.3} {p99:>9.3} {p999:>9.3} {total:>12} {alpha:>10}\n",
                 jobs = v.jobs,
                 fail = v.failures,
                 mean = v.latency_ms.mean(),
                 std = v.latency_ms.std(),
+                p50 = v.latency_hist.quantile(0.5),
+                p99 = v.latency_hist.quantile(0.99),
+                p999 = v.latency_hist.quantile(0.999),
+                total = v.total_value,
             ));
         }
         let events = self.events();
@@ -107,6 +131,72 @@ impl Metrics {
             for (k, n) in events {
                 out.push_str(&format!("  {k:<23} {n:>5}\n"));
             }
+        }
+        out
+    }
+
+    /// Prometheus text exposition (version 0.0.4) of everything the
+    /// registry holds: per-engine job/failure/value counters, the latency
+    /// summary with histogram-derived p50/p99/p999, the gr-alpha gauge,
+    /// and the serving-policy event counters. Written whole-cloth on each
+    /// call — the `serve --metrics-path` loop dumps it to a file a node
+    /// exporter (or a test) can scrape.
+    pub fn render_prometheus(&self) -> String {
+        fn esc(label: &str) -> String {
+            label.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+        }
+        fn num(v: f64) -> String {
+            if v.is_infinite() {
+                (if v > 0.0 { "+Inf" } else { "-Inf" }).to_string()
+            } else {
+                format!("{v}")
+            }
+        }
+        let snap = self.snapshot();
+        let mut out = String::new();
+        out.push_str("# HELP wbpr_jobs_total Completed jobs per engine.\n");
+        out.push_str("# TYPE wbpr_jobs_total counter\n");
+        for (k, v) in &snap {
+            out.push_str(&format!("wbpr_jobs_total{{engine=\"{}\"}} {}\n", esc(k), v.jobs));
+        }
+        out.push_str("# HELP wbpr_failures_total Failed jobs per engine.\n");
+        out.push_str("# TYPE wbpr_failures_total counter\n");
+        for (k, v) in &snap {
+            out.push_str(&format!("wbpr_failures_total{{engine=\"{}\"}} {}\n", esc(k), v.failures));
+        }
+        out.push_str("# HELP wbpr_total_value Sum of flow values returned per engine.\n");
+        out.push_str("# TYPE wbpr_total_value counter\n");
+        for (k, v) in &snap {
+            out.push_str(&format!("wbpr_total_value{{engine=\"{}\"}} {}\n", esc(k), v.total_value));
+        }
+        out.push_str("# HELP wbpr_latency_ms Job latency per engine (log-bucket quantiles).\n");
+        out.push_str("# TYPE wbpr_latency_ms summary\n");
+        for (k, v) in &snap {
+            if v.latency_hist.count() == 0 {
+                continue;
+            }
+            let e = esc(k);
+            for (q, label) in [(0.5, "0.5"), (0.99, "0.99"), (0.999, "0.999")] {
+                out.push_str(&format!(
+                    "wbpr_latency_ms{{engine=\"{e}\",quantile=\"{label}\"}} {}\n",
+                    num(v.latency_hist.quantile(q))
+                ));
+            }
+            out.push_str(&format!("wbpr_latency_ms_sum{{engine=\"{e}\"}} {}\n", num(v.latency_hist.sum())));
+            out.push_str(&format!("wbpr_latency_ms_count{{engine=\"{e}\"}} {}\n", v.latency_hist.count()));
+        }
+        out.push_str("# HELP wbpr_gr_alpha_mean Mean auto-tuned global-relabel alpha per engine.\n");
+        out.push_str("# TYPE wbpr_gr_alpha_mean gauge\n");
+        for (k, v) in &snap {
+            if v.gr_alpha.n() > 0 {
+                out.push_str(&format!("wbpr_gr_alpha_mean{{engine=\"{}\"}} {}\n", esc(k), num(v.gr_alpha.mean())));
+            }
+        }
+        let events = self.events();
+        out.push_str("# HELP wbpr_events_total Serving-policy events (evictions, repairs, ...).\n");
+        out.push_str("# TYPE wbpr_events_total counter\n");
+        for (k, n) in &events {
+            out.push_str(&format!("wbpr_events_total{{event=\"{}\"}} {}\n", esc(k), n));
         }
         out
     }
@@ -182,5 +272,78 @@ mod tests {
             }
         });
         assert_eq!(m.snapshot()["t"].jobs, 1000);
+    }
+
+    #[test]
+    fn render_includes_total_value_column() {
+        let m = Metrics::new();
+        m.record("native:VC+BCSR", 1.5, 10);
+        m.record("native:VC+BCSR", 2.5, 32);
+        let r = m.render();
+        assert!(r.contains("total_value"), "header must name the column: {r}");
+        assert!(r.contains("42"), "the summed flow value must appear: {r}");
+    }
+
+    #[test]
+    fn concurrent_bump_and_record_feed_quantiles() {
+        // 4 threads interleaving event bumps and latency records; the
+        // histogram behind p50/p99/p999 must come out exact.
+        let m = std::sync::Arc::new(Metrics::new());
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let m = m.clone();
+                s.spawn(move || {
+                    for i in 0..250 {
+                        // Three fast bands and (from one thread) a slow
+                        // tail, so the quantiles separate.
+                        let ms = if t == 3 && i >= 240 { 400.0 } else { 1.0 + t as f64 };
+                        m.record("t", ms, 1);
+                        m.bump("session:evict");
+                    }
+                });
+            }
+        });
+        let snap = m.snapshot();
+        let e = &snap["t"];
+        assert_eq!(e.jobs, 1000);
+        assert_eq!(e.latency_hist.count(), 1000);
+        assert_eq!(m.events()["session:evict"], 1000);
+        let (p50, p99, p999) = (
+            e.latency_hist.quantile(0.5),
+            e.latency_hist.quantile(0.99),
+            e.latency_hist.quantile(0.999),
+        );
+        assert!(p50 <= p99 && p99 <= p999);
+        assert!(p50 <= 8.0, "p50 must sit in the fast bands, got {p50}");
+        assert!(p999 >= 400.0, "p999 must reach the slow tail, got {p999}");
+    }
+
+    #[test]
+    fn prometheus_exposition_has_counters_and_quantiles() {
+        let m = Metrics::new();
+        m.record("native:VC+BCSR(auto)", 1.5, 10);
+        m.record("native:VC+BCSR(auto)", 2.5, 20);
+        m.record_failure("device:v64");
+        m.observe_gr_alpha("native:VC+BCSR(auto)", &[1.0, 3.0]);
+        m.bump("session:evict");
+        let p = m.render_prometheus();
+        assert!(p.contains("# TYPE wbpr_jobs_total counter"), "{p}");
+        assert!(p.contains("wbpr_jobs_total{engine=\"native:VC+BCSR(auto)\"} 2"), "{p}");
+        assert!(p.contains("wbpr_failures_total{engine=\"device:v64\"} 1"), "{p}");
+        assert!(p.contains("wbpr_total_value{engine=\"native:VC+BCSR(auto)\"} 30"), "{p}");
+        assert!(p.contains("# TYPE wbpr_latency_ms summary"), "{p}");
+        for q in ["0.5", "0.99", "0.999"] {
+            assert!(
+                p.contains(&format!("wbpr_latency_ms{{engine=\"native:VC+BCSR(auto)\",quantile=\"{q}\"}}")),
+                "missing quantile {q}: {p}"
+            );
+        }
+        assert!(p.contains("wbpr_latency_ms_sum{engine=\"native:VC+BCSR(auto)\"} 4"), "{p}");
+        assert!(p.contains("wbpr_latency_ms_count{engine=\"native:VC+BCSR(auto)\"} 2"), "{p}");
+        assert!(p.contains("wbpr_gr_alpha_mean{engine=\"native:VC+BCSR(auto)\"} 2"), "{p}");
+        assert!(p.contains("wbpr_events_total{event=\"session:evict\"} 1"), "{p}");
+        // A failure-only engine has no latency samples: the summary block
+        // must skip it rather than emit NaN/zero quantiles.
+        assert!(!p.contains("wbpr_latency_ms{engine=\"device:v64\""), "{p}");
     }
 }

@@ -182,6 +182,13 @@ impl Coordinator {
         &self.metrics
     }
 
+    /// Shared handle to the live registry — what the `serve
+    /// --metrics-path` exporter thread holds so it can render the
+    /// Prometheus exposition while the coordinator keeps serving.
+    pub fn metrics_handle(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
     pub fn has_device(&self) -> bool {
         self.tx_device.is_some()
     }
@@ -480,6 +487,23 @@ mod tests {
         let v = out.result.unwrap();
         assert_eq!(v.value, want);
         assert!(v.engine.starts_with("native"), "engine = {}", v.engine);
+    }
+
+    #[test]
+    fn metrics_handle_exposes_prometheus_series_for_served_jobs() {
+        let c = Coordinator::start(config(2, false));
+        let handle = c.metrics_handle();
+        let net = generators::erdos_renyi(40, 250, 6, 7);
+        c.submit(Job::MaxFlow { net, kind: EngineKind::VertexCentric, rep: Representation::Bcsr });
+        let out = c.recv().unwrap();
+        out.result.expect("job ok");
+        // The handle observes the live registry (what the serve-loop
+        // exporter scrapes), without waiting for shutdown.
+        let p = handle.render_prometheus();
+        assert!(p.contains("wbpr_jobs_total{engine=\"native:VC+BCSR\"} 1"), "{p}");
+        assert!(p.contains("wbpr_latency_ms{engine=\"native:VC+BCSR\",quantile=\"0.999\"}"), "{p}");
+        assert!(p.contains("wbpr_latency_ms_count{engine=\"native:VC+BCSR\"} 1"), "{p}");
+        c.shutdown();
     }
 
     #[test]

@@ -56,6 +56,12 @@ pub struct SessionConfig {
 
 /// Serving-policy event counters (exposed so tests and metrics can see
 /// evictions/re-hydrations/recomputes happen rather than infer them).
+///
+/// The shard pool mirrors each increment into the coordinator registry
+/// as a `session:*` event (`Metrics::bump`), which is what
+/// `Metrics::render_prometheus` exports as `wbpr_events_total{event=
+/// "session:..."}` — these fields are the source of truth those series
+/// reconcile against.
 #[derive(Debug, Clone, Default)]
 pub struct SessionCounters {
     pub evictions: u64,

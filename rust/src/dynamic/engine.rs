@@ -550,6 +550,9 @@ fn add_stats(total: &mut SolveStats, s: &SolveStats) {
     for &a in &s.gr_alpha_trace {
         total.record_gr_alpha(a);
     }
+    // Launch trace: keep the newest events across batches (drop-oldest);
+    // a no-op when the per-batch solve ran untraced.
+    total.trace.extend_from(&s.trace);
 }
 
 /// Cancel `amount` units of the flow currently leaving `from` (whose

@@ -35,6 +35,7 @@ pub mod coordinator;
 pub mod dynamic;
 pub mod graph;
 pub mod maxflow;
+pub mod obs;
 pub mod runtime;
 pub mod simt;
 pub mod util;

@@ -5,13 +5,19 @@
 //! wbpr matching  --nl N --nr N --m M [--skew S] --engine ... --rep ...
 //! wbpr device    --gen <kind>      # run through the PJRT device engine
 //! wbpr serve     --jobs N [--session-shards N] [--session-ttl-ms MS] [--recompute-ratio R]
+//!                [--metrics-path metrics.prom [--metrics-interval-ms 1000]]
 //! wbpr bench     table1|table2|table3|fig3|all [--scale smoke|full]
-//! wbpr bench     smoke [--out BENCH_table1.json]   # machine-readable perf tracker
+//! wbpr bench     smoke [--out BENCH_table1.json] [--trace-out BENCH_trace.jsonl]
 //! wbpr bench     shards [--shards 1,2,4] [--sessions 64] [--batches 4] [--out BENCH_shards.json]
 //! wbpr bench     compare old.json new.json [--fail-above 1.25]  # perf-regression gate
+//! wbpr trace     BENCH_trace.jsonl [--limit 40]   # ASCII launch timeline from a trace export
 //! wbpr gen       --kind <...> --out file.dimacs
 //! wbpr info      [--gen <kind>]    # artifacts + memory accounting
 //! ```
+//!
+//! `--trace` on any solve-running command records one event per kernel
+//! launch into `SolveStats::trace` (see `wbpr::obs`); `bench smoke`
+//! always runs the traced A/B arm on the hub suite and exports it.
 //!
 //! Options may also come from `--config file.ini` with `--set sec.key=val`
 //! overrides (see `configs/default.ini`).
@@ -30,7 +36,7 @@ use wbpr::util::config::Config;
 fn main() {
     let args = Args::parse(
         std::env::args().skip(1),
-        &["verbose", "quiet", "no-device", "no-global-relabel", "no-frontier", "no-multi-push"],
+        &["verbose", "quiet", "no-device", "no-global-relabel", "no-frontier", "no-multi-push", "trace"],
     );
     if args.flag("quiet") {
         wbpr::util::log::set_level(wbpr::util::log::Level::Error);
@@ -42,6 +48,7 @@ fn main() {
         "device" => cmd_device(&args),
         "serve" => cmd_serve(&args),
         "bench" => cmd_bench(&args),
+        "trace" => cmd_trace(&args),
         "gen" => cmd_gen(&args),
         "info" => cmd_info(&args),
         "help" | "--help" => {
@@ -57,7 +64,7 @@ fn main() {
 }
 
 const HELP: &str = "wbpr — workload-balanced push-relabel (paper reproduction)\n\
-commands:\n  maxflow | matching | device | serve | bench | gen | info | help\n\
+commands:\n  maxflow | matching | device | serve | bench | trace | gen | info | help\n\
 see README.md for the full flag reference\n";
 
 /// Load config + apply --set overrides; CLI flags still win.
@@ -98,6 +105,9 @@ fn solve_options(args: &Args, cfg: &Config) -> Result<SolveOptions, String> {
         // (0 disables, the coop_degree = ∞ ablation).
         coop_degree: args.opt_usize("coop-degree", cfg.get_usize("engine", "coop_degree", defaults.coop_degree)?)?,
         coop_chunk: args.opt_usize("coop-chunk", cfg.get_usize("engine", "coop_chunk", defaults.coop_chunk)?)?,
+        // Launch-granular tracing (see `wbpr::obs`) — off by default; the
+        // engine reads no clock without it.
+        trace: args.flag("trace") || cfg.get_bool("engine", "trace", false)?,
     })
 }
 
@@ -170,6 +180,15 @@ fn cmd_maxflow(args: &Args) -> Result<(), String> {
     println!("pushes      : {}", r.stats.pushes);
     println!("relabels    : {}", r.stats.relabels);
     println!("global rlbl : {}", r.stats.global_relabels);
+    if opts.trace {
+        let frontiers: Vec<f64> =
+            r.stats.trace.iter().map(|e| e.frontier as f64).collect();
+        println!(
+            "trace       : {} events, frontier {}",
+            r.stats.trace.len(),
+            wbpr::bench::report::sparkline(&frontiers, 48)
+        );
+    }
     if args.flag("verbose") {
         let g = ArcGraph::build(&net.normalized());
         maxflow::verify(&g, &r).map_err(|e| format!("verification failed: {e}"))?;
@@ -265,6 +284,29 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         coord.has_device(),
         coord.session_shards()
     );
+    // Prometheus text exporter: periodically dump the live metrics to a
+    // file a node_exporter textfile collector (or a test harness) can
+    // scrape. Write failures are warned once per path, never fatal.
+    let metrics_path = args.opt("metrics-path").map(|s| s.to_string());
+    let metrics_interval = args.opt_u64("metrics-interval-ms", 1000)?;
+    let exporter_stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let exporter = metrics_path.as_ref().map(|path| {
+        let path = path.clone();
+        let handle = coord.metrics_handle();
+        let stop = std::sync::Arc::clone(&exporter_stop);
+        std::thread::spawn(move || {
+            let mut warned = false;
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                std::thread::sleep(std::time::Duration::from_millis(metrics_interval));
+                if let Err(e) = std::fs::write(&path, handle.render_prometheus()) {
+                    if !warned {
+                        eprintln!("warn: metrics export to {path} failed: {e}");
+                        warned = true;
+                    }
+                }
+            }
+        })
+    });
     // Demo workload: batched pair queries over a road network. Between
     // requests, poll the age-based flush so a trickle of pairs below the
     // batch size is released instead of stranded.
@@ -294,8 +336,18 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             Err(e) => println!("job {}: FAILED {e}", o.id),
         }
     }
+    exporter_stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    if let Some(h) = exporter {
+        let _ = h.join();
+    }
     let metrics = coord.shutdown();
     println!("\n{}", metrics.render());
+    // Final dump after shutdown so the file reflects every completed job,
+    // not just the last periodic snapshot.
+    if let Some(path) = metrics_path {
+        std::fs::write(&path, metrics.render_prometheus()).map_err(|e| e.to_string())?;
+        println!("wrote {path} (prometheus text exposition)");
+    }
     Ok(())
 }
 
@@ -352,10 +404,30 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
         } else {
             SolveOptions { cycles_per_launch: 64, ..opts.clone() }
         };
-        let records = table1::smoke_records(&opts);
+        let mut records = table1::smoke_records(&opts);
+        // Tracing-overhead A/B arm (hub suite): reconciliation is checked
+        // inside trace_captures — a trace whose deltas do not sum to the
+        // final stats fails the whole smoke run.
+        let captures = table1::trace_captures(&opts)?;
+        table1::attach_trace_overhead(&mut records, &captures);
         let out = args.opt("out").unwrap_or("BENCH_table1.json");
         std::fs::write(out, table1::records_json(&records).to_string()).map_err(|e| e.to_string())?;
         println!("wrote {} ({} records in {:.1}s)", out, records.len(), t.elapsed().as_secs_f64());
+        let trace_out = args.opt("trace-out").unwrap_or("BENCH_trace.jsonl");
+        std::fs::write(trace_out, table1::trace_jsonl(&captures)).map_err(|e| e.to_string())?;
+        let n_events: usize = captures.iter().map(|c| c.events.len()).sum();
+        println!("wrote {trace_out} ({n_events} launch events, reconciled exactly)");
+        for c in &captures {
+            println!(
+                "trace {}: {} events | untraced {:.3}ms traced {:.3}ms overhead {:.3}x (gate {:.2}x in bench compare)",
+                c.graph,
+                c.events.len(),
+                c.base_ms,
+                c.traced_ms,
+                c.overhead(),
+                compare::TRACE_OVERHEAD_GATE
+            );
+        }
         // PR-4 acceptance metric: with the carried frontier + auto-tuned
         // cadence, the O(V) rescans must stay below 15% of VC launches
         // (the legacy engine rescans on 100% of them).
@@ -424,6 +496,89 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     if what == "fig3" || what == "all" {
         println!("# Figure 3 — workload distribution (TC vs VC on RCSR)\n");
         println!("{}", fig3::render(&fig3::run(scale)));
+    }
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<(), String> {
+    use wbpr::bench::report::{self, Table};
+    use wbpr::obs::{EventKind, LaunchEvent};
+    use wbpr::util::json::Json;
+
+    let path = args
+        .positional
+        .get(1)
+        .ok_or("usage: wbpr trace BENCH_trace.jsonl [--limit 40]")?;
+    let limit = args.opt_usize("limit", 40)?;
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    // Group events by their graph tag, preserving first-seen order so the
+    // timelines come out in the order `bench smoke` recorded them.
+    let mut groups: Vec<(String, Vec<LaunchEvent>)> = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(line).map_err(|e| format!("{path}:{}: {e}", i + 1))?;
+        let ev = LaunchEvent::from_json(&v)
+            .ok_or_else(|| format!("{path}:{}: not a launch event", i + 1))?;
+        let graph = v.get("graph").and_then(Json::as_str).unwrap_or("?").to_string();
+        match groups.iter_mut().find(|(g, _)| *g == graph) {
+            Some((_, evs)) => evs.push(ev),
+            None => groups.push((graph, vec![ev])),
+        }
+    }
+    if groups.is_empty() {
+        return Err(format!("{path}: no launch events"));
+    }
+    for (graph, evs) in &groups {
+        let pushes: u64 = evs.iter().map(|e| e.pushes).sum();
+        let launches = evs.iter().filter(|e| e.kind == EventKind::Launch).count();
+        let grs = evs.iter().filter(|e| e.gr).count();
+        let kernel_ms: f64 = evs.iter().map(|e| e.kernel_ms).sum();
+        println!(
+            "## {graph}: {} events ({launches} launches, {grs} global relabels), {pushes} pushes, {kernel_ms:.3}ms kernel",
+            evs.len()
+        );
+        let frontiers: Vec<f64> = evs
+            .iter()
+            .filter(|e| e.kind == EventKind::Launch)
+            .map(|e| e.frontier as f64)
+            .collect();
+        println!("frontier : {}", report::sparkline(&frontiers, 60));
+        let shown = &evs[evs.len().saturating_sub(limit)..];
+        if shown.len() < evs.len() {
+            println!("(showing last {} of {} events; raise --limit for more)", shown.len(), evs.len());
+        }
+        let mut t = Table::new(&[
+            "launch", "kind", "frontier", "pushes", "relabels", "scan arcs", "imb", "alpha",
+            "flags", "kernel ms", "scan ms", "chunk ms", "apply ms", "gr ms",
+        ]);
+        for e in shown {
+            let mut flags = String::new();
+            if e.rescan {
+                flags.push('R');
+            }
+            if e.gr {
+                flags.push('G');
+            }
+            t.row(vec![
+                e.launch.to_string(),
+                e.kind.name().to_string(),
+                e.frontier.to_string(),
+                e.pushes.to_string(),
+                e.relabels.to_string(),
+                e.scan_arcs.to_string(),
+                format!("{:.2}", e.imbalance()),
+                format!("{:.2}", e.gr_alpha),
+                flags,
+                format!("{:.3}", e.kernel_ms),
+                format!("{:.3}", e.scan_ms),
+                format!("{:.3}", e.chunk_ms),
+                format!("{:.3}", e.apply_ms),
+                format!("{:.3}", e.gr_ms),
+            ]);
+        }
+        println!("{}", t.render());
     }
     Ok(())
 }

@@ -150,6 +150,11 @@ pub struct SolveOptions {
     pub coop_degree: usize,
     /// Arcs per cooperative chunk (the tile width of the hub slicing).
     pub coop_chunk: usize,
+    /// Record one [`crate::obs::LaunchEvent`] per kernel launch into
+    /// `SolveStats::trace` (frontier length, counter deltas, per-launch
+    /// worker imbalance, phase timings). Off by default; when off, no
+    /// clock is read and no event is built — the only cost is the branch.
+    pub trace: bool,
 }
 
 impl Default for SolveOptions {
@@ -167,6 +172,7 @@ impl Default for SolveOptions {
             multi_push: true,
             coop_degree: 128,
             coop_chunk: 32,
+            trace: false,
         }
     }
 }

@@ -109,7 +109,11 @@ impl WorkerPool {
     /// to *carry its live AVQ across launches*: the frontier the workers
     /// built during launch `k` — including plain `Relaxed` stores into
     /// the queue buffers — is fully visible to the host step and to
-    /// launch `k + 1`'s workers without any extra synchronization.
+    /// launch `k + 1`'s workers without any extra synchronization. The
+    /// launch-granular trace (`crate::obs`) rides on the same guarantee:
+    /// the host diffs the per-worker `worker_scan` totals right after
+    /// `run` returns, so the per-launch imbalance slice in each
+    /// `LaunchEvent` is exact, not racy.
     pub fn run<'a, F: Fn(usize) + Send + Sync + 'a>(&self, f: F) {
         // One broadcast at a time: without this, a second caller could
         // overwrite `job`/`seq` while the first is in flight and both

@@ -62,6 +62,10 @@ pub struct SolveStats {
     /// (capped at [`GR_ALPHA_TRACE_CAP`]) — the auto-tune trajectory,
     /// not just the final value.
     pub gr_alpha_trace: Vec<f64>,
+    /// Launch-granular trace ring (one event per launch / direct global
+    /// relabel), recorded only when `SolveOptions::trace` is set — the
+    /// default ring is disabled and empty. See [`crate::obs`].
+    pub trace: crate::obs::TraceRing,
 }
 
 /// Cap on [`SolveStats::gr_alpha_trace`] so a long-lived warm session's

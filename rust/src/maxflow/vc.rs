@@ -51,6 +51,7 @@ use super::state::{AtomicCounters, ParState};
 use super::{FlowResult, SolveError, SolveOptions, SolveStats};
 use crate::graph::builder::ArcGraph;
 use crate::graph::residual::Residual;
+use crate::obs::{EventKind, LaunchEvent, TraceRing, TRACE_RING_CAP};
 use crate::util::Timer;
 use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Barrier};
@@ -414,6 +415,17 @@ pub fn run_from_state<R: Residual>(
     let multi_push = opts.multi_push;
     let mut adaptive = AdaptiveGr::from_opts(n, opts);
     ctx.scratch.ensure(n, active_workers);
+    // Launch-granular tracing (see `crate::obs`): every clock read and
+    // every event build below is gated on this flag, so an untraced solve
+    // pays only untaken branches. The ring survives on `stats` so warm
+    // re-entries keep appending to the same (drop-oldest) buffer.
+    let tracing = opts.trace;
+    if tracing && !stats.trace.is_enabled() {
+        stats.trace = TraceRing::new(TRACE_RING_CAP);
+    }
+    // Previous-launch snapshot of the per-worker scan totals, diffed after
+    // each launch for the per-launch imbalance slice (trace only).
+    let mut scan_before: Vec<u64> = Vec::new();
     if !frontier {
         // The legacy engine rebuilds its queue every cycle; a pending
         // frontier from an earlier frontier-mode launch means nothing.
@@ -465,9 +477,22 @@ pub fn run_from_state<R: Residual>(
             // excess / re-lower heights). Run it directly instead of
             // paying a zero-op launch to discover the same thing, and
             // adopt the active set it collected as the next frontier.
+            let gr_timer = if tracing { Some(Timer::start()) } else { None };
             global_relabel_with(g, rep, st, acct, opts.global_relabel, &mut ctx.scratch.gr);
             stats.global_relabels += 1;
             adaptive.note_external_relabel();
+            if let Some(t) = gr_timer {
+                // No kernel ran, so there are no counter deltas — the
+                // event records only that the BFS happened and its cost.
+                stats.trace.push(LaunchEvent {
+                    launch: stats.launches,
+                    kind: EventKind::GlobalRelabel,
+                    gr: true,
+                    gr_alpha: adaptive.alpha(),
+                    gr_ms: t.ms(),
+                    ..Default::default()
+                });
+            }
             if adaptive.tuning() {
                 stats.record_gr_alpha(adaptive.alpha());
             }
@@ -490,6 +515,19 @@ pub fn run_from_state<R: Residual>(
         } else {
             stats.rescan_launches += 1;
         }
+        // Trace snapshot: the stats fields a launch can move, read before
+        // the host step's counter merge — the post-merge deltas are
+        // exactly what this launch did (the reconciliation invariant
+        // `bench smoke` asserts).
+        let snap = if tracing {
+            scan_before.clear();
+            scan_before.extend(worker_scan.iter().map(|c| c.load(Ordering::Relaxed)));
+            Some((stats.pushes, stats.relabels, stats.scan_arcs, stats.coop_chunks))
+        } else {
+            None
+        };
+        let phase_a_ns = AtomicU64::new(0);
+        let phase_b_ns = AtomicU64::new(0);
         let kt = Timer::start();
         let cursor = AtomicUsize::new(0);
         let chunk_cursor = AtomicUsize::new(0);
@@ -509,12 +547,20 @@ pub fn run_from_state<R: Residual>(
             let frontier_sum = &frontier_sum;
             let frontier_start = &frontier_start;
             let worker_scan = &worker_scan;
+            let phase_a_ns = &phase_a_ns;
+            let phase_b_ns = &phase_b_ns;
             ctx.pool.run(move |w| {
                 if w >= active_workers {
                     return;
                 }
                 let (lo, hi) = ranges[w];
                 let mut local = LocalCounters::default();
+                // Phase attribution (trace only, worker 0 only): two clock
+                // reads per cycle approximate the scan / chunk-drain split
+                // of the kernel wall; untraced solves never reach a clock.
+                let track = tracing && w == 0;
+                let mut pa_ns = 0u64;
+                let mut pb_ns = 0u64;
                 for c in 0..cycles {
                     let cur = &sc.avq[(base + c) % 2];
                     let next = &sc.avq[(base + c + 1) % 2];
@@ -559,6 +605,10 @@ pub fn run_from_state<R: Residual>(
                         if w == 0 {
                             executed_cycles.fetch_add(c + 1, Ordering::Relaxed);
                         }
+                        if track {
+                            phase_a_ns.store(pa_ns, Ordering::Relaxed);
+                            phase_b_ns.store(pb_ns, Ordering::Relaxed);
+                        }
                         worker_scan[w].fetch_add(local.scan_arcs, Ordering::Relaxed);
                         local.flush(counters);
                         return;
@@ -569,6 +619,7 @@ pub fn run_from_state<R: Residual>(
                     // chunks on the shared chunk queue instead of
                     // serializing one worker on an O(10^5) scan --
                     let next_epoch = base_epoch + c as u64 + 1;
+                    let t_a = track.then(std::time::Instant::now);
                     loop {
                         let i = cursor.fetch_add(1, Ordering::Relaxed);
                         if i >= len {
@@ -629,6 +680,9 @@ pub fn run_from_state<R: Residual>(
                             }
                         }
                     }
+                    if let Some(t) = t_a {
+                        pa_ns += t.elapsed().as_nanos() as u64;
+                    }
                     // -- process phase B (hub rows only): cooperative
                     // chunk scans. The barrier publishes every slot init
                     // and chunk unit from phase A; the pull cursor then
@@ -637,6 +691,7 @@ pub fn run_from_state<R: Residual>(
                     // of each hub applying the push/relabel as owner --
                     if coop_on {
                         sc.barrier.wait();
+                        let t_b = track.then(std::time::Instant::now);
                         let clen = sc.chunkq.len();
                         loop {
                             let j = chunk_cursor.fetch_add(1, Ordering::Relaxed);
@@ -656,12 +711,19 @@ pub fn run_from_state<R: Residual>(
                                 &mut local,
                             );
                         }
+                        if let Some(t) = t_b {
+                            pb_ns += t.elapsed().as_nanos() as u64;
+                        }
                     }
                     // -- cycle boundary barrier (process/reset races) --
                     sc.barrier.wait();
                 }
                 if w == 0 {
                     executed_cycles.fetch_add(cycles, Ordering::Relaxed);
+                }
+                if track {
+                    phase_a_ns.store(pa_ns, Ordering::Relaxed);
+                    phase_b_ns.store(pb_ns, Ordering::Relaxed);
                 }
                 worker_scan[w].fetch_add(local.scan_arcs, Ordering::Relaxed);
                 local.flush(counters);
@@ -676,12 +738,14 @@ pub fn run_from_state<R: Residual>(
         // moves heights.
         ctx.scratch.carried = (base + exec) % 2;
         ctx.scratch.carry_valid = frontier;
-        stats.kernel_ms += kt.ms();
+        let launch_kernel_ms = kt.ms();
+        stats.kernel_ms += launch_kernel_ms;
         stats.cycles += exec as u64;
         stats.frontier_len_sum += frontier_sum.load(Ordering::Relaxed);
         // Host step: adaptive global relabel + termination accounting; a
         // skipped pass still gets the cheap gap cut, and anything that
         // moved heights invalidates the carried frontier.
+        let host_timer = if tracing { Some(Timer::start()) } else { None };
         let outcome = adaptive.host_step(
             g,
             rep,
@@ -693,6 +757,41 @@ pub fn run_from_state<R: Residual>(
             &mut ctx.scratch.gr,
             frontier_start.load(Ordering::Relaxed),
         );
+        if let Some((pushes0, relabels0, scan0, chunks0)) = snap {
+            // The hand-back guarantee of `WorkerPool::run` makes the
+            // post-launch `worker_scan` reads exact (every worker flushed
+            // before `run` returned), so the per-launch imbalance slice
+            // needs no extra synchronization.
+            let gr_ms = host_timer.map(|t| t.ms()).unwrap_or(0.0);
+            let (mut scan_max, mut scan_sum) = (0u64, 0u64);
+            for (i, c) in worker_scan.iter().enumerate() {
+                let d = c.load(Ordering::Relaxed) - scan_before[i];
+                scan_max = scan_max.max(d);
+                scan_sum += d;
+            }
+            let scan_ms = phase_a_ns.load(Ordering::Relaxed) as f64 / 1e6;
+            let chunk_ms = phase_b_ns.load(Ordering::Relaxed) as f64 / 1e6;
+            stats.trace.push(LaunchEvent {
+                launch: stats.launches,
+                kind: EventKind::Launch,
+                frontier: frontier_start.load(Ordering::Relaxed),
+                rescan: !carry,
+                pushes: stats.pushes - pushes0,
+                relabels: stats.relabels - relabels0,
+                scan_arcs: stats.scan_arcs - scan0,
+                coop_chunks: stats.coop_chunks - chunks0,
+                scan_max,
+                scan_mean: scan_sum as f64 / active_workers.max(1) as f64,
+                gr_alpha: adaptive.alpha(),
+                gap_cuts: outcome.gap_lifted,
+                gr: outcome.relabeled,
+                kernel_ms: launch_kernel_ms,
+                scan_ms,
+                apply_ms: (launch_kernel_ms - scan_ms - chunk_ms).max(0.0),
+                chunk_ms,
+                gr_ms,
+            });
+        }
         // One trajectory sample per host step — but only when the cadence
         // is actually tuning; a pinned alpha gets a single final sample
         // below instead of a constant vector.
@@ -1034,6 +1133,58 @@ mod tests {
             r.stats.frontier_len_sum <= r.stats.cycles * g.n as u64,
             "frontier work is bounded by the legacy scan volume"
         );
+    }
+
+    #[test]
+    fn trace_reconciles_exactly_with_final_stats() {
+        // The invariant `bench smoke` asserts in CI: on a cold solve the
+        // per-launch deltas in the trace sum to the final SolveStats
+        // counters, and the gr flags account for every global relabel.
+        let net = generators::erdos_renyi(80, 500, 7, 5);
+        let g = ArcGraph::build(&net.normalized());
+        let opts = SolveOptions { threads: 4, trace: true, ..Default::default() };
+        let r = solve(&g, &Bcsr::build(&g), &opts);
+        assert!(r.error.is_none());
+        let st = &r.stats;
+        assert!(!st.trace.is_empty(), "traced solve must record events");
+        assert_eq!(st.trace.dropped(), 0, "test graph fits the ring");
+        let (mut pushes, mut relabels, mut scan, mut chunks) = (0u64, 0u64, 0u64, 0u64);
+        let (mut launches, mut grs) = (0u64, 0u64);
+        for ev in st.trace.iter() {
+            pushes += ev.pushes;
+            relabels += ev.relabels;
+            scan += ev.scan_arcs;
+            chunks += ev.coop_chunks;
+            match ev.kind {
+                EventKind::Launch => launches += 1,
+                EventKind::GlobalRelabel => {
+                    assert_eq!(ev.pushes, 0, "no kernel ran on a direct GR");
+                    assert_eq!(ev.scan_arcs, 0);
+                }
+            }
+            if ev.gr {
+                grs += 1;
+            }
+            if ev.scan_arcs > 0 {
+                assert!(ev.scan_max <= ev.scan_arcs);
+                assert!(ev.imbalance() >= 1.0, "max/mean below 1: {:?}", ev);
+            }
+        }
+        assert_eq!(pushes, st.pushes, "push deltas reconcile");
+        assert_eq!(relabels, st.relabels, "relabel deltas reconcile");
+        assert_eq!(scan, st.scan_arcs, "scan-arc deltas reconcile");
+        assert_eq!(chunks, st.coop_chunks, "coop-chunk deltas reconcile");
+        assert_eq!(launches, st.launches, "one Launch event per launch");
+        assert_eq!(grs, st.global_relabels, "gr flags account for every BFS");
+    }
+
+    #[test]
+    fn untraced_solve_records_nothing() {
+        let net = generators::erdos_renyi(40, 200, 5, 9);
+        let g = ArcGraph::build(&net.normalized());
+        let r = solve(&g, &Rcsr::build(&g), &SolveOptions { threads: 2, ..Default::default() });
+        assert!(!r.stats.trace.is_enabled(), "tracing is opt-in");
+        assert!(r.stats.trace.is_empty());
     }
 
     #[test]

@@ -1,0 +1,361 @@
+//! Observability: launch-granular solve traces.
+//!
+//! The paper's whole argument is about *measuring* the computational
+//! model — workload imbalance (Eq. 1's max-vs-mean worker scan), frontier
+//! dynamics, and relabel cadence — but end-of-solve scalars
+//! ([`crate::maxflow::SolveStats`]) cannot show a solve going wrong
+//! mid-flight. This module adds the per-launch view: the vertex-centric
+//! host loop records one compact [`LaunchEvent`] per kernel launch (and
+//! one per direct global relabel) into a fixed-capacity [`TraceRing`],
+//! enabled by `SolveOptions::trace`.
+//!
+//! Cost model: the ring is written by the **host thread only**, between
+//! launches — never from inside the kernel — so recording is lock-free by
+//! construction (plain `Vec` writes, no atomics, no mutex). The workers'
+//! only tracing duty is two clock reads per cycle on worker 0, and every
+//! clock read anywhere is gated on the trace flag first, so a solve with
+//! tracing off pays a handful of untaken branches per launch. The
+//! `bench compare` gate holds the *enabled* overhead under 3% of wall
+//! time on the hub smoke suite.
+//!
+//! Reconciliation invariant: per-event `pushes`/`relabels`/`scan_arcs`
+//! deltas are snapshotted around the host step's counter merge (the only
+//! place kernel counters enter `SolveStats`), so summing them over a cold
+//! solve's events reproduces the final stats *exactly* — `bench smoke`
+//! asserts this before writing `BENCH_trace.jsonl`.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Default [`TraceRing`] capacity — matches
+/// [`crate::maxflow::state::GR_ALPHA_TRACE_CAP`] so a traced warm session
+/// stays bounded the same way the alpha trajectory does.
+pub const TRACE_RING_CAP: usize = 4096;
+
+/// What a trace event describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// One kernel launch (plus the host step that followed it).
+    Launch,
+    /// A direct global relabel: the carried frontier was empty, so the
+    /// host ran the BFS without launching a kernel — no kernel deltas.
+    GlobalRelabel,
+}
+
+impl EventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Launch => "launch",
+            EventKind::GlobalRelabel => "gr",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<EventKind> {
+        match s {
+            "launch" => Some(EventKind::Launch),
+            "gr" => Some(EventKind::GlobalRelabel),
+            _ => None,
+        }
+    }
+}
+
+/// One compact per-launch record (see module docs for the cost budget).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LaunchEvent {
+    /// 1-based launch index within the solve (`SolveStats::launches` at
+    /// record time; a [`EventKind::GlobalRelabel`] event carries the count
+    /// of launches completed before it).
+    pub launch: u64,
+    pub kind: EventKind,
+    /// Launch-start frontier length (after the rescan, when one ran).
+    pub frontier: u64,
+    /// This launch paid the O(V) active-vertex rescan.
+    pub rescan: bool,
+    /// Kernel-counter deltas for this launch (exactly what the host step
+    /// merged into `SolveStats`).
+    pub pushes: u64,
+    pub relabels: u64,
+    pub scan_arcs: u64,
+    pub coop_chunks: u64,
+    /// Most / mean residual arcs any worker scanned *during this launch*
+    /// (the per-launch slice of the paper's Eq. 1 imbalance).
+    pub scan_max: u64,
+    pub scan_mean: f64,
+    /// Adaptive global-relabel alpha after the host step.
+    pub gr_alpha: f64,
+    /// Vertices the gap heuristic lifted in this host step.
+    pub gap_cuts: u64,
+    /// A height-updating global relabel ran in this host step.
+    pub gr: bool,
+    /// Kernel wall time (scan + apply + chunk drain + barriers), ms.
+    pub kernel_ms: f64,
+    /// Worker 0's time in phase A (small-vertex scan + discharge), ms.
+    pub scan_ms: f64,
+    /// Kernel wall minus worker 0's measured phases: barrier waits plus
+    /// apply/bookkeeping (epoch advance, queue handoff), ms.
+    pub apply_ms: f64,
+    /// Worker 0's time in phase B (cooperative chunk-queue drain), ms.
+    pub chunk_ms: f64,
+    /// Host-step wall (global-relabel BFS or gap scan + accounting), ms.
+    pub gr_ms: f64,
+}
+
+impl Default for LaunchEvent {
+    fn default() -> Self {
+        LaunchEvent {
+            launch: 0,
+            kind: EventKind::Launch,
+            frontier: 0,
+            rescan: false,
+            pushes: 0,
+            relabels: 0,
+            scan_arcs: 0,
+            coop_chunks: 0,
+            scan_max: 0,
+            scan_mean: 0.0,
+            gr_alpha: 0.0,
+            gap_cuts: 0,
+            gr: false,
+            kernel_ms: 0.0,
+            scan_ms: 0.0,
+            apply_ms: 0.0,
+            chunk_ms: 0.0,
+            gr_ms: 0.0,
+        }
+    }
+}
+
+impl LaunchEvent {
+    /// Per-launch worker arc-scan imbalance `max / mean` (0.0 when the
+    /// launch scanned nothing).
+    pub fn imbalance(&self) -> f64 {
+        if self.scan_mean <= 0.0 { 0.0 } else { self.scan_max as f64 / self.scan_mean }
+    }
+
+    /// One `BENCH_trace.jsonl` object (compact; integers stay integral).
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("launch".into(), Json::Num(self.launch as f64));
+        o.insert("kind".into(), Json::Str(self.kind.name().into()));
+        o.insert("frontier".into(), Json::Num(self.frontier as f64));
+        o.insert("rescan".into(), Json::Bool(self.rescan));
+        o.insert("pushes".into(), Json::Num(self.pushes as f64));
+        o.insert("relabels".into(), Json::Num(self.relabels as f64));
+        o.insert("scan_arcs".into(), Json::Num(self.scan_arcs as f64));
+        o.insert("coop_chunks".into(), Json::Num(self.coop_chunks as f64));
+        o.insert("scan_max".into(), Json::Num(self.scan_max as f64));
+        o.insert("scan_mean".into(), Json::Num(self.scan_mean));
+        o.insert("gr_alpha".into(), Json::Num(self.gr_alpha));
+        o.insert("gap_cuts".into(), Json::Num(self.gap_cuts as f64));
+        o.insert("gr".into(), Json::Bool(self.gr));
+        o.insert("kernel_ms".into(), Json::Num(self.kernel_ms));
+        o.insert("scan_ms".into(), Json::Num(self.scan_ms));
+        o.insert("apply_ms".into(), Json::Num(self.apply_ms));
+        o.insert("chunk_ms".into(), Json::Num(self.chunk_ms));
+        o.insert("gr_ms".into(), Json::Num(self.gr_ms));
+        Json::Obj(o)
+    }
+
+    /// Parse one `BENCH_trace.jsonl` object (the `wbpr trace` viewer;
+    /// unknown extra fields such as `graph` are ignored).
+    pub fn from_json(v: &Json) -> Option<LaunchEvent> {
+        let num = |k: &str| v.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        let flag = |k: &str| matches!(v.get(k), Some(Json::Bool(true)));
+        let kind = EventKind::parse(v.get("kind")?.as_str()?)?;
+        Some(LaunchEvent {
+            launch: num("launch") as u64,
+            kind,
+            frontier: num("frontier") as u64,
+            rescan: flag("rescan"),
+            pushes: num("pushes") as u64,
+            relabels: num("relabels") as u64,
+            scan_arcs: num("scan_arcs") as u64,
+            coop_chunks: num("coop_chunks") as u64,
+            scan_max: num("scan_max") as u64,
+            scan_mean: num("scan_mean"),
+            gr_alpha: num("gr_alpha"),
+            gap_cuts: num("gap_cuts") as u64,
+            gr: flag("gr"),
+            kernel_ms: num("kernel_ms"),
+            scan_ms: num("scan_ms"),
+            apply_ms: num("apply_ms"),
+            chunk_ms: num("chunk_ms"),
+            gr_ms: num("gr_ms"),
+        })
+    }
+}
+
+/// Fixed-capacity drop-oldest event buffer carried on `SolveStats`.
+///
+/// The default ring is *disabled* (capacity 0): pushes are no-ops, clones
+/// are empty, and a `SolveStats` with tracing off costs one `Vec` of
+/// length zero. The vertex-centric engine swaps in an enabled ring when
+/// `SolveOptions::trace` is set. On overflow the oldest event is
+/// overwritten — a long warm session keeps the newest
+/// [`TraceRing::capacity`] launches, and [`TraceRing::dropped`] counts
+/// what fell off.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceRing {
+    cap: usize,
+    /// Index of the oldest event once the buffer has wrapped.
+    head: usize,
+    buf: Vec<LaunchEvent>,
+    dropped: u64,
+}
+
+impl TraceRing {
+    pub fn new(cap: usize) -> TraceRing {
+        TraceRing { cap, head: 0, buf: Vec::new(), dropped: 0 }
+    }
+
+    /// A recording ring is one with non-zero capacity.
+    pub fn is_enabled(&self) -> bool {
+        self.cap > 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Events overwritten because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Record one event (drop-oldest past capacity; no-op when disabled).
+    pub fn push(&mut self, ev: LaunchEvent) {
+        if self.cap == 0 {
+            return;
+        }
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Events oldest → newest.
+    pub fn iter(&self) -> impl Iterator<Item = &LaunchEvent> {
+        let (wrapped, start) = self.buf.split_at(self.head);
+        start.iter().chain(wrapped.iter())
+    }
+
+    /// Merge `other`'s events into this ring (the warm-session stats
+    /// accumulator). A disabled accumulator adopts the incoming capacity
+    /// so per-batch traces survive `DynamicFlow`'s stats merge.
+    pub fn extend_from(&mut self, other: &TraceRing) {
+        if other.buf.is_empty() {
+            return;
+        }
+        if self.cap == 0 {
+            self.cap = other.cap;
+        }
+        for ev in other.iter() {
+            self.push(ev.clone());
+        }
+        self.dropped += other.dropped;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(launch: u64) -> LaunchEvent {
+        LaunchEvent { launch, pushes: launch * 10, ..Default::default() }
+    }
+
+    #[test]
+    fn disabled_ring_records_nothing() {
+        let mut r = TraceRing::default();
+        assert!(!r.is_enabled());
+        r.push(ev(1));
+        assert!(r.is_empty());
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn overflow_drops_oldest_keeps_newest_n() {
+        let mut r = TraceRing::new(4);
+        for l in 1..=10 {
+            r.push(ev(l));
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.dropped(), 6);
+        let got: Vec<u64> = r.iter().map(|e| e.launch).collect();
+        assert_eq!(got, vec![7, 8, 9, 10], "the newest N launches survive, in order");
+    }
+
+    #[test]
+    fn iter_is_ordered_before_wrap_too() {
+        let mut r = TraceRing::new(8);
+        for l in 1..=3 {
+            r.push(ev(l));
+        }
+        let got: Vec<u64> = r.iter().map(|e| e.launch).collect();
+        assert_eq!(got, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn extend_from_adopts_capacity_and_keeps_drop_oldest() {
+        let mut total = TraceRing::default();
+        let mut batch = TraceRing::new(3);
+        for l in 1..=3 {
+            batch.push(ev(l));
+        }
+        total.extend_from(&batch);
+        assert_eq!(total.capacity(), 3);
+        assert_eq!(total.len(), 3);
+        let mut batch2 = TraceRing::new(3);
+        for l in 4..=5 {
+            batch2.push(ev(l));
+        }
+        total.extend_from(&batch2);
+        let got: Vec<u64> = total.iter().map(|e| e.launch).collect();
+        assert_eq!(got, vec![3, 4, 5], "merged ring still keeps the newest N");
+    }
+
+    #[test]
+    fn event_json_roundtrip() {
+        let e = LaunchEvent {
+            launch: 7,
+            kind: EventKind::Launch,
+            frontier: 123,
+            rescan: true,
+            pushes: 42,
+            relabels: 5,
+            scan_arcs: 900,
+            coop_chunks: 3,
+            scan_max: 300,
+            scan_mean: 112.5,
+            gr_alpha: 1.75,
+            gap_cuts: 2,
+            gr: true,
+            kernel_ms: 0.25,
+            scan_ms: 0.1,
+            apply_ms: 0.05,
+            chunk_ms: 0.1,
+            gr_ms: 0.4,
+        };
+        let parsed = LaunchEvent::from_json(&Json::parse(&e.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(parsed, e);
+        assert!((e.imbalance() - 300.0 / 112.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gr_events_roundtrip_their_kind() {
+        let e = LaunchEvent { kind: EventKind::GlobalRelabel, gr: true, gr_ms: 1.5, ..Default::default() };
+        let parsed = LaunchEvent::from_json(&e.to_json()).unwrap();
+        assert_eq!(parsed.kind, EventKind::GlobalRelabel);
+    }
+}

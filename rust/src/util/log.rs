@@ -14,14 +14,36 @@ pub enum Level {
 
 static LEVEL: AtomicU8 = AtomicU8::new(255); // 255 = uninitialised
 
+/// Map a `WBPR_LOG` value to a level. The second element is true when the
+/// value was unrecognised and the Info fallback was applied — surfaced as
+/// a warning so a typo (`WBPR_LOG=dbug`) doesn't silently run at Info.
+fn parse_level(val: Option<&str>) -> (Level, bool) {
+    match val {
+        Some("debug") => (Level::Debug, false),
+        Some("info") | None => (Level::Info, false),
+        Some("warn") => (Level::Warn, false),
+        Some("error") => (Level::Error, false),
+        Some(_) => (Level::Info, true),
+    }
+}
+
 fn init_from_env() -> u8 {
-    let lvl = match std::env::var("WBPR_LOG").ok().as_deref() {
-        Some("debug") => Level::Debug,
-        Some("warn") => Level::Warn,
-        Some("error") => Level::Error,
-        _ => Level::Info,
-    } as u8;
+    let raw = std::env::var("WBPR_LOG").ok();
+    let (level, unrecognised) = parse_level(raw.as_deref());
+    let lvl = level as u8;
+    // Store before warning: `log` below re-reads the level, and must not
+    // re-enter this initialiser.
     LEVEL.store(lvl, Ordering::Relaxed);
+    if unrecognised {
+        log(
+            Level::Warn,
+            "log",
+            &format!(
+                "unrecognised WBPR_LOG value {:?} (expected debug|info|warn|error); using info",
+                raw.unwrap_or_default()
+            ),
+        );
+    }
     lvl
 }
 
@@ -85,5 +107,18 @@ mod tests {
         assert_eq!(level(), Level::Error as u8);
         set_level(Level::Info);
         assert_eq!(level(), Level::Info as u8);
+    }
+
+    #[test]
+    fn parse_level_fallback_warns_only_on_unrecognised() {
+        // Pure-function test: no env mutation, so no race with parallel
+        // tests that read WBPR_LOG.
+        assert_eq!(parse_level(Some("debug")), (Level::Debug, false));
+        assert_eq!(parse_level(Some("info")), (Level::Info, false));
+        assert_eq!(parse_level(Some("warn")), (Level::Warn, false));
+        assert_eq!(parse_level(Some("error")), (Level::Error, false));
+        assert_eq!(parse_level(None), (Level::Info, false), "unset env is the quiet default");
+        assert_eq!(parse_level(Some("dbug")), (Level::Info, true), "typo falls back loudly");
+        assert_eq!(parse_level(Some("")), (Level::Info, true));
     }
 }
