@@ -1,6 +1,10 @@
 //! `cargo bench --bench kernel_micro` — microbenchmarks of the hot paths:
 //!
 //! * the lock-free local operation (`discharge_once`) per representation,
+//! * the admissibility scan kernels (scalar vs lane-chunked) across the
+//!   degree classes the cooperative hub path serves (run it twice, with
+//!   and without `--features simd`, to compare the 8- and 16-lane
+//!   windows),
 //! * the PJRT device launch (K cycles of the AOT executable) per variant,
 //! * graph packing (CSR → device layout),
 //! * end-to-end device solve vs native solve on the same graph.
@@ -90,6 +94,66 @@ fn device_micro() {
     println!();
 }
 
+/// Read-only row sweeps through `chunk_window_scan` with both kernels,
+/// on one hub row per degree class. The state is never mutated, so every
+/// repetition scans identical data — pure kernel throughput, no
+/// push-relabel control flow in the loop.
+fn scan_micro() {
+    use wbpr::graph::builder::FlowNetwork;
+    use wbpr::graph::residual::Residual as _;
+    use wbpr::graph::Edge;
+    use wbpr::maxflow::scan::{chunk_window_scan, ScanKind, LANES};
+
+    println!("## admissibility scan: scalar vs chunked ({LANES} lanes), read-only hub rows\n");
+    for &deg in &[8usize, 64, 1024, 65536] {
+        // Star hub 0 → 1 → deg leaves → sink, leaf heights scattered so
+        // windows mix admissible and non-admissible lanes.
+        let mut rng = wbpr::util::Rng::new(deg as u64 + 1);
+        let n = deg + 3;
+        let t = (n - 1) as u32;
+        let mut edges = vec![Edge::new(0, 1, 1i64 << 40)];
+        for i in 0..deg {
+            let leaf = (i + 2) as u32;
+            edges.push(Edge::new(1, leaf, 1 + (rng.next_u64() % 7) as i64));
+            edges.push(Edge::new(leaf, t, 4));
+        }
+        let g = ArcGraph::build(&FlowNetwork::new(n, 0, t, edges, "scan-hub").normalized());
+        let rep = Rcsr::build(&g);
+        let (st, _) = ParState::preflow(&g);
+        st.set_height(1, 3);
+        for i in 0..deg {
+            st.set_height((i + 2) as u32, (rng.next_u64() % 8) as u32);
+        }
+        let row = rep.row(1);
+        let d = row.len();
+        let hu = st.height(1);
+        // Equal total work per degree class: ~4M arcs per measured iter.
+        let reps = (4_000_000 / d.max(1)).max(4);
+        for kind in [ScanKind::Scalar, ScanKind::Chunked] {
+            let name = format!("scan/{}/deg {deg}", kind.name());
+            let r = bench(&name, 1, 3, || {
+                let mut arcs = 0u64;
+                for _ in 0..reps {
+                    let win = row.slice_segs(0, d);
+                    black_box(chunk_window_scan(&st, &win, hu, kind, &mut arcs, |a, v| {
+                        black_box((a, v));
+                    }));
+                }
+                black_box(arcs);
+            });
+            let total_arcs = (reps * d) as f64;
+            println!(
+                "{:<26} {:>9.3} ms | {:>7.2} ns/arc | {:>8.1} M arcs/s",
+                r.name,
+                r.mean_ms,
+                r.mean_ms * 1e6 / total_arcs,
+                total_arcs / (r.mean_ms * 1e3)
+            );
+        }
+        println!();
+    }
+}
+
 fn pack_micro() {
     println!("## packing (CSR -> device layout)\n");
     let net = generators::grid_road(30, 30, 0.05, 12, 7);
@@ -129,6 +193,7 @@ fn e2e_compare() {
 fn main() {
     println!("# Kernel microbenchmarks\n");
     discharge_micro();
+    scan_micro();
     pack_micro();
     device_micro();
     e2e_compare();

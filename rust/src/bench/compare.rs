@@ -24,6 +24,16 @@ use std::collections::BTreeMap;
 /// largely cancels; no baseline needed).
 pub const TRACE_OVERHEAD_GATE: f64 = 1.03;
 
+/// Scan-kernel speedup floor: a record carrying the scalar-vs-chunked
+/// A/B walls (`scan_base_ms` / `scan_opt_ms`, measured in the same job
+/// by `bench smoke`'s [`crate::bench::table1::scan_captures`]) fails
+/// when the chunked+pinned arm is not at least this much faster than the
+/// scalar/unpinned arm. Like the trace gate it reads the **new**
+/// document alone — both arms ran on the same runner, so its noise
+/// cancels — and stays off when the baseline arm is under the 50µs
+/// measurement floor.
+pub const SCAN_SPEEDUP_GATE: f64 = 1.3;
+
 /// One record of a perf-tracker document, keyed by (graph, engine, rep).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Measurement {
@@ -39,6 +49,11 @@ pub struct Measurement {
     /// measurement — only the hub-gate VC+BCSR records carry it).
     pub trace_base_ms: f64,
     pub trace_on_ms: f64,
+    /// Scan-kernel A/B walls: scalar/unpinned baseline vs chunked+placed
+    /// arm (0/0 on records without the measurement — only the
+    /// `SCAN_AB_IDS` VC+BCSR records carry it).
+    pub scan_base_ms: f64,
+    pub scan_opt_ms: f64,
 }
 
 impl Measurement {
@@ -54,6 +69,13 @@ impl Measurement {
     /// solves cannot produce an explosive ratio.
     pub fn trace_overhead(&self) -> Option<f64> {
         (self.trace_base_ms > 0.0).then(|| self.trace_on_ms / self.trace_base_ms.max(0.05))
+    }
+
+    /// Scalar / chunked wall ratio — how much faster the chunked+placed
+    /// arm ran (`None` without the A/B arm or when the scalar baseline is
+    /// under the 50µs floor, where the ratio would be pure timer noise).
+    pub fn scan_speedup(&self) -> Option<f64> {
+        (self.scan_base_ms > 0.05).then(|| self.scan_base_ms / self.scan_opt_ms.max(0.05))
     }
 }
 
@@ -94,6 +116,8 @@ pub fn parse_records(doc: &str) -> Result<BTreeMap<Key, Measurement>, String> {
             scan_arcs_mean_worker: opt_num("scan_arcs_mean_worker") as u64,
             trace_base_ms: opt_num("trace_base_ms"),
             trace_on_ms: opt_num("trace_on_ms"),
+            scan_base_ms: opt_num("scan_base_ms"),
+            scan_opt_ms: opt_num("scan_opt_ms"),
         };
         out.insert(key, m);
     }
@@ -128,7 +152,7 @@ pub fn compare(
 ) -> Comparison {
     let mut t = Table::new(&[
         "graph", "engine", "rep", "old ms", "new ms", "ratio", "old ops", "new ops",
-        "old imb", "new imb", "trace ovh", "verdict",
+        "old imb", "new imb", "trace ovh", "scan spd", "verdict",
     ]);
     let mut regressions = Vec::new();
     let mut unmatched = 0;
@@ -157,7 +181,14 @@ pub fn compare(
         let tovh = n.trace_overhead();
         let trace_regressed =
             tovh.is_some() && n.trace_on_ms > TRACE_OVERHEAD_GATE * n.trace_base_ms.max(floor);
-        if wall_regressed || imb_regressed || trace_regressed {
+        // Scan-speedup gate: also intra-record on the new side. The
+        // chunked+placed arm must beat the scalar/unpinned arm by
+        // [`SCAN_SPEEDUP_GATE`]; `scan_speedup()` already returns `None`
+        // when the record carries no A/B pair or the scalar baseline is
+        // sub-noise, so neither case can flag.
+        let sspd = n.scan_speedup();
+        let scan_regressed = sspd.is_some_and(|s| s < SCAN_SPEEDUP_GATE);
+        if wall_regressed || imb_regressed || trace_regressed || scan_regressed {
             regressions.push(key.clone());
         }
         let imb_cell = |i: Option<f64>| i.map_or("-".to_string(), |i| format!("{i:.2}"));
@@ -171,6 +202,9 @@ pub fn compare(
         if trace_regressed {
             why.push("trace");
         }
+        if scan_regressed {
+            why.push("scan");
+        }
         t.row(vec![
             key.0.clone(),
             key.1.clone(),
@@ -183,6 +217,7 @@ pub fn compare(
             imb_cell(oi),
             imb_cell(ni),
             tovh.map_or("-".to_string(), |t| format!("{t:.3}x")),
+            sspd.map_or("-".to_string(), |s| format!("{s:.2}x")),
             if why.is_empty() {
                 "ok".to_string()
             } else if why == ["wall"] {
@@ -256,6 +291,11 @@ mod tests {
             gr_alpha_trace: vec![1.0],
             trace_base_ms: 0.0,
             trace_on_ms: 0.0,
+            scan_base_ms: 0.0,
+            scan_opt_ms: 0.0,
+            scan_arcs_per_sec_worker: 0.0,
+            coop_chunk_final: 64,
+            workers_pinned: 0,
         }
     }
 
@@ -267,6 +307,13 @@ mod tests {
         let mut r = record(wall, pushes, 10, 10);
         r.trace_base_ms = base_ms;
         r.trace_on_ms = on_ms;
+        records_json(&[r]).to_string()
+    }
+
+    fn doc_with_scan(wall: f64, pushes: u64, base_ms: f64, opt_ms: f64) -> String {
+        let mut r = record(wall, pushes, 10, 10);
+        r.scan_base_ms = base_ms;
+        r.scan_opt_ms = opt_ms;
         records_json(&[r]).to_string()
     }
 
@@ -358,6 +405,39 @@ mod tests {
         let none = parse_records(&doc(10.0, 100)).unwrap();
         assert_eq!(none.values().next().unwrap().trace_overhead(), None);
         assert!(!compare(&old, &none, 1.25).is_regression());
+    }
+
+    #[test]
+    fn scan_speedup_below_the_gate_fails() {
+        // Intra-record A/B on the new side, like the trace gate: the
+        // chunked+placed arm at only 1.1x over scalar fails the 1.3x
+        // floor even when the baseline document predates the fields.
+        let old = parse_records(&doc(10.0, 100)).unwrap();
+        let slow = parse_records(&doc_with_scan(10.0, 100, 11.0, 10.0)).unwrap();
+        let m = slow.values().next().unwrap();
+        assert!((m.scan_speedup().unwrap() - 1.1).abs() < 1e-9);
+        let cmp = compare(&old, &slow, 1.25);
+        assert!(cmp.is_regression());
+        assert!(cmp.report.contains("REGRESSED(scan)"), "{}", cmp.report);
+        // 1.5x passes the gate and shows up in the report column.
+        let fast = parse_records(&doc_with_scan(10.0, 100, 15.0, 10.0)).unwrap();
+        let cmp = compare(&old, &fast, 1.25);
+        assert!(!cmp.is_regression(), "{}", cmp.report);
+        assert!(cmp.report.contains("1.50x"), "{}", cmp.report);
+    }
+
+    #[test]
+    fn scan_gate_stays_off_without_the_measurement() {
+        let old = parse_records(&doc(10.0, 100)).unwrap();
+        // No A/B pair at all: ungated.
+        let none = parse_records(&doc(10.0, 100)).unwrap();
+        assert_eq!(none.values().next().unwrap().scan_speedup(), None);
+        assert!(!compare(&old, &none, 1.25).is_regression());
+        // Sub-noise scalar baseline (40µs < the 50µs floor): a 1.0x
+        // "speedup" there is timer noise, not a kernel regression.
+        let tiny = parse_records(&doc_with_scan(10.0, 100, 0.04, 0.04)).unwrap();
+        assert_eq!(tiny.values().next().unwrap().scan_speedup(), None);
+        assert!(!compare(&old, &tiny, 1.25).is_regression());
     }
 
     #[test]

@@ -184,6 +184,20 @@ pub struct BenchRecord {
     pub trace_base_ms: f64,
     /// Min-of-N traced (`SolveOptions::trace`) wall of the same arm.
     pub trace_on_ms: f64,
+    /// Min-of-N wall of the scalar/unpinned arm of the scan-kernel A/B
+    /// pair (0 when the record carries no scan measurement — only the
+    /// [`scan_captures`] VC+BCSR records do). `bench compare` gates
+    /// `scan_base_ms / scan_opt_ms >= SCAN_SPEEDUP_GATE`.
+    pub scan_base_ms: f64,
+    /// Min-of-N wall of the chunked+placed arm of the same pair.
+    pub scan_opt_ms: f64,
+    /// Arc-scan throughput per worker (arcs/sec over kernel wall) of the
+    /// recorded solve — the raw-speed observability number.
+    pub scan_arcs_per_sec_worker: f64,
+    /// Final cooperative chunk width (tuned when `--adaptive-chunk`).
+    pub coop_chunk_final: u64,
+    /// Workers that successfully pinned to a core (0 when unpinned).
+    pub workers_pinned: u64,
 }
 
 impl BenchRecord {
@@ -206,6 +220,11 @@ impl BenchRecord {
             gr_alpha_trace: r.stats.gr_alpha_trace.clone(),
             trace_base_ms: 0.0,
             trace_on_ms: 0.0,
+            scan_base_ms: 0.0,
+            scan_opt_ms: 0.0,
+            scan_arcs_per_sec_worker: r.stats.scan_arcs_per_sec_worker,
+            coop_chunk_final: r.stats.coop_chunk_final,
+            workers_pinned: r.stats.workers_pinned,
         }
     }
 
@@ -436,6 +455,125 @@ pub fn attach_trace_overhead(records: &mut [BenchRecord], captures: &[TraceCaptu
     }
 }
 
+/// One scan-kernel A/B measurement: the same graph solved with the
+/// scalar kernel on an unpinned pool (the PR-6 configuration) and with
+/// the lane-chunked kernel on a NUMA-interleaved pinned pool (the raw-
+/// speed configuration), min-of-[`SCAN_ARM_REPS`] each with the values
+/// cross-checked. `bench compare` holds `speedup()` under its
+/// ≥ 1.3x gate on the hub/rmat cases.
+#[derive(Debug, Clone)]
+pub struct ScanCapture {
+    pub graph: String,
+    /// Min-of-N wall of the scalar/unpinned arm, ms.
+    pub base_ms: f64,
+    /// Min-of-N wall of the chunked/pinned arm, ms.
+    pub opt_ms: f64,
+    /// Per-worker scan throughput of the best chunked run (arcs/sec).
+    pub opt_arcs_per_sec_worker: f64,
+    /// Workers that actually pinned in the chunked arm (placement is
+    /// best-effort; 0 on platforms without affinity support).
+    pub workers_pinned: u64,
+}
+
+impl ScanCapture {
+    /// Scalar-unpinned / chunked-pinned wall ratio (> 1 = the raw-speed
+    /// configuration wins).
+    pub fn speedup(&self) -> f64 {
+        self.base_ms / self.opt_ms.max(1e-9)
+    }
+}
+
+/// Repetitions per arm of the scan A/B measurement (min-of-N: CI
+/// wall-clock noise is one-sided).
+pub const SCAN_ARM_REPS: usize = 3;
+
+/// Smoke cases the scan A/B arms run on: the hub-gate cases plus the two
+/// rmat smoke cases — the degree-skewed instances where the admissibility
+/// scan dominates the kernel wall.
+pub const SCAN_AB_IDS: [&str; 4] = ["H0", "H1", "R5", "R6"];
+
+/// Run the scan-kernel A/B arms at the pinned [`HUB_GATE_THREADS`]:
+/// scalar kernel + default placement vs chunked kernel + NUMA interleave,
+/// VC+BCSR, with every value cross-checked between the arms. Errors
+/// instead of panicking so `bench smoke` can print the offending graph.
+pub fn scan_captures(opts: &SolveOptions) -> Result<Vec<ScanCapture>, String> {
+    let base_opts = SolveOptions {
+        threads: HUB_GATE_THREADS,
+        scan: maxflow::ScanKind::Scalar,
+        pin_cores: Vec::new(),
+        numa_interleave: false,
+        ..opts.clone()
+    };
+    let opt_opts = SolveOptions {
+        scan: maxflow::ScanKind::Chunked,
+        numa_interleave: opts.pin_cores.is_empty(),
+        ..base_opts.clone()
+    };
+    let mut out = Vec::new();
+    let cases: Vec<&FlowCase> = hub_suite()
+        .iter()
+        .chain(flow_suite().iter())
+        .filter(|c| SCAN_AB_IDS.contains(&c.id))
+        .collect();
+    for case in cases {
+        let net = (case.build)();
+        let g = ArcGraph::build(&net.normalized());
+        let bcsr = Bcsr::build(&g);
+        let mut base_ms = f64::INFINITY;
+        let mut base_value = None;
+        for _ in 0..SCAN_ARM_REPS {
+            let r = maxflow::tc_or_vc(&g, &bcsr, EngineKind::VertexCentric, &base_opts);
+            if let Some(e) = &r.error {
+                return Err(format!("{}: scalar arm did not converge: {e:?}", case.id));
+            }
+            base_value = Some(r.value);
+            base_ms = base_ms.min(r.stats.total_ms);
+        }
+        let mut opt_ms = f64::INFINITY;
+        let (mut throughput, mut pinned) = (0.0f64, 0u64);
+        for _ in 0..SCAN_ARM_REPS {
+            let r = maxflow::tc_or_vc(&g, &bcsr, EngineKind::VertexCentric, &opt_opts);
+            if let Some(e) = &r.error {
+                return Err(format!("{}: chunked arm did not converge: {e:?}", case.id));
+            }
+            if Some(r.value) != base_value {
+                return Err(format!(
+                    "{}: scan kernels disagree: chunked {} != scalar {:?}",
+                    case.id, r.value, base_value
+                ));
+            }
+            if r.stats.total_ms < opt_ms {
+                opt_ms = r.stats.total_ms;
+                throughput = r.stats.scan_arcs_per_sec_worker;
+                pinned = r.stats.workers_pinned;
+            }
+        }
+        out.push(ScanCapture {
+            graph: case.id.to_string(),
+            base_ms,
+            opt_ms,
+            opt_arcs_per_sec_worker: throughput,
+            workers_pinned: pinned,
+        });
+    }
+    Ok(out)
+}
+
+/// Copy each scan capture's A/B walls onto the matching VC+BCSR record,
+/// so `BENCH_table1.json` carries the speedup measurement the compare
+/// gate reads.
+pub fn attach_scan_speedup(records: &mut [BenchRecord], captures: &[ScanCapture]) {
+    for c in captures {
+        if let Some(r) = records
+            .iter_mut()
+            .find(|r| r.engine == "VC" && r.rep == "BCSR" && r.graph == c.graph)
+        {
+            r.scan_base_ms = c.base_ms;
+            r.scan_opt_ms = c.opt_ms;
+        }
+    }
+}
+
 /// Render captures as `BENCH_trace.jsonl`: one JSON object per launch
 /// event, each tagged with its graph id (the only key the event schema
 /// itself does not carry).
@@ -488,6 +626,18 @@ pub fn records_json(records: &[BenchRecord]) -> crate::util::json::Json {
                 o.insert("trace_base_ms".to_string(), Json::Num(r.trace_base_ms));
                 o.insert("trace_on_ms".to_string(), Json::Num(r.trace_on_ms));
             }
+            if r.scan_base_ms > 0.0 {
+                o.insert("scan_base_ms".to_string(), Json::Num(r.scan_base_ms));
+                o.insert("scan_opt_ms".to_string(), Json::Num(r.scan_opt_ms));
+            }
+            if r.scan_arcs_per_sec_worker > 0.0 {
+                o.insert(
+                    "scan_arcs_per_sec_worker".to_string(),
+                    Json::Num(r.scan_arcs_per_sec_worker),
+                );
+            }
+            o.insert("coop_chunk_final".to_string(), Json::Num(r.coop_chunk_final as f64));
+            o.insert("workers_pinned".to_string(), Json::Num(r.workers_pinned as f64));
             Json::Obj(o)
         })
         .collect();
@@ -573,6 +723,11 @@ mod tests {
             gr_alpha_trace: vec![1.0, 1.25, 1.5],
             trace_base_ms: 0.0,
             trace_on_ms: 0.0,
+            scan_base_ms: 0.0,
+            scan_opt_ms: 0.0,
+            scan_arcs_per_sec_worker: 0.0,
+            coop_chunk_final: 64,
+            workers_pinned: 0,
         }
     }
 
@@ -655,6 +810,47 @@ mod tests {
         let r0 = &j.get("records").unwrap().as_arr().unwrap()[0];
         assert_eq!(r0.get("trace_base_ms").unwrap().as_f64(), Some(2.0));
         assert_eq!(r0.get("trace_on_ms").unwrap().as_f64(), Some(2.04));
+    }
+
+    #[test]
+    fn scan_speedup_fields_are_optional_in_json() {
+        let mut recs = vec![rec("H0", "VC")];
+        let j = records_json(&recs);
+        let r0 = &j.get("records").unwrap().as_arr().unwrap()[0];
+        assert!(r0.get("scan_base_ms").is_none(), "absent without a measurement");
+        assert!(r0.get("scan_arcs_per_sec_worker").is_none(), "absent without kernel work");
+        assert_eq!(r0.get("coop_chunk_final").unwrap().as_i64(), Some(64));
+        assert_eq!(r0.get("workers_pinned").unwrap().as_i64(), Some(0));
+        let cap = ScanCapture {
+            graph: "H0".into(),
+            base_ms: 3.9,
+            opt_ms: 3.0,
+            opt_arcs_per_sec_worker: 1e7,
+            workers_pinned: 8,
+        };
+        assert!((cap.speedup() - 1.3).abs() < 1e-9);
+        attach_scan_speedup(&mut recs, &[cap]);
+        let j = records_json(&recs);
+        let r0 = &j.get("records").unwrap().as_arr().unwrap()[0];
+        assert_eq!(r0.get("scan_base_ms").unwrap().as_f64(), Some(3.9));
+        assert_eq!(r0.get("scan_opt_ms").unwrap().as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn scan_captures_agree_on_one_hub_case() {
+        // End-to-end on the real A/B entry point: both kernels must land
+        // on the same value (the capture errors otherwise) and produce
+        // positive walls. Speedup itself is NOT asserted — tier-1 runs on
+        // arbitrary (often single-core) machines; the ≥ 1.3x gate lives
+        // in `bench compare` where a pinned-runner baseline exists.
+        let opts = SolveOptions { threads: 2, cycles_per_launch: 128, ..Default::default() };
+        let caps = scan_captures(&opts).expect("scan kernels agree");
+        assert_eq!(caps.len(), SCAN_AB_IDS.len(), "one capture per A/B case");
+        for c in &caps {
+            assert!(SCAN_AB_IDS.contains(&c.graph.as_str()));
+            assert!(c.base_ms > 0.0 && c.opt_ms > 0.0, "{}: empty walls", c.graph);
+            assert!(c.opt_arcs_per_sec_worker > 0.0, "{}: throughput not recorded", c.graph);
+        }
     }
 
     #[test]

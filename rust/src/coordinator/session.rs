@@ -140,7 +140,7 @@ pub struct SessionManager {
 
 impl SessionManager {
     pub fn new(opts: SolveOptions) -> SessionManager {
-        let pool = Arc::new(WorkerPool::new(opts.resolved_threads()));
+        let pool = Arc::new(WorkerPool::with_config(opts.resolved_threads(), &opts.pool_config()));
         SessionManager::with_config(opts, pool, SessionConfig::default())
     }
 

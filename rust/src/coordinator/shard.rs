@@ -170,7 +170,11 @@ fn shard_worker(
     cfg: SessionConfig,
 ) {
     let ttl = cfg.ttl;
-    let pool = Arc::new(WorkerPool::new(threads));
+    // Shard pools inherit the solve's placement config: with
+    // `--numa-interleave` each shard's workers spread across nodes (and
+    // with an explicit `--pin-cores` list every shard cycles the same
+    // cores — acceptable, since shards share the machine anyway).
+    let pool = Arc::new(WorkerPool::with_config(threads, &solve.pool_config()));
     let mut mgr = SessionManager::with_config(solve, pool, cfg);
     // Idle tick at half the TTL so eviction lags the deadline by at most
     // ~TTL/2 even on a completely quiet shard.

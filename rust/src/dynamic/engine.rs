@@ -131,7 +131,8 @@ impl DynamicFlow {
     /// ([`DynamicFlow::is_poisoned`] / [`DynamicFlow::fault`]) rather than
     /// panicking — a serving worker must survive any instance.
     pub fn new(net: &FlowNetwork, opts: &SolveOptions) -> DynamicFlow {
-        DynamicFlow::with_pool(net, opts, Arc::new(WorkerPool::new(opts.resolved_threads())))
+        let pool = WorkerPool::with_config(opts.resolved_threads(), &opts.pool_config());
+        DynamicFlow::with_pool(net, opts, Arc::new(pool))
     }
 
     /// Like [`DynamicFlow::new`] but sharing an existing worker pool —

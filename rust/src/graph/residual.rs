@@ -59,6 +59,18 @@ impl<'a> RowSegs<'a> {
             .zip(c0[r0].iter().copied())
             .chain(a1[r1.clone()].iter().copied().zip(c1[r1].iter().copied()))
     }
+
+    /// The positions `lo..hi` of the row as a sub-`RowSegs` (same O(1)
+    /// positioning as [`RowSegs::slice`], but keeping the parallel-slice
+    /// shape so the lane-chunked scan kernel can gather over contiguous
+    /// windows instead of driving a zipped iterator).
+    pub fn slice_segs(&self, lo: usize, hi: usize) -> RowSegs<'a> {
+        let [(a0, c0), (a1, c1)] = self.segs;
+        let l0 = a0.len();
+        let r0 = lo.min(l0)..hi.min(l0);
+        let r1 = lo.saturating_sub(l0).min(a1.len())..hi.saturating_sub(l0).min(a1.len());
+        RowSegs { segs: [(&a0[r0.clone()], &c0[r0]), (&a1[r1.clone()], &c1[r1])] }
+    }
 }
 
 #[cfg(test)]
@@ -84,6 +96,24 @@ mod tests {
         // Single-segment rows slice the same way.
         let one = RowSegs::one(&a0, &c0);
         assert_eq!(one.slice(1, 3).collect::<Vec<_>>(), vec![(1, 11), (2, 12)]);
+    }
+
+    #[test]
+    fn slice_segs_matches_slice_everywhere() {
+        let a0 = [0u32, 1, 2];
+        let c0 = [10u32, 11, 12];
+        let a1 = [3u32, 4];
+        let c1 = [13u32, 14];
+        let row = RowSegs::two((&a0, &c0), (&a1, &c1));
+        for lo in 0..=5 {
+            for hi in lo..=5 {
+                let want: Vec<(u32, u32)> = row.slice(lo, hi).collect();
+                let sub = row.slice_segs(lo, hi);
+                let got: Vec<(u32, u32)> = sub.iter().collect();
+                assert_eq!(got, want, "slice_segs({lo}, {hi})");
+                assert_eq!(sub.len(), hi - lo);
+            }
+        }
     }
 }
 

@@ -19,6 +19,13 @@
 //! launch into `SolveStats::trace` (see `wbpr::obs`); `bench smoke`
 //! always runs the traced A/B arm on the hub suite and exports it.
 //!
+//! Raw-speed knobs on any solve-running command: `--scan auto|scalar|
+//! chunked` selects the admissibility-scan kernel, `--pin-cores 0,2,4-7`
+//! pins workers to explicit cores, `--numa-interleave` spreads them
+//! across NUMA nodes, `--adaptive-chunk` auto-tunes the cooperative
+//! chunk width. `bench smoke` always runs the scalar-vs-chunked A/B arm
+//! and exports the speedup for the `bench compare` gate.
+//!
 //! Options may also come from `--config file.ini` with `--set sec.key=val`
 //! overrides (see `configs/default.ini`).
 
@@ -36,7 +43,10 @@ use wbpr::util::config::Config;
 fn main() {
     let args = Args::parse(
         std::env::args().skip(1),
-        &["verbose", "quiet", "no-device", "no-global-relabel", "no-frontier", "no-multi-push", "trace"],
+        &[
+            "verbose", "quiet", "no-device", "no-global-relabel", "no-frontier", "no-multi-push",
+            "trace", "numa-interleave", "adaptive-chunk",
+        ],
     );
     if args.flag("quiet") {
         wbpr::util::log::set_level(wbpr::util::log::Level::Error);
@@ -108,6 +118,27 @@ fn solve_options(args: &Args, cfg: &Config) -> Result<SolveOptions, String> {
         // Launch-granular tracing (see `wbpr::obs`) — off by default; the
         // engine reads no clock without it.
         trace: args.flag("trace") || cfg.get_bool("engine", "trace", false)?,
+        // Residual-admissibility scan kernel: auto (= chunked), or forced
+        // scalar / chunked for A/B runs (`--scan scalar`).
+        scan: args.opt("scan").unwrap_or(cfg.get_or("engine", "scan", "auto")).parse()?,
+        // Explicit worker placement: `--pin-cores 0,2,4-7` pins worker i
+        // to the i-th listed core (empty = no pinning, the default).
+        pin_cores: {
+            let list = args.opt("pin-cores").unwrap_or(cfg.get_or("engine", "pin_cores", ""));
+            if list.trim().is_empty() {
+                Vec::new()
+            } else {
+                wbpr::util::affinity::parse_core_list(list)?
+            }
+        },
+        // Without an explicit core list, round-robin workers across the
+        // NUMA nodes sysfs reports (no-op on single-node machines).
+        numa_interleave: args.flag("numa-interleave")
+            || cfg.get_bool("engine", "numa_interleave", false)?,
+        // Auto-tune the cooperative chunk width from per-launch worker
+        // imbalance (off = pin at --coop-chunk).
+        adaptive_chunk: args.flag("adaptive-chunk")
+            || cfg.get_bool("engine", "adaptive_chunk", false)?,
     })
 }
 
@@ -410,6 +441,11 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
         // final stats fails the whole smoke run.
         let captures = table1::trace_captures(&opts)?;
         table1::attach_trace_overhead(&mut records, &captures);
+        // Scan-kernel A/B arm (hub + rmat cases): scalar/unpinned vs
+        // chunked+placed, values cross-checked inside scan_captures. The
+        // >= 1.3x speedup gate reads these fields in `bench compare`.
+        let scans = table1::scan_captures(&opts)?;
+        table1::attach_scan_speedup(&mut records, &scans);
         let out = args.opt("out").unwrap_or("BENCH_table1.json");
         std::fs::write(out, table1::records_json(&records).to_string()).map_err(|e| e.to_string())?;
         println!("wrote {} ({} records in {:.1}s)", out, records.len(), t.elapsed().as_secs_f64());
@@ -426,6 +462,18 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
                 c.traced_ms,
                 c.overhead(),
                 compare::TRACE_OVERHEAD_GATE
+            );
+        }
+        for c in &scans {
+            println!(
+                "scan {}: scalar {:.3}ms chunked {:.3}ms speedup {:.2}x | {:.1}M arcs/s/worker, {} workers pinned (gate {:.2}x in bench compare)",
+                c.graph,
+                c.base_ms,
+                c.opt_ms,
+                c.speedup(),
+                c.opt_arcs_per_sec_worker / 1e6,
+                c.workers_pinned,
+                compare::SCAN_SPEEDUP_GATE
             );
         }
         // PR-4 acceptance metric: with the carried frontier + auto-tuned

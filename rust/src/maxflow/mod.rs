@@ -31,6 +31,7 @@ pub mod matching;
 pub mod mincut;
 pub mod oracle;
 pub mod pool;
+pub mod scan;
 pub mod seq;
 pub mod state;
 pub mod tc;
@@ -39,7 +40,8 @@ pub mod vc;
 use crate::graph::builder::{ArcGraph, FlowNetwork};
 use crate::graph::{Bcsr, Rcsr, Representation};
 
-pub use pool::WorkerPool;
+pub use pool::{PoolConfig, WorkerPool};
+pub use scan::ScanKind;
 pub use state::{ParState, SolveStats};
 
 /// Which engine to run.
@@ -155,6 +157,32 @@ pub struct SolveOptions {
     /// worker imbalance, phase timings). Off by default; when off, no
     /// clock is read and no event is built — the only cost is the branch.
     pub trace: bool,
+    /// Which admissibility-scan kernel the discharge hot loop runs:
+    /// [`ScanKind::Chunked`] gathers residuals/heights over
+    /// [`scan::LANES`]-arc windows with a branchless admissible-mask/min
+    /// reduction (bit-identical to the scalar scan — see DESIGN.md §3d);
+    /// [`ScanKind::Scalar`] is the one-arc-at-a-time baseline kept for
+    /// A/B and the differential oracle. [`ScanKind::Auto`] (the default)
+    /// currently resolves to the chunked kernel.
+    pub scan: ScanKind,
+    /// Explicit worker-core pin list (`--pin-cores 0,2,4-7`): worker `w`
+    /// is pinned to `pin_cores[w % len]` at spawn. Empty (the default) =
+    /// no explicit list; see [`SolveOptions::numa_interleave`].
+    pub pin_cores: Vec<usize>,
+    /// Without an explicit pin list: place workers round-robin across the
+    /// machine's NUMA nodes (auto-detected from sysfs) and first-touch
+    /// the engine's scratch arrays from their owning workers, so
+    /// cross-socket traffic on the hot scan disappears. Off by default —
+    /// pinning a pool that shares a machine with other tenants can hurt.
+    pub numa_interleave: bool,
+    /// Auto-tune the cooperative chunk width from observed per-worker
+    /// arc-scan imbalance (an EWMA band mirroring
+    /// [`global_relabel::AdaptiveGr`]): halve `coop_chunk` while the
+    /// max/mean ratio stays high, grow it back when balance is tight (see
+    /// `vc::AdaptiveChunk`). Off by default so the oracle's deterministic
+    /// A/B arms keep a fixed chunk geometry; the final width is always
+    /// reported as `SolveStats::coop_chunk_final`.
+    pub adaptive_chunk: bool,
 }
 
 impl Default for SolveOptions {
@@ -173,6 +201,10 @@ impl Default for SolveOptions {
             coop_degree: 128,
             coop_chunk: 32,
             trace: false,
+            scan: ScanKind::Auto,
+            pin_cores: Vec::new(),
+            numa_interleave: false,
+            adaptive_chunk: false,
         }
     }
 }
@@ -210,6 +242,16 @@ impl SolveOptions {
     /// Chunk width clamped away from degenerate 0/1-arc tiles.
     pub fn resolved_coop_chunk(&self) -> usize {
         self.coop_chunk.max(4)
+    }
+
+    /// The concrete scan kernel ([`ScanKind::Auto`] resolved).
+    pub fn resolved_scan(&self) -> ScanKind {
+        self.scan.resolved()
+    }
+
+    /// Worker-placement policy for the pools this solve creates.
+    pub fn pool_config(&self) -> PoolConfig {
+        PoolConfig { worker_cores: self.pin_cores.clone(), numa_interleave: self.numa_interleave }
     }
 }
 
@@ -398,6 +440,21 @@ mod tests {
         let d = SolveOptions::default();
         assert!(d.multi_push);
         assert!(d.resolved_coop_degree() >= 2 * d.resolved_coop_chunk());
+    }
+
+    #[test]
+    fn scan_and_placement_options_resolve() {
+        let d = SolveOptions::default();
+        assert_eq!(d.scan, ScanKind::Auto);
+        assert_eq!(d.resolved_scan(), ScanKind::Chunked, "auto resolves to the chunked kernel");
+        assert!(!d.pool_config().pins(), "default placement is OS-scheduled");
+        assert!(!d.adaptive_chunk, "fixed chunk geometry by default (oracle determinism)");
+        let pinned = SolveOptions { pin_cores: vec![0, 2], numa_interleave: true, ..Default::default() };
+        let pc = pinned.pool_config();
+        assert!(pc.pins());
+        assert_eq!(pc.worker_cores, vec![0, 2]);
+        let scalar = SolveOptions { scan: ScanKind::Scalar, ..Default::default() };
+        assert_eq!(scalar.resolved_scan(), ScanKind::Scalar);
     }
 
     #[test]

@@ -185,6 +185,19 @@ pub fn run_case(case: &OracleCase, threads: usize) -> Result<OracleReport, Strin
     // decomposition mismatch on some seed.
     let coop = SolveOptions { threads, cycles_per_launch: 32, coop_degree: 8, coop_chunk: 4, ..Default::default() };
     check("VC+RCSR(coop8)", &vc::solve(&g, &Rcsr::build(&g), &coop))?;
+    // Scan-kernel arms (ISSUE 7): the scalar fallback pinned explicitly,
+    // and the chunked kernel combined with placement + the chunk tuner —
+    // the raw-speed configuration — must agree bit-for-bit on the value
+    // and decomposition with everything above.
+    let scalar = SolveOptions { scan: super::ScanKind::Scalar, ..coop.clone() };
+    check("VC+BCSR(scalar)", &vc::solve(&g, &Bcsr::build(&g), &scalar))?;
+    let pinned = SolveOptions {
+        scan: super::ScanKind::Chunked,
+        numa_interleave: true,
+        adaptive_chunk: true,
+        ..coop.clone()
+    };
+    check("VC+RCSR(chunk+pin)", &vc::solve(&g, &Rcsr::build(&g), &pinned))?;
     // Single-push ablation (the PR-4 local op) must still agree.
     let single = SolveOptions { threads, cycles_per_launch: 32, multi_push: false, ..Default::default() };
     check("VC+BCSR(1push)", &vc::solve(&g, &Bcsr::build(&g), &single))?;

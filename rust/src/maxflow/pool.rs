@@ -14,9 +14,49 @@
 //! here by blocking instead of by lifetimes — see the safety note in
 //! `run`).
 
+use crate::util::affinity;
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+
+/// Worker-placement policy for a pool (see `util::affinity`).
+///
+/// Placement is **best-effort**: a rejected `sched_setaffinity` (offline
+/// core, no Linux) leaves that worker OS-scheduled, and the number of
+/// pins that stuck is observable via [`WorkerPool::pinned_workers`] /
+/// `SolveStats::workers_pinned` — the bench A/B arms gate on it instead
+/// of asserting.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PoolConfig {
+    /// Explicit core ids to pin workers to, cycled when the pool has more
+    /// workers than listed cores (`--pin-cores 0,2,4-7`). Empty = no
+    /// explicit list.
+    pub worker_cores: Vec<usize>,
+    /// With no explicit list: place workers round-robin across the
+    /// machine's NUMA nodes (auto-detected from sysfs), so each node gets
+    /// an equal share of workers and their first-touch allocations.
+    pub numa_interleave: bool,
+}
+
+impl PoolConfig {
+    /// Resolved core placement for `size` workers: `Some(core)` per
+    /// worker, or `None` everywhere when the config requests no pinning.
+    fn placements(&self, size: usize) -> Vec<Option<usize>> {
+        if !self.worker_cores.is_empty() {
+            (0..size).map(|w| Some(self.worker_cores[w % self.worker_cores.len()])).collect()
+        } else if self.numa_interleave {
+            affinity::interleave_across_nodes(size).into_iter().map(Some).collect()
+        } else {
+            vec![None; size]
+        }
+    }
+
+    /// Does this config ask for any placement at all?
+    pub fn pins(&self) -> bool {
+        !self.worker_cores.is_empty() || self.numa_interleave
+    }
+}
 
 type Job = Arc<dyn Fn(usize) + Send + Sync + 'static>;
 
@@ -50,12 +90,29 @@ pub struct WorkerPool {
     /// `run` is only sound while at most one broadcast borrows the stack.
     broadcast: Mutex<()>,
     handles: Vec<JoinHandle<()>>,
+    /// Workers whose `sched_setaffinity` stuck (incremented by each
+    /// worker before it starts taking jobs; every `run` happens-after all
+    /// spawn-time pins, so callers reading this post-`run` see the final
+    /// count).
+    pinned: Arc<AtomicUsize>,
 }
 
 impl WorkerPool {
-    /// Spawn `size.max(1)` workers (they idle on a condvar until `run`).
+    /// Spawn `size.max(1)` workers (they idle on a condvar until `run`),
+    /// with no placement policy (the OS schedules them).
     pub fn new(size: usize) -> WorkerPool {
+        WorkerPool::with_config(size, &PoolConfig::default())
+    }
+
+    /// Spawn `size.max(1)` workers, pinning each to its resolved core at
+    /// spawn (before it can take a job) per `cfg`. With pinning active,
+    /// every page a worker faults in first — its stack, and any
+    /// first-touch scratch initialization broadcast through [`run`] —
+    /// lands on the pinned core's NUMA node.
+    pub fn with_config(size: usize, cfg: &PoolConfig) -> WorkerPool {
         let size = size.max(1);
+        let placements = cfg.placements(size);
+        let pinned = Arc::new(AtomicUsize::new(0));
         let shared = Arc::new(Shared {
             state: Mutex::new(PoolState {
                 job: None,
@@ -70,13 +127,22 @@ impl WorkerPool {
         let handles = (0..size)
             .map(|w| {
                 let shared = shared.clone();
+                let pinned = pinned.clone();
+                let core = placements[w];
                 std::thread::Builder::new()
                     .name(format!("wbpr-pool-{w}"))
-                    .spawn(move || worker_loop(&shared, w))
+                    .spawn(move || {
+                        if let Some(core) = core {
+                            if affinity::pin_current_thread_to(core) {
+                                pinned.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        worker_loop(&shared, w)
+                    })
                     .expect("spawn pool worker")
             })
             .collect();
-        WorkerPool { shared, broadcast: Mutex::new(()), handles }
+        WorkerPool { shared, broadcast: Mutex::new(()), handles, pinned }
     }
 
     /// Number of workers.
@@ -84,17 +150,27 @@ impl WorkerPool {
         self.handles.len()
     }
 
+    /// Workers whose spawn-time core pin succeeded (0 without a placement
+    /// policy). Exact once any [`WorkerPool::run`] has completed: a pin
+    /// attempt happens before the worker takes its first job.
+    pub fn pinned_workers(&self) -> usize {
+        self.pinned.load(Ordering::Relaxed)
+    }
+
     /// Split `total` machine threads across `shards` single-owner session
-    /// workers: every shard gets an equal slice (at least 1), and the
-    /// first `total % shards` shards absorb the remainder. Oversubscribing
+    /// workers as a balanced partition: shard `i` gets
+    /// `⌊total·(i+1)/shards⌋ − ⌊total·i/shards⌋` threads (at least 1), so
+    /// the `total % shards` remainder spreads across the index range
+    /// instead of always front-loading — the old
+    /// `base + (i < rem)` scheme systematically starved the *last* shard
+    /// (`shard_sizes(7, 4)` was `[2,2,2,1]`), which is exactly where
+    /// jump-consistent hashing parks the newest sessions. Oversubscribing
     /// (`shards > total`) degrades to one thread per shard — correctness
     /// never depends on the split, only throughput.
     pub fn shard_sizes(total: usize, shards: usize) -> Vec<usize> {
         let shards = shards.max(1);
         let total = total.max(1);
-        let base = total / shards;
-        let rem = total % shards;
-        (0..shards).map(|i| (base + usize::from(i < rem)).max(1)).collect()
+        (0..shards).map(|i| ((total * (i + 1) / shards) - (total * i / shards)).max(1)).collect()
     }
 
     /// Broadcast `f` to every worker (called with its worker index) and
@@ -278,10 +354,66 @@ mod tests {
     #[test]
     fn shard_sizes_cover_all_threads() {
         assert_eq!(WorkerPool::shard_sizes(8, 4), vec![2, 2, 2, 2]);
-        assert_eq!(WorkerPool::shard_sizes(7, 4), vec![2, 2, 2, 1]);
+        assert_eq!(WorkerPool::shard_sizes(7, 4), vec![1, 2, 2, 2], "remainder spreads, last shard not starved");
         assert_eq!(WorkerPool::shard_sizes(2, 4), vec![1, 1, 1, 1], "oversubscribed: 1 each");
         assert_eq!(WorkerPool::shard_sizes(5, 1), vec![5]);
         assert_eq!(WorkerPool::shard_sizes(0, 0), vec![1], "degenerate inputs clamp");
+    }
+
+    #[test]
+    fn shard_sizes_balanced_partition_properties() {
+        // For any (total, shards) with total >= shards: sizes sum to
+        // total, differ by at most 1, and the max-size shards are not all
+        // packed at the front (no systematic starvation of high indices).
+        for total in 1..40usize {
+            for shards in 1..=total {
+                let sizes = WorkerPool::shard_sizes(total, shards);
+                assert_eq!(sizes.iter().sum::<usize>(), total, "({total}, {shards}) sums");
+                let (lo, hi) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(hi - lo <= 1, "({total}, {shards}) spread {sizes:?}");
+                if total % shards != 0 {
+                    assert_eq!(*sizes.last().unwrap(), *hi, "({total}, {shards}) last shard gets a big slice");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unpinned_pool_reports_zero_pins() {
+        let pool = WorkerPool::new(2);
+        pool.run(|_| {});
+        assert_eq!(pool.pinned_workers(), 0);
+        assert!(!PoolConfig::default().pins());
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn pinned_pool_counts_successful_pins() {
+        // Pin both workers to core 0 (exists everywhere); after one run
+        // the pin attempts have all resolved.
+        let cfg = PoolConfig { worker_cores: vec![0], numa_interleave: false };
+        assert!(cfg.pins());
+        let pool = WorkerPool::with_config(2, &cfg);
+        let ran = AtomicUsize::new(0);
+        pool.run(|_| {
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 2);
+        assert_eq!(pool.pinned_workers(), 2, "both pins to core 0 stick");
+    }
+
+    #[test]
+    fn numa_interleave_places_every_worker() {
+        let cfg = PoolConfig { worker_cores: vec![], numa_interleave: true };
+        let pool = WorkerPool::with_config(3, &cfg);
+        let ran = AtomicUsize::new(0);
+        pool.run(|_| {
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        // Placement is best-effort; the pool must stay fully functional
+        // whether or not the pins stuck.
+        assert_eq!(ran.load(Ordering::Relaxed), 3);
+        assert!(pool.pinned_workers() <= 3);
     }
 
     #[test]

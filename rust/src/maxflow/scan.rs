@@ -1,0 +1,484 @@
+//! Lane-chunked residual-admissibility scans — the hottest instructions
+//! in the system, shared by the in-place multi-push discharge
+//! ([`super::lockfree::discharge_multi`]) and the cooperative hub chunk
+//! reduction (`vc.rs`).
+//!
+//! The scalar scan walks a row one arc at a time: load `cf(a)`, branch,
+//! load `h(v)`, branch — a dependent-load/branch chain the CPU cannot
+//! overlap. The chunked kernel instead processes [`LANES`]-arc windows:
+//! gather all residuals and heights of the window first (independent
+//! loads the prefetcher and OoO core overlap freely), compute the
+//! admissible-lane mask and the window height-minimum **branchlessly**
+//! (straight-line integer ops over fixed-width arrays, written so the
+//! compiler autovectorizes them on stable Rust — no `std::simd`, which
+//! is nightly-only and would break the pinned-stable CI), and only fall
+//! back to in-order lane replay when the mask shows admissible work.
+//! On converged/idle rows — the overwhelming majority of scanned arcs —
+//! the fast path retires a whole window with zero branches taken.
+//!
+//! Safety of the gathered (possibly stale) reads is the same Hong
+//! single-writer argument the scalar scan already relies on, plus one
+//! observation about *intra-window* staleness: pushing on arc `a`
+//! modifies `cf(a)` and `cf(a^1)`, and `a^1` lives in `v`'s row — never
+//! in `u`'s own row — so a push on an earlier lane cannot perturb the
+//! gathered `cf` of a later lane of the same row. Single-threaded, the
+//! chunked scan is therefore **bit-identical** to the scalar scan
+//! (asserted across degree classes in the tests below and in the
+//! differential oracle). See DESIGN.md §3d.
+//!
+//! The window width is 8 lanes by default and 16 under the `simd` cargo
+//! feature (wider gathers amortize better once AVX-512-class stores are
+//! available; `benches/kernel_micro.rs` measures both).
+
+use super::lockfree::{push_arc, DischargeOutcome, LocalCounters};
+use super::state::ParState;
+use crate::graph::builder::ArcGraph;
+use crate::graph::residual::{Residual, RowSegs};
+
+/// Arcs per gather window. 8 by default; 16 with `--features simd`.
+#[cfg(feature = "simd")]
+pub const LANES: usize = 16;
+/// Arcs per gather window. 8 by default; 16 with `--features simd`.
+#[cfg(not(feature = "simd"))]
+pub const LANES: usize = 8;
+
+/// Which admissibility-scan kernel the engines run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ScanKind {
+    /// Pick the default for this build (currently [`ScanKind::Chunked`]).
+    #[default]
+    Auto,
+    /// The original one-arc-at-a-time scan (the A/B + oracle baseline).
+    Scalar,
+    /// The lane-chunked gather kernel ([`LANES`]-arc windows).
+    Chunked,
+}
+
+impl ScanKind {
+    /// Resolve [`ScanKind::Auto`] to the concrete kernel.
+    pub fn resolved(self) -> ScanKind {
+        match self {
+            ScanKind::Auto | ScanKind::Chunked => ScanKind::Chunked,
+            ScanKind::Scalar => ScanKind::Scalar,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ScanKind::Auto => "auto",
+            ScanKind::Scalar => "scalar",
+            ScanKind::Chunked => "chunked",
+        }
+    }
+}
+
+impl std::str::FromStr for ScanKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(ScanKind::Auto),
+            "scalar" => Ok(ScanKind::Scalar),
+            // "simd" is accepted as a spelling of the chunked kernel (the
+            // cargo feature only widens its window).
+            "chunked" | "simd" => Ok(ScanKind::Chunked),
+            other => Err(format!("unknown scan kernel '{other}' (auto|scalar|chunked)")),
+        }
+    }
+}
+
+/// Dispatch [`super::lockfree::discharge_multi`] or its chunked twin.
+#[inline]
+pub fn discharge_multi_kind<R: Residual>(
+    g: &ArcGraph,
+    rep: &R,
+    st: &ParState,
+    u: u32,
+    cnt: &mut LocalCounters,
+    activated: impl FnMut(u32),
+    kind: ScanKind,
+) -> DischargeOutcome {
+    match kind.resolved() {
+        ScanKind::Scalar => super::lockfree::discharge_multi(g, rep, st, u, cnt, activated),
+        _ => discharge_multi_chunked(g, rep, st, u, cnt, activated),
+    }
+}
+
+/// Multi-push local operation with the lane-chunked admissibility scan.
+/// Semantically identical to [`super::lockfree::discharge_multi`] (same
+/// preconditions, same push order, same early exit, same relabel rule,
+/// same counter accounting); the only difference is *how* the row is
+/// read: [`LANES`]-arc gather windows with a branchless mask/min, and
+/// in-order lane replay — using the gathered values — only on windows
+/// that contain admissible work.
+pub fn discharge_multi_chunked<R: Residual>(
+    g: &ArcGraph,
+    rep: &R,
+    st: &ParState,
+    u: u32,
+    cnt: &mut LocalCounters,
+    mut activated: impl FnMut(u32),
+) -> DischargeOutcome {
+    let n = g.n as u32;
+    if u == g.s || u == g.t {
+        return DischargeOutcome::Idle;
+    }
+    let mut eu = st.excess(u);
+    if eu <= 0 {
+        return DischargeOutcome::Idle;
+    }
+    let hu = st.height(u);
+    if hu >= n {
+        return DischargeOutcome::Idle;
+    }
+    let row = rep.row(u);
+    let mut min_h = u32::MAX;
+    let mut pushed = false;
+    for &(arcs, cols) in row.segs.iter() {
+        let mut i = 0;
+        while i + LANES <= arcs.len() {
+            let (mask, wmin, cf, hv) = gather_window(st, &arcs[i..i + LANES], &cols[i..i + LANES], hu);
+            if mask == 0 {
+                // No admissible lane: the whole window contributes only
+                // its (residual, non-admissible) height minimum.
+                cnt.scan_arcs += LANES as u64;
+                min_h = min_h.min(wmin);
+                i += LANES;
+                continue;
+            }
+            // Admissible work present: replay the lanes in row order with
+            // the gathered values, preserving the scalar scan's push
+            // order, early-exit point and counter accounting exactly.
+            for l in 0..LANES {
+                cnt.scan_arcs += 1;
+                let c = cf[l];
+                if c <= 0 {
+                    continue;
+                }
+                let h = hv[l];
+                if h < hu {
+                    let v = cols[i + l];
+                    let d = eu.min(c);
+                    if push_arc(g, rep, st, u, arcs[i + l], v, d, cnt) {
+                        activated(v);
+                    }
+                    pushed = true;
+                    eu -= d;
+                    if eu == 0 {
+                        return DischargeOutcome::Pushed;
+                    }
+                    continue;
+                }
+                min_h = min_h.min(h);
+            }
+            i += LANES;
+        }
+        // Scalar tail for the window remainder.
+        for j in i..arcs.len() {
+            cnt.scan_arcs += 1;
+            let a = arcs[j];
+            let cf = st.residual(a);
+            if cf <= 0 {
+                continue;
+            }
+            let v = cols[j];
+            let hv = st.height(v);
+            if hv < hu {
+                let d = eu.min(cf);
+                if push_arc(g, rep, st, u, a, v, d, cnt) {
+                    activated(v);
+                }
+                pushed = true;
+                eu -= d;
+                if eu == 0 {
+                    return DischargeOutcome::Pushed;
+                }
+                continue;
+            }
+            min_h = min_h.min(hv);
+        }
+    }
+    if pushed {
+        return DischargeOutcome::Pushed;
+    }
+    if min_h == u32::MAX {
+        st.set_height(u, n + 1);
+        cnt.relabels += 1;
+        return DischargeOutcome::Relabeled;
+    }
+    st.set_height(u, min_h.saturating_add(1));
+    cnt.relabels += 1;
+    DischargeOutcome::Relabeled
+}
+
+/// Gather one [`LANES`]-arc window and reduce it branchlessly: returns
+/// the admissible-lane bitmask, the height minimum over the *residual
+/// non-admissible* lanes (what the relabel rule folds), and the gathered
+/// `cf`/`h(v)` arrays for lane replay. The loops are fixed-trip-count
+/// straight-line integer code over stack arrays — the shape LLVM's
+/// autovectorizer turns into gathers + compare/blend on stable Rust.
+#[inline(always)]
+fn gather_window(
+    st: &ParState,
+    arcs: &[u32],
+    cols: &[u32],
+    hu: u32,
+) -> (u32, u32, [i64; LANES], [u32; LANES]) {
+    let mut cf = [0i64; LANES];
+    let mut hv = [0u32; LANES];
+    for l in 0..LANES {
+        cf[l] = st.residual(arcs[l]);
+    }
+    for l in 0..LANES {
+        hv[l] = st.height(cols[l]);
+    }
+    let mut mask = 0u32;
+    let mut wmin = u32::MAX;
+    for l in 0..LANES {
+        let res = (cf[l] > 0) as u32;
+        let adm = res & ((hv[l] < hu) as u32);
+        mask |= adm << l;
+        // Residual but not admissible lanes feed the relabel minimum;
+        // everything else contributes the identity.
+        let cand = if res != 0 && adm == 0 { hv[l] } else { u32::MAX };
+        wmin = wmin.min(cand);
+    }
+    (mask, wmin, cf, hv)
+}
+
+/// One cooperative hub chunk's partial scan (the `vc.rs` `HubSlot`
+/// reduction phase), with kernel selection: walk the `window` (an
+/// already-positioned sub-row, see `RowSegs::slice_segs`), count every
+/// arc into `scan_arcs`, emit each admissible `(arc, v)` candidate in row
+/// order through `cand`, and return the height minimum over **all**
+/// residual lanes (the hub relabel folds admissible lanes too — the
+/// owner re-checks admissibility at apply time).
+#[inline]
+pub fn chunk_window_scan(
+    st: &ParState,
+    window: &RowSegs<'_>,
+    hu: u32,
+    kind: ScanKind,
+    scan_arcs: &mut u64,
+    mut cand: impl FnMut(u32, u32),
+) -> u32 {
+    let mut local_min = u32::MAX;
+    if kind.resolved() == ScanKind::Scalar {
+        for (a, v) in window.iter() {
+            *scan_arcs += 1;
+            if st.residual(a) > 0 {
+                let hv = st.height(v);
+                local_min = local_min.min(hv);
+                if hv < hu {
+                    cand(a, v);
+                }
+            }
+        }
+        return local_min;
+    }
+    for &(arcs, cols) in window.segs.iter() {
+        let mut i = 0;
+        while i + LANES <= arcs.len() {
+            let mut cf = [0i64; LANES];
+            let mut hv = [0u32; LANES];
+            for l in 0..LANES {
+                cf[l] = st.residual(arcs[i + l]);
+            }
+            for l in 0..LANES {
+                hv[l] = st.height(cols[i + l]);
+            }
+            let mut mask = 0u32;
+            let mut wmin = u32::MAX;
+            for l in 0..LANES {
+                let res = (cf[l] > 0) as u32;
+                mask |= (res & ((hv[l] < hu) as u32)) << l;
+                let c = if res != 0 { hv[l] } else { u32::MAX };
+                wmin = wmin.min(c);
+            }
+            *scan_arcs += LANES as u64;
+            local_min = local_min.min(wmin);
+            // Candidates come out in ascending lane (= row) order, so the
+            // hub owner sees the same sequence the scalar scan produces.
+            let mut m = mask;
+            while m != 0 {
+                let l = m.trailing_zeros() as usize;
+                m &= m - 1;
+                cand(arcs[i + l], cols[i + l]);
+            }
+            i += LANES;
+        }
+        for j in i..arcs.len() {
+            *scan_arcs += 1;
+            if st.residual(arcs[j]) > 0 {
+                let hv = st.height(cols[j]);
+                local_min = local_min.min(hv);
+                if hv < hu {
+                    cand(arcs[j], cols[j]);
+                }
+            }
+        }
+    }
+    local_min
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::FlowNetwork;
+    use crate::graph::{Bcsr, Edge, Rcsr};
+    use crate::util::Rng;
+    use std::sync::atomic::Ordering;
+
+    /// A hub star: source 0 → hub 1 → `deg` leaves → sink. Returns the
+    /// graph with the hub's excess and every height seeded from `seed`
+    /// (saturating a pseudo-random subset of forward arcs so windows mix
+    /// residual, exhausted and admissible lanes).
+    fn seeded_hub(deg: usize, seed: u64) -> (ArcGraph, ParState) {
+        let mut rng = Rng::new(seed);
+        let n = deg + 3;
+        let t = (n - 1) as u32;
+        let mut edges = vec![Edge::new(0, 1, 1_000_000)];
+        for i in 0..deg {
+            let leaf = (i + 2) as u32;
+            edges.push(Edge::new(1, leaf, 1 + (rng.next_u64() % 7) as i64));
+            edges.push(Edge::new(leaf, t, 4));
+        }
+        let g = ArcGraph::build(&FlowNetwork::new(n, 0, t, edges, "scan-hub").normalized());
+        let (st, _) = ParState::preflow(&g);
+        // Hub height above some leaves, below others; leaves scattered.
+        st.set_height(1, 3);
+        for i in 0..deg {
+            st.set_height((i + 2) as u32, (rng.next_u64() % 8) as u32);
+        }
+        // Saturate ~1/3 of the hub's forward arcs so the scan sees dead
+        // lanes interleaved with live ones.
+        for a in 0..g.num_arcs() {
+            if g.arc_from[a] == 1 && g.arc_to[a] != 0 && rng.next_u64() % 3 == 0 {
+                st.cf[a].store(0, Ordering::Relaxed);
+            }
+        }
+        (g, st)
+    }
+
+    /// Snapshot everything a discharge can change.
+    fn fingerprint(g: &ArcGraph, st: &ParState) -> (Vec<i64>, Vec<u32>, Vec<i64>) {
+        let cf = st.cf_snapshot();
+        let h: Vec<u32> = (0..g.n as u32).map(|u| st.height(u)).collect();
+        let e: Vec<i64> = (0..g.n as u32).map(|u| st.excess(u)).collect();
+        (cf, h, e)
+    }
+
+    fn run_identity_case(deg: usize, seed: u64, excess: i64) {
+        // Two identically-seeded worlds; scalar discharges one, chunked
+        // the other. Everything observable must match bit for bit.
+        for rcsr in [true, false] {
+            let (ga, sa) = seeded_hub(deg, seed);
+            let (gb, sb) = seeded_hub(deg, seed);
+            sa.e[1].store(excess, Ordering::Relaxed);
+            sb.e[1].store(excess, Ordering::Relaxed);
+            let mut ca = LocalCounters::default();
+            let mut cb = LocalCounters::default();
+            let mut acts_a = Vec::new();
+            let mut acts_b = Vec::new();
+            let (oa, ob) = if rcsr {
+                let ra = Rcsr::build(&ga);
+                let rb = Rcsr::build(&gb);
+                (
+                    super::super::lockfree::discharge_multi(&ga, &ra, &sa, 1, &mut ca, |v| acts_a.push(v)),
+                    discharge_multi_chunked(&gb, &rb, &sb, 1, &mut cb, |v| acts_b.push(v)),
+                )
+            } else {
+                let ra = Bcsr::build(&ga);
+                let rb = Bcsr::build(&gb);
+                (
+                    super::super::lockfree::discharge_multi(&ga, &ra, &sa, 1, &mut ca, |v| acts_a.push(v)),
+                    discharge_multi_chunked(&gb, &rb, &sb, 1, &mut cb, |v| acts_b.push(v)),
+                )
+            };
+            assert_eq!(oa, ob, "deg={deg} seed={seed} rcsr={rcsr}: outcome");
+            assert_eq!(acts_a, acts_b, "deg={deg} seed={seed} rcsr={rcsr}: activation order");
+            assert_eq!(
+                (ca.pushes, ca.relabels, ca.scan_arcs),
+                (cb.pushes, cb.relabels, cb.scan_arcs),
+                "deg={deg} seed={seed} rcsr={rcsr}: counters"
+            );
+            assert_eq!(fingerprint(&ga, &sa), fingerprint(&gb, &sb), "deg={deg} seed={seed} rcsr={rcsr}: state");
+        }
+    }
+
+    #[test]
+    fn chunked_scan_is_bit_identical_across_degree_classes() {
+        // The micro-bench degree classes {8, 64, 1k, 64k} (64k shrunk to
+        // 4096 here to keep tier-1 fast; kernel_micro runs the full 64k),
+        // plus off-width degrees exercising the scalar tail.
+        for &deg in &[8usize, 13, 64, 100, 1000, 4096] {
+            for seed in [1u64, 2, 3] {
+                // Large excess: the scan visits the whole row.
+                run_identity_case(deg, seed, 1 << 40);
+                // Tiny excess: drains mid-row, exercising the early exit
+                // inside a replayed window.
+                run_identity_case(deg, seed, 3);
+                // No admissible work at all (hub at height 0): pure
+                // mask==0 fast path + relabel epilogue.
+                let (ga, sa) = seeded_hub(deg, seed);
+                let (gb, sb) = seeded_hub(deg, seed);
+                sa.set_height(1, 0);
+                sb.set_height(1, 0);
+                sa.e[1].store(9, Ordering::Relaxed);
+                sb.e[1].store(9, Ordering::Relaxed);
+                let ra = Rcsr::build(&ga);
+                let rb = Rcsr::build(&gb);
+                let mut ca = LocalCounters::default();
+                let mut cb = LocalCounters::default();
+                let oa = super::super::lockfree::discharge_multi(&ga, &ra, &sa, 1, &mut ca, |_| {});
+                let ob = discharge_multi_chunked(&gb, &rb, &sb, 1, &mut cb, |_| {});
+                assert_eq!(oa, ob);
+                assert_eq!(oa, DischargeOutcome::Relabeled, "nothing admissible below height 0");
+                assert_eq!(ca.scan_arcs, cb.scan_arcs);
+                assert_eq!(sa.height(1), sb.height(1), "relabel target identical");
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_window_scan_kernels_agree_on_every_window() {
+        let (g, st) = seeded_hub(257, 11);
+        let rep = Rcsr::build(&g);
+        let row = rep.row(1);
+        let hu = st.height(1);
+        let d = row.len();
+        let mut rng = Rng::new(99);
+        let mut windows: Vec<(usize, usize)> = (0..d).step_by(32).map(|lo| (lo, (lo + 32).min(d))).collect();
+        for _ in 0..40 {
+            let lo = (rng.next_u64() as usize) % d;
+            let hi = lo + 1 + (rng.next_u64() as usize) % (d - lo);
+            windows.push((lo, hi));
+        }
+        for (lo, hi) in windows {
+            let win = row.slice_segs(lo, hi);
+            let mut n_a = 0u64;
+            let mut n_b = 0u64;
+            let mut cand_a = Vec::new();
+            let mut cand_b = Vec::new();
+            let min_a = chunk_window_scan(&st, &win, hu, ScanKind::Scalar, &mut n_a, |a, v| cand_a.push((a, v)));
+            let min_b = chunk_window_scan(&st, &win, hu, ScanKind::Chunked, &mut n_b, |a, v| cand_b.push((a, v)));
+            assert_eq!(min_a, min_b, "window {lo}..{hi}: local min");
+            assert_eq!(n_a, n_b, "window {lo}..{hi}: scan_arcs");
+            assert_eq!(cand_a, cand_b, "window {lo}..{hi}: candidate sequence + order");
+            assert_eq!(n_a, (hi - lo) as u64, "every arc of the window is counted");
+        }
+    }
+
+    #[test]
+    fn scan_kind_parses_and_resolves() {
+        assert_eq!("auto".parse::<ScanKind>().unwrap(), ScanKind::Auto);
+        assert_eq!("scalar".parse::<ScanKind>().unwrap(), ScanKind::Scalar);
+        assert_eq!("chunked".parse::<ScanKind>().unwrap(), ScanKind::Chunked);
+        assert_eq!("SIMD".parse::<ScanKind>().unwrap(), ScanKind::Chunked, "simd spells the chunked kernel");
+        assert!("avx".parse::<ScanKind>().is_err());
+        assert_eq!(ScanKind::Auto.resolved(), ScanKind::Chunked);
+        assert_eq!(ScanKind::Scalar.resolved(), ScanKind::Scalar);
+        assert_eq!(ScanKind::default(), ScanKind::Auto);
+        assert!(LANES == 8 || LANES == 16);
+    }
+}

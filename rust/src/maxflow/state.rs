@@ -58,6 +58,22 @@ pub struct SolveStats {
     /// most `SolveOptions::coop_chunk` arcs, reduced into the hub's
     /// scratch slot).
     pub coop_chunks: u64,
+    /// The cooperative chunk width the solve finished at: equal to
+    /// `SolveOptions::resolved_coop_chunk()` with fixed geometry, or the
+    /// [`crate::maxflow::vc::AdaptiveChunk`] tuner's final width when
+    /// `SolveOptions::adaptive_chunk` is on. 0 for engines without the
+    /// cooperative path.
+    pub coop_chunk_final: u64,
+    /// Workers whose spawn-time core pin stuck (0 without a placement
+    /// policy — see `SolveOptions::{pin_cores, numa_interleave}` and
+    /// [`crate::maxflow::pool::WorkerPool::pinned_workers`]).
+    pub workers_pinned: u64,
+    /// Scan throughput: residual arcs examined per second per worker
+    /// (`scan_arcs / kernel seconds / workers`) — the memory-bandwidth
+    /// figure of merit the lane-chunked kernel is gated on in
+    /// `bench smoke` / `bench compare`. 0.0 when no kernel time was
+    /// recorded.
+    pub scan_arcs_per_sec_worker: f64,
     /// Per-host-step samples of the adaptive global-relabel alpha
     /// (capped at [`GR_ALPHA_TRACE_CAP`]) — the auto-tune trajectory,
     /// not just the final value.
@@ -95,6 +111,44 @@ pub fn scan_imbalance(max: u64, mean: u64) -> f64 {
         return 0.0;
     }
     max as f64 / mean as f64
+}
+
+// AtomicU64 is documented to have "the same in-memory representation as
+// the underlying integer type" — the raw-parts conversion below leans on
+// size and alignment matching, checked here at compile time (a 32-bit
+// target where u64 aligns to 4 would fail the build loudly instead of
+// corrupting the Vec).
+const _: () = assert!(
+    std::mem::size_of::<AtomicU64>() == std::mem::size_of::<u64>()
+        && std::mem::align_of::<AtomicU64>() == std::mem::align_of::<u64>()
+        && std::mem::size_of::<AtomicU32>() == std::mem::size_of::<u32>()
+        && std::mem::align_of::<AtomicU32>() == std::mem::align_of::<u32>()
+);
+
+/// Allocate `n` zeroed `AtomicU64`s **without writing the memory**: the
+/// backing store comes from `vec![0u64; n]`, which large allocators
+/// serve as untouched zero pages (`alloc_zeroed` → mmap), so the *first
+/// write* decides physical page placement. A pinned worker pool's
+/// first-touch pass over its shard of such a buffer therefore lands the
+/// pages on the worker's own NUMA node — the point of
+/// `SolveOptions::numa_interleave`. The ordinary
+/// `(0..n).map(|_| AtomicU64::new(0)).collect()` spelling writes every
+/// element on the constructing (host) thread and defeats that.
+pub(crate) fn zeroed_atomic_u64(n: usize) -> Vec<AtomicU64> {
+    let mut v = std::mem::ManuallyDrop::new(vec![0u64; n]);
+    // SAFETY: AtomicU64 and u64 have identical size/alignment (checked
+    // above) and every bit pattern of u64 is a valid AtomicU64; length
+    // and capacity are carried over unchanged from the source Vec, whose
+    // buffer ownership transfers (ManuallyDrop suppresses its drop).
+    unsafe { Vec::from_raw_parts(v.as_mut_ptr() as *mut AtomicU64, v.len(), v.capacity()) }
+}
+
+/// `u32` twin of [`zeroed_atomic_u64`] (the AVQ buffers are vertex ids).
+pub(crate) fn zeroed_atomic_u32(n: usize) -> Vec<AtomicU32> {
+    let mut v = std::mem::ManuallyDrop::new(vec![0u32; n]);
+    // SAFETY: identical layout (compile-time checked above), ownership
+    // transfer as in `zeroed_atomic_u64`.
+    unsafe { Vec::from_raw_parts(v.as_mut_ptr() as *mut AtomicU32, v.len(), v.capacity()) }
 }
 
 /// Atomic counters accumulated inside parallel kernels, merged into

@@ -30,7 +30,7 @@ const MAX_LAUNCHES: u64 = 100_000;
 pub fn solve<R: Residual>(g: &ArcGraph, rep: &R, opts: &SolveOptions) -> FlowResult {
     let total_timer = Timer::start();
     let n = g.n;
-    let pool = WorkerPool::new(opts.resolved_threads());
+    let pool = WorkerPool::with_config(opts.resolved_threads(), &opts.pool_config());
     let active_workers = pool.size().min(n.max(1));
     let cycles = opts.resolved_cycles(n);
     let (st, excess_total) = ParState::preflow(g);
@@ -101,6 +101,7 @@ pub fn solve<R: Residual>(g: &ArcGraph, rep: &R, opts: &SolveOptions) -> FlowRes
     let per_worker: Vec<u64> = worker_scan.iter().map(|c| c.load(Ordering::Relaxed)).collect();
     stats.scan_arcs_max_worker = per_worker.iter().copied().max().unwrap_or(0);
     stats.scan_arcs_mean_worker = per_worker.iter().sum::<u64>() / active_workers.max(1) as u64;
+    stats.workers_pinned = pool.pinned_workers() as u64;
     counters.merge_into(&mut stats);
     stats.total_ms = total_timer.ms();
     FlowResult { value: st.excess(g.t), cf: st.cf_snapshot(), stats, error }

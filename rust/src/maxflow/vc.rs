@@ -45,9 +45,10 @@
 //! a warm session re-enters with zero allocation.
 
 use super::global_relabel::{global_relabel_with, AdaptiveGr, ExcessAccounting, GrScratch};
-use super::lockfree::{discharge_multi, discharge_step, Discharge, DischargeOutcome, LocalCounters};
+use super::lockfree::{discharge_step, Discharge, DischargeOutcome, LocalCounters};
 use super::pool::WorkerPool;
-use super::state::{AtomicCounters, ParState};
+use super::scan::{self, ScanKind};
+use super::state::{zeroed_atomic_u32, zeroed_atomic_u64, AtomicCounters, ParState};
 use super::{FlowResult, SolveError, SolveOptions, SolveStats};
 use crate::graph::builder::ArcGraph;
 use crate::graph::residual::Residual;
@@ -74,7 +75,10 @@ struct FrontierQueue {
 
 impl FrontierQueue {
     fn with_capacity(n: usize) -> FrontierQueue {
-        FrontierQueue { buf: (0..n).map(|_| AtomicU32::new(0)).collect(), len: AtomicUsize::new(0) }
+        // zeroed_atomic: pages stay unfaulted until first written, so the
+        // optional first-touch pass (VcContext::first_touch) decides
+        // their NUMA placement.
+        FrontierQueue { buf: zeroed_atomic_u32(n), len: AtomicUsize::new(0) }
     }
 
     fn ensure(&mut self, n: usize) {
@@ -116,7 +120,7 @@ struct ChunkQueue {
 
 impl ChunkQueue {
     fn with_capacity(n: usize) -> ChunkQueue {
-        ChunkQueue { buf: (0..n).map(|_| AtomicU64::new(0)).collect(), len: AtomicUsize::new(0) }
+        ChunkQueue { buf: zeroed_atomic_u64(n), len: AtomicUsize::new(0) }
     }
 
     fn ensure(&mut self, n: usize) {
@@ -188,6 +192,63 @@ impl HubSlot {
     }
 }
 
+/// EWMA decay for the chunk-width tuner — same discipline as
+/// `AdaptiveGr` (seed on the first sample, then blend).
+const CHUNK_EWMA_DECAY: f64 = 0.25;
+/// Chunk-width tuning band. The census sizes the chunk queue at the band
+/// **minimum**, so a shrinking chunk can never overflow it.
+const CHUNK_MIN: usize = 4;
+const CHUNK_MAX: usize = 4096;
+/// Sustained imbalance above this halves the chunk (finer slices spread
+/// hub work across more workers)...
+const CHUNK_SPLIT_ABOVE: f64 = 1.5;
+/// ...and below this doubles it (coarser slices cut per-chunk queue and
+/// slot-reduction traffic when work is already balanced).
+const CHUNK_MERGE_BELOW: f64 = 1.1;
+
+/// Auto-tuner for the cooperative chunk width
+/// ([`SolveOptions::adaptive_chunk`]): after every launch it folds the
+/// observed per-worker scan imbalance (max/mean arc scans — paper Eq. 1)
+/// into an EWMA, and walks [`SolveOptions::coop_chunk`] down when hub
+/// work concentrates on few workers, up when the split is already even.
+/// Mirrors the [`AdaptiveGr`] cadence tuner: off by default, observation
+/// is O(workers) per launch, and the final width is surfaced as
+/// [`SolveStats::coop_chunk_final`] for the bench records.
+struct AdaptiveChunk {
+    chunk: usize,
+    ewma: f64,
+    samples: u64,
+    on: bool,
+}
+
+impl AdaptiveChunk {
+    fn new(chunk: usize, on: bool) -> AdaptiveChunk {
+        // When off, the configured width passes through untouched (the
+        // band only constrains the tuner's walk).
+        let chunk = if on { chunk.clamp(CHUNK_MIN, CHUNK_MAX) } else { chunk.max(1) };
+        AdaptiveChunk { chunk, ewma: 0.0, samples: 0, on }
+    }
+
+    /// Fold one launch's per-worker scan extremes and re-tune the width.
+    fn observe(&mut self, scan_max: u64, scan_mean: f64) {
+        if !self.on || scan_mean <= 0.0 {
+            return;
+        }
+        let x = scan_max as f64 / scan_mean;
+        self.ewma = if self.samples == 0 {
+            x
+        } else {
+            CHUNK_EWMA_DECAY * x + (1.0 - CHUNK_EWMA_DECAY) * self.ewma
+        };
+        self.samples += 1;
+        if self.ewma > CHUNK_SPLIT_ABOVE {
+            self.chunk = (self.chunk / 2).max(CHUNK_MIN);
+        } else if self.ewma < CHUNK_MERGE_BELOW {
+            self.chunk = (self.chunk * 2).min(CHUNK_MAX);
+        }
+    }
+}
+
 /// Reusable per-solve scratch for the VC engine: the double-buffered AVQ,
 /// the per-vertex queued-epoch stamps, the cycle barrier and the
 /// global-relabel BFS buffers. Warm sessions hold one and allocate nothing
@@ -232,7 +293,10 @@ impl VcScratch {
         let participants = threads.max(1);
         VcScratch {
             avq: [FrontierQueue::with_capacity(n), FrontierQueue::with_capacity(n)],
-            queued: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            // Fresh stamps are all-zero, which never equals a live epoch
+            // (≥ 1) — and the zeroed allocation leaves the pages
+            // unfaulted for the first-touch pass.
+            queued: zeroed_atomic_u64(n),
             epoch: 1,
             carried: 0,
             carry_valid: false,
@@ -356,11 +420,53 @@ impl VcContext {
         VcContext::with_pool(n, Arc::new(WorkerPool::new(threads)))
     }
 
+    /// Build a context honoring the placement options: the pool is
+    /// spawned through [`WorkerPool::with_config`] (explicit
+    /// `--pin-cores` list or NUMA round-robin), and when the config
+    /// actually pins, the freshly allocated per-vertex scratch gets a
+    /// **first-touch pass** — each pinned worker zero-writes its
+    /// contiguous shard of the AVQ/epoch buffers, faulting those pages
+    /// on its own NUMA node (DESIGN.md §3d). Unpinned configs skip the
+    /// pass; placement would be whatever the OS scheduler gives anyway.
+    pub fn for_opts(n: usize, opts: &SolveOptions) -> VcContext {
+        let cfg = opts.pool_config();
+        let ctx = VcContext::with_pool(n, Arc::new(WorkerPool::with_config(opts.resolved_threads(), &cfg)));
+        if cfg.pins() && n > 0 {
+            ctx.first_touch();
+        }
+        ctx
+    }
+
     /// Share an existing pool (e.g. one pool across every warm session of
     /// a session worker) while keeping per-instance scratch.
     pub fn with_pool(n: usize, pool: Arc<WorkerPool>) -> VcContext {
         let threads = pool.size();
         VcContext { pool, scratch: VcScratch::new(n, threads) }
+    }
+
+    /// Fault the per-vertex scratch pages from the owning workers: worker
+    /// `w` zero-writes the same contiguous vertex shard it will mostly
+    /// work near, so first-touch places the pages on `w`'s node.
+    ///
+    /// Only sound on a **fresh** scratch: the writes re-zero the `queued`
+    /// epoch stamps, which on a warm scratch would resurrect already-used
+    /// epochs and break the frontier dedup. `for_opts` calls it exactly
+    /// once, right after construction. Buffers grown later
+    /// (`ensure`/`ensure_coop`) are host-touched — a documented
+    /// limitation, acceptable because the dominant O(V) buffers are
+    /// allocated here.
+    fn first_touch(&self) {
+        let sc: &VcScratch = &self.scratch;
+        let n = sc.queued.len();
+        let workers = self.pool.size().max(1);
+        self.pool.run(move |w| {
+            let (lo, hi) = (n * w / workers, n * (w + 1) / workers);
+            for i in lo..hi {
+                sc.queued[i].store(0, Ordering::Relaxed);
+                sc.avq[0].buf[i].store(0, Ordering::Relaxed);
+                sc.avq[1].buf[i].store(0, Ordering::Relaxed);
+            }
+        });
     }
 }
 
@@ -370,7 +476,7 @@ pub fn solve<R: Residual>(g: &ArcGraph, rep: &R, opts: &SolveOptions) -> FlowRes
     let (st, excess_total) = ParState::preflow(g);
     let mut acct = ExcessAccounting::new(g.n, excess_total);
     let mut stats = SolveStats::default();
-    let mut ctx = VcContext::new(g.n, opts.resolved_threads());
+    let mut ctx = VcContext::for_opts(g.n, opts);
     let error = run_from_state(g, rep, &st, &mut acct, opts, &mut stats, &mut ctx).err();
     stats.total_ms = total_timer.ms();
     FlowResult { value: st.excess(g.t), cf: st.cf_snapshot(), stats, error }
@@ -413,6 +519,7 @@ pub fn run_from_state<R: Residual>(
     let counters = AtomicCounters::default();
     let frontier = opts.frontier;
     let multi_push = opts.multi_push;
+    let scan_kind = opts.resolved_scan();
     let mut adaptive = AdaptiveGr::from_opts(n, opts);
     ctx.scratch.ensure(n, active_workers);
     // Launch-granular tracing (see `crate::obs`): every clock read and
@@ -444,14 +551,21 @@ pub fn run_from_state<R: Residual>(
     // ablation keeps vertex-granular work too.
     let coop_degree =
         if frontier && multi_push { opts.resolved_coop_degree() } else { usize::MAX };
-    let coop_chunk = opts.resolved_coop_chunk();
+    let mut chunk_tuner = AdaptiveChunk::new(
+        opts.resolved_coop_chunk(),
+        opts.adaptive_chunk && coop_degree != usize::MAX,
+    );
+    // The census runs once per solve, so when the tuner may *shrink* the
+    // chunk mid-solve the queue must be sized for the band minimum — the
+    // worst case — instead of the current width.
+    let chunk_floor = if chunk_tuner.on { CHUNK_MIN } else { chunk_tuner.chunk };
     let (mut hub_count, mut chunk_cap) = (0usize, 0usize);
     if coop_degree != usize::MAX {
         for u in 0..n as u32 {
             let d = rep.degree(u);
             if d >= coop_degree {
                 hub_count += 1;
-                chunk_cap += d.div_ceil(coop_chunk);
+                chunk_cap += d.div_ceil(chunk_floor);
             }
         }
     }
@@ -468,6 +582,9 @@ pub fn run_from_state<R: Residual>(
         .collect();
 
     let mut failure: Option<SolveError> = None;
+    // Kernel wall accumulated by *this* run (stats.kernel_ms survives warm
+    // re-entries) — the denominator of the scan-throughput stat below.
+    let mut run_kernel_ms = 0.0f64;
     while !acct.done(g, st) {
         let carry = frontier && ctx.scratch.carry_valid;
         let base = ctx.scratch.carried;
@@ -518,14 +635,21 @@ pub fn run_from_state<R: Residual>(
         // Trace snapshot: the stats fields a launch can move, read before
         // the host step's counter merge — the post-merge deltas are
         // exactly what this launch did (the reconciliation invariant
-        // `bench smoke` asserts).
-        let snap = if tracing {
+        // `bench smoke` asserts). The per-worker snapshot also feeds the
+        // chunk tuner, which needs the launch's imbalance when tuning
+        // even without a trace.
+        let need_scan_delta = tracing || chunk_tuner.on;
+        if need_scan_delta {
             scan_before.clear();
             scan_before.extend(worker_scan.iter().map(|c| c.load(Ordering::Relaxed)));
+        }
+        let snap = if tracing {
             Some((stats.pushes, stats.relabels, stats.scan_arcs, stats.coop_chunks))
         } else {
             None
         };
+        // Chunk width for this launch (constant when the tuner is off).
+        let coop_chunk = chunk_tuner.chunk;
         let phase_a_ns = AtomicU64::new(0);
         let phase_b_ns = AtomicU64::new(0);
         let kt = Timer::start();
@@ -644,14 +768,22 @@ pub fn run_from_state<R: Residual>(
                                 sc.chunkq.push(((h as u64) << 32) | ci as u64);
                             }
                         } else if multi_push && frontier {
-                            match discharge_multi(g, rep, st, u, &mut local, |v| {
-                                // Heights only rise within a launch, so an
-                                // observed h(v) ≥ n is final until the next
-                                // global relabel's rescan.
-                                if st.height(v) < n as u32 {
-                                    sc.enqueue(next, v, next_epoch);
-                                }
-                            }) {
+                            match scan::discharge_multi_kind(
+                                g,
+                                rep,
+                                st,
+                                u,
+                                &mut local,
+                                |v| {
+                                    // Heights only rise within a launch, so
+                                    // an observed h(v) ≥ n is final until
+                                    // the next global relabel's rescan.
+                                    if st.height(v) < n as u32 {
+                                        sc.enqueue(next, v, next_epoch);
+                                    }
+                                },
+                                scan_kind,
+                            ) {
                                 DischargeOutcome::Idle => {}
                                 DischargeOutcome::Pushed | DischargeOutcome::Relabeled => {
                                     if st.is_active(g, u) {
@@ -705,6 +837,7 @@ pub fn run_from_state<R: Residual>(
                                 sc,
                                 sc.chunkq.get(j),
                                 coop_chunk,
+                                scan_kind,
                                 frontier,
                                 next,
                                 next_epoch,
@@ -740,6 +873,7 @@ pub fn run_from_state<R: Residual>(
         ctx.scratch.carry_valid = frontier;
         let launch_kernel_ms = kt.ms();
         stats.kernel_ms += launch_kernel_ms;
+        run_kernel_ms += launch_kernel_ms;
         stats.cycles += exec as u64;
         stats.frontier_len_sum += frontier_sum.load(Ordering::Relaxed);
         // Host step: adaptive global relabel + termination accounting; a
@@ -757,18 +891,21 @@ pub fn run_from_state<R: Residual>(
             &mut ctx.scratch.gr,
             frontier_start.load(Ordering::Relaxed),
         );
-        if let Some((pushes0, relabels0, scan0, chunks0)) = snap {
-            // The hand-back guarantee of `WorkerPool::run` makes the
-            // post-launch `worker_scan` reads exact (every worker flushed
-            // before `run` returned), so the per-launch imbalance slice
-            // needs no extra synchronization.
-            let gr_ms = host_timer.map(|t| t.ms()).unwrap_or(0.0);
-            let (mut scan_max, mut scan_sum) = (0u64, 0u64);
+        // The hand-back guarantee of `WorkerPool::run` makes the
+        // post-launch `worker_scan` reads exact (every worker flushed
+        // before `run` returned), so the per-launch imbalance slice
+        // needs no extra synchronization.
+        let (mut scan_max, mut scan_sum) = (0u64, 0u64);
+        if need_scan_delta {
             for (i, c) in worker_scan.iter().enumerate() {
                 let d = c.load(Ordering::Relaxed) - scan_before[i];
                 scan_max = scan_max.max(d);
                 scan_sum += d;
             }
+            chunk_tuner.observe(scan_max, scan_sum as f64 / active_workers.max(1) as f64);
+        }
+        if let Some((pushes0, relabels0, scan0, chunks0)) = snap {
+            let gr_ms = host_timer.map(|t| t.ms()).unwrap_or(0.0);
             let scan_ms = phase_a_ns.load(Ordering::Relaxed) as f64 / 1e6;
             let chunk_ms = phase_b_ns.load(Ordering::Relaxed) as f64 / 1e6;
             stats.trace.push(LaunchEvent {
@@ -821,6 +958,17 @@ pub fn run_from_state<R: Residual>(
     let per_worker: Vec<u64> = worker_scan.iter().map(|c| c.load(Ordering::Relaxed)).collect();
     stats.scan_arcs_max_worker = per_worker.iter().copied().max().unwrap_or(0);
     stats.scan_arcs_mean_worker = per_worker.iter().sum::<u64>() / active_workers.max(1) as u64;
+    // Raw-speed observability: the chunk width the tuner settled on, how
+    // many workers actually pinned, and this run's per-worker scan
+    // throughput (total arcs scanned over kernel wall, per worker) — the
+    // arcs/sec number the bench scan A/B arms compare.
+    stats.coop_chunk_final = chunk_tuner.chunk as u64;
+    stats.workers_pinned = ctx.pool.pinned_workers() as u64;
+    let total_scan: u64 = per_worker.iter().sum();
+    if run_kernel_ms > 0.0 && total_scan > 0 {
+        stats.scan_arcs_per_sec_worker =
+            total_scan as f64 / (run_kernel_ms / 1e3) / active_workers.max(1) as f64;
+    }
     // A pinned (non-tuning) cadence still reports its one-point
     // trajectory so `gr_alpha_final` is meaningful in the bench records.
     if stats.gr_alpha_trace.is_empty() && stats.launches > 0 {
@@ -850,6 +998,7 @@ fn coop_process_chunk<R: Residual>(
     sc: &VcScratch,
     unit: u64,
     coop_chunk: usize,
+    scan_kind: ScanKind,
     frontier: bool,
     next: &FrontierQueue,
     next_epoch: u64,
@@ -863,25 +1012,24 @@ fn coop_process_chunk<R: Residual>(
     let row = rep.row(u);
     let lo = ci * coop_chunk;
     let hi = (lo + coop_chunk).min(row.len());
-    let mut local_min = u32::MAX;
-    for (a, v) in row.slice(lo, hi) {
-        local.scan_arcs += 1;
-        if st.residual(a) > 0 {
-            let hv = st.height(v);
-            if hv < local_min {
-                local_min = hv;
+    // The window walk (gathered lane-chunked or scalar, per `--scan`)
+    // lives in `scan::chunk_window_scan`, shared with the in-place
+    // discharge path; admissible candidates land in the slot in row
+    // order (overflow beyond the cap just drops candidates — the hub
+    // stays active and retries next cycle).
+    let local_min = scan::chunk_window_scan(
+        st,
+        &row.slice_segs(lo, hi),
+        hu,
+        scan_kind,
+        &mut local.scan_arcs,
+        |a, v| {
+            let idx = slot.cand_len.fetch_add(1, Ordering::Relaxed) as usize;
+            if idx < slot.cand.len() {
+                slot.cand[idx].store(((a as u64) << 32) | v as u64, Ordering::Relaxed);
             }
-            if hv < hu {
-                // Admissible candidate: record for the owner (overflow
-                // beyond the cap just drops candidates — the hub stays
-                // active and retries next cycle).
-                let idx = slot.cand_len.fetch_add(1, Ordering::Relaxed) as usize;
-                if idx < slot.cand.len() {
-                    slot.cand[idx].store(((a as u64) << 32) | v as u64, Ordering::Relaxed);
-                }
-            }
-        }
-    }
+        },
+    );
     local.coop_chunks += 1;
     if local_min != u32::MAX {
         slot.min_h.fetch_min(local_min, Ordering::Relaxed);
@@ -1375,6 +1523,7 @@ mod tests {
             "max is at least the mean"
         );
         assert!(r.stats.scan_imbalance() >= 1.0);
+        assert!(r.stats.scan_arcs_per_sec_worker > 0.0, "throughput stat must be populated");
         // Single worker: max == mean == total.
         let r1 = solve(&g, &Rcsr::build(&g), &SolveOptions { threads: 1, ..Default::default() });
         assert_eq!(r1.stats.scan_arcs_max_worker, r1.stats.scan_arcs_mean_worker);
@@ -1417,6 +1566,113 @@ mod tests {
             ctx.scratch.release();
             assert!(ctx.scratch.carried_frontier().is_none(), "release drops the carry");
         }
+    }
+
+    #[test]
+    fn adaptive_chunk_walks_within_band() {
+        let mut t = AdaptiveChunk::new(64, true);
+        // Sustained 10x imbalance: the width halves down to the band
+        // minimum and stays there.
+        for _ in 0..12 {
+            t.observe(1000, 100.0);
+        }
+        assert_eq!(t.chunk, CHUNK_MIN);
+        // Perfectly balanced launches: the EWMA decays below the merge
+        // threshold and the width doubles up to the band maximum.
+        for _ in 0..40 {
+            t.observe(100, 100.0);
+        }
+        assert_eq!(t.chunk, CHUNK_MAX);
+        // Zero-work launches are ignored, not divided by.
+        t.observe(0, 0.0);
+        assert_eq!(t.chunk, CHUNK_MAX);
+        // Tuner off: the configured width passes through untouched.
+        let mut off = AdaptiveChunk::new(64, false);
+        off.observe(1000, 100.0);
+        assert_eq!(off.chunk, 64);
+    }
+
+    #[test]
+    fn adaptive_chunk_solves_and_reports_final_width() {
+        let net = generators::star_hub(300, 200, 7);
+        let g = ArcGraph::build(&net);
+        let want = super::super::dinic::solve(&g).value;
+        let opts = SolveOptions {
+            threads: 4,
+            cycles_per_launch: 8,
+            coop_degree: 8,
+            coop_chunk: 64,
+            adaptive_chunk: true,
+            verify_frontier: true,
+            ..Default::default()
+        };
+        let r = solve(&g, &Rcsr::build(&g), &opts);
+        assert_eq!(r.value, want);
+        assert!(r.error.is_none());
+        super::super::verify(&g, &r).unwrap();
+        assert!(
+            (CHUNK_MIN as u64..=CHUNK_MAX as u64).contains(&r.stats.coop_chunk_final),
+            "tuned width {} escaped the band",
+            r.stats.coop_chunk_final
+        );
+        // Tuner off: the final width is exactly the configured one.
+        let fixed = SolveOptions { adaptive_chunk: false, ..opts };
+        let rf = solve(&g, &Rcsr::build(&g), &fixed);
+        assert_eq!(rf.value, want);
+        assert_eq!(rf.stats.coop_chunk_final, 64);
+    }
+
+    #[test]
+    fn scalar_and_chunked_scans_agree() {
+        // The same solve through both admissibility kernels — in-place
+        // multi-push rows *and* the cooperative hub windows — must land
+        // on the same flow on both representations.
+        let net = generators::star_hub(250, 180, 5);
+        let g = ArcGraph::build(&net);
+        let want = super::super::dinic::solve(&g).value;
+        for kind in [ScanKind::Scalar, ScanKind::Chunked] {
+            let opts = SolveOptions {
+                threads: 4,
+                cycles_per_launch: 32,
+                coop_degree: 8,
+                coop_chunk: 4,
+                scan: kind,
+                verify_frontier: true,
+                ..Default::default()
+            };
+            let r = solve(&g, &Rcsr::build(&g), &opts);
+            assert_eq!(r.value, want, "scan={kind:?} rcsr");
+            assert!(r.error.is_none());
+            super::super::verify(&g, &r).unwrap();
+            let b = solve(&g, &Bcsr::build(&g), &opts);
+            assert_eq!(b.value, want, "scan={kind:?} bcsr");
+            super::super::verify(&g, &b).unwrap();
+        }
+    }
+
+    #[test]
+    fn pinned_context_solves_and_reports_pins() {
+        // Placement is best-effort and must never change the answer; on
+        // Linux, pinning every worker to core 0 (which always exists)
+        // must also be *reported*.
+        let net = generators::erdos_renyi(60, 400, 8, 2);
+        let g = ArcGraph::build(&net.normalized());
+        let want = super::super::dinic::solve(&g).value;
+        let opts = SolveOptions { threads: 2, pin_cores: vec![0], ..Default::default() };
+        let r = solve(&g, &Rcsr::build(&g), &opts);
+        assert_eq!(r.value, want);
+        if cfg!(target_os = "linux") {
+            assert_eq!(r.stats.workers_pinned, 2, "both workers pin to core 0");
+        }
+        // NUMA interleave is likewise best-effort (single-node machines
+        // degrade to sequential core assignment).
+        let ni = SolveOptions { pin_cores: vec![], numa_interleave: true, ..opts };
+        let r2 = solve(&g, &Rcsr::build(&g), &ni);
+        assert_eq!(r2.value, want);
+        // Unpinned default reports zero pins.
+        let r3 = solve(&g, &Rcsr::build(&g), &SolveOptions { threads: 2, ..Default::default() });
+        assert_eq!(r3.value, want);
+        assert_eq!(r3.stats.workers_pinned, 0);
     }
 
     #[test]

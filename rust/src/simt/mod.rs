@@ -104,6 +104,11 @@ pub struct CostParams {
     /// Cross-tile combine per chunk (folding the partial min/admissible
     /// reduction into the hub's scratch slot).
     pub c_combine: f64,
+    /// Arcs gathered per admissibility-scan step on the CPU engines (the
+    /// lane-chunked kernel's window width, `maxflow::scan::LANES`). The
+    /// GPU model's analog is `arcs_per_tx`; this one feeds what-if costing
+    /// of the 8- vs 16-lane window on the host side.
+    pub scan_lane_width: f64,
 }
 
 impl Default for CostParams {
@@ -123,6 +128,7 @@ impl Default for CostParams {
             c_sync: 4000.0,
             coop_row_split: 1024.0,
             c_combine: 16.0,
+            scan_lane_width: 8.0,
         }
     }
 }
@@ -145,5 +151,9 @@ mod tests {
         let c = CostParams::default();
         assert!(c.mem_tx > c.c_arc, "memory must dominate compute");
         assert!(c.c_sync > c.c_push, "grid sync must dwarf local ops");
+        assert!(
+            c.scan_lane_width >= 1.0 && c.scan_lane_width <= c.arcs_per_tx,
+            "lane window sits between a scalar scan and one full transaction"
+        );
     }
 }

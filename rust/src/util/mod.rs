@@ -5,6 +5,7 @@
 //! crates.io (rand, clap, serde_json, criterion, proptest) are implemented
 //! here at the scale this repo needs them.
 
+pub mod affinity;
 pub mod cli;
 pub mod config;
 pub mod error;

@@ -321,6 +321,49 @@ fn prop_coop_multipush_preserves_carry_invariant_on_hubs() {
 }
 
 #[test]
+fn prop_chunked_scan_agrees_with_scalar_across_threads() {
+    // ISSUE 7: the lane-chunked admissibility kernel (in-place multi-push
+    // rows *and* cooperative hub windows) against the scalar fallback,
+    // across threads {1, 8, n+3} on hub-skewed instances, with the chunk
+    // tuner active on the chunked arm — values, decomposition validity
+    // and the carry invariant must all agree.
+    check("chunked scan == scalar scan", 12, 0x5CA2, |g| {
+        let leaves = 40 + g.size(0, 80);
+        let extra = 30 + g.size(0, 60);
+        let net = generators::star_hub(leaves, extra, g.rng.next_u64());
+        let arcs = ArcGraph::build(&net);
+        let want = maxflow::dinic::solve(&arcs).value;
+        for threads in [1usize, 8, arcs.n + 3] {
+            let base = SolveOptions {
+                threads,
+                cycles_per_launch: 8,
+                coop_degree: 8,
+                coop_chunk: 4,
+                verify_frontier: true,
+                ..Default::default()
+            };
+            let scalar = SolveOptions { scan: wbpr::maxflow::ScanKind::Scalar, ..base.clone() };
+            let chunked = SolveOptions {
+                scan: wbpr::maxflow::ScanKind::Chunked,
+                adaptive_chunk: true,
+                ..base
+            };
+            let rs = maxflow::vc::solve(&arcs, &Rcsr::build(&arcs), &scalar);
+            let rc = maxflow::vc::solve(&arcs, &Bcsr::build(&arcs), &chunked);
+            if rs.value != want || rc.value != want {
+                return Err(format!(
+                    "threads={threads} on {}: scalar {} / chunked {} != {want}",
+                    net.name, rs.value, rc.value
+                ));
+            }
+            maxflow::verify(&arcs, &rs).map_err(|e| format!("scalar threads={threads}: {e}"))?;
+            maxflow::verify(&arcs, &rc).map_err(|e| format!("chunked threads={threads}: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_snapshot_roundtrip_preserves_session_behavior() {
     // ISSUE 4 satellite: FlowSnapshot -> from_snapshot -> one more update
     // batch must produce the same value *and* the same
