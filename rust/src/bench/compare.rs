@@ -34,6 +34,16 @@ pub const TRACE_OVERHEAD_GATE: f64 = 1.03;
 /// measurement floor.
 pub const SCAN_SPEEDUP_GATE: f64 = 1.3;
 
+/// Noise floor for the serve-latency gate: p99s under this many
+/// milliseconds are scheduler jitter on shared runners, so the old p99 is
+/// floored here before the ratio — a 0.1ms → 0.4ms move never fails.
+pub const SERVE_P99_FLOOR_MS: f64 = 1.0;
+
+/// Default threshold for the serve p99 gate (`bench compare
+/// --serve-fail-above`): open-loop tail latency is noisier than solve
+/// wall-clock, so the default is looser than the wall gate's 1.25.
+pub const SERVE_P99_DEFAULT_GATE: f64 = 1.5;
+
 /// One record of a perf-tracker document, keyed by (graph, engine, rep).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Measurement {
@@ -267,6 +277,112 @@ pub fn compare_files(old_path: &str, new_path: &str, fail_above: f64) -> Result<
     }
 }
 
+/// The headline row of a `wbpr/bench_serve/v1` document
+/// (`BENCH_serve.json`) — what the serve-latency gate compares.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeHeadline {
+    /// Median open-loop latency at the base rate step, ms.
+    pub p50_ms: f64,
+    /// 99th percentile latency at the base rate step, ms.
+    pub p99_ms: f64,
+    /// 99.9th percentile latency at the base rate step, ms.
+    pub p999_ms: f64,
+    /// Best completed-request throughput over all rate steps.
+    pub saturation_rps: f64,
+}
+
+/// Parse the headline of a `wbpr/bench_serve/v1` document.
+pub fn parse_serve(doc: &str) -> Result<ServeHeadline, String> {
+    let json = Json::parse(doc)?;
+    match json.get("schema").and_then(Json::as_str) {
+        Some("wbpr/bench_serve/v1") => {}
+        other => return Err(format!("unexpected schema {other:?} (want wbpr/bench_serve/v1)")),
+    }
+    let num = |name: &str| {
+        json.get(name)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("missing numeric field '{name}'"))
+    };
+    Ok(ServeHeadline {
+        p50_ms: num("p50_ms")?,
+        p99_ms: num("p99_ms")?,
+        p999_ms: num("p999_ms")?,
+        saturation_rps: num("saturation_rps")?,
+    })
+}
+
+/// Compare two serve headlines. Regression = the new base-rate p99
+/// exceeds `fail_above ×` the old p99 (floored at
+/// [`SERVE_P99_FLOOR_MS`]). Saturation throughput is reported but not
+/// gated — it saturates differently per runner core count, so a hard
+/// gate would flap; p99 at a fixed offered rate is the stable signal.
+pub fn compare_serve(old: &ServeHeadline, new: &ServeHeadline, fail_above: f64) -> Comparison {
+    let mut t = Table::new(&["metric", "old", "new", "ratio", "verdict"]);
+    let ratio = new.p99_ms / old.p99_ms.max(SERVE_P99_FLOOR_MS);
+    let regressed = new.p99_ms > fail_above * old.p99_ms.max(SERVE_P99_FLOOR_MS);
+    let verdict = if regressed { "REGRESSED(serve-p99)" } else { "ok" };
+    t.row(vec![
+        "serve p99 (ms)".to_string(),
+        format!("{:.2}", old.p99_ms),
+        format!("{:.2}", new.p99_ms),
+        format!("{ratio:.2}x"),
+        verdict.to_string(),
+    ]);
+    t.row(vec![
+        "serve p50 (ms)".to_string(),
+        format!("{:.2}", old.p50_ms),
+        format!("{:.2}", new.p50_ms),
+        format!("{:.2}x", new.p50_ms / old.p50_ms.max(SERVE_P99_FLOOR_MS)),
+        "info".to_string(),
+    ]);
+    t.row(vec![
+        "serve p999 (ms)".to_string(),
+        format!("{:.2}", old.p999_ms),
+        format!("{:.2}", new.p999_ms),
+        format!("{:.2}x", new.p999_ms / old.p999_ms.max(SERVE_P99_FLOOR_MS)),
+        "info".to_string(),
+    ]);
+    t.row(vec![
+        "saturation (rps)".to_string(),
+        format!("{:.1}", old.saturation_rps),
+        format!("{:.1}", new.saturation_rps),
+        format!("{:.2}x", new.saturation_rps / old.saturation_rps.max(1.0)),
+        "info".to_string(),
+    ]);
+    let regressions: Vec<Key> = if regressed {
+        vec![("serve".to_string(), "p99".to_string(), "wire".to_string())]
+    } else {
+        Vec::new()
+    };
+    let report = format!(
+        "{}\nserve latency gate: threshold {:.2}x on base-rate p99 (floor {:.1}ms)\n",
+        t.render(),
+        fail_above,
+        SERVE_P99_FLOOR_MS
+    );
+    Comparison { report, regressions, unmatched: 0 }
+}
+
+/// File-level serve gate for the CLI (`bench compare --serve-old a
+/// --serve-new b`): parse both `BENCH_serve.json` documents, gate the
+/// p99 row, `Err` (with the report) on regression.
+pub fn compare_serve_files(
+    old_path: &str,
+    new_path: &str,
+    fail_above: f64,
+) -> Result<String, String> {
+    let old_doc = std::fs::read_to_string(old_path).map_err(|e| format!("read {old_path}: {e}"))?;
+    let new_doc = std::fs::read_to_string(new_path).map_err(|e| format!("read {new_path}: {e}"))?;
+    let old = parse_serve(&old_doc).map_err(|e| format!("{old_path}: {e}"))?;
+    let new = parse_serve(&new_doc).map_err(|e| format!("{new_path}: {e}"))?;
+    let cmp = compare_serve(&old, &new, fail_above);
+    if cmp.is_regression() {
+        Err(format!("{}\nserve p99 regression above {fail_above:.2}x", cmp.report))
+    } else {
+        Ok(cmp.report)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -445,6 +561,61 @@ mod tests {
         assert!(parse_records(r#"{"schema":"other","records":[]}"#).is_err());
         assert!(parse_records("{}").is_err());
         assert!(parse_records("not json").is_err());
+    }
+
+    fn serve_doc(p50: f64, p99: f64, p999: f64, sat: f64) -> String {
+        format!(
+            r#"{{"schema":"wbpr/bench_serve/v1","p50_ms":{p50},"p99_ms":{p99},"p999_ms":{p999},"saturation_rps":{sat}}}"#
+        )
+    }
+
+    #[test]
+    fn serve_gate_flags_p99_growth() {
+        let old = parse_serve(&serve_doc(2.0, 8.0, 20.0, 500.0)).unwrap();
+        let new = parse_serve(&serve_doc(2.0, 20.0, 40.0, 480.0)).unwrap();
+        let cmp = compare_serve(&old, &new, 1.5);
+        assert!(cmp.is_regression());
+        assert!(cmp.report.contains("REGRESSED(serve-p99)"), "{}", cmp.report);
+        // Under the threshold: passes, and the other rows stay "info".
+        let ok = parse_serve(&serve_doc(2.5, 11.0, 60.0, 200.0)).unwrap();
+        let cmp = compare_serve(&old, &ok, 1.5);
+        assert!(!cmp.is_regression(), "{}", cmp.report);
+        assert!(cmp.report.contains("info"));
+    }
+
+    #[test]
+    fn serve_gate_floors_sub_noise_baselines() {
+        // 0.1ms -> 0.9ms is a 9x ratio, but both are under the 1ms floor:
+        // scheduler jitter, not a regression.
+        let old = parse_serve(&serve_doc(0.05, 0.1, 0.2, 900.0)).unwrap();
+        let new = parse_serve(&serve_doc(0.3, 0.9, 1.2, 880.0)).unwrap();
+        assert!(!compare_serve(&old, &new, 1.5).is_regression());
+    }
+
+    #[test]
+    fn serve_parse_rejects_bad_documents() {
+        assert!(parse_serve(r#"{"schema":"wbpr/bench_table1/v1"}"#).is_err());
+        assert!(parse_serve(r#"{"schema":"wbpr/bench_serve/v1","p50_ms":1.0}"#).is_err());
+        assert!(parse_serve("not json").is_err());
+    }
+
+    #[test]
+    fn compare_serve_files_roundtrip() {
+        let dir = std::env::temp_dir().join("wbpr-bench-serve-compare-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let old_p = dir.join("serve-old.json");
+        let new_p = dir.join("serve-new.json");
+        std::fs::write(&old_p, serve_doc(2.0, 8.0, 20.0, 500.0)).unwrap();
+        std::fs::write(&new_p, serve_doc(2.0, 9.0, 22.0, 510.0)).unwrap();
+        let report =
+            compare_serve_files(old_p.to_str().unwrap(), new_p.to_str().unwrap(), 1.5).unwrap();
+        assert!(report.contains("ok"), "{report}");
+        std::fs::write(&new_p, serve_doc(2.0, 30.0, 60.0, 400.0)).unwrap();
+        let err = compare_serve_files(old_p.to_str().unwrap(), new_p.to_str().unwrap(), 1.5)
+            .unwrap_err();
+        assert!(err.contains("serve p99 regression"), "{err}");
+        let _ = std::fs::remove_file(&old_p);
+        let _ = std::fs::remove_file(&new_p);
     }
 
     #[test]

@@ -14,10 +14,14 @@
 //! * [`report`] — markdown table rendering shared by the benches and CLI.
 //! * [`compare`] — perf-regression comparison between two `bench smoke`
 //!   JSON artifacts (the CI `bench-regression` job).
+//! * [`serve`] — open-loop Poisson load against a live `serve --listen`
+//!   process: p50/p99/p999 latency + saturation throughput
+//!   (`BENCH_serve.json`).
 
 pub mod compare;
 pub mod fig3;
 pub mod report;
+pub mod serve;
 pub mod suite;
 pub mod table1;
 pub mod table2;

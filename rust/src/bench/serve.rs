@@ -1,0 +1,612 @@
+//! Open-loop serving benchmark (`bench serve`): Poisson-arrival
+//! many-session load against a live `serve --listen` process.
+//!
+//! Closed-loop benchmarks (every other bench in this crate) wait for each
+//! result before issuing the next request, so they measure *service time*
+//! and silently hide queueing: a saturated server just makes the driver
+//! slow down. This harness is **open-loop** in the faasten
+//! generator/FileGateway style (SNIPPETS.md Snippet 3): every request has
+//! a precomputed send timestamp drawn from a Poisson process, the sender
+//! fires at those instants regardless of completions, and latency is
+//! measured from the *scheduled* send time — so a backlog shows up as
+//! tail latency instead of being absorbed by the driver (no coordinated
+//! omission).
+//!
+//! Shape of a run:
+//!
+//! 1. **Warm-up** (unmeasured): open `--sessions` warm sessions, each a
+//!    distinct seeded Erdős–Rényi graph.
+//! 2. **Rate steps** (measured): for each rate in `--rates`, replay a
+//!    fresh Poisson update stream for `--duration-ms`, recording
+//!    p50/p99/p999/mean/max latency, achieved throughput, and the
+//!    ok/overloaded/error split.
+//! 3. **Teardown** (unmeasured): close every session; in self-serve mode
+//!    also stop the in-process server.
+//!
+//! The result document (`BENCH_serve.json`, schema
+//! `wbpr/bench_serve/v1`) carries per-step rows plus headline
+//! p50/p99/p999 (from the first, least-loaded step) and
+//! `saturation_rps` (best achieved throughput over all steps) —
+//! the row [`crate::bench::compare`] gates.
+//!
+//! With `--addr` absent the harness self-serves: it starts an in-process
+//! [`NetServer`] on a loopback port and drives that, so `bench serve`
+//! works with zero setup; CI runs it against a real `serve --listen`
+//! process instead. The generated stream can be exported/replayed as a
+//! JSONL workload file (`--emit-workload` / `--workload`).
+
+use crate::coordinator::net::{Client, NetServer};
+use crate::coordinator::wire::{self, Request, Response, WireError};
+use crate::coordinator::{CoordinatorConfig, ShardPoolConfig};
+use crate::dynamic::{GraphUpdate, UpdateBatch};
+use crate::graph::builder::FlowNetwork;
+use crate::graph::generators;
+use crate::util::Json;
+use crate::util::Rng;
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+/// Knobs for one `bench serve` run (CLI flags in `main.rs`; defaults are
+/// sized so the self-serve smoke configuration finishes in seconds).
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// Server to drive (`host:port`). `None` = start an in-process
+    /// server on a loopback port (self-serve mode).
+    pub addr: Option<String>,
+    /// Warm sessions opened before the measured phase.
+    pub sessions: usize,
+    /// Offered-load steps, requests/second, driven in order.
+    pub rates: Vec<f64>,
+    /// Measured duration of each rate step.
+    pub duration_ms: u64,
+    /// Vertices per session graph.
+    pub n: usize,
+    /// Edges per session graph (before normalization).
+    pub m: usize,
+    /// Max edge capacity of the session graphs.
+    pub max_cap: i64,
+    /// Capacity edits per update request.
+    pub edits: usize,
+    /// Zipf exponent skewing which session each update hits
+    /// (`0` = uniform). Skew concentrates load on few shards — the
+    /// admission-control stress case.
+    pub skew: f64,
+    /// Root seed; everything downstream is derived deterministically.
+    pub seed: u64,
+    /// Replay this JSONL workload file instead of generating streams
+    /// (one step; `rates` ignored).
+    pub workload: Option<PathBuf>,
+    /// Write the generated stream(s) to this JSONL file for later replay.
+    pub emit_workload: Option<PathBuf>,
+    /// Self-serve mode only: per-shard queue bound (0 = unbounded).
+    pub queue_bound: usize,
+    /// Self-serve mode only: queue deadline in ms (None = shed
+    /// immediately when over bound).
+    pub queue_deadline_ms: Option<u64>,
+    /// Self-serve mode only: session shard count.
+    pub shards: usize,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            addr: None,
+            sessions: 8,
+            rates: vec![50.0, 150.0, 400.0],
+            duration_ms: 2000,
+            n: 200,
+            m: 1000,
+            max_cap: 8,
+            edits: 8,
+            skew: 0.0,
+            seed: 42,
+            workload: None,
+            emit_workload: None,
+            queue_bound: 64,
+            queue_deadline_ms: None,
+            shards: 2,
+        }
+    }
+}
+
+/// One scheduled request of the open-loop stream: at `t_ms` after the
+/// step starts, send an update of `edits` seeded edits to `session`
+/// (0-based index into the warm session set).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkItem {
+    /// Scheduled send offset from step start, milliseconds.
+    pub t_ms: f64,
+    /// Warm-session index the update targets.
+    pub session: u64,
+    /// Capacity edits in this update's batch.
+    pub edits: usize,
+    /// Seed deriving the batch contents deterministically.
+    pub seed: u64,
+}
+
+/// Measured outcome of one rate step.
+#[derive(Debug, Clone)]
+pub struct StepResult {
+    /// Offered load this step was driven at (requests/second).
+    pub rate_rps: f64,
+    /// Requests sent.
+    pub sent: usize,
+    /// `Value` responses.
+    pub ok: usize,
+    /// `Overloaded` responses (admission shed either flavor).
+    pub overloaded: usize,
+    /// `Error` responses.
+    pub errors: usize,
+    /// Requests with no response by the post-step grace deadline.
+    pub lost: usize,
+    /// Completed-request throughput actually achieved (ok/second).
+    pub achieved_rps: f64,
+    /// Latency quantiles over `ok` responses, ms (scheduled-send to
+    /// response arrival — open-loop accounting).
+    pub p50_ms: f64,
+    /// 99th percentile latency, ms.
+    pub p99_ms: f64,
+    /// 99.9th percentile latency, ms.
+    pub p999_ms: f64,
+    /// Mean latency, ms.
+    pub mean_ms: f64,
+    /// Max latency, ms.
+    pub max_ms: f64,
+}
+
+/// Draw a Poisson-arrival update stream: exponential inter-arrival gaps
+/// at `rate_rps`, session picked uniformly (or Zipf-skewed with
+/// exponent `skew > 0`), per-item seeds forked off `rng`.
+pub fn generate_stream(
+    rate_rps: f64,
+    duration_ms: u64,
+    sessions: usize,
+    edits: usize,
+    skew: f64,
+    rng: &mut Rng,
+) -> Vec<WorkItem> {
+    assert!(rate_rps > 0.0 && sessions > 0);
+    let mean_gap_ms = 1000.0 / rate_rps;
+    let mut items = Vec::new();
+    let mut t = 0.0f64;
+    loop {
+        // Inverse-CDF exponential: u in [0,1) so 1-u in (0,1], ln <= 0.
+        t += -mean_gap_ms * (1.0 - rng.f64()).ln();
+        if t >= duration_ms as f64 {
+            return items;
+        }
+        let session = if skew > 0.0 {
+            rng.zipf(sessions, skew) as u64
+        } else {
+            rng.below(sessions as u64)
+        };
+        // Seeds stay under 2^53 so the JSONL round trip (f64 numbers)
+        // is exact and replayed batches are bit-identical.
+        let seed = rng.next_u64() & ((1 << 53) - 1);
+        items.push(WorkItem { t_ms: t, session, edits, seed });
+    }
+}
+
+/// Materialize an update batch from a work item's seed: mostly capacity
+/// increases with some decreases, edge indices valid for a normalized
+/// edge count of `m_norm`.
+pub fn build_batch(seed: u64, edits: usize, m_norm: usize) -> UpdateBatch {
+    let mut rng = Rng::new(seed);
+    let updates = (0..edits)
+        .map(|_| {
+            let edge = rng.index(m_norm.max(1));
+            if rng.chance(0.7) {
+                GraphUpdate::IncreaseCap { edge, delta: rng.range_i64(1, 4) }
+            } else {
+                GraphUpdate::DecreaseCap { edge, delta: 1 }
+            }
+        })
+        .collect();
+    UpdateBatch::new(updates)
+}
+
+/// The graph a given warm session serves (shared by the harness and any
+/// external client that wants to recompute expected values).
+pub fn session_net(opts: &ServeOpts, session_idx: u64) -> FlowNetwork {
+    generators::erdos_renyi(opts.n, opts.m, opts.max_cap, opts.seed ^ (0xB5 + session_idx))
+}
+
+/// Serialize a stream to JSONL (one `{"t_ms":..,"session":..,"edits":..,
+/// "seed":..}` object per line).
+pub fn workload_to_jsonl(items: &[WorkItem]) -> String {
+    let mut out = String::new();
+    for it in items {
+        let mut o = BTreeMap::new();
+        o.insert("t_ms".to_string(), Json::Num(it.t_ms));
+        o.insert("session".to_string(), Json::Num(it.session as f64));
+        o.insert("edits".to_string(), Json::Num(it.edits as f64));
+        o.insert("seed".to_string(), Json::Num(it.seed as f64));
+        out.push_str(&Json::Obj(o).to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse a JSONL workload produced by [`workload_to_jsonl`] (or by any
+/// external generator following the same four-field scheme).
+pub fn workload_from_jsonl(text: &str) -> Result<Vec<WorkItem>, String> {
+    let mut items = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let v = Json::parse(line).map_err(|e| format!("workload line {}: {e}", lineno + 1))?;
+        let num = |k: &str| -> Result<f64, String> {
+            v.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("workload line {}: missing '{k}'", lineno + 1))
+        };
+        items.push(WorkItem {
+            t_ms: num("t_ms")?,
+            session: num("session")? as u64,
+            edits: num("edits")? as usize,
+            seed: num("seed")? as u64,
+        });
+    }
+    Ok(items)
+}
+
+/// Post-step grace: how long the receiver keeps waiting for straggler
+/// responses after the last scheduled send.
+const DRAIN_GRACE: Duration = Duration::from_secs(20);
+/// Receiver read timeout (bounds how late it notices the deadline).
+const RECV_POLL: Duration = Duration::from_millis(100);
+
+/// Replay `items` against `addr` open-loop and measure. The sender
+/// paces by wall clock against each item's `t_ms` and never waits for
+/// completions; the receiver correlates on req ids.
+pub fn run_step(
+    addr: &str,
+    items: &[WorkItem],
+    m_norms: &[usize],
+    rate_rps: f64,
+    duration_ms: u64,
+) -> Result<StepResult, String> {
+    let stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    let _ = stream.set_nodelay(true);
+    let mut read_half = stream.try_clone().map_err(|e| e.to_string())?;
+    read_half.set_read_timeout(Some(RECV_POLL)).map_err(|e| e.to_string())?;
+    let write_half = stream;
+
+    // Pre-encode every frame so the send loop does pacing + write only.
+    let mut frames = Vec::with_capacity(items.len());
+    let mut sched = Vec::with_capacity(items.len());
+    for (i, it) in items.iter().enumerate() {
+        let batch = build_batch(it.seed, it.edits, m_norms[it.session as usize]);
+        let req = Request::Update { session: it.session + 1, batch };
+        frames.push(wire::encode_request(i as u64 + 1, &req));
+        sched.push(it.t_ms);
+    }
+
+    let total = items.len();
+    let start = Instant::now();
+    let deadline = start + Duration::from_millis(duration_ms) + DRAIN_GRACE;
+
+    let mut ok = 0usize;
+    let mut overloaded = 0usize;
+    let mut errors = 0usize;
+    let mut latencies: Vec<f64> = Vec::with_capacity(total);
+    let mut last_resp_s = 0.0f64;
+
+    // The sender borrows the frame/schedule tables; the receiver below
+    // shares the schedule for open-loop latency accounting.
+    let frames_ref = &frames;
+    let sched_ref = &sched;
+    std::thread::scope(|scope| -> Result<(), String> {
+        let sender = scope.spawn(move || -> Result<(), String> {
+            let mut write_half = write_half;
+            for (i, frame) in frames_ref.iter().enumerate() {
+                let target = start + Duration::from_secs_f64(sched_ref[i] / 1000.0);
+                let now = Instant::now();
+                if now < target {
+                    std::thread::sleep(target - now);
+                }
+                write_half.write_all(frame).map_err(|e| format!("send: {e}"))?;
+            }
+            Ok(())
+        });
+
+        // Receive on this thread until everything answered or the grace
+        // deadline passes.
+        let mut received = 0usize;
+        while received < total && Instant::now() < deadline {
+            match wire::read_response(&mut read_half) {
+                Ok((req_id, resp)) => {
+                    received += 1;
+                    let now_s = start.elapsed().as_secs_f64();
+                    last_resp_s = now_s;
+                    match resp {
+                        Response::Value { .. } => {
+                            ok += 1;
+                            let idx = (req_id as usize).saturating_sub(1).min(total - 1);
+                            latencies.push(now_s * 1000.0 - sched[idx]);
+                        }
+                        Response::Overloaded { .. } => overloaded += 1,
+                        Response::Error { .. } | Response::Pong => errors += 1,
+                    }
+                }
+                Err(WireError::TimedOut) => {}
+                Err(WireError::Closed) => break,
+                Err(e) => return Err(format!("recv: {e}")),
+            }
+        }
+        sender.join().map_err(|_| "sender thread panicked".to_string())??;
+        Ok(())
+    })?;
+
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| -> f64 {
+        if latencies.is_empty() {
+            return 0.0;
+        }
+        let idx = (p * (latencies.len() - 1) as f64).round() as usize;
+        latencies[idx.min(latencies.len() - 1)]
+    };
+    let mean = if latencies.is_empty() {
+        0.0
+    } else {
+        latencies.iter().sum::<f64>() / latencies.len() as f64
+    };
+    Ok(StepResult {
+        rate_rps,
+        sent: total,
+        ok,
+        overloaded,
+        errors,
+        lost: total - ok - overloaded - errors,
+        achieved_rps: if last_resp_s > 0.0 { ok as f64 / last_resp_s } else { 0.0 },
+        p50_ms: q(0.50),
+        p99_ms: q(0.99),
+        p999_ms: q(0.999),
+        mean_ms: mean,
+        max_ms: latencies.last().copied().unwrap_or(0.0),
+    })
+}
+
+/// Run the full benchmark per [`ServeOpts`]; returns the
+/// `wbpr/bench_serve/v1` document for `BENCH_serve.json`.
+pub fn run(opts: &ServeOpts) -> Result<Json, String> {
+    // Self-serve: stand up an in-process server if no address was given.
+    let mut server = None;
+    let addr = match &opts.addr {
+        Some(a) => a.clone(),
+        None => {
+            let config = CoordinatorConfig {
+                enable_device: false,
+                session: ShardPoolConfig {
+                    shards: opts.shards.max(1),
+                    queue_bound: opts.queue_bound,
+                    queue_deadline: opts.queue_deadline_ms.map(Duration::from_millis),
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let s = NetServer::start("127.0.0.1:0", config).map_err(|e| e.to_string())?;
+            let a = s.addr().to_string();
+            server = Some(s);
+            a
+        }
+    };
+
+    // Warm-up: open the session set (unmeasured; each open is a full
+    // solve). Session id on the wire = index + 1.
+    let mut client = Client::connect(&addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    let mut m_norms = Vec::with_capacity(opts.sessions);
+    for sid in 0..opts.sessions as u64 {
+        let net = session_net(opts, sid);
+        m_norms.push(net.normalized().m());
+        match client.call(&Request::Open { session: sid + 1, net }).map_err(|e| e.to_string())? {
+            Response::Value { .. } => {}
+            other => return Err(format!("open session {sid}: unexpected {other:?}")),
+        }
+    }
+
+    // Build the measured streams: either replay a workload file as one
+    // step, or generate one Poisson stream per requested rate.
+    let mut rng = Rng::new(opts.seed);
+    let steps_in: Vec<(f64, Vec<WorkItem>)> = match &opts.workload {
+        Some(path) => {
+            let mut text = String::new();
+            std::fs::File::open(path)
+                .and_then(|mut f| f.read_to_string(&mut text))
+                .map_err(|e| format!("read {}: {e}", path.display()))?;
+            let items = workload_from_jsonl(&text)?;
+            for it in &items {
+                if it.session as usize >= opts.sessions {
+                    return Err(format!(
+                        "workload references session {} but only {} are open",
+                        it.session, opts.sessions
+                    ));
+                }
+            }
+            let span_ms = items.last().map_or(1.0, |it| it.t_ms.max(1.0));
+            let rate = items.len() as f64 * 1000.0 / span_ms;
+            vec![(rate, items)]
+        }
+        None => opts
+            .rates
+            .iter()
+            .map(|&rate| {
+                let items = generate_stream(
+                    rate,
+                    opts.duration_ms,
+                    opts.sessions,
+                    opts.edits,
+                    opts.skew,
+                    &mut rng,
+                );
+                (rate, items)
+            })
+            .collect(),
+    };
+
+    if let Some(path) = &opts.emit_workload {
+        let mut all = String::new();
+        for (_, items) in &steps_in {
+            all.push_str(&workload_to_jsonl(items));
+        }
+        std::fs::write(path, all).map_err(|e| format!("write {}: {e}", path.display()))?;
+    }
+
+    let mut steps = Vec::new();
+    for (rate, items) in &steps_in {
+        // A fresh connection per step keeps req-id spaces disjoint and
+        // drops any stragglers from the previous step on the floor.
+        let step = run_step(&addr, items, &m_norms, *rate, opts.duration_ms)?;
+        steps.push(step);
+    }
+
+    // Teardown (unmeasured).
+    for sid in 0..opts.sessions as u64 {
+        let _ = client.call(&Request::Close { session: sid + 1 });
+    }
+    if let Some(s) = server {
+        let _ = client.call(&Request::Shutdown);
+        s.wait();
+    }
+
+    let base = steps.first().ok_or("no rate steps ran")?;
+    let saturation = steps.iter().map(|s| s.achieved_rps).fold(0.0f64, f64::max);
+
+    let mut doc = BTreeMap::new();
+    doc.insert("schema".to_string(), Json::Str("wbpr/bench_serve/v1".to_string()));
+    doc.insert("addr".to_string(), Json::Str(addr));
+    doc.insert("self_serve".to_string(), Json::Bool(opts.addr.is_none()));
+    doc.insert("sessions".to_string(), Json::Num(opts.sessions as f64));
+    doc.insert("graph_n".to_string(), Json::Num(opts.n as f64));
+    doc.insert("graph_m".to_string(), Json::Num(opts.m as f64));
+    doc.insert("edits_per_update".to_string(), Json::Num(opts.edits as f64));
+    doc.insert("duration_ms_per_step".to_string(), Json::Num(opts.duration_ms as f64));
+    doc.insert("skew".to_string(), Json::Num(opts.skew));
+    doc.insert("seed".to_string(), Json::Num(opts.seed as f64));
+    doc.insert("p50_ms".to_string(), Json::Num(base.p50_ms));
+    doc.insert("p99_ms".to_string(), Json::Num(base.p99_ms));
+    doc.insert("p999_ms".to_string(), Json::Num(base.p999_ms));
+    doc.insert("saturation_rps".to_string(), Json::Num(saturation));
+    doc.insert(
+        "steps".to_string(),
+        Json::Arr(steps.iter().map(step_to_json).collect()),
+    );
+    Ok(Json::Obj(doc))
+}
+
+fn step_to_json(s: &StepResult) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("rate_rps".to_string(), Json::Num(s.rate_rps));
+    o.insert("sent".to_string(), Json::Num(s.sent as f64));
+    o.insert("ok".to_string(), Json::Num(s.ok as f64));
+    o.insert("overloaded".to_string(), Json::Num(s.overloaded as f64));
+    o.insert("errors".to_string(), Json::Num(s.errors as f64));
+    o.insert("lost".to_string(), Json::Num(s.lost as f64));
+    o.insert("achieved_rps".to_string(), Json::Num(s.achieved_rps));
+    o.insert("p50_ms".to_string(), Json::Num(s.p50_ms));
+    o.insert("p99_ms".to_string(), Json::Num(s.p99_ms));
+    o.insert("p999_ms".to_string(), Json::Num(s.p999_ms));
+    o.insert("mean_ms".to_string(), Json::Num(s.mean_ms));
+    o.insert("max_ms".to_string(), Json::Num(s.max_ms));
+    Json::Obj(o)
+}
+
+/// Render the human-readable summary table for the CLI.
+pub fn render(doc: &Json) -> String {
+    let mut out = String::new();
+    out.push_str("## bench serve — open-loop latency under offered load\n\n");
+    out.push_str("| rate (rps) | sent | ok | overloaded | errors | lost | achieved (rps) | p50 (ms) | p99 (ms) | p999 (ms) |\n");
+    out.push_str("|---:|---:|---:|---:|---:|---:|---:|---:|---:|---:|\n");
+    let num = |v: &Json, k: &str| v.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+    if let Some(steps) = doc.get("steps").and_then(Json::as_arr) {
+        for s in steps {
+            out.push_str(&format!(
+                "| {:.0} | {:.0} | {:.0} | {:.0} | {:.0} | {:.0} | {:.1} | {:.2} | {:.2} | {:.2} |\n",
+                num(s, "rate_rps"),
+                num(s, "sent"),
+                num(s, "ok"),
+                num(s, "overloaded"),
+                num(s, "errors"),
+                num(s, "lost"),
+                num(s, "achieved_rps"),
+                num(s, "p50_ms"),
+                num(s, "p99_ms"),
+                num(s, "p999_ms"),
+            ));
+        }
+    }
+    out.push_str(&format!(
+        "\nheadline: p50 {:.2} ms · p99 {:.2} ms · p999 {:.2} ms · saturation {:.1} rps\n",
+        num(doc, "p50_ms"),
+        num(doc, "p99_ms"),
+        num(doc, "p999_ms"),
+        num(doc, "saturation_rps"),
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_stream_is_sorted_and_roughly_at_rate() {
+        let mut rng = Rng::new(7);
+        let items = generate_stream(200.0, 5000, 4, 8, 0.0, &mut rng);
+        // 200 rps for 5 s ≈ 1000 items; allow wide slack (it's random).
+        assert!((600..=1400).contains(&items.len()), "{} items", items.len());
+        for w in items.windows(2) {
+            assert!(w[0].t_ms <= w[1].t_ms, "arrival times must be sorted");
+        }
+        assert!(items.iter().all(|it| it.session < 4));
+    }
+
+    #[test]
+    fn skewed_stream_concentrates_on_low_sessions() {
+        let mut rng = Rng::new(11);
+        let items = generate_stream(500.0, 4000, 16, 4, 1.2, &mut rng);
+        let hot = items.iter().filter(|it| it.session == 0).count();
+        assert!(hot * 4 > items.len(), "zipf 1.2 should send >25% to session 0");
+    }
+
+    #[test]
+    fn workload_jsonl_roundtrips() {
+        let mut rng = Rng::new(3);
+        let items = generate_stream(100.0, 1000, 4, 8, 0.0, &mut rng);
+        let text = workload_to_jsonl(&items);
+        let back = workload_from_jsonl(&text).unwrap();
+        assert_eq!(items.len(), back.len());
+        for (a, b) in items.iter().zip(&back) {
+            assert_eq!(a.session, b.session);
+            assert_eq!(a.edits, b.edits);
+            assert!((a.t_ms - b.t_ms).abs() < 1e-6);
+            // Seeds are masked to 2^53 at generation exactly so this
+            // holds through the f64 JSON representation.
+            assert_eq!(a.seed, b.seed);
+        }
+    }
+
+    #[test]
+    fn batches_are_deterministic_and_in_range() {
+        let a = build_batch(123, 16, 50);
+        let b = build_batch(123, 16, 50);
+        assert_eq!(a, b);
+        assert_eq!(a.updates.len(), 16);
+        for u in &a.updates {
+            match *u {
+                GraphUpdate::IncreaseCap { edge, delta } => {
+                    assert!(edge < 50 && (1..=4).contains(&delta));
+                }
+                GraphUpdate::DecreaseCap { edge, delta } => {
+                    assert!(edge < 50 && delta == 1);
+                }
+                ref other => panic!("unexpected update {other:?}"),
+            }
+        }
+    }
+}

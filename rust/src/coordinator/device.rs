@@ -36,14 +36,17 @@ pub struct DeviceEngine {
 }
 
 impl DeviceEngine {
+    /// Engine over an already-initialized runtime.
     pub fn new(runtime: Runtime) -> DeviceEngine {
         DeviceEngine { runtime, global_relabel: true, device_relabel: false }
     }
 
+    /// Engine over the default on-disk artifact location.
     pub fn from_default_location() -> Result<DeviceEngine> {
         Ok(DeviceEngine::new(Runtime::from_default_location()?))
     }
 
+    /// Borrow the underlying runtime.
     pub fn runtime(&self) -> &Runtime {
         &self.runtime
     }

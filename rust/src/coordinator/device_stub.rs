@@ -14,19 +14,24 @@ use crate::runtime::{Runtime, VariantSpec};
 /// Stubbed device engine; see the real module for the actual loop.
 pub struct DeviceEngine {
     runtime: Runtime,
+    /// Mirror of the real engine's host-side global-relabel toggle.
     pub global_relabel: bool,
+    /// Mirror of the real engine's on-device relabel toggle.
     pub device_relabel: bool,
 }
 
 impl DeviceEngine {
+    /// Wrap a runtime (manifest-only operations still work).
     pub fn new(runtime: Runtime) -> DeviceEngine {
         DeviceEngine { runtime, global_relabel: true, device_relabel: false }
     }
 
+    /// Always fails: the `device` feature is compiled out.
     pub fn from_default_location() -> Result<DeviceEngine, String> {
         Err(DEVICE_DISABLED.to_string())
     }
 
+    /// Borrow the wrapped runtime.
     pub fn runtime(&self) -> &Runtime {
         &self.runtime
     }
@@ -38,6 +43,7 @@ impl DeviceEngine {
         self.runtime.pick(g.n, max_deg)
     }
 
+    /// Always fails: the `device` feature is compiled out.
     pub fn solve(&mut self, _g: &ArcGraph) -> Result<FlowResult, String> {
         Err(DEVICE_DISABLED.to_string())
     }

@@ -8,13 +8,17 @@ use std::sync::Mutex;
 /// One engine's accumulated metrics.
 #[derive(Debug, Clone)]
 pub struct EngineMetrics {
+    /// Jobs completed successfully.
     pub jobs: u64,
+    /// Jobs that returned an error.
     pub failures: u64,
+    /// Streaming mean/std of job latency in milliseconds.
     pub latency_ms: Welford,
     /// Fixed-bucket latency histogram (the [`Histogram::latency`] preset)
     /// backing the p50/p99/p999 the table and the Prometheus exposition
     /// report — a Welford mean/std cannot see the tail.
     pub latency_hist: Histogram,
+    /// Sum of flow values returned by this engine's jobs.
     pub total_value: i64,
     /// Auto-tuned global-relabel alpha samples (one per host step of each
     /// solve this engine served) — the trajectory, not just a final
@@ -46,6 +50,7 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Empty registry.
     pub fn new() -> Metrics {
         Metrics::default()
     }

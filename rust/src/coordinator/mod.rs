@@ -24,6 +24,14 @@
 //! * [`server`] — the leader event loop: worker threads, job queue,
 //!   result collection, metrics.
 //! * [`metrics`] — counters + latency summaries + serving-policy events.
+//! * [`wire`] — the length-prefixed binary protocol remote clients speak
+//!   (versioned header, framed request/response, decode errors surfaced
+//!   instead of panicked).
+//! * [`net`] — the TCP front door (`serve --listen`): an async-free
+//!   accept loop + per-connection reader/writer threads feeding the
+//!   coordinator, with shard admission control answering `Overloaded`
+//!   under load.
+#![warn(missing_docs)]
 
 pub mod batcher;
 #[cfg(feature = "device")]
@@ -34,12 +42,16 @@ pub mod device;
 #[path = "device_stub.rs"]
 pub mod device;
 pub mod metrics;
+pub mod net;
 pub mod router;
 pub mod server;
 pub mod session;
 pub mod shard;
+pub mod wire;
 
+pub use net::{Client, NetServer};
 pub use router::{Route, Router, RouterConfig, UpdateRoute};
-pub use server::{Coordinator, CoordinatorConfig, Job, JobOutput};
+pub use server::{Admission, Coordinator, CoordinatorConfig, Job, JobOutput};
+pub use server::{OVERLOAD_ERROR_PREFIX, SESSION_ID_AUTO_BASE};
 pub use session::{SessionConfig, SessionManager};
-pub use shard::{jump_hash, SessionShardPool, ShardPoolConfig};
+pub use shard::{jump_hash, SessionShardPool, ShardPoolConfig, Shed};

@@ -1,0 +1,441 @@
+//! Async-free TCP serving surface in front of the [`Coordinator`].
+//!
+//! `serve --listen addr` turns the in-process coordinator into a network
+//! service speaking the [`super::wire`] protocol. The design is plain
+//! threads + channels — no async runtime, matching the rest of the repo:
+//!
+//! ```text
+//!            accept thread (nonblocking listener, stop-flag poll)
+//!                 │ spawns per connection
+//!   ┌─────────────┴─────────────┐
+//!   reader thread            writer thread
+//!   (decode frames)          (encode frames)
+//!       │ Ingress::Request        ▲ (req_id, Response) channel
+//!       ▼                         │
+//!            pump thread — sole owner of the Coordinator
+//!            · maps req_id → job via Coordinator::try_submit
+//!            · drains JobOutputs back to the owning connection
+//!            · answers Overloaded when admission control sheds
+//! ```
+//!
+//! A single **pump** thread owns the [`Coordinator`] outright (its mpsc
+//! endpoints never need to be shared across threads), multiplexing two
+//! directions: ingress requests from all connection readers, and
+//! finished [`super::server::JobOutput`]s back to whichever connection
+//! issued them. Job-id → (connection, request-id) bookkeeping lives only
+//! on this thread, so no locks guard it.
+//!
+//! Responses are written by a dedicated writer thread per connection, so
+//! one slow client stalls only its own socket, never the pump. Requests
+//! from one connection are *submitted* in order but may *complete* in any
+//! order — clients correlate on `req_id`.
+//!
+//! Backpressure is the shard admission control wired through
+//! [`Coordinator::try_submit`]: over-bound session jobs come back as
+//! [`Response::Overloaded`] (immediate shed) or complete with an
+//! `overloaded:` error mapped to the same frame (queue-with-deadline).
+//! See [`super::shard::ShardPoolConfig`] and OPERATIONS.md.
+
+use super::metrics::Metrics;
+use super::server::{Admission, Coordinator, CoordinatorConfig, Job, JobOutput};
+use super::server::{OVERLOAD_ERROR_PREFIX, SESSION_ID_AUTO_BASE};
+use super::wire::{self, Request, Response, WireError};
+use std::collections::HashMap;
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// How long a connection reader blocks in `read` before re-checking the
+/// server stop flag. Bounds shutdown latency, not request latency.
+const READ_POLL: Duration = Duration::from_millis(50);
+/// Accept-loop sleep between polls of the nonblocking listener.
+const ACCEPT_POLL: Duration = Duration::from_millis(10);
+/// Pump-loop ingress wait per iteration (the loop alternates between the
+/// ingress channel and draining coordinator outputs).
+const PUMP_POLL: Duration = Duration::from_micros(500);
+
+/// Response channel into one connection's writer thread (client
+/// `req_id` + the frame body to encode).
+type RespTx = mpsc::Sender<(u64, Response)>;
+
+/// Everything connection threads feed the pump.
+enum Ingress {
+    /// A new connection: register its response channel.
+    Connected { conn: u64, tx: RespTx },
+    /// A decoded request from connection `conn`.
+    Request { conn: u64, req_id: u64, req: Request },
+    /// Connection `conn`'s reader exited; forget its channel.
+    Disconnected { conn: u64 },
+    /// Stop serving (from [`NetServer::stop`] or a `Shutdown` frame).
+    Stop,
+}
+
+/// The running TCP server: listener + per-connection threads + the pump
+/// that owns the coordinator. Construct with [`NetServer::start`], end
+/// with [`NetServer::stop`] (initiate shutdown) or [`NetServer::wait`]
+/// (block until a client sends `Shutdown`).
+pub struct NetServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    ingress: mpsc::Sender<Ingress>,
+    metrics: Arc<Metrics>,
+    accept_handle: Option<JoinHandle<()>>,
+    pump_handle: Option<JoinHandle<Arc<Metrics>>>,
+}
+
+impl NetServer {
+    /// Bind `listen` (e.g. `127.0.0.1:7070`; port `0` picks a free port
+    /// — read the result from [`NetServer::addr`]), start a
+    /// [`Coordinator`] with `config`, and begin accepting connections.
+    pub fn start(listen: &str, config: CoordinatorConfig) -> io::Result<NetServer> {
+        let listener = TcpListener::bind(listen)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+
+        let coordinator = Coordinator::start(config);
+        let metrics = coordinator.metrics_handle();
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx_ingress, rx_ingress) = mpsc::channel::<Ingress>();
+
+        let pump_stop = stop.clone();
+        let pump_handle = std::thread::Builder::new()
+            .name("wbpr-serve-pump".into())
+            .spawn(move || pump(coordinator, rx_ingress, pump_stop))
+            .expect("spawn serve pump");
+
+        let accept_stop = stop.clone();
+        let accept_ingress = tx_ingress.clone();
+        let accept_metrics = metrics.clone();
+        let accept_handle = std::thread::Builder::new()
+            .name("wbpr-serve-accept".into())
+            .spawn(move || accept_loop(listener, accept_ingress, accept_stop, accept_metrics))
+            .expect("spawn serve accept loop");
+
+        Ok(NetServer {
+            addr,
+            stop,
+            ingress: tx_ingress,
+            metrics,
+            accept_handle: Some(accept_handle),
+            pump_handle: Some(pump_handle),
+        })
+    }
+
+    /// The bound address (resolves port `0` to the actual port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Shared handle to the live metrics registry (what the
+    /// `--metrics-path` exporter thread scrapes while serving).
+    pub fn metrics_handle(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+
+    /// Initiate shutdown from this process: stop accepting, let in-flight
+    /// jobs finish, join everything. Returns the final metrics registry.
+    pub fn stop(mut self) -> Arc<Metrics> {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = self.ingress.send(Ingress::Stop);
+        self.join()
+    }
+
+    /// Block until a client asks for shutdown (a `Shutdown` frame) and
+    /// everything drains. Returns the final metrics registry.
+    pub fn wait(mut self) -> Arc<Metrics> {
+        self.join()
+    }
+
+    fn join(&mut self) -> Arc<Metrics> {
+        let metrics = match self.pump_handle.take() {
+            Some(h) => h.join().expect("serve pump panicked"),
+            None => self.metrics.clone(),
+        };
+        // The pump sets the stop flag on its way out (Shutdown-frame
+        // path), so the accept thread is already unblocking.
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        metrics
+    }
+}
+
+/// Accept loop: nonblocking listener polled against the stop flag; each
+/// connection gets a reader and a writer thread.
+fn accept_loop(
+    listener: TcpListener,
+    ingress: mpsc::Sender<Ingress>,
+    stop: Arc<AtomicBool>,
+    metrics: Arc<Metrics>,
+) {
+    let next_conn = AtomicU64::new(1);
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                metrics.bump("serve:connections");
+                let conn = next_conn.fetch_add(1, Ordering::Relaxed);
+                if spawn_connection(conn, stream, &ingress, &stop, &metrics).is_err() {
+                    // Setup failed (try_clone/timeout): drop the socket.
+                    continue;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => std::thread::sleep(ACCEPT_POLL),
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => break,
+        }
+    }
+}
+
+/// Start the two threads for one accepted connection.
+fn spawn_connection(
+    conn: u64,
+    stream: TcpStream,
+    ingress: &mpsc::Sender<Ingress>,
+    stop: &Arc<AtomicBool>,
+    metrics: &Arc<Metrics>,
+) -> io::Result<()> {
+    let _ = stream.set_nodelay(true);
+    stream.set_read_timeout(Some(READ_POLL))?;
+    let write_half = stream.try_clone()?;
+    let (tx_resp, rx_resp) = mpsc::channel();
+    if ingress.send(Ingress::Connected { conn, tx: tx_resp.clone() }).is_err() {
+        return Err(io::Error::new(io::ErrorKind::NotConnected, "pump gone"));
+    }
+
+    std::thread::Builder::new()
+        .name(format!("wbpr-serve-w{conn}"))
+        .spawn(move || writer_loop(write_half, rx_resp))
+        .expect("spawn connection writer");
+
+    let ingress = ingress.clone();
+    let stop = stop.clone();
+    let metrics = metrics.clone();
+    std::thread::Builder::new()
+        .name(format!("wbpr-serve-r{conn}"))
+        .spawn(move || {
+            reader_loop(conn, stream, &ingress, &stop, &metrics, tx_resp);
+            let _ = ingress.send(Ingress::Disconnected { conn });
+        })
+        .expect("spawn connection reader");
+    Ok(())
+}
+
+/// Decode frames off one socket until EOF, a framing error, or server
+/// stop. Framing errors are answered (req_id 0) and the connection is
+/// closed — after a malformed frame the stream cannot be resynced.
+fn reader_loop(
+    conn: u64,
+    mut stream: TcpStream,
+    ingress: &mpsc::Sender<Ingress>,
+    stop: &Arc<AtomicBool>,
+    metrics: &Arc<Metrics>,
+    tx_resp: RespTx,
+) {
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        match wire::read_request(&mut stream) {
+            Ok((req_id, req)) => {
+                metrics.bump("serve:requests");
+                if ingress.send(Ingress::Request { conn, req_id, req }).is_err() {
+                    return; // pump gone: server shutting down
+                }
+            }
+            Err(WireError::TimedOut) => {} // idle: re-check the stop flag
+            Err(WireError::Closed) => return,
+            Err(e) => {
+                // Malformed frame: tell the client why, then hang up.
+                metrics.bump("serve:bad_frame");
+                let _ = tx_resp.send((0, Response::Error { msg: format!("protocol error: {e}") }));
+                // Give the writer a moment to flush before the socket
+                // drops on both halves.
+                std::thread::sleep(Duration::from_millis(20));
+                return;
+            }
+        }
+    }
+}
+
+/// Serialize responses onto one socket. Exits when every sender (pump
+/// registry + reader) is gone or the peer stops reading.
+fn writer_loop(mut stream: TcpStream, rx: mpsc::Receiver<(u64, Response)>) {
+    while let Ok((req_id, resp)) = rx.recv() {
+        if wire::write_response(&mut stream, req_id, &resp).is_err() {
+            return;
+        }
+    }
+}
+
+/// The pump: sole owner of the [`Coordinator`]. Alternates between
+/// admitting ingress requests and delivering finished jobs, and performs
+/// the graceful drain on shutdown (stop accepting, finish in-flight
+/// jobs, then [`Coordinator::shutdown`]).
+fn pump(
+    coordinator: Coordinator,
+    rx: mpsc::Receiver<Ingress>,
+    stop: Arc<AtomicBool>,
+) -> Arc<Metrics> {
+    let mut conns: HashMap<u64, RespTx> = HashMap::new();
+    // job id -> (connection, client req_id): the only correlation state,
+    // confined to this thread.
+    let mut pending: HashMap<u64, (u64, u64)> = HashMap::new();
+    let mut stopping = false;
+    loop {
+        match rx.recv_timeout(PUMP_POLL) {
+            Ok(msg) => {
+                handle_ingress(&coordinator, msg, &mut conns, &mut pending, &stop, &mut stopping);
+                // Drain whatever queued behind the first message.
+                while let Ok(msg) = rx.try_recv() {
+                    handle_ingress(
+                        &coordinator,
+                        msg,
+                        &mut conns,
+                        &mut pending,
+                        &stop,
+                        &mut stopping,
+                    );
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => stopping = true,
+        }
+        while let Some(out) = coordinator.recv_timeout(Duration::ZERO) {
+            deliver(out, &conns, &mut pending);
+        }
+        if stopping && pending.is_empty() {
+            break;
+        }
+    }
+    drop(conns); // writer threads exit once their senders are gone
+    coordinator.shutdown()
+}
+
+/// Route one ingress message on the pump thread.
+fn handle_ingress(
+    coordinator: &Coordinator,
+    msg: Ingress,
+    conns: &mut HashMap<u64, RespTx>,
+    pending: &mut HashMap<u64, (u64, u64)>,
+    stop: &Arc<AtomicBool>,
+    stopping: &mut bool,
+) {
+    match msg {
+        Ingress::Connected { conn, tx } => {
+            conns.insert(conn, tx);
+        }
+        Ingress::Disconnected { conn } => {
+            conns.remove(&conn);
+            // Jobs already in flight for this connection finish and are
+            // dropped at delivery time (their channel is gone).
+        }
+        Ingress::Stop => *stopping = true,
+        Ingress::Request { conn, req_id, req } => {
+            let job = match req {
+                Request::Ping => {
+                    reply_to(conns, conn, req_id, Response::Pong);
+                    return;
+                }
+                Request::Shutdown => {
+                    reply_to(conns, conn, req_id, Response::Pong);
+                    // Stop the accept/reader threads now; the pump loop
+                    // drains in-flight jobs before tearing down.
+                    stop.store(true, Ordering::SeqCst);
+                    *stopping = true;
+                    return;
+                }
+                Request::Open { session, net } => {
+                    if session >= SESSION_ID_AUTO_BASE {
+                        // Coordinator::submit would panic on this id; a
+                        // remote peer's mistake must fail soft instead.
+                        let msg =
+                            format!("session id {session} reserved (must be below 1 << 63)");
+                        reply_to(conns, conn, req_id, Response::Error { msg });
+                        return;
+                    }
+                    Job::SessionOpen { session, net }
+                }
+                Request::Update { session, batch } => Job::SessionUpdate { session, batch },
+                Request::Close { session } => Job::SessionClose { session },
+                Request::Solve { net } => Job::MaxFlowAuto { net },
+            };
+            match coordinator.try_submit(job) {
+                Admission::Accepted(id) => {
+                    pending.insert(id, (conn, req_id));
+                }
+                Admission::Shed { shard, depth } => {
+                    let msg = format!(
+                        "{OVERLOAD_ERROR_PREFIX}: shard {shard} queue depth {depth} over \
+                         bound; retry with backoff"
+                    );
+                    reply_to(conns, conn, req_id, Response::Overloaded { msg });
+                }
+            }
+        }
+    }
+}
+
+/// Send a response to one connection's writer (a vanished connection is
+/// not an error — its jobs just have nowhere to land).
+fn reply_to(conns: &HashMap<u64, RespTx>, conn: u64, req_id: u64, resp: Response) {
+    if let Some(tx) = conns.get(&conn) {
+        let _ = tx.send((req_id, resp));
+    }
+}
+
+/// Send one finished job back to the connection that asked for it.
+fn deliver(out: JobOutput, conns: &HashMap<u64, RespTx>, pending: &mut HashMap<u64, (u64, u64)>) {
+    let Some((conn, req_id)) = pending.remove(&out.id) else {
+        return; // job finished but nobody asked over the wire (e.g. demo path)
+    };
+    let resp = match out.result {
+        Ok(v) => Response::Value { value: v.value, engine: v.engine, ms: v.ms },
+        // Deadline sheds complete "with an error" whose prefix marks
+        // them as load, not failure — surface them as Overloaded.
+        Err(e) if e.starts_with(OVERLOAD_ERROR_PREFIX) => Response::Overloaded { msg: e },
+        Err(e) => Response::Error { msg: e },
+    };
+    reply_to(conns, conn, req_id, resp);
+}
+
+/// Minimal blocking client for the wire protocol — used by `bench
+/// serve`'s warm-up path, the integration tests, and as the reference
+/// for writing clients in other languages.
+///
+/// One request at a time: [`Client::call`] sends and then reads until
+/// the matching `req_id` comes back (the server may interleave other
+/// ids if earlier calls were abandoned mid-stream). For concurrent /
+/// open-loop traffic, split a [`TcpStream`] with `try_clone` and run
+/// the [`wire`] functions on the two halves directly, as
+/// `bench/serve.rs` does.
+pub struct Client {
+    reader: TcpStream,
+    writer: TcpStream,
+    next_req: u64,
+}
+
+impl Client {
+    /// Connect to a WBPR server at `addr` (e.g. `127.0.0.1:7070`).
+    pub fn connect(addr: &str) -> io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        Ok(Client { writer: stream.try_clone()?, reader: stream, next_req: 1 })
+    }
+
+    /// Send `req`, block until its response arrives, return it.
+    pub fn call(&mut self, req: &Request) -> Result<Response, WireError> {
+        let req_id = self.next_req;
+        self.next_req += 1;
+        wire::write_request(&mut self.writer, req_id, req)
+            .map_err(|e| WireError::Io(e.to_string()))?;
+        loop {
+            let (id, resp) = wire::read_response(&mut self.reader)?;
+            if id == req_id {
+                return Ok(resp);
+            }
+        }
+    }
+}

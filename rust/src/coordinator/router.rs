@@ -14,13 +14,19 @@ pub enum Route {
     /// AOT-compiled XLA executable via PJRT.
     Device(VariantSpec),
     /// In-process parallel engine.
-    Native { kind: EngineKind, rep: Representation },
+    Native {
+        /// Engine discipline (TC / VC / sequential reference).
+        kind: EngineKind,
+        /// Residual-graph representation (RCSR / BCSR).
+        rep: Representation,
+    },
     /// Stateful streaming-update job: pinned to the session worker, which
     /// owns the warm [`crate::dynamic::DynamicFlow`] state per graph.
     Session,
 }
 
 impl Route {
+    /// Human-readable placement label (the metrics engine-label prefix).
     pub fn describe(&self) -> String {
         match self {
             Route::Device(v) => format!("device:{}", v.name),
@@ -93,10 +99,12 @@ impl RouterConfig {
 #[derive(Debug)]
 pub struct Router {
     manifest: Option<Manifest>,
+    /// Live policy knobs (thresholds, device preference, recompute ratio).
     pub config: RouterConfig,
 }
 
 impl Router {
+    /// Router over the AOT variant manifest (if any) and a policy.
     pub fn new(manifest: Option<Manifest>, config: RouterConfig) -> Router {
         Router { manifest, config }
     }

@@ -28,26 +28,58 @@ use std::thread::JoinHandle;
 #[derive(Debug, Clone)]
 pub enum Job {
     /// Max-flow with explicit engine choice.
-    MaxFlow { net: FlowNetwork, kind: EngineKind, rep: Representation },
+    MaxFlow {
+        /// The flow network to solve.
+        net: FlowNetwork,
+        /// Engine discipline to use.
+        kind: EngineKind,
+        /// Residual representation to use.
+        rep: Representation,
+    },
     /// Max-flow, placement decided by the router (device if it fits).
-    MaxFlowAuto { net: FlowNetwork },
+    MaxFlowAuto {
+        /// The flow network to solve.
+        net: FlowNetwork,
+    },
     /// Bipartite matching through the flow pipeline.
-    Matching { graph: BipartiteGraph, kind: EngineKind, rep: Representation },
+    Matching {
+        /// The bipartite graph to match.
+        graph: BipartiteGraph,
+        /// Engine discipline to use.
+        kind: EngineKind,
+        /// Residual representation to use.
+        rep: Representation,
+    },
     /// Open a warm streaming session over `net` (id chosen by the caller,
     /// below `1 << 63` to stay clear of [`Coordinator::open_session`]'s
     /// range; result value = initial max flow).
-    SessionOpen { session: u64, net: FlowNetwork },
+    SessionOpen {
+        /// Caller-chosen session id (`< 1 << 63`).
+        session: u64,
+        /// The network the session keeps warm.
+        net: FlowNetwork,
+    },
     /// Apply an update batch to a warm session (result value = repaired
     /// max flow).
-    SessionUpdate { session: u64, batch: UpdateBatch },
+    SessionUpdate {
+        /// Session to update.
+        session: u64,
+        /// Capacity/topology edits to apply.
+        batch: UpdateBatch,
+    },
     /// Close a session (result value = final max flow).
-    SessionClose { session: u64 },
+    SessionClose {
+        /// Session to close.
+        session: u64,
+    },
 }
 
 /// A finished job.
 #[derive(Debug)]
 pub struct JobOutput {
+    /// Id returned by [`Coordinator::submit`] for this job.
     pub id: u64,
+    /// Value on success, human-readable cause on failure.
     pub result: Result<JobValue, String>,
 }
 
@@ -65,9 +97,13 @@ pub struct JobValue {
 /// Coordinator configuration (see `configs/default.ini`).
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
+    /// Native engine workers sharing one queue (min 1).
     pub native_workers: usize,
+    /// Use the PJRT device worker when AOT artifacts are present.
     pub enable_device: bool,
+    /// Engine options handed to every worker.
     pub solve: SolveOptions,
+    /// Placement policy (device-vs-native, TC-vs-VC, repair-vs-recompute).
     pub router: RouterConfig,
     /// Session shard pool shape + TTL/snapshot policy.
     pub session: ShardPoolConfig,
@@ -88,6 +124,30 @@ impl Default for CoordinatorConfig {
 /// Session ids at or above this value are allocated by
 /// [`Coordinator::open_session`]; caller-chosen ids must stay below it.
 pub const SESSION_ID_AUTO_BASE: u64 = 1 << 63;
+
+/// Error-string prefix marking a job that admission control shed rather
+/// than served (see [`super::shard::ShardPoolConfig::queue_deadline`]).
+/// The wire layer maps job errors carrying this prefix to
+/// [`super::wire::Response::Overloaded`] so remote clients can tell
+/// "retry with backoff" apart from "this request is wrong".
+pub const OVERLOAD_ERROR_PREFIX: &str = "overloaded";
+
+/// Outcome of [`Coordinator::try_submit`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Job accepted; its [`JobOutput`] arrives via [`Coordinator::recv`]
+    /// under this id.
+    Accepted(u64),
+    /// Job shed at the door: the owning shard's queue was over
+    /// [`super::shard::ShardPoolConfig::queue_bound`] and no queue
+    /// deadline is configured. The job was never enqueued.
+    Shed {
+        /// Shard that owns the session.
+        shard: usize,
+        /// Queue depth observed at admission time.
+        depth: usize,
+    },
+}
 
 enum Envelope {
     Work(u64, Job, Timer),
@@ -178,6 +238,7 @@ impl Coordinator {
         self.sessions.as_ref().map_or(0, |s| s.shards())
     }
 
+    /// Borrow the live metrics registry.
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
     }
@@ -189,6 +250,7 @@ impl Coordinator {
         Arc::clone(&self.metrics)
     }
 
+    /// Whether a device worker is running (artifacts found + enabled).
     pub fn has_device(&self) -> bool {
         self.tx_device.is_some()
     }
@@ -240,6 +302,42 @@ impl Coordinator {
         id
     }
 
+    /// Submit with admission control — the wire path ([`super::net`]).
+    ///
+    /// Session jobs go through [`SessionShardPool::try_submit`], which
+    /// enforces the configured per-shard queue bound (shed or
+    /// queue-with-deadline; see [`ShardPoolConfig`]). Non-session jobs
+    /// take the same unbounded native/device queues as
+    /// [`Coordinator::submit`] — the serving surface only fronts the
+    /// session workload, so only that path needs backpressure today.
+    ///
+    /// Panics on caller-chosen session ids `>= 1 << 63`, exactly like
+    /// [`Coordinator::submit`] — wire callers must pre-validate and
+    /// answer with an error frame instead.
+    pub fn try_submit(&self, job: Job) -> Admission {
+        if self.router.place(&job) != Route::Session {
+            return Admission::Accepted(self.submit(job));
+        }
+        if let Job::SessionOpen { session, .. } = &job {
+            assert!(
+                *session < SESSION_ID_AUTO_BASE,
+                "caller-chosen session ids must stay below 1 << 63 (reserved for open_session)"
+            );
+        }
+        let (session, sjob) = match job {
+            Job::SessionOpen { session, net } => (session, SessionJob::Open { net }),
+            Job::SessionUpdate { session, batch } => (session, SessionJob::Update { batch }),
+            Job::SessionClose { session } => (session, SessionJob::Close),
+            other => unreachable!("router placed non-session job on sessions: {other:?}"),
+        };
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let pool = self.sessions.as_ref().expect("not shut down");
+        match pool.try_submit(id, session, sjob, Timer::start()) {
+            Ok(()) => Admission::Accepted(id),
+            Err(shed) => Admission::Shed { shard: shed.shard, depth: shed.depth },
+        }
+    }
+
     /// Convenience: open a session keyed by the id it returns. The
     /// `JobOutput` with this id carries the initial max-flow value, and
     /// the id doubles as the session handle for follow-up updates.
@@ -283,6 +381,7 @@ impl Coordinator {
         self.metrics.clone()
     }
 
+    /// The configuration this coordinator was started with.
     pub fn config(&self) -> &CoordinatorConfig {
         &self.config
     }

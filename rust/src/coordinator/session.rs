@@ -64,9 +64,13 @@ pub struct SessionConfig {
 /// reconcile against.
 #[derive(Debug, Clone, Default)]
 pub struct SessionCounters {
+    /// Warm sessions persisted to disk by TTL eviction.
     pub evictions: u64,
+    /// Evicted sessions transparently restored on their next touch.
     pub rehydrations: u64,
+    /// Update batches served by warm incremental repair.
     pub repairs: u64,
+    /// Update batches served by an index-stable from-scratch re-solve.
     pub recomputes: u64,
 }
 
@@ -139,6 +143,7 @@ pub struct SessionManager {
 }
 
 impl SessionManager {
+    /// Standalone manager with its own worker pool and default policy.
     pub fn new(opts: SolveOptions) -> SessionManager {
         let pool = Arc::new(WorkerPool::with_config(opts.resolved_threads(), &opts.pool_config()));
         SessionManager::with_config(opts, pool, SessionConfig::default())
@@ -273,6 +278,7 @@ impl SessionManager {
         self.sessions.len()
     }
 
+    /// True when no session is warm in memory *or* evicted on disk.
     pub fn is_empty(&self) -> bool {
         self.sessions.is_empty() && self.evicted.is_empty()
     }

@@ -32,9 +32,10 @@ use crate::graph::builder::FlowNetwork;
 use crate::maxflow::{SolveOptions, WorkerPool};
 use crate::util::Timer;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Jump consistent hash (Lamping & Veach, 2014): maps `key` to a bucket in
 /// `0..buckets` such that going from `n` to `n+1` buckets moves only
@@ -69,6 +70,21 @@ struct ShardMsg {
     session: u64,
     job: SessionJob,
     timer: Timer,
+    /// Queue-with-deadline admission: if set and already past when the
+    /// shard dequeues the message, the job is shed instead of served.
+    deadline: Option<Instant>,
+}
+
+/// Why [`SessionShardPool::try_submit`] refused a job: the owning shard's
+/// queue was over [`ShardPoolConfig::queue_bound`] with no deadline
+/// configured. Carried back so the wire layer can answer `Overloaded`
+/// with the shard and observed depth.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shed {
+    /// Shard that owns the session.
+    pub shard: usize,
+    /// Queue depth observed at admission time.
+    pub depth: usize,
 }
 
 /// Shard-pool shape and policy (part of
@@ -82,17 +98,40 @@ pub struct ShardPoolConfig {
     /// Snapshot root; each shard uses `<dir>/shard-<i>`. `None` = a fresh
     /// per-worker temp directory.
     pub snapshot_dir: Option<PathBuf>,
+    /// Admission control: max jobs queued per shard before
+    /// [`SessionShardPool::try_submit`] reacts. `0` = unbounded (the
+    /// in-process [`SessionShardPool::submit`] path always bypasses the
+    /// bound; only `try_submit` — the wire path — enforces it).
+    pub queue_bound: usize,
+    /// What an over-bound `try_submit` does. `None`: shed immediately
+    /// (counted as `serve:shed`). `Some(d)`: accept but stamp the job
+    /// with deadline `now + d`; the shard sheds it unserved if it is
+    /// still queued past the deadline (counted as `serve:deadline_shed`).
+    pub queue_deadline: Option<Duration>,
 }
 
 impl Default for ShardPoolConfig {
     fn default() -> Self {
-        ShardPoolConfig { shards: 1, ttl: None, snapshot_dir: None }
+        ShardPoolConfig {
+            shards: 1,
+            ttl: None,
+            snapshot_dir: None,
+            queue_bound: 0,
+            queue_deadline: None,
+        }
     }
 }
 
 /// N single-owner session workers behind consistent-hash placement.
 pub struct SessionShardPool {
     txs: Vec<mpsc::Sender<ShardMsg>>,
+    /// Per-shard in-flight count (incremented at enqueue, decremented at
+    /// dequeue) — what admission control reads. `std::sync::mpsc` has no
+    /// `len()`, so the pool keeps its own depth gauge.
+    depths: Vec<Arc<AtomicUsize>>,
+    queue_bound: usize,
+    queue_deadline: Option<Duration>,
+    metrics: Arc<Metrics>,
     handles: Vec<JoinHandle<()>>,
 }
 
@@ -109,9 +148,11 @@ impl SessionShardPool {
     ) -> SessionShardPool {
         let sizes = WorkerPool::shard_sizes(solve.resolved_threads(), cfg.shards.max(1));
         let mut txs = Vec::with_capacity(sizes.len());
+        let mut depths = Vec::with_capacity(sizes.len());
         let mut handles = Vec::with_capacity(sizes.len());
         for (i, threads) in sizes.into_iter().enumerate() {
             let (tx, rx) = mpsc::channel::<ShardMsg>();
+            let depth = Arc::new(AtomicUsize::new(0));
             let session_cfg = SessionConfig {
                 ttl: cfg.ttl,
                 snapshot_dir: cfg.snapshot_dir.as_ref().map(|d| d.join(format!("shard-{i}"))),
@@ -120,17 +161,29 @@ impl SessionShardPool {
             let solve = solve.clone();
             let tx_out = tx_out.clone();
             let metrics = metrics.clone();
+            let worker_depth = depth.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("wbpr-session-{i}"))
-                    .spawn(move || shard_worker(rx, tx_out, metrics, solve, threads, session_cfg))
+                    .spawn(move || {
+                        shard_worker(rx, tx_out, metrics, solve, threads, session_cfg, worker_depth)
+                    })
                     .expect("spawn session shard worker"),
             );
             txs.push(tx);
+            depths.push(depth);
         }
-        SessionShardPool { txs, handles }
+        SessionShardPool {
+            txs,
+            depths,
+            queue_bound: cfg.queue_bound,
+            queue_deadline: cfg.queue_deadline,
+            metrics,
+            handles,
+        }
     }
 
+    /// Number of shard workers in the pool.
     pub fn shards(&self) -> usize {
         self.txs.len()
     }
@@ -140,12 +193,61 @@ impl SessionShardPool {
         jump_hash(session, self.txs.len() as u32) as usize
     }
 
-    /// Enqueue a session job on its owning shard.
+    /// Queue depth currently observed on `shard` (admission gauge; also
+    /// handy for tests and introspection).
+    pub fn queue_depth(&self, shard: usize) -> usize {
+        self.depths[shard].load(Ordering::Relaxed)
+    }
+
+    /// Enqueue a session job on its owning shard, bypassing admission
+    /// control (the trusted in-process path — benches, tests, the demo
+    /// loop). Never sheds.
     pub fn submit(&self, job_id: u64, session: u64, job: SessionJob, timer: Timer) {
         let shard = self.shard_of(session);
-        self.txs[shard]
-            .send(ShardMsg { job_id, session, job, timer })
-            .expect("session shard worker alive");
+        self.enqueue(shard, ShardMsg { job_id, session, job, timer, deadline: None });
+    }
+
+    /// Enqueue with admission control (the wire path). With the owning
+    /// shard's queue at or over [`ShardPoolConfig::queue_bound`]:
+    ///
+    /// * no deadline configured — the job is **not** enqueued; the
+    ///   `serve:shed` event is counted and `Err(Shed)` returned so the
+    ///   caller can answer `Overloaded` immediately;
+    /// * a deadline configured — the job is enqueued stamped
+    ///   `now + deadline`; if the shard only reaches it after that
+    ///   instant it is shed there (`serve:deadline_shed`) and the job
+    ///   completes with an `overloaded:` error instead of a value.
+    ///
+    /// With `queue_bound == 0` (or a queue under the bound) this is
+    /// exactly [`SessionShardPool::submit`].
+    pub fn try_submit(
+        &self,
+        job_id: u64,
+        session: u64,
+        job: SessionJob,
+        timer: Timer,
+    ) -> Result<(), Shed> {
+        let shard = self.shard_of(session);
+        let depth = self.queue_depth(shard);
+        let mut deadline = None;
+        if self.queue_bound > 0 && depth >= self.queue_bound {
+            match self.queue_deadline {
+                Some(d) => deadline = Some(Instant::now() + d),
+                None => {
+                    self.metrics.bump("serve:shed");
+                    return Err(Shed { shard, depth });
+                }
+            }
+        }
+        self.enqueue(shard, ShardMsg { job_id, session, job, timer, deadline });
+        Ok(())
+    }
+
+    fn enqueue(&self, shard: usize, msg: ShardMsg) {
+        // Increment before send: a reader racing between send and a
+        // late increment would under-count and over-admit.
+        self.depths[shard].fetch_add(1, Ordering::Relaxed);
+        self.txs[shard].send(msg).expect("session shard worker alive");
     }
 }
 
@@ -168,6 +270,7 @@ fn shard_worker(
     solve: SolveOptions,
     threads: usize,
     cfg: SessionConfig,
+    depth: Arc<AtomicUsize>,
 ) {
     let ttl = cfg.ttl;
     // Shard pools inherit the solve's placement config: with
@@ -191,7 +294,28 @@ fn shard_worker(
                 Err(_) => return,
             },
         };
-        if let Some(ShardMsg { job_id, session, job, timer }) = msg {
+        if let Some(ShardMsg { job_id, session, job, timer, deadline }) = msg {
+            depth.fetch_sub(1, Ordering::Relaxed);
+            // Queue-with-deadline admission: a job that waited past its
+            // deadline is shed *here*, unserved — bounded staleness
+            // instead of an unbounded backlog under overload.
+            if deadline.is_some_and(|dl| Instant::now() > dl) {
+                metrics.bump("serve:deadline_shed");
+                let err = format!(
+                    "{}: queue deadline exceeded after {:.1}ms queued (session {session})",
+                    super::server::OVERLOAD_ERROR_PREFIX,
+                    timer.ms()
+                );
+                super::server::finish(
+                    &tx_out,
+                    &metrics,
+                    job_id,
+                    "session:shed".to_string(),
+                    Err(err),
+                    timer,
+                );
+                continue;
+            }
             let before = mgr.counters().clone();
             let (engine, result) = match job {
                 SessionJob::Open { net } => ("session:open", mgr.open(session, &net)),

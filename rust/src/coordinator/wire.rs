@@ -1,0 +1,669 @@
+//! Length-prefixed binary wire protocol for the serving surface.
+//!
+//! Until this module, a [`super::Job`] could only enter the coordinator
+//! through an in-process function call. `wire` defines the framing that
+//! lets a remote client drive the same job vocabulary over a byte stream
+//! (TCP in practice — see [`super::net`]), following the shape of the
+//! `dataflow-rs` threaded-engine dispatch and the faasten open-loop
+//! gateway: small framed requests, client-chosen correlation ids, and
+//! responses that may arrive out of order.
+//!
+//! ## Frame layout
+//!
+//! Every frame — request or response — is a fixed 20-byte header followed
+//! by a kind-specific payload. All integers are little-endian:
+//!
+//! ```text
+//! offset  size  field     meaning
+//! 0       4     magic     0x57425052 ("WBPR" big-endian mnemonic)
+//! 4       2     version   protocol version, currently 1
+//! 6       1     kind      frame kind tag (see below)
+//! 7       1     flags     reserved, must be 0
+//! 8       8     req_id    client-chosen correlation id, echoed verbatim
+//! 16      4     len       payload byte length (<= MAX_PAYLOAD)
+//! 20      len   payload   kind-specific body
+//! ```
+//!
+//! Request kinds: `1` Ping, `2` Open, `3` Update, `4` Close, `5` Solve,
+//! `6` Shutdown. Response kinds: `0x81` Pong, `0x82` Value, `0x83` Error,
+//! `0x84` Overloaded.
+//!
+//! ## Error handling contract
+//!
+//! Decoding never panics: every malformed input — bad magic, unknown
+//! version or kind, truncated frame, oversized length, or a payload whose
+//! graph fails [`FlowNetwork::validate`] — surfaces as a [`WireError`]
+//! variant the server maps to a clean `Error` response (or a connection
+//! close, for framing errors after which the stream cannot be resynced).
+//! A clean EOF at a frame boundary is [`WireError::Closed`], which is the
+//! normal way a client ends a connection; bytes missing mid-frame are
+//! [`WireError::Truncated`].
+//!
+//! Responses may be interleaved arbitrarily with respect to request
+//! order (the server completes jobs as shards finish them), so clients
+//! must match on `req_id`, never on arrival order.
+
+use crate::dynamic::{GraphUpdate, UpdateBatch};
+use crate::graph::{Edge, FlowNetwork};
+use std::io::{self, Read, Write};
+
+/// Frame magic ("WBPR").
+pub const MAGIC: u32 = 0x5742_5052;
+/// Protocol version this build speaks. A frame with any other version is
+/// rejected with [`WireError::BadVersion`] — no silent downgrade.
+pub const VERSION: u16 = 1;
+/// Header length in bytes (see the module docs for the layout).
+pub const HEADER_LEN: usize = 20;
+/// Maximum payload a peer may send (64 MiB ≈ a 4M-edge network). Larger
+/// lengths are rejected up front with [`WireError::Oversized`] so a
+/// corrupt or hostile length field cannot trigger a huge allocation.
+pub const MAX_PAYLOAD: u32 = 64 << 20;
+
+/// A request frame body: what a client asks the serving loop to do.
+///
+/// `Open`/`Update`/`Close` mirror the warm-session jobs
+/// ([`super::Job::SessionOpen`] and friends); `Solve` is a one-shot
+/// router-placed max-flow ([`super::Job::MaxFlowAuto`]); `Ping` is a
+/// liveness no-op and `Shutdown` asks the server to stop accepting and
+/// drain (both answered with `Pong`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Liveness probe; answered immediately with [`Response::Pong`].
+    Ping,
+    /// Open a warm session over `net` (caller-chosen id, below `1 << 63`).
+    Open {
+        /// Caller-chosen session id (must stay below `1 << 63`).
+        session: u64,
+        /// The flow network the session solves and keeps warm.
+        net: FlowNetwork,
+    },
+    /// Apply an update batch to a warm session.
+    Update {
+        /// Session id the batch applies to.
+        session: u64,
+        /// The edits, applied atomically before one repair pass.
+        batch: UpdateBatch,
+    },
+    /// Close a session (the response carries its final flow value).
+    Close {
+        /// Session id to drop.
+        session: u64,
+    },
+    /// One-shot max-flow, placement decided by the router.
+    Solve {
+        /// The flow network to solve.
+        net: FlowNetwork,
+    },
+    /// Ask the server to stop accepting, drain in-flight jobs, and exit.
+    Shutdown,
+}
+
+impl Request {
+    /// Wire kind tag for this request.
+    pub fn kind(&self) -> u8 {
+        match self {
+            Request::Ping => 1,
+            Request::Open { .. } => 2,
+            Request::Update { .. } => 3,
+            Request::Close { .. } => 4,
+            Request::Solve { .. } => 5,
+            Request::Shutdown => 6,
+        }
+    }
+}
+
+/// A response frame body.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// Answer to `Ping`/`Shutdown`.
+    Pong,
+    /// A finished job.
+    Value {
+        /// Max-flow value (or matching size) the job produced.
+        value: i64,
+        /// Engine label that served the job (e.g. `session:update`).
+        engine: String,
+        /// Server-side end-to-end latency (queue + solve), ms.
+        ms: f64,
+    },
+    /// The job failed (unknown session, engine error, bad request, ...).
+    Error {
+        /// Human-readable failure description.
+        msg: String,
+    },
+    /// The job was shed by admission control: the owning shard's queue was
+    /// over `--queue-bound` (immediate shed), or the job waited past
+    /// `--queue-deadline-ms`. The work was **not** done; clients may
+    /// retry with backoff.
+    Overloaded {
+        /// What was over its bound (shard index, depth, deadline).
+        msg: String,
+    },
+}
+
+impl Response {
+    /// Wire kind tag for this response.
+    pub fn kind(&self) -> u8 {
+        match self {
+            Response::Pong => 0x81,
+            Response::Value { .. } => 0x82,
+            Response::Error { .. } => 0x83,
+            Response::Overloaded { .. } => 0x84,
+        }
+    }
+}
+
+/// Everything that can go wrong decoding a frame. Decoding is total: all
+/// of these are returned, never panicked.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireError {
+    /// The peer closed the stream cleanly at a frame boundary.
+    Closed,
+    /// A read timed out before the first byte of a frame arrived (the
+    /// caller may re-check its stop flag and try again).
+    TimedOut,
+    /// The stream ended (or a length field overran the buffer) mid-frame.
+    Truncated,
+    /// First four bytes were not [`MAGIC`] — not a WBPR stream.
+    BadMagic(u32),
+    /// Unsupported protocol version.
+    BadVersion(u16),
+    /// Unknown frame kind for the decoder that read it.
+    BadKind(u8),
+    /// Payload length exceeds [`MAX_PAYLOAD`].
+    Oversized(u32),
+    /// The payload parsed but its contents were invalid (bad UTF-8, a
+    /// graph failing validation, an unknown update tag, ...).
+    BadPayload(String),
+    /// An underlying I/O error other than timeout/EOF.
+    Io(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Closed => write!(f, "connection closed"),
+            WireError::TimedOut => write!(f, "read timed out"),
+            WireError::Truncated => write!(f, "truncated frame"),
+            WireError::BadMagic(m) => write!(f, "bad magic 0x{m:08x} (not a WBPR stream)"),
+            WireError::BadVersion(v) => {
+                write!(f, "unsupported protocol version {v} (this build speaks {VERSION})")
+            }
+            WireError::BadKind(k) => write!(f, "unknown frame kind 0x{k:02x}"),
+            WireError::Oversized(n) => {
+                write!(f, "payload length {n} exceeds the {MAX_PAYLOAD}-byte cap")
+            }
+            WireError::BadPayload(e) => write!(f, "bad payload: {e}"),
+            WireError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------- encode
+
+fn put_u16(out: &mut Vec<u8>, x: u16) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, x: u32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, x: u64) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_i64(out: &mut Vec<u8>, x: i64) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_net(out: &mut Vec<u8>, net: &FlowNetwork) {
+    put_u32(out, net.n as u32);
+    put_u32(out, net.s);
+    put_u32(out, net.t);
+    put_str(out, &net.name);
+    put_u32(out, net.edges.len() as u32);
+    for e in &net.edges {
+        put_u32(out, e.u);
+        put_u32(out, e.v);
+        put_i64(out, e.cap);
+    }
+}
+
+fn put_batch(out: &mut Vec<u8>, batch: &UpdateBatch) {
+    put_u32(out, batch.updates.len() as u32);
+    for up in &batch.updates {
+        match *up {
+            GraphUpdate::IncreaseCap { edge, delta } => {
+                out.push(1);
+                put_u64(out, edge as u64);
+                put_i64(out, delta);
+            }
+            GraphUpdate::DecreaseCap { edge, delta } => {
+                out.push(2);
+                put_u64(out, edge as u64);
+                put_i64(out, delta);
+            }
+            GraphUpdate::InsertEdge { u, v, cap } => {
+                out.push(3);
+                put_u32(out, u);
+                put_u32(out, v);
+                put_i64(out, cap);
+            }
+            GraphUpdate::DeleteEdge { edge } => {
+                out.push(4);
+                put_u64(out, edge as u64);
+            }
+        }
+    }
+}
+
+fn frame(kind: u8, req_id: u64, payload: Vec<u8>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    put_u32(&mut out, MAGIC);
+    put_u16(&mut out, VERSION);
+    out.push(kind);
+    out.push(0); // flags, reserved
+    put_u64(&mut out, req_id);
+    put_u32(&mut out, payload.len() as u32);
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Encode one request frame (header + payload) ready to write.
+pub fn encode_request(req_id: u64, req: &Request) -> Vec<u8> {
+    let mut p = Vec::new();
+    match req {
+        Request::Ping | Request::Shutdown => {}
+        Request::Open { session, net } => {
+            put_u64(&mut p, *session);
+            put_net(&mut p, net);
+        }
+        Request::Update { session, batch } => {
+            put_u64(&mut p, *session);
+            put_batch(&mut p, batch);
+        }
+        Request::Close { session } => put_u64(&mut p, *session),
+        Request::Solve { net } => put_net(&mut p, net),
+    }
+    frame(req.kind(), req_id, p)
+}
+
+/// Encode one response frame (header + payload) ready to write.
+pub fn encode_response(req_id: u64, resp: &Response) -> Vec<u8> {
+    let mut p = Vec::new();
+    match resp {
+        Response::Pong => {}
+        Response::Value { value, engine, ms } => {
+            put_i64(&mut p, *value);
+            put_u64(&mut p, ms.to_bits());
+            put_str(&mut p, engine);
+        }
+        Response::Error { msg } | Response::Overloaded { msg } => put_str(&mut p, msg),
+    }
+    frame(resp.kind(), req_id, p)
+}
+
+/// Write one request frame to `w` (a convenience over [`encode_request`]).
+pub fn write_request(w: &mut impl Write, req_id: u64, req: &Request) -> io::Result<()> {
+    w.write_all(&encode_request(req_id, req))
+}
+
+/// Write one response frame to `w`.
+pub fn write_response(w: &mut impl Write, req_id: u64, resp: &Response) -> io::Result<()> {
+    w.write_all(&encode_response(req_id, resp))
+}
+
+// ---------------------------------------------------------------- decode
+
+/// Bounds-checked payload reader: every accessor returns
+/// [`WireError::Truncated`] instead of slicing past the end.
+struct Dec<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.i + n > self.b.len() {
+            return Err(WireError::Truncated);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+    }
+
+    fn i64(&mut self) -> Result<i64, WireError> {
+        Ok(self.u64()? as i64)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn str(&mut self) -> Result<String, WireError> {
+        let n = self.u32()? as usize;
+        let s = self.take(n)?;
+        String::from_utf8(s.to_vec()).map_err(|e| WireError::BadPayload(e.to_string()))
+    }
+
+    fn net(&mut self) -> Result<FlowNetwork, WireError> {
+        let n = self.u32()? as usize;
+        let s = self.u32()?;
+        let t = self.u32()?;
+        let name = self.str()?;
+        let m = self.u32()? as usize;
+        // An absurd edge count would be caught by Truncated below (the
+        // payload cannot hold it), but reserve conservatively anyway.
+        let mut edges = Vec::with_capacity(m.min(1 << 20));
+        for _ in 0..m {
+            let u = self.u32()?;
+            let v = self.u32()?;
+            let cap = self.i64()?;
+            edges.push(Edge { u, v, cap });
+        }
+        // Construct without FlowNetwork::new (which panics on invalid
+        // input): a remote peer's graph must fail soft.
+        let net = FlowNetwork { n, s, t, edges, name };
+        net.validate().map_err(WireError::BadPayload)?;
+        Ok(net)
+    }
+
+    fn batch(&mut self) -> Result<UpdateBatch, WireError> {
+        let k = self.u32()? as usize;
+        let mut updates = Vec::with_capacity(k.min(1 << 20));
+        for _ in 0..k {
+            let tag = self.u8()?;
+            updates.push(match tag {
+                1 => GraphUpdate::IncreaseCap { edge: self.u64()? as usize, delta: self.i64()? },
+                2 => GraphUpdate::DecreaseCap { edge: self.u64()? as usize, delta: self.i64()? },
+                3 => GraphUpdate::InsertEdge { u: self.u32()?, v: self.u32()?, cap: self.i64()? },
+                4 => GraphUpdate::DeleteEdge { edge: self.u64()? as usize },
+                other => {
+                    return Err(WireError::BadPayload(format!("unknown update tag {other}")))
+                }
+            });
+        }
+        Ok(UpdateBatch { updates })
+    }
+
+    /// Trailing bytes after a complete body are a framing bug on the
+    /// peer's side; reject them rather than silently ignore.
+    fn done(&self) -> Result<(), WireError> {
+        if self.i != self.b.len() {
+            return Err(WireError::BadPayload(format!(
+                "{} trailing bytes after payload",
+                self.b.len() - self.i
+            )));
+        }
+        Ok(())
+    }
+}
+
+struct Header {
+    kind: u8,
+    req_id: u64,
+    len: usize,
+}
+
+fn is_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+/// Fill `buf` completely. `start_of_frame` selects the error for a clean
+/// EOF / first-byte timeout ([`WireError::Closed`] / [`WireError::TimedOut`]);
+/// once any byte of a frame has arrived, timeouts keep waiting (a slow
+/// peer mid-frame) and EOF is [`WireError::Truncated`].
+fn read_full(r: &mut impl Read, buf: &mut [u8], start_of_frame: bool) -> Result<(), WireError> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                return Err(if start_of_frame && got == 0 {
+                    WireError::Closed
+                } else {
+                    WireError::Truncated
+                });
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) if is_timeout(&e) => {
+                if start_of_frame && got == 0 {
+                    return Err(WireError::TimedOut);
+                }
+                // Mid-frame: keep waiting for the rest.
+            }
+            Err(e) => return Err(WireError::Io(e.to_string())),
+        }
+    }
+    Ok(())
+}
+
+fn read_header(r: &mut impl Read) -> Result<Header, WireError> {
+    let mut h = [0u8; HEADER_LEN];
+    read_full(r, &mut h, true)?;
+    let magic = u32::from_le_bytes([h[0], h[1], h[2], h[3]]);
+    if magic != MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    let version = u16::from_le_bytes([h[4], h[5]]);
+    if version != VERSION {
+        return Err(WireError::BadVersion(version));
+    }
+    let kind = h[6];
+    let req_id = u64::from_le_bytes([h[8], h[9], h[10], h[11], h[12], h[13], h[14], h[15]]);
+    let len = u32::from_le_bytes([h[16], h[17], h[18], h[19]]);
+    if len > MAX_PAYLOAD {
+        return Err(WireError::Oversized(len));
+    }
+    Ok(Header { kind, req_id, len: len as usize })
+}
+
+fn read_payload(r: &mut impl Read, len: usize) -> Result<Vec<u8>, WireError> {
+    let mut p = vec![0u8; len];
+    read_full(r, &mut p, false)?;
+    Ok(p)
+}
+
+/// Read one request frame. Returns the client's correlation id and the
+/// decoded request. See [`WireError`] for the failure vocabulary —
+/// nothing here panics on malformed input.
+pub fn read_request(r: &mut impl Read) -> Result<(u64, Request), WireError> {
+    let h = read_header(r)?;
+    let p = read_payload(r, h.len)?;
+    let mut d = Dec { b: &p, i: 0 };
+    let req = match h.kind {
+        1 => Request::Ping,
+        2 => Request::Open { session: d.u64()?, net: d.net()? },
+        3 => Request::Update { session: d.u64()?, batch: d.batch()? },
+        4 => Request::Close { session: d.u64()? },
+        5 => Request::Solve { net: d.net()? },
+        6 => Request::Shutdown,
+        other => return Err(WireError::BadKind(other)),
+    };
+    d.done()?;
+    Ok((h.req_id, req))
+}
+
+/// Read one response frame (the client side of [`read_request`]).
+pub fn read_response(r: &mut impl Read) -> Result<(u64, Response), WireError> {
+    let h = read_header(r)?;
+    let p = read_payload(r, h.len)?;
+    let mut d = Dec { b: &p, i: 0 };
+    let resp = match h.kind {
+        0x81 => Response::Pong,
+        0x82 => {
+            let value = d.i64()?;
+            let ms = f64::from_bits(d.u64()?);
+            let engine = d.str()?;
+            Response::Value { value, engine, ms }
+        }
+        0x83 => Response::Error { msg: d.str()? },
+        0x84 => Response::Overloaded { msg: d.str()? },
+        other => return Err(WireError::BadKind(other)),
+    };
+    d.done()?;
+    Ok((h.req_id, resp))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    fn sample_net() -> FlowNetwork {
+        generators::erdos_renyi(20, 60, 5, 7)
+    }
+
+    fn sample_batch() -> UpdateBatch {
+        UpdateBatch::new(vec![
+            GraphUpdate::IncreaseCap { edge: 3, delta: 4 },
+            GraphUpdate::DecreaseCap { edge: 0, delta: 2 },
+            GraphUpdate::InsertEdge { u: 1, v: 2, cap: 9 },
+            GraphUpdate::DeleteEdge { edge: 5 },
+        ])
+    }
+
+    fn roundtrip_req(req: Request) {
+        let bytes = encode_request(42, &req);
+        let (id, back) = read_request(&mut &bytes[..]).expect("decode");
+        assert_eq!(id, 42);
+        assert_eq!(back, req);
+    }
+
+    #[test]
+    fn requests_roundtrip() {
+        roundtrip_req(Request::Ping);
+        roundtrip_req(Request::Shutdown);
+        roundtrip_req(Request::Open { session: 7, net: sample_net() });
+        roundtrip_req(Request::Update { session: 7, batch: sample_batch() });
+        roundtrip_req(Request::Close { session: u64::MAX });
+        roundtrip_req(Request::Solve { net: sample_net() });
+    }
+
+    #[test]
+    fn responses_roundtrip() {
+        for resp in [
+            Response::Pong,
+            Response::Value { value: -5, engine: "session:update".into(), ms: 1.25 },
+            Response::Error { msg: "unknown session".into() },
+            Response::Overloaded { msg: "shard 0 depth 9".into() },
+        ] {
+            let bytes = encode_response(9, &resp);
+            let (id, back) = read_response(&mut &bytes[..]).expect("decode");
+            assert_eq!(id, 9);
+            assert_eq!(back, resp);
+        }
+    }
+
+    #[test]
+    fn truncated_frames_are_rejected_not_panicked() {
+        let bytes = encode_request(1, &Request::Open { session: 1, net: sample_net() });
+        // Every prefix must fail cleanly: header cuts, payload cuts, and
+        // the empty stream.
+        for cut in [0, 1, HEADER_LEN - 1, HEADER_LEN, HEADER_LEN + 5, bytes.len() - 1] {
+            let err = read_request(&mut &bytes[..cut]).unwrap_err();
+            match (cut, &err) {
+                (0, WireError::Closed) => {}
+                (_, WireError::Truncated) => {}
+                other => panic!("cut {cut}: unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn payload_level_truncation_is_rejected() {
+        // A frame whose *payload* lies about its inner lengths: header and
+        // length field are intact, but the edge list overruns the body.
+        let good = encode_request(1, &Request::Solve { net: sample_net() });
+        let mut bad = good.clone();
+        let cut = good.len() - 8;
+        bad.truncate(cut);
+        let body_len = (cut - HEADER_LEN) as u32;
+        bad[16..20].copy_from_slice(&body_len.to_le_bytes());
+        assert_eq!(read_request(&mut &bad[..]).unwrap_err(), WireError::Truncated);
+    }
+
+    #[test]
+    fn bad_magic_version_kind_are_rejected() {
+        let mut bytes = encode_request(1, &Request::Ping);
+        bytes[0] = 0xff;
+        assert!(matches!(read_request(&mut &bytes[..]), Err(WireError::BadMagic(_))));
+
+        let mut bytes = encode_request(1, &Request::Ping);
+        bytes[4] = 99;
+        assert_eq!(read_request(&mut &bytes[..]).unwrap_err(), WireError::BadVersion(99));
+
+        let mut bytes = encode_request(1, &Request::Ping);
+        bytes[6] = 0x7f;
+        assert_eq!(read_request(&mut &bytes[..]).unwrap_err(), WireError::BadKind(0x7f));
+    }
+
+    #[test]
+    fn oversized_length_is_rejected_before_allocation() {
+        let mut bytes = encode_request(1, &Request::Ping);
+        bytes[16..20].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        let err = read_request(&mut &bytes[..]).unwrap_err();
+        assert_eq!(err, WireError::Oversized(MAX_PAYLOAD + 1));
+    }
+
+    #[test]
+    fn invalid_graphs_fail_soft() {
+        // s == t fails FlowNetwork::validate; the decoder must surface
+        // BadPayload instead of panicking in FlowNetwork::new.
+        let mut p = Vec::new();
+        put_u64(&mut p, 1); // session
+        put_u32(&mut p, 4); // n
+        put_u32(&mut p, 2); // s
+        put_u32(&mut p, 2); // t == s
+        put_str(&mut p, "bad");
+        put_u32(&mut p, 0); // no edges
+        let bytes = frame(2, 1, p);
+        assert!(matches!(read_request(&mut &bytes[..]), Err(WireError::BadPayload(_))));
+    }
+
+    #[test]
+    fn unknown_update_tag_fails_soft() {
+        let mut p = Vec::new();
+        put_u64(&mut p, 1); // session
+        put_u32(&mut p, 1); // one update
+        p.push(99); // bogus tag
+        let bytes = frame(3, 1, p);
+        assert!(matches!(read_request(&mut &bytes[..]), Err(WireError::BadPayload(_))));
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
+        let mut p = Vec::new();
+        put_u64(&mut p, 1);
+        put_u32(&mut p, 0xdead_beef); // extra bytes after a Close body
+        let bytes = frame(4, 1, p);
+        assert!(matches!(read_request(&mut &bytes[..]), Err(WireError::BadPayload(_))));
+    }
+
+    #[test]
+    fn pipelined_frames_decode_back_to_back() {
+        let mut stream = Vec::new();
+        stream.extend_from_slice(&encode_request(1, &Request::Ping));
+        stream.extend_from_slice(&encode_request(2, &Request::Close { session: 5 }));
+        let mut r = &stream[..];
+        assert_eq!(read_request(&mut r).unwrap(), (1, Request::Ping));
+        assert_eq!(read_request(&mut r).unwrap(), (2, Request::Close { session: 5 }));
+        assert_eq!(read_request(&mut r).unwrap_err(), WireError::Closed);
+    }
+}

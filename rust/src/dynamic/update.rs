@@ -36,7 +36,7 @@ impl GraphUpdate {
 /// An ordered batch of updates applied atomically between two solves: the
 /// engine applies every edit, then runs one repair pass for the whole
 /// batch (the amortization the dynamic-max-flow papers rely on).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct UpdateBatch {
     pub updates: Vec<GraphUpdate>,
 }

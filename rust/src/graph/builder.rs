@@ -6,7 +6,7 @@ use super::{Capacity, Edge, VertexId};
 use crate::util::Rng;
 
 /// A directed capacitated graph with a designated source and sink.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct FlowNetwork {
     pub n: usize,
     pub s: VertexId,

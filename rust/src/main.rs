@@ -6,10 +6,15 @@
 //! wbpr device    --gen <kind>      # run through the PJRT device engine
 //! wbpr serve     --jobs N [--session-shards N] [--session-ttl-ms MS] [--recompute-ratio R]
 //!                [--metrics-path metrics.prom [--metrics-interval-ms 1000]]
+//! wbpr serve     --listen 127.0.0.1:7700 [--queue-bound N] [--queue-deadline-ms MS]
+//!                # wire-serving mode: framed TCP protocol, stops on a Shutdown frame
 //! wbpr bench     table1|table2|table3|fig3|all [--scale smoke|full]
 //! wbpr bench     smoke [--out BENCH_table1.json] [--trace-out BENCH_trace.jsonl]
 //! wbpr bench     shards [--shards 1,2,4] [--sessions 64] [--batches 4] [--out BENCH_shards.json]
+//! wbpr bench     serve [--addr host:port] [--rates 50,150,400] [--step-ms 2000]
+//!                [--workload w.jsonl | --emit-workload w.jsonl] [--out BENCH_serve.json]
 //! wbpr bench     compare old.json new.json [--fail-above 1.25]  # perf-regression gate
+//!                [--serve-old A.json --serve-new B.json [--serve-fail-above 1.5]]
 //! wbpr trace     BENCH_trace.jsonl [--limit 40]   # ASCII launch timeline from a trace export
 //! wbpr gen       --kind <...> --out file.dimacs
 //! wbpr info      [--gen <kind>]    # artifacts + memory accounting
@@ -29,7 +34,7 @@
 //! Options may also come from `--config file.ini` with `--set sec.key=val`
 //! overrides (see `configs/default.ini`).
 
-use wbpr::bench::{compare, fig3, table1, table2, table3, Scale};
+use wbpr::bench::{compare, fig3, serve, table1, table2, table3, Scale};
 use wbpr::coordinator::batcher::PairBatcher;
 use wbpr::coordinator::{Coordinator, CoordinatorConfig, Job, RouterConfig, ShardPoolConfig};
 use wbpr::graph::builder::{select_pairs, ArcGraph, FlowNetwork};
@@ -287,15 +292,76 @@ fn router_config(args: &Args, cfg: &Config) -> Result<RouterConfig, String> {
 }
 
 /// Session shard-pool shape from config + CLI (`--session-ttl-ms 0`
-/// disables eviction).
+/// disables eviction, `--queue-bound 0` disables admission control).
 fn session_config(args: &Args, cfg: &Config) -> Result<ShardPoolConfig, String> {
     let shards = args.opt_usize("session-shards", cfg.get_usize("coordinator", "session_shards", 1)?)?;
     let ttl_ms = args.opt_u64("session-ttl-ms", cfg.get_usize("coordinator", "session_ttl_ms", 0)? as u64)?;
+    // Admission control for serving: once a shard queue holds --queue-bound
+    // jobs, either shed immediately with an `Overloaded` response, or (with
+    // --queue-deadline-ms) keep queueing and shed only the entries that
+    // wait past the deadline. See OPERATIONS.md "Backpressure".
+    let queue_bound = args.opt_usize("queue-bound", cfg.get_usize("coordinator", "queue_bound", 0)?)?;
+    let deadline_ms =
+        args.opt_u64("queue-deadline-ms", cfg.get_usize("coordinator", "queue_deadline_ms", 0)? as u64)?;
     Ok(ShardPoolConfig {
         shards: shards.max(1),
         ttl: (ttl_ms > 0).then(|| std::time::Duration::from_millis(ttl_ms)),
         snapshot_dir: args.opt("snapshot-dir").map(std::path::PathBuf::from),
+        queue_bound,
+        queue_deadline: (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms)),
     })
+}
+
+/// Prometheus text exporter shared by both serve modes: periodically dump
+/// the live metrics to a file a node_exporter textfile collector (or a
+/// test harness) can scrape. Write failures are warned once per path,
+/// never fatal.
+struct MetricsExporter {
+    path: Option<String>,
+    stop: std::sync::Arc<std::sync::atomic::AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsExporter {
+    fn start(
+        args: &Args,
+        metrics: std::sync::Arc<wbpr::coordinator::metrics::Metrics>,
+    ) -> Result<MetricsExporter, String> {
+        let path = args.opt("metrics-path").map(|s| s.to_string());
+        let interval = args.opt_u64("metrics-interval-ms", 1000)?;
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let handle = path.as_ref().map(|path| {
+            let path = path.clone();
+            let stop = std::sync::Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut warned = false;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    std::thread::sleep(std::time::Duration::from_millis(interval));
+                    if let Err(e) = std::fs::write(&path, metrics.render_prometheus()) {
+                        if !warned {
+                            eprintln!("warn: metrics export to {path} failed: {e}");
+                            warned = true;
+                        }
+                    }
+                }
+            })
+        });
+        Ok(MetricsExporter { path, stop, handle })
+    }
+
+    /// Stop the periodic thread and write a final snapshot, so the file
+    /// reflects every completed job rather than the last periodic dump.
+    fn finish(self, metrics: &wbpr::coordinator::metrics::Metrics) -> Result<(), String> {
+        self.stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        if let Some(h) = self.handle {
+            let _ = h.join();
+        }
+        if let Some(path) = self.path {
+            std::fs::write(&path, metrics.render_prometheus()).map_err(|e| e.to_string())?;
+            println!("wrote {path} (prometheus text exposition)");
+        }
+        Ok(())
+    }
 }
 
 fn cmd_serve(args: &Args) -> Result<(), String> {
@@ -309,35 +375,34 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         router: router_config(args, &cfg)?,
         session: session_config(args, &cfg)?,
     };
+    // Wire-serving mode: bind the framed TCP front door (`coordinator::
+    // wire` is the protocol, `coordinator::net` the accept loop) and block
+    // until a client sends a Shutdown frame — `bench serve` does on its
+    // way out, and OPERATIONS.md shows a manual one-liner. The in-process
+    // demo workload below is skipped entirely.
+    if let Some(listen) = args.opt("listen") {
+        let (shards, qbound) = (config.session.shards, config.session.queue_bound);
+        let server = wbpr::coordinator::NetServer::start(listen, config)
+            .map_err(|e| format!("bind {listen}: {e}"))?;
+        println!(
+            "serving on {} ({} session shards, queue bound {}; stops on a Shutdown frame)",
+            server.addr(),
+            shards,
+            if qbound == 0 { "off".to_string() } else { qbound.to_string() }
+        );
+        let exporter = MetricsExporter::start(args, server.metrics_handle())?;
+        let metrics = server.wait();
+        exporter.finish(&metrics)?;
+        println!("\n{}", metrics.render());
+        return Ok(());
+    }
     let coord = Coordinator::start(config);
     println!(
         "coordinator up (device: {}, session shards: {})",
         coord.has_device(),
         coord.session_shards()
     );
-    // Prometheus text exporter: periodically dump the live metrics to a
-    // file a node_exporter textfile collector (or a test harness) can
-    // scrape. Write failures are warned once per path, never fatal.
-    let metrics_path = args.opt("metrics-path").map(|s| s.to_string());
-    let metrics_interval = args.opt_u64("metrics-interval-ms", 1000)?;
-    let exporter_stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
-    let exporter = metrics_path.as_ref().map(|path| {
-        let path = path.clone();
-        let handle = coord.metrics_handle();
-        let stop = std::sync::Arc::clone(&exporter_stop);
-        std::thread::spawn(move || {
-            let mut warned = false;
-            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
-                std::thread::sleep(std::time::Duration::from_millis(metrics_interval));
-                if let Err(e) = std::fs::write(&path, handle.render_prometheus()) {
-                    if !warned {
-                        eprintln!("warn: metrics export to {path} failed: {e}");
-                        warned = true;
-                    }
-                }
-            }
-        })
-    });
+    let exporter = MetricsExporter::start(args, coord.metrics_handle())?;
     // Demo workload: batched pair queries over a road network. Between
     // requests, poll the age-based flush so a trickle of pairs below the
     // batch size is released instead of stranded.
@@ -367,18 +432,9 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             Err(e) => println!("job {}: FAILED {e}", o.id),
         }
     }
-    exporter_stop.store(true, std::sync::atomic::Ordering::Relaxed);
-    if let Some(h) = exporter {
-        let _ = h.join();
-    }
     let metrics = coord.shutdown();
+    exporter.finish(&metrics)?;
     println!("\n{}", metrics.render());
-    // Final dump after shutdown so the file reflects every completed job,
-    // not just the last periodic snapshot.
-    if let Some(path) = metrics_path {
-        std::fs::write(&path, metrics.render_prometheus()).map_err(|e| e.to_string())?;
-        println!("wrote {path} (prometheus text exposition)");
-    }
     Ok(())
 }
 
@@ -389,12 +445,76 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     if what == "compare" {
         // Perf-regression gate: compare two `bench smoke` artifacts; a
         // wall-clock ratio above --fail-above on any record is an error
-        // (non-zero exit), which is what fails the CI job.
-        let old = args.positional.get(2).ok_or("usage: bench compare old.json new.json")?;
-        let new = args.positional.get(3).ok_or("usage: bench compare old.json new.json")?;
-        let fail_above = args.opt_f64("fail-above", 1.25)?;
-        let report = compare::compare_files(old, new, fail_above)?;
-        print!("{report}");
+        // (non-zero exit), which is what fails the CI job. With
+        // --serve-old/--serve-new, additionally (or instead) gate the
+        // serve p99 row from two `bench serve` BENCH_serve.json artifacts.
+        let serve_pair = match (args.opt("serve-old"), args.opt("serve-new")) {
+            (Some(o), Some(n)) => Some((o, n)),
+            (None, None) => None,
+            _ => return Err("--serve-old and --serve-new must be given together".into()),
+        };
+        let mut failures = Vec::new();
+        if let (Some(old), Some(new)) = (args.positional.get(2), args.positional.get(3)) {
+            let fail_above = args.opt_f64("fail-above", 1.25)?;
+            match compare::compare_files(old, new, fail_above) {
+                Ok(report) => print!("{report}"),
+                Err(e) => failures.push(e),
+            }
+        } else if serve_pair.is_none() {
+            return Err(
+                "usage: bench compare old.json new.json [--serve-old A --serve-new B]".into(),
+            );
+        }
+        if let Some((old, new)) = serve_pair {
+            let fail_above = args.opt_f64("serve-fail-above", compare::SERVE_P99_DEFAULT_GATE)?;
+            match compare::compare_serve_files(old, new, fail_above) {
+                Ok(report) => print!("{report}"),
+                Err(e) => failures.push(e),
+            }
+        }
+        if !failures.is_empty() {
+            return Err(failures.join("\n"));
+        }
+        return Ok(());
+    }
+    if what == "serve" {
+        // Open-loop latency harness: replay (or generate) a Poisson
+        // many-session update stream against a live `serve --listen`
+        // process — or a self-hosted in-process server when --addr is
+        // absent — and export latency quantiles + saturation throughput
+        // for the `bench compare` serve gate. Send times follow the
+        // schedule regardless of completions, so queueing delay is
+        // measured instead of hidden (no coordinated omission).
+        let sopts = serve::ServeOpts {
+            addr: args.opt("addr").map(str::to_string),
+            sessions: args.opt_usize("sessions", 8)?,
+            rates: args
+                .opt("rates")
+                .unwrap_or("50,150,400")
+                .split(',')
+                .map(|s| s.trim().parse::<f64>().map_err(|e| format!("bad rate '{s}': {e}")))
+                .collect::<Result<_, _>>()?,
+            duration_ms: args.opt_u64("step-ms", 2000)?,
+            n: args.opt_usize("n", 200)?,
+            m: args.opt_usize("m", 1000)?,
+            max_cap: args.opt_usize("max-cap", 8)? as i64,
+            edits: args.opt_usize("edits", 8)?,
+            skew: args.opt_f64("skew", 0.0)?,
+            seed: args.opt_u64("seed", 42)?,
+            workload: args.opt("workload").map(std::path::PathBuf::from),
+            emit_workload: args.opt("emit-workload").map(std::path::PathBuf::from),
+            queue_bound: args.opt_usize("queue-bound", 64)?,
+            queue_deadline_ms: {
+                let d = args.opt_u64("queue-deadline-ms", 0)?;
+                (d > 0).then_some(d)
+            },
+            shards: args.opt_usize("session-shards", 2)?,
+        };
+        let doc = serve::run(&sopts)?;
+        print!("{}", serve::render(&doc));
+        let out = args.opt("out").unwrap_or("BENCH_serve.json");
+        std::fs::write(out, doc.to_string()).map_err(|e| e.to_string())?;
+        println!("wrote {out} (open-loop latency + saturation, wbpr/bench_serve/v1)");
         return Ok(());
     }
     if what == "shards" {

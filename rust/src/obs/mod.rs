@@ -24,6 +24,8 @@
 //! solve's events reproduces the final stats *exactly* — `bench smoke`
 //! asserts this before writing `BENCH_trace.jsonl`.
 
+#![warn(missing_docs)]
+
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 
@@ -43,6 +45,7 @@ pub enum EventKind {
 }
 
 impl EventKind {
+    /// Wire/JSONL tag for this kind (`"launch"` / `"gr"`).
     pub fn name(&self) -> &'static str {
         match self {
             EventKind::Launch => "launch",
@@ -50,6 +53,7 @@ impl EventKind {
         }
     }
 
+    /// Inverse of [`EventKind::name`] (None for unknown tags).
     pub fn parse(s: &str) -> Option<EventKind> {
         match s {
             "launch" => Some(EventKind::Launch),
@@ -66,20 +70,25 @@ pub struct LaunchEvent {
     /// record time; a [`EventKind::GlobalRelabel`] event carries the count
     /// of launches completed before it).
     pub launch: u64,
+    /// Kernel launch or direct global relabel.
     pub kind: EventKind,
     /// Launch-start frontier length (after the rescan, when one ran).
     pub frontier: u64,
     /// This launch paid the O(V) active-vertex rescan.
     pub rescan: bool,
-    /// Kernel-counter deltas for this launch (exactly what the host step
-    /// merged into `SolveStats`).
+    /// Pushes applied in this launch (exactly what the host step merged
+    /// into `SolveStats` — same for the other three kernel deltas).
     pub pushes: u64,
+    /// Relabels applied in this launch.
     pub relabels: u64,
+    /// Residual arcs scanned in this launch.
     pub scan_arcs: u64,
+    /// Cooperative hub-discharge chunks drained in this launch.
     pub coop_chunks: u64,
-    /// Most / mean residual arcs any worker scanned *during this launch*
+    /// Most residual arcs any single worker scanned *during this launch*
     /// (the per-launch slice of the paper's Eq. 1 imbalance).
     pub scan_max: u64,
+    /// Mean residual arcs scanned per worker during this launch.
     pub scan_mean: f64,
     /// Adaptive global-relabel alpha after the host step.
     pub gr_alpha: f64,
@@ -204,6 +213,7 @@ pub struct TraceRing {
 }
 
 impl TraceRing {
+    /// Ring holding at most `cap` events (0 = disabled).
     pub fn new(cap: usize) -> TraceRing {
         TraceRing { cap, head: 0, buf: Vec::new(), dropped: 0 }
     }
@@ -213,14 +223,17 @@ impl TraceRing {
         self.cap > 0
     }
 
+    /// Maximum events retained (0 = disabled).
     pub fn capacity(&self) -> usize {
         self.cap
     }
 
+    /// Events currently held.
     pub fn len(&self) -> usize {
         self.buf.len()
     }
 
+    /// True when no events have been recorded.
     pub fn is_empty(&self) -> bool {
         self.buf.is_empty()
     }

@@ -1,0 +1,203 @@
+//! Wire-serving integration: a real `NetServer` on a loopback socket,
+//! exercised with the blocking [`Client`] and with raw pipelined frames —
+//! session lifecycle values must match the in-process coordinator path,
+//! overload must answer `Overloaded` (both shed flavors), and malformed
+//! bytes must produce an error frame, never a crash.
+
+use std::net::TcpStream;
+use wbpr::coordinator::wire::{self, Request, Response};
+use wbpr::coordinator::{Client, CoordinatorConfig, NetServer, ShardPoolConfig};
+use wbpr::dynamic::{GraphUpdate, UpdateBatch};
+use wbpr::graph::builder::{ArcGraph, FlowNetwork};
+use wbpr::graph::generators;
+use wbpr::maxflow::{self, SolveOptions};
+
+fn config(shards: usize, queue_bound: usize, deadline_ms: Option<u64>) -> CoordinatorConfig {
+    CoordinatorConfig {
+        native_workers: 1,
+        enable_device: false,
+        solve: SolveOptions { threads: 2, cycles_per_launch: 64, ..Default::default() },
+        session: ShardPoolConfig {
+            shards,
+            queue_bound,
+            queue_deadline: deadline_ms.map(std::time::Duration::from_millis),
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// Reference value: the session's network after `batches`, solved cold.
+fn reference_value(net: &FlowNetwork, batches: &[UpdateBatch]) -> i64 {
+    let mut now = net.normalized();
+    for b in batches {
+        b.apply_to_network(&mut now).expect("valid batch");
+    }
+    maxflow::dinic::solve(&ArcGraph::build(&now)).value
+}
+
+fn value_of(resp: Response) -> i64 {
+    match resp {
+        Response::Value { value, .. } => value,
+        other => panic!("expected Value, got {other:?}"),
+    }
+}
+
+#[test]
+fn session_lifecycle_over_the_socket_matches_in_process_values() {
+    let server = NetServer::start("127.0.0.1:0", config(2, 0, None)).expect("bind");
+    let addr = server.addr().to_string();
+    let mut client = Client::connect(&addr).expect("connect");
+
+    assert_eq!(client.call(&Request::Ping).unwrap(), Response::Pong);
+
+    // Open: the response carries the initial solve value.
+    let net = generators::erdos_renyi(40, 200, 6, 5);
+    let opened = client.call(&Request::Open { session: 7, net: net.clone() }).unwrap();
+    assert_eq!(value_of(opened), reference_value(&net, &[]));
+
+    // Update: repaired value must match a cold re-solve of the edited net.
+    let batch = UpdateBatch::new(vec![GraphUpdate::IncreaseCap { edge: 0, delta: 4 }]);
+    let updated =
+        client.call(&Request::Update { session: 7, batch: batch.clone() }).unwrap();
+    let want = reference_value(&net, &[batch]);
+    assert_eq!(value_of(updated), want);
+
+    // Close returns the session's last value.
+    let closed = client.call(&Request::Close { session: 7 }).unwrap();
+    assert_eq!(value_of(closed), want);
+
+    // One-shot solve goes through the same front door.
+    let one = generators::erdos_renyi(30, 150, 5, 77);
+    let solved = client.call(&Request::Solve { net: one.clone() }).unwrap();
+    assert_eq!(value_of(solved), reference_value(&one, &[]));
+
+    // Reserved session ids fail soft with an Error frame, not a panic.
+    let reserved = client.call(&Request::Open { session: 1 << 63, net: one }).unwrap();
+    assert!(matches!(reserved, Response::Error { .. }), "{reserved:?}");
+
+    assert_eq!(client.call(&Request::Shutdown).unwrap(), Response::Pong);
+    let metrics = server.wait();
+    let events = metrics.events();
+    assert!(events.get("serve:requests").copied().unwrap_or(0) >= 6, "{events:?}");
+    assert!(events.get("serve:connections").copied().unwrap_or(0) >= 1, "{events:?}");
+}
+
+#[test]
+fn shed_under_load_answers_overloaded_and_counts_it() {
+    // One shard with a queue bound of 1: a pipelined burst must come back
+    // partly as Overloaded frames (immediate shed), visible in the
+    // metrics and the Prometheus rendering.
+    let server = NetServer::start("127.0.0.1:0", config(1, 1, None)).expect("bind");
+    let addr = server.addr().to_string();
+    let mut client = Client::connect(&addr).expect("connect");
+
+    let net = generators::erdos_renyi(400, 3000, 8, 11);
+    let opened = client.call(&Request::Open { session: 1, net }).unwrap();
+    assert!(matches!(opened, Response::Value { .. }), "{opened:?}");
+
+    // Raw pipelining: write the whole burst without reading, so requests
+    // pile up behind the single session worker faster than it drains.
+    let mut writer = TcpStream::connect(&addr).expect("connect burst");
+    let mut reader = writer.try_clone().expect("clone");
+    let total = 64u64;
+    for i in 0..total {
+        let batch = UpdateBatch::new(vec![GraphUpdate::IncreaseCap {
+            edge: i as usize % 100,
+            delta: 1,
+        }]);
+        wire::write_request(&mut writer, i + 1, &Request::Update { session: 1, batch })
+            .expect("write burst frame");
+    }
+    let (mut ok, mut overloaded) = (0u64, 0u64);
+    for _ in 0..total {
+        match wire::read_response(&mut reader).expect("burst response").1 {
+            Response::Value { .. } => ok += 1,
+            Response::Overloaded { msg } => {
+                assert!(msg.starts_with("overloaded"), "{msg}");
+                overloaded += 1;
+            }
+            other => panic!("unexpected burst response: {other:?}"),
+        }
+    }
+    assert_eq!(ok + overloaded, total);
+    assert!(ok >= 1, "at least the head of the burst is admitted");
+    assert!(overloaded >= 1, "a bound-1 queue must shed most of a 64-deep burst");
+
+    assert_eq!(client.call(&Request::Shutdown).unwrap(), Response::Pong);
+    let metrics = server.wait();
+    let events = metrics.events();
+    assert_eq!(events.get("serve:shed").copied().unwrap_or(0), overloaded, "{events:?}");
+    let prom = metrics.render_prometheus();
+    assert!(prom.contains("wbpr_events_total{event=\"serve:shed\"}"), "{prom}");
+}
+
+#[test]
+fn queue_deadline_sheds_stale_entries_as_overloaded() {
+    // Queue-with-deadline flavor: the burst is *admitted* (bound 1 no
+    // longer sheds at the door) but entries that wait past 1ms are shed
+    // by the shard worker at dequeue time, completing as Overloaded.
+    // Forcing the recompute leg makes every drained update cost a full
+    // solve, so the 1ms deadline reliably expires down the queue.
+    let mut cfg = config(1, 1, Some(1));
+    cfg.router.recompute_ratio = 0.0;
+    let server = NetServer::start("127.0.0.1:0", cfg).expect("bind");
+    let addr = server.addr().to_string();
+    let mut client = Client::connect(&addr).expect("connect");
+
+    let net = generators::erdos_renyi(400, 3000, 8, 13);
+    let opened = client.call(&Request::Open { session: 1, net }).unwrap();
+    assert!(matches!(opened, Response::Value { .. }), "{opened:?}");
+
+    let mut writer = TcpStream::connect(&addr).expect("connect burst");
+    let mut reader = writer.try_clone().expect("clone");
+    let total = 64u64;
+    for i in 0..total {
+        let batch = UpdateBatch::new(vec![
+            GraphUpdate::IncreaseCap { edge: i as usize % 100, delta: 2 },
+            GraphUpdate::DecreaseCap { edge: (i as usize + 7) % 100, delta: 1 },
+        ]);
+        wire::write_request(&mut writer, i + 1, &Request::Update { session: 1, batch })
+            .expect("write burst frame");
+    }
+    let (mut ok, mut overloaded) = (0u64, 0u64);
+    for _ in 0..total {
+        match wire::read_response(&mut reader).expect("burst response").1 {
+            Response::Value { .. } => ok += 1,
+            Response::Overloaded { msg } => {
+                assert!(msg.contains("deadline"), "deadline sheds name the cause: {msg}");
+                overloaded += 1;
+            }
+            other => panic!("unexpected burst response: {other:?}"),
+        }
+    }
+    assert_eq!(ok + overloaded, total);
+    assert!(overloaded >= 1, "a 1ms deadline must shed part of a 64-deep burst");
+
+    assert_eq!(client.call(&Request::Shutdown).unwrap(), Response::Pong);
+    let events = server.wait().events();
+    assert_eq!(events.get("serve:deadline_shed").copied().unwrap_or(0), overloaded, "{events:?}");
+    assert_eq!(events.get("serve:shed").copied().unwrap_or(0), 0, "no front-door sheds");
+}
+
+#[test]
+fn malformed_bytes_get_an_error_frame_not_a_crash() {
+    let server = NetServer::start("127.0.0.1:0", config(1, 0, None)).expect("bind");
+    let addr = server.addr().to_string();
+
+    // Garbage that can never be a valid header: the server must answer
+    // with a protocol-error frame (req_id 0) and close the connection.
+    let mut stream = TcpStream::connect(&addr).expect("connect");
+    use std::io::Write as _;
+    stream.write_all(&[0xDE; 64]).expect("write garbage");
+    let (req_id, resp) = wire::read_response(&mut stream).expect("error frame");
+    assert_eq!(req_id, 0, "protocol errors correlate to no request");
+    assert!(matches!(resp, Response::Error { .. }), "{resp:?}");
+
+    // The server survives: a fresh, well-formed connection still works.
+    let mut client = Client::connect(&addr).expect("connect after garbage");
+    assert_eq!(client.call(&Request::Ping).unwrap(), Response::Pong);
+    assert_eq!(client.call(&Request::Shutdown).unwrap(), Response::Pong);
+    let events = server.wait().events();
+    assert!(events.get("serve:bad_frame").copied().unwrap_or(0) >= 1, "{events:?}");
+}

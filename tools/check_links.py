@@ -1,0 +1,79 @@
+#!/usr/bin/env python3
+"""Check that relative markdown links point at files that exist.
+
+Walks every *.md file in the repository (skipping .git and build
+output), extracts inline links `[text](target)`, and verifies each
+relative target resolves to an existing file or directory. External
+schemes (http/https/mailto) and pure in-page anchors are skipped;
+fragments are stripped before the existence check. Fenced code blocks
+and inline code spans are removed first so protocol tables and example
+snippets cannot produce false positives.
+
+Exit status: 0 when every link resolves, 1 otherwise (each miss is
+printed as `file:line: broken link -> target`).
+"""
+
+import os
+import re
+import sys
+
+SKIP_DIRS = {".git", "target", "node_modules", "__pycache__", ".venv"}
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^()\s]+)\)")
+FENCE_RE = re.compile(r"^(```|~~~)")
+INLINE_CODE_RE = re.compile(r"`[^`]*`")
+EXTERNAL_RE = re.compile(r"^[a-zA-Z][a-zA-Z0-9+.-]*:")
+
+
+def repo_root() -> str:
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def md_files(root: str):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        for name in sorted(filenames):
+            if name.endswith(".md"):
+                yield os.path.join(dirpath, name)
+
+
+def check_file(root: str, path: str):
+    """Yield (lineno, target) for every broken relative link in `path`."""
+    in_fence = False
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, start=1):
+            if FENCE_RE.match(line.strip()):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            line = INLINE_CODE_RE.sub("", line)
+            for target in LINK_RE.findall(line):
+                if EXTERNAL_RE.match(target) or target.startswith("#"):
+                    continue
+                target_path = target.split("#", 1)[0]
+                if not target_path:
+                    continue
+                if target_path.startswith("/"):
+                    resolved = os.path.join(root, target_path.lstrip("/"))
+                else:
+                    resolved = os.path.join(os.path.dirname(path), target_path)
+                if not os.path.exists(resolved):
+                    yield lineno, target
+
+
+def main() -> int:
+    root = repo_root()
+    broken = 0
+    checked = 0
+    for path in md_files(root):
+        checked += 1
+        for lineno, target in check_file(root, path):
+            rel = os.path.relpath(path, root)
+            print(f"{rel}:{lineno}: broken link -> {target}")
+            broken += 1
+    print(f"checked {checked} markdown files: {broken} broken link(s)")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
