@@ -34,6 +34,15 @@ pub const TRACE_OVERHEAD_GATE: f64 = 1.03;
 /// measurement floor.
 pub const SCAN_SPEEDUP_GATE: f64 = 1.3;
 
+/// Topology-churn ops-reduction floor: the `(T0, DYN, CHURN)` record
+/// (see [`crate::bench::table3::topology_smoke_record`]) carries the
+/// summed push+relabel work of incremental insert/delete repairs vs
+/// from-scratch recomputes of the same stream; the record fails when the
+/// incremental leg is not at least this many times cheaper. Counter-based
+/// and intra-record on the **new** document, so runner noise cannot trip
+/// it — only a real regression of the delta-overlay repair path can.
+pub const TOPOLOGY_OPS_GATE: f64 = 3.0;
+
 /// Noise floor for the serve-latency gate: p99s under this many
 /// milliseconds are scheduler jitter on shared runners, so the old p99 is
 /// floored here before the ratio — a 0.1ms → 0.4ms move never fails.
@@ -64,6 +73,11 @@ pub struct Measurement {
     /// `SCAN_AB_IDS` VC+BCSR records carry it).
     pub scan_base_ms: f64,
     pub scan_opt_ms: f64,
+    /// Topology-churn incremental-vs-recompute ops pair (0/0 on records
+    /// without the measurement — only the `(T0, DYN, CHURN)` record
+    /// carries it).
+    pub dyn_inc_ops: u64,
+    pub dyn_scratch_ops: u64,
 }
 
 impl Measurement {
@@ -86,6 +100,14 @@ impl Measurement {
     /// under the 50µs floor, where the ratio would be pure timer noise).
     pub fn scan_speedup(&self) -> Option<f64> {
         (self.scan_base_ms > 0.05).then(|| self.scan_base_ms / self.scan_opt_ms.max(0.05))
+    }
+
+    /// From-scratch ops per incremental op on the topology-churn arm —
+    /// how much cheaper the insert/delete repair path is than recomputing
+    /// (`None` without the measurement).
+    pub fn topology_ops_reduction(&self) -> Option<f64> {
+        (self.dyn_scratch_ops > 0)
+            .then(|| self.dyn_scratch_ops as f64 / self.dyn_inc_ops.max(1) as f64)
     }
 }
 
@@ -128,6 +150,8 @@ pub fn parse_records(doc: &str) -> Result<BTreeMap<Key, Measurement>, String> {
             trace_on_ms: opt_num("trace_on_ms"),
             scan_base_ms: opt_num("scan_base_ms"),
             scan_opt_ms: opt_num("scan_opt_ms"),
+            dyn_inc_ops: opt_num("dyn_inc_ops") as u64,
+            dyn_scratch_ops: opt_num("dyn_scratch_ops") as u64,
         };
         out.insert(key, m);
     }
@@ -162,7 +186,7 @@ pub fn compare(
 ) -> Comparison {
     let mut t = Table::new(&[
         "graph", "engine", "rep", "old ms", "new ms", "ratio", "old ops", "new ops",
-        "old imb", "new imb", "trace ovh", "scan spd", "verdict",
+        "old imb", "new imb", "trace ovh", "scan spd", "topo ops", "verdict",
     ]);
     let mut regressions = Vec::new();
     let mut unmatched = 0;
@@ -198,7 +222,13 @@ pub fn compare(
         // sub-noise, so neither case can flag.
         let sspd = n.scan_speedup();
         let scan_regressed = sspd.is_some_and(|s| s < SCAN_SPEEDUP_GATE);
-        if wall_regressed || imb_regressed || trace_regressed || scan_regressed {
+        // Topology-churn gate: intra-record on the new side like the scan
+        // gate, but pure counters — the incremental insert/delete repair
+        // leg must stay at least [`TOPOLOGY_OPS_GATE`] times cheaper (in
+        // pushes+relabels) than from-scratch recomputes of the stream.
+        let topo = n.topology_ops_reduction();
+        let topo_regressed = topo.is_some_and(|r| r < TOPOLOGY_OPS_GATE);
+        if wall_regressed || imb_regressed || trace_regressed || scan_regressed || topo_regressed {
             regressions.push(key.clone());
         }
         let imb_cell = |i: Option<f64>| i.map_or("-".to_string(), |i| format!("{i:.2}"));
@@ -215,6 +245,9 @@ pub fn compare(
         if scan_regressed {
             why.push("scan");
         }
+        if topo_regressed {
+            why.push("topology");
+        }
         t.row(vec![
             key.0.clone(),
             key.1.clone(),
@@ -228,6 +261,7 @@ pub fn compare(
             imb_cell(ni),
             tovh.map_or("-".to_string(), |t| format!("{t:.3}x")),
             sspd.map_or("-".to_string(), |s| format!("{s:.2}x")),
+            topo.map_or("-".to_string(), |r| format!("{r:.2}x")),
             if why.is_empty() {
                 "ok".to_string()
             } else if why == ["wall"] {
@@ -412,6 +446,8 @@ mod tests {
             scan_arcs_per_sec_worker: 0.0,
             coop_chunk_final: 64,
             workers_pinned: 0,
+            dyn_inc_ops: 0,
+            dyn_scratch_ops: 0,
         }
     }
 
@@ -540,6 +576,36 @@ mod tests {
         let cmp = compare(&old, &fast, 1.25);
         assert!(!cmp.is_regression(), "{}", cmp.report);
         assert!(cmp.report.contains("1.50x"), "{}", cmp.report);
+    }
+
+    fn doc_with_topo(wall: f64, pushes: u64, inc: u64, scratch: u64) -> String {
+        let mut r = record(wall, pushes, 10, 10);
+        r.dyn_inc_ops = inc;
+        r.dyn_scratch_ops = scratch;
+        records_json(&[r]).to_string()
+    }
+
+    #[test]
+    fn topology_reduction_below_the_gate_fails() {
+        // Intra-record counter gate on the new side: incremental
+        // insert/delete repairs at only 2x cheaper than recompute fail
+        // the 3x floor, even against a baseline predating the fields.
+        let old = parse_records(&doc(10.0, 100)).unwrap();
+        let slow = parse_records(&doc_with_topo(10.0, 100, 500, 1000)).unwrap();
+        let m = slow.values().next().unwrap();
+        assert!((m.topology_ops_reduction().unwrap() - 2.0).abs() < 1e-9);
+        let cmp = compare(&old, &slow, 1.25);
+        assert!(cmp.is_regression());
+        assert!(cmp.report.contains("REGRESSED(topology)"), "{}", cmp.report);
+        // 5x passes the gate and lands in the report column.
+        let fast = parse_records(&doc_with_topo(10.0, 100, 200, 1000)).unwrap();
+        let cmp = compare(&old, &fast, 1.25);
+        assert!(!cmp.is_regression(), "{}", cmp.report);
+        assert!(cmp.report.contains("5.00x"), "{}", cmp.report);
+        // Records without the measurement stay ungated.
+        let none = parse_records(&doc(10.0, 100)).unwrap();
+        assert_eq!(none.values().next().unwrap().topology_ops_reduction(), None);
+        assert!(!compare(&old, &none, 1.25).is_regression());
     }
 
     #[test]

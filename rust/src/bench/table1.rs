@@ -198,6 +198,16 @@ pub struct BenchRecord {
     pub coop_chunk_final: u64,
     /// Workers that successfully pinned to a core (0 when unpinned).
     pub workers_pinned: u64,
+    /// Σ pushes+relabels of the incremental repairs of the topology-churn
+    /// arm (0 on records without the measurement — only the Table 3
+    /// `(T0, DYN, CHURN)` record emitted by
+    /// [`crate::bench::table3::topology_smoke_record`] carries it).
+    /// `bench compare` gates `dyn_scratch_ops / dyn_inc_ops >=
+    /// TOPOLOGY_OPS_GATE`.
+    pub dyn_inc_ops: u64,
+    /// Σ pushes+relabels of from-scratch recomputes of the same churn
+    /// stream (the gate's numerator).
+    pub dyn_scratch_ops: u64,
 }
 
 impl BenchRecord {
@@ -225,6 +235,8 @@ impl BenchRecord {
             scan_arcs_per_sec_worker: r.stats.scan_arcs_per_sec_worker,
             coop_chunk_final: r.stats.coop_chunk_final,
             workers_pinned: r.stats.workers_pinned,
+            dyn_inc_ops: 0,
+            dyn_scratch_ops: 0,
         }
     }
 
@@ -638,6 +650,10 @@ pub fn records_json(records: &[BenchRecord]) -> crate::util::json::Json {
             }
             o.insert("coop_chunk_final".to_string(), Json::Num(r.coop_chunk_final as f64));
             o.insert("workers_pinned".to_string(), Json::Num(r.workers_pinned as f64));
+            if r.dyn_scratch_ops > 0 {
+                o.insert("dyn_inc_ops".to_string(), Json::Num(r.dyn_inc_ops as f64));
+                o.insert("dyn_scratch_ops".to_string(), Json::Num(r.dyn_scratch_ops as f64));
+            }
             Json::Obj(o)
         })
         .collect();
@@ -728,6 +744,8 @@ mod tests {
             scan_arcs_per_sec_worker: 0.0,
             coop_chunk_final: 64,
             workers_pinned: 0,
+            dyn_inc_ops: 0,
+            dyn_scratch_ops: 0,
         }
     }
 

@@ -20,6 +20,20 @@ use crate::maxflow::{self, EngineKind, SolveOptions};
 use crate::util::Timer;
 use std::collections::HashMap;
 
+/// Which update stream a [`DynCase`] replays.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamMix {
+    /// Pure capacity churn — the original Table 3 regime (D rows).
+    CapacityOnly,
+    /// Half the updates attach or detach edges
+    /// ([`UpdateStreamParams::churn`]) — the insert/delete regime (T rows).
+    Churn,
+    /// Every batch inserts fresh edges and expires the oldest window
+    /// ([`generators::sliding_window_stream`]) — worst case for a
+    /// rebuild-per-batch engine: the live edge set never stops moving.
+    SlidingWindow,
+}
+
 /// One dynamic-suite entry.
 pub struct DynCase {
     pub id: &'static str,
@@ -28,6 +42,8 @@ pub struct DynCase {
     pub batches: usize,
     /// Batch size as a fraction of |E| (the acceptance criterion uses 1%).
     pub frac: f64,
+    /// Stream composition (capacity-only vs topology churn).
+    pub mix: StreamMix,
     pub build: fn() -> FlowNetwork,
 }
 
@@ -39,6 +55,7 @@ pub fn dyn_suite() -> Vec<DynCase> {
             regime: "genrmf mesh, wide capacity range (S1 analog under churn)",
             batches: 5,
             frac: 0.01,
+            mix: StreamMix::CapacityOnly,
             build: || generators::genrmf(&generators::GenrmfParams { a: 6, b: 8, c1: 1, c2: 100, seed: 21 }),
         },
         DynCase {
@@ -46,6 +63,7 @@ pub fn dyn_suite() -> Vec<DynCase> {
             regime: "random level graph (S0 analog under churn)",
             batches: 5,
             frac: 0.01,
+            mix: StreamMix::CapacityOnly,
             build: || {
                 generators::washington_rlg(&generators::WashingtonParams {
                     levels: 24,
@@ -61,6 +79,7 @@ pub fn dyn_suite() -> Vec<DynCase> {
             regime: "dense random graph, integer caps",
             batches: 5,
             frac: 0.01,
+            mix: StreamMix::CapacityOnly,
             build: || generators::erdos_renyi(600, 4200, 12, 23),
         },
         DynCase {
@@ -68,13 +87,30 @@ pub fn dyn_suite() -> Vec<DynCase> {
             regime: "road mesh, unit caps (R1 analog under churn)",
             batches: 5,
             frac: 0.01,
+            mix: StreamMix::CapacityOnly,
             build: || generators::grid_road(40, 40, 0.08, 16, 24),
+        },
+        DynCase {
+            id: "T0",
+            regime: "dense random graph under insert/delete churn (50% topology)",
+            batches: 5,
+            frac: 0.01,
+            mix: StreamMix::Churn,
+            build: || generators::erdos_renyi(500, 3200, 10, 27),
+        },
+        DynCase {
+            id: "T1",
+            regime: "dense random graph, sliding edge window (every batch topological)",
+            batches: 6,
+            frac: 0.01,
+            mix: StreamMix::SlidingWindow,
+            build: || generators::erdos_renyi(400, 2400, 8, 28),
         },
     ]
 }
 
 pub fn dyn_smoke_ids() -> &'static [&'static str] {
-    &["D0", "D2"]
+    &["D0", "D2", "T0"]
 }
 
 /// One Table 3 row (totals across the whole stream).
@@ -125,6 +161,22 @@ pub struct Row {
     pub scratch_dinic_ms: f64,
     /// Every batch's repaired value matched the from-scratch solve.
     pub values_agree: bool,
+    /// Insert/delete updates in the stream (0 on capacity-only rows).
+    pub topo_updates: usize,
+    /// Live (non-tombstoned) edge slots after the stream.
+    pub live_e: usize,
+    /// Tombstoned edge slots after the stream.
+    pub dead_e: usize,
+    /// Row entries an admissibility sweep visits after the post-stream
+    /// overlay merge — the compaction invariant is `== 2 * live_e`.
+    pub rep_scan_arcs: u64,
+    /// Representation bytes after the post-stream merge.
+    pub rep_bytes: u64,
+    /// Peak representation bytes during the stream (base + overlay).
+    pub rep_bytes_peak: u64,
+    /// Bytes of a freshly compacted base CSR of the same live edge set —
+    /// the merge must leave no residue (`rep_bytes == rep_bytes_compact`).
+    pub rep_bytes_compact: u64,
 }
 
 impl Row {
@@ -161,10 +213,26 @@ pub fn run_case(case: &DynCase, opts: &SolveOptions) -> Row {
     // configuration that attributes the win between the two mechanisms.
     let carry_opts = SolveOptions { gr_spacing: 0.0, ..opts.clone() };
     let mut carry_df = DynamicFlow::new(&net, &carry_opts);
-    let stream = update_stream(
-        df.network(),
-        &UpdateStreamParams::capacity_only(df.network().m(), case.batches, case.frac, 25, 0xD11A + case.batches as u64),
-    );
+    let m0 = df.network().m();
+    let per_batch = ((m0 as f64 * case.frac).round() as usize).max(1);
+    let stream = match case.mix {
+        StreamMix::CapacityOnly => update_stream(
+            df.network(),
+            &UpdateStreamParams::capacity_only(m0, case.batches, case.frac, 25, 0xD11A + case.batches as u64),
+        ),
+        StreamMix::Churn => update_stream(
+            df.network(),
+            &UpdateStreamParams::churn(m0, case.batches, case.frac, 25, 0xC0DE + case.batches as u64),
+        ),
+        StreamMix::SlidingWindow => generators::sliding_window_stream(
+            df.network(),
+            case.batches,
+            per_batch,
+            2,
+            25,
+            0x51DE + case.batches as u64,
+        ),
+    };
     let mut row = Row {
         id: case.id.to_string(),
         regime: case.regime.to_string(),
@@ -188,9 +256,17 @@ pub fn run_case(case: &DynCase, opts: &SolveOptions) -> Row {
         scratch_vc_ms: 0.0,
         scratch_dinic_ms: 0.0,
         values_agree: true,
+        topo_updates: stream.batches.iter().map(|b| b.inserts()).sum(),
+        live_e: 0,
+        dead_e: 0,
+        rep_scan_arcs: 0,
+        rep_bytes: 0,
+        rep_bytes_peak: 0,
+        rep_bytes_compact: 0,
     };
     for batch in &stream.batches {
         let rep = df.apply(batch).expect("stream updates are valid");
+        row.rep_bytes_peak = row.rep_bytes_peak.max(df.rep_bytes() as u64);
         row.inc_ops += rep.stats.pushes + rep.stats.relabels;
         row.inc_ms += rep.stats.total_ms;
         row.frontier_len_sum += rep.stats.frontier_len_sum;
@@ -220,6 +296,15 @@ pub fn run_case(case: &DynCase, opts: &SolveOptions) -> Row {
             row.values_agree = false;
         }
     }
+    // Drive the snapshot/eviction merge point and measure the compaction
+    // it promises: tombstoned arcs are gone from both the scan work and
+    // the representation bytes, with zero overlay residue left behind.
+    df.snapshot().expect("post-stream snapshot merges the overlay");
+    row.dead_e = df.dead_edges();
+    row.live_e = df.network().edges.len() - row.dead_e;
+    row.rep_scan_arcs = df.rep_scan_arcs();
+    row.rep_bytes = df.rep_bytes() as u64;
+    row.rep_bytes_compact = df.compact_rep_bytes() as u64;
     row
 }
 
@@ -233,10 +318,70 @@ pub fn run(scale: Scale, opts: &SolveOptions) -> Vec<Row> {
         .collect()
 }
 
+/// Run the topology-churn case (T0) for the `bench smoke` perf tracker
+/// and fold its stream totals into one `(T0, DYN, CHURN)` record:
+/// `wall_ms`/`pushes` carry the incremental-repair totals (so the wall
+/// gate tracks repair latency PR over PR) and the `dyn_inc_ops` /
+/// `dyn_scratch_ops` pair feeds `bench compare`'s ≥ 3x ops-reduction
+/// gate ([`crate::bench::compare::TOPOLOGY_OPS_GATE`]).
+///
+/// The run itself enforces the compaction invariants — a value mismatch,
+/// a merged representation that still scans tombstoned arcs, or overlay
+/// residue after the merge fails the whole smoke run.
+pub fn topology_smoke_record(opts: &SolveOptions) -> Result<super::table1::BenchRecord, String> {
+    let suite = dyn_suite();
+    let case = suite.iter().find(|c| c.id == "T0").expect("T0 stays in the dynamic suite");
+    let row = run_case(case, opts);
+    if !row.values_agree {
+        return Err("topology churn T0: incremental value diverged from the from-scratch solves".into());
+    }
+    if row.rep_scan_arcs != 2 * row.live_e as u64 {
+        return Err(format!(
+            "topology churn T0: merged rep scans {} arcs, want {} (2 × {} live edges) — tombstoned arcs leaked",
+            row.rep_scan_arcs,
+            2 * row.live_e,
+            row.live_e
+        ));
+    }
+    if row.rep_bytes != row.rep_bytes_compact {
+        return Err(format!(
+            "topology churn T0: merged rep holds {} bytes, a fresh compact build {} — overlay residue survived the merge",
+            row.rep_bytes, row.rep_bytes_compact
+        ));
+    }
+    Ok(super::table1::BenchRecord {
+        graph: row.id,
+        engine: "DYN",
+        rep: "CHURN",
+        wall_ms: row.inc_ms,
+        pushes: row.inc_ops,
+        relabels: 0,
+        scan_arcs: 0,
+        scan_arcs_max_worker: 0,
+        scan_arcs_mean_worker: 0,
+        frontier_len_sum: row.frontier_len_sum,
+        launches: row.launches,
+        rescan_launches: row.rescan_launches,
+        carried_frontier_len: row.carried_frontier_len,
+        gr_alpha_final: 0.0,
+        gr_alpha_trace: Vec::new(),
+        trace_base_ms: 0.0,
+        trace_on_ms: 0.0,
+        scan_base_ms: 0.0,
+        scan_opt_ms: 0.0,
+        scan_arcs_per_sec_worker: 0.0,
+        coop_chunk_final: 0,
+        workers_pinned: 0,
+        dyn_inc_ops: row.inc_ops,
+        dyn_scratch_ops: row.scratch_ops,
+    })
+}
+
 /// Render rows in the repo's table style.
 pub fn render(rows: &[Row]) -> String {
     let mut t = Table::new(&[
-        "Graph", "V", "E", "batches", "updates", "inc ops", "scratch ops", "ops speedup",
+        "Graph", "V", "E", "batches", "updates", "topo", "live E", "dead E", "rep KB",
+        "inc ops", "scratch ops", "ops speedup",
         "inc ms", "legacy ms", "carry-only ms", "wall speedup", "frontier Σ", "GR skipped",
         "launches", "rescans", "carried Σ",
         "scratch VC ms", "scratch Dinic ms", "values",
@@ -248,6 +393,10 @@ pub fn render(rows: &[Row]) -> String {
             r.e.to_string(),
             r.batches.to_string(),
             r.updates.to_string(),
+            r.topo_updates.to_string(),
+            r.live_e.to_string(),
+            r.dead_e.to_string(),
+            format!("{:.0}", r.rep_bytes as f64 / 1024.0),
             r.inc_ops.to_string(),
             r.scratch_ops.to_string(),
             speedup(r.ops_speedup()),
@@ -520,6 +669,84 @@ mod tests {
     }
 
     #[test]
+    fn topology_churn_case_compacts_and_stays_incremental() {
+        // The Table 3 topology arm (ISSUE 9): insert/delete churn repaired
+        // incrementally must stay >= 3x cheaper than from-scratch
+        // recomputes, and the post-stream overlay merge must physically
+        // compact the tombstoned arcs out. Single-threaded so the ops
+        // counters are deterministic.
+        let opts = SolveOptions { threads: 1, cycles_per_launch: 128, ..Default::default() };
+        let suite = dyn_suite();
+        let case = suite.iter().find(|c| c.id == "T0").unwrap();
+        assert_eq!(case.mix, StreamMix::Churn);
+        let row = run_case(case, &opts);
+        assert!(row.values_agree, "churn repairs must match from-scratch values");
+        assert!(row.topo_updates > 0, "churn stream must carry inserts/deletes");
+        assert!(row.dead_e > 0, "churn stream must tombstone some edges");
+        assert!(row.live_e > row.e / 2, "most of the graph must survive the stream");
+        // The compaction invariants (satellite 1's RSS / scan-arc
+        // assertion): after the snapshot-path merge, the admissibility
+        // sweep visits exactly one forward + one reverse arc per live
+        // edge, and the representation holds exactly what a fresh compact
+        // build of the same live set would.
+        assert_eq!(
+            row.rep_scan_arcs,
+            2 * row.live_e as u64,
+            "merged rep must scan only live arcs ({} dead of {} slots)",
+            row.dead_e,
+            row.live_e + row.dead_e
+        );
+        assert_eq!(
+            row.rep_bytes, row.rep_bytes_compact,
+            "overlay merge must leave no residue bytes"
+        );
+        assert!(row.rep_bytes_peak >= row.rep_bytes, "peak tracks the overlay high-water mark");
+        assert!(
+            row.inc_ops * 3 <= row.scratch_ops,
+            "topology repair must be >= 3x cheaper than recompute: inc={} scratch={}",
+            row.inc_ops,
+            row.scratch_ops
+        );
+    }
+
+    #[test]
+    fn sliding_window_case_expires_edges_and_stays_verified() {
+        let opts = SolveOptions { threads: 1, cycles_per_launch: 128, ..Default::default() };
+        let suite = dyn_suite();
+        let case = suite.iter().find(|c| c.id == "T1").unwrap();
+        assert_eq!(case.mix, StreamMix::SlidingWindow);
+        let row = run_case(case, &opts);
+        assert!(row.values_agree, "window repairs must match from-scratch values");
+        // Every sliding-window update is topological, and expired windows
+        // leave tombstones behind.
+        assert_eq!(row.topo_updates, row.updates);
+        assert!(row.dead_e > 0, "expired windows must tombstone their edges");
+        assert_eq!(row.rep_scan_arcs, 2 * row.live_e as u64);
+        assert_eq!(row.rep_bytes, row.rep_bytes_compact);
+    }
+
+    #[test]
+    fn topology_smoke_record_carries_the_gate_fields() {
+        let opts = SolveOptions { threads: 1, cycles_per_launch: 128, ..Default::default() };
+        let r = topology_smoke_record(&opts).expect("T0 verifies");
+        assert_eq!((r.graph.as_str(), r.engine, r.rep), ("T0", "DYN", "CHURN"));
+        assert!(r.dyn_inc_ops > 0 && r.dyn_scratch_ops > 0);
+        assert!(
+            r.dyn_inc_ops * 3 <= r.dyn_scratch_ops,
+            "the smoke record itself must clear the compare gate: inc={} scratch={}",
+            r.dyn_inc_ops,
+            r.dyn_scratch_ops
+        );
+        // Round-trips through the perf-tracker document with the optional
+        // gate fields present.
+        let j = crate::bench::table1::records_json(&[r]);
+        let back = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        let rec = &back.get("records").unwrap().as_arr().unwrap()[0];
+        assert!(rec.get("dyn_inc_ops").unwrap().as_i64().unwrap() > 0);
+        assert!(rec.get("dyn_scratch_ops").unwrap().as_i64().unwrap() > 0);
+    }
+
+    #[test]
     fn shard_scaling_rows_are_correct_and_render() {
         let opts = SolveOptions { threads: 2, cycles_per_launch: 64, ..Default::default() };
         // Tiny sweep: correctness of the harness, not throughput claims
@@ -565,6 +792,13 @@ mod tests {
             scratch_vc_ms: 5.0,
             scratch_dinic_ms: 3.0,
             values_agree: true,
+            topo_updates: 3,
+            live_e: 18,
+            dead_e: 2,
+            rep_scan_arcs: 36,
+            rep_bytes: 2048,
+            rep_bytes_peak: 4096,
+            rep_bytes_compact: 2048,
         }];
         let s = render(&rows);
         assert!(s.contains("D9"));

@@ -203,54 +203,72 @@ impl SessionManager {
     /// then served by warm repair or from-scratch recompute, whichever the
     /// cost router predicts cheaper ([`RouterConfig::route_update`]).
     ///
-    /// A validation error leaves the session untouched; a repair-invariant
-    /// failure poisons the engine, so the session is dropped rather than
-    /// kept serving values from an invalid flow — the caller must re-open.
+    /// A validation error leaves the session untouched. A repair-invariant
+    /// failure poisons the warm engine, but its undo log restores the
+    /// pre-batch capacities first, so the batch is re-served through the
+    /// from-scratch leg transparently (counted as a recompute) instead of
+    /// failing the job — the session only dies if that from-scratch solve
+    /// fails too, in which case it is dropped rather than kept serving
+    /// values from an invalid flow and the caller must re-open.
     pub fn update_report(&mut self, id: u64, batch: &UpdateBatch) -> Result<UpdateReport, String> {
         self.rehydrate_if_evicted(id)?;
         let router = self.cfg.router.clone();
         let sess = self.sessions.get_mut(&id).ok_or_else(|| format!("session {id} not open"))?;
         sess.last_touch = Instant::now();
+        // Reject malformed batches up front, before routing: a validation
+        // error must leave the session untouched on *either* leg, and
+        // pre-validating here means any later error out of a leg is a
+        // genuine solve failure, not a bad request.
+        batch.validate_against(sess.df.network().n, sess.df.network().edges.len())?;
         match router.route_update(sess.cost.predict_repair(batch), sess.cost.scratch_ops) {
             UpdateRoute::Repair => {
                 let result = sess.df.apply(batch);
                 if sess.df.is_poisoned() {
-                    self.sessions.remove(&id);
-                    let cause = result.err().unwrap_or_default();
-                    return Err(format!("session {id} evicted, re-open required: {cause}"));
+                    // The failed repair rolled its capacity edits back
+                    // (the engine's undo log), so `network()` is exactly
+                    // the pre-batch state: serve the batch from scratch
+                    // instead of surfacing an error for work the session
+                    // layer can still do.
+                    return self.recompute_into(id, batch);
                 }
                 let rep = result?;
                 sess.cost.observe_repair(rep.stats.pushes + rep.stats.relabels, batch.distinct_touches());
                 self.counters.repairs += 1;
                 Ok(rep)
             }
-            UpdateRoute::Recompute => {
-                // Edit an index-stable copy of the network, then re-solve.
-                // A validation error surfaces before any state changes.
-                let mut net = sess.df.network().clone();
-                batch.apply_to_network(&mut net)?;
-                let before = sess.df.value();
-                let df = DynamicFlow::solve_prepared(net, &self.opts, self.pool.clone());
-                if df.is_poisoned() {
-                    let cause = df.fault().unwrap_or("recompute failed").to_string();
-                    self.sessions.remove(&id);
-                    return Err(format!("session {id} evicted, re-open required: {cause}"));
-                }
-                let stats = df.total_stats().clone();
-                let value = df.value();
-                sess.cost.observe_scratch(stats.pushes + stats.relabels);
-                sess.cost.decay_repair();
-                sess.df = df;
-                self.counters.recomputes += 1;
-                Ok(UpdateReport {
-                    value,
-                    delta: value - before,
-                    applied: batch.len(),
-                    stats,
-                    recomputed: true,
-                })
-            }
+            UpdateRoute::Recompute => self.recompute_into(id, batch),
         }
+    }
+
+    /// The from-scratch leg: edit an index-stable copy of the network,
+    /// re-solve it, and swap the fresh engine in. Shared by the cost
+    /// router's Recompute route and the poisoned-repair fallback. Only an
+    /// unservable re-solve (the from-scratch engine itself poisoned)
+    /// drops the session.
+    fn recompute_into(&mut self, id: u64, batch: &UpdateBatch) -> Result<UpdateReport, String> {
+        let sess = self.sessions.get_mut(&id).ok_or_else(|| format!("session {id} not open"))?;
+        let mut net = sess.df.network().clone();
+        batch.apply_to_network(&mut net)?;
+        let before = sess.df.value();
+        let df = DynamicFlow::solve_prepared(net, &self.opts, self.pool.clone());
+        if df.is_poisoned() {
+            let cause = df.fault().unwrap_or("recompute failed").to_string();
+            self.sessions.remove(&id);
+            return Err(format!("session {id} evicted, re-open required: {cause}"));
+        }
+        let stats = df.total_stats().clone();
+        let value = df.value();
+        sess.cost.observe_scratch(stats.pushes + stats.relabels);
+        sess.cost.decay_repair();
+        sess.df = df;
+        self.counters.recomputes += 1;
+        Ok(UpdateReport {
+            value,
+            delta: value - before,
+            applied: batch.len(),
+            stats,
+            recomputed: true,
+        })
     }
 
     /// Drop a session, returning its final value. Works on evicted
@@ -510,6 +528,34 @@ mod tests {
         let next = m
             .update_report(2, &UpdateBatch::new(vec![GraphUpdate::IncreaseCap { edge: 1, delta: 1 }]));
         assert!(next.is_ok());
+    }
+
+    #[test]
+    fn poisoned_repair_falls_back_to_recompute_transparently() {
+        let mut m = mgr();
+        let net = generators::erdos_renyi(40, 200, 6, 9);
+        m.open(5, &net).unwrap();
+        // Simulate a repair-invariant failure mid-stream: the engine is
+        // poisoned but (per the apply() undo log) its network is the
+        // accurate pre-batch state.
+        m.sessions.get_mut(&5).unwrap().df.poison_for_test("injected repair fault");
+        let batch = UpdateBatch::new(vec![GraphUpdate::IncreaseCap { edge: 1, delta: 3 }]);
+        let rep = m.update_report(5, &batch).expect("poisoned repair must be served, not errored");
+        assert!(rep.recomputed, "fallback leg is the from-scratch re-solve");
+        assert_eq!(m.counters().recomputes, 1, "fallback counts as session:recompute");
+        assert_eq!(m.counters().repairs, 0);
+        assert_eq!(m.len(), 1, "session survives with a fresh engine");
+        let df = m.get(5).unwrap();
+        assert!(!df.is_poisoned());
+        let scratch = maxflow::dinic::solve(&ArcGraph::build(&df.network().normalized())).value;
+        assert_eq!(rep.value, scratch, "fallback result agrees with reference");
+        maxflow::verify(df.arcs(), &df.flow_result()).unwrap();
+        // The healed session keeps serving warm repairs afterwards.
+        let r2 = m
+            .update_report(5, &UpdateBatch::new(vec![GraphUpdate::IncreaseCap { edge: 0, delta: 2 }]))
+            .unwrap();
+        assert!(!r2.recomputed);
+        assert_eq!(m.counters().repairs, 1);
     }
 
     #[test]

@@ -12,9 +12,19 @@
 //!    Capacity increases just widen the forward residual. Decreases that
 //!    undercut the current flow cancel the overflow along residual flow
 //!    paths (a BFS over positive-flow arcs) and convert the displaced
-//!    units at the tail into push-relabel excess. Inserts append an arc
-//!    pair (the RCSR is rebuilt once per batch); deletes are full
-//!    decreases that leave a capacity-0 tombstone.
+//!    units at the tail into push-relabel excess. Topology edits go
+//!    through the delta-overlay representation
+//!    ([`crate::graph::overlay::DeltaRcsr`]): an insert appends an arc
+//!    pair and splices it into the endpoint rows' overlay extras (O(1),
+//!    immediately scannable — no CSR rebuild), a delete is a full
+//!    decrease followed by a **tombstone** (the arc pair leaves the
+//!    scannable rows; the arena slots survive so edge indices stay
+//!    stable, and a later `IncreaseCap` resurrects the edge). Each edit
+//!    also updates the touched rows' degree-bucket census membership
+//!    incrementally ([`crate::maxflow::vc::DegreeCensus`]), so repairs
+//!    never re-run the O(V) census pass. The overlay is folded back into
+//!    a tight base CSR — dropping tombstoned arcs for good — at
+//!    snapshot/eviction time ([`DynamicFlow::snapshot`]).
 //! 2. **Seed** — every residual arc out of `s` is saturated, exactly the
 //!    generalized preflow over the *current* residual network. On an
 //!    unchanged instance all of this excess is provably stranded (no
@@ -42,7 +52,7 @@ use super::snapshot::FlowSnapshot;
 use super::update::{GraphUpdate, UpdateBatch, UpdateReport};
 use crate::graph::builder::{ArcGraph, FlowNetwork};
 use crate::graph::residual::Residual;
-use crate::graph::{Edge, Rcsr};
+use crate::graph::{Capacity, DeltaRcsr, Edge};
 use crate::maxflow::global_relabel::{global_relabel_with, ExcessAccounting};
 use crate::maxflow::vc::VcContext;
 use crate::maxflow::{vc, FlowResult, ParState, SolveOptions, SolveStats, WorkerPool};
@@ -54,8 +64,14 @@ use std::sync::Arc;
 pub struct DynamicFlow {
     net: FlowNetwork,
     g: ArcGraph,
-    rep: Rcsr,
+    rep: DeltaRcsr,
     st: ParState,
+    /// Tombstone flags, one per edge slot: a deleted edge keeps its slot
+    /// (index stability) but its arcs leave the scannable representation
+    /// until an `IncreaseCap` resurrects it. Invariant: `dead[e]` ⟹
+    /// `net.edges[e].cap == 0`, no flow on the arc pair, and the pair is
+    /// absent from `rep`.
+    dead: Vec<bool>,
     opts: SolveOptions,
     value: i64,
     batches: u64,
@@ -150,15 +166,25 @@ impl DynamicFlow {
     /// (tombstones in place, inserts appended) goes straight in.
     pub fn solve_prepared(net: FlowNetwork, opts: &SolveOptions, pool: Arc<WorkerPool>) -> DynamicFlow {
         let g = ArcGraph::build(&net);
-        let rep = Rcsr::build(&g);
+        // Capacity-0 slots are tombstones (either evolved deletes round-
+        // tripping through the session recompute leg, or degenerate input
+        // edges): compact their arcs out of the representation up front.
+        // An `IncreaseCap` resurrects them through the overlay.
+        let dead: Vec<bool> = net.edges.iter().map(|e| e.cap == 0).collect();
+        let rep = DeltaRcsr::build_compact(&g, &dead);
         let st = ParState::zeroed(&g);
         let n = g.n;
-        let ctx = VcContext::with_pool(n, pool);
+        let mut ctx = VcContext::with_pool(n, pool);
+        // The engine owns its representation's topology (every edit goes
+        // through `attach_arcs`/`tombstone`), so the degree-bucket census
+        // is maintained incrementally instead of rebuilt per solve.
+        ctx.scratch.census.pinned = true;
         let mut df = DynamicFlow {
             net,
             g,
             rep,
             st,
+            dead,
             opts: opts.clone(),
             value: 0,
             batches: 0,
@@ -212,7 +238,8 @@ impl DynamicFlow {
             name: snap.name.clone(),
         };
         let g = ArcGraph::build(&net);
-        let rep = Rcsr::build(&g);
+        let dead: Vec<bool> = net.edges.iter().map(|e| e.cap == 0).collect();
+        let rep = DeltaRcsr::build_compact(&g, &dead);
         let n = g.n;
         let mut cf = Vec::with_capacity(2 * snap.edges.len());
         for (e, &f) in snap.edges.iter().zip(&snap.flow) {
@@ -225,12 +252,14 @@ impl DynamicFlow {
         let h: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
         h[snap.s as usize].store(n as u32, Ordering::Relaxed);
         let st = ParState::from_parts(cf, e, h);
-        let ctx = VcContext::with_pool(n, pool);
+        let mut ctx = VcContext::with_pool(n, pool);
+        ctx.scratch.census.pinned = true;
         Ok(DynamicFlow {
             net,
             g,
             rep,
             st,
+            dead,
             opts: opts.clone(),
             value: snap.value,
             batches: snap.batches,
@@ -246,12 +275,22 @@ impl DynamicFlow {
     /// Capture the warm state as a [`FlowSnapshot`] (the session layer's
     /// TTL-eviction path). Fails on a poisoned engine — its state is not a
     /// valid flow and must never be re-hydrated.
-    pub fn snapshot(&self) -> Result<FlowSnapshot, String> {
+    ///
+    /// This is the delta-overlay's designated **merge point**: accumulated
+    /// insert/delete patches are folded back into a tight base CSR (and
+    /// tombstoned arcs compacted out of the representation for good)
+    /// before the state is serialized. Edge *slots* still serialize —
+    /// dead ones as capacity-0/flow-0 records — because indices handed to
+    /// the session must survive re-hydration.
+    pub fn snapshot(&mut self) -> Result<FlowSnapshot, String> {
         if self.poisoned {
             return Err(format!(
                 "cannot snapshot a poisoned engine: {}",
                 self.fault.as_deref().unwrap_or("unknown fault")
             ));
+        }
+        if !self.rep.is_pristine() {
+            self.rep.merge(&self.g, &self.dead);
         }
         // Net shipment of edge e is the backward residual cf[2e+1]
         // (antisymmetry: cf[a] + cf[a^1] == cap).
@@ -291,6 +330,34 @@ impl DynamicFlow {
         &self.g
     }
 
+    /// Edge slots currently tombstoned (deleted and not yet resurrected).
+    pub fn dead_edges(&self) -> usize {
+        self.dead.iter().filter(|d| **d).count()
+    }
+
+    /// Bytes held by the residual representation (base CSR plus any
+    /// pending insert/delete overlay) — the churn bench's memory metric.
+    pub fn rep_bytes(&self) -> usize {
+        self.rep.memory_bytes()
+    }
+
+    /// Total row entries an admissibility sweep over every vertex would
+    /// visit. After an overlay merge this is exactly `2 × live edges`
+    /// (one forward + one reverse arc per live edge) — the compaction
+    /// invariant the churn bench asserts: tombstoned arcs must not cost
+    /// scan work forever.
+    pub fn rep_scan_arcs(&self) -> u64 {
+        (0..self.rep.n() as u32).map(|u| self.rep.degree(u) as u64).sum()
+    }
+
+    /// Bytes a freshly compacted base CSR of the current live edge set
+    /// occupies — the reference for the bench's "merge leaves no residue"
+    /// assertion (`rep_bytes() == compact_rep_bytes()` right after
+    /// [`DynamicFlow::snapshot`] folded the overlay down).
+    pub fn compact_rep_bytes(&self) -> usize {
+        DeltaRcsr::build_compact(&self.g, &self.dead).memory_bytes()
+    }
+
     /// Batches applied so far (not counting the initial solve).
     pub fn batches(&self) -> u64 {
         self.batches
@@ -323,6 +390,15 @@ impl DynamicFlow {
         self.poisoned
     }
 
+    /// Force the poisoned state, as if a repair invariant broke, without
+    /// corrupting anything. Exists so the serving layer's poisoned-repair
+    /// fallback can be exercised deterministically; not part of the API.
+    #[doc(hidden)]
+    pub fn poison_for_test(&mut self, cause: &str) {
+        self.poisoned = true;
+        self.fault = Some(cause.to_string());
+    }
+
     /// Why the engine is poisoned (if it is).
     pub fn fault(&self) -> Option<&str> {
         self.fault.as_deref()
@@ -345,21 +421,31 @@ impl DynamicFlow {
         let t0 = Timer::start();
         let before = self.value;
         let mut stats = SolveStats::default();
-        let mut topology_changed = false;
+        // Network-level undo log: pre-batch edge count plus the old
+        // capacity of every slot this batch edits. If the repair fails the
+        // engine's *flow state* is unrecoverable (poisoned), but the
+        // network is rolled back to its pre-batch shape — so the session
+        // layer can still clone `network()`, re-apply the batch, and serve
+        // it through the recompute leg instead of failing the job.
+        let undo_edges = self.net.edges.len();
+        let mut undo_caps: Vec<(usize, Capacity)> = Vec::new();
         let edited: Result<(), String> = (|| {
             for up in &batch.updates {
-                // The RCSR is rebuilt once after the loop, so cancel walks
-                // in `decrease` may see a stale row set mid-batch. That is
-                // safe: walks only traverse arcs carrying positive flow,
-                // and arcs inserted by this batch carry none yet.
-                self.apply_one(up, &mut stats, &mut topology_changed)?;
-            }
-            if topology_changed {
-                self.rep = Rcsr::build(&self.g);
+                // Topology edits land in the delta overlay immediately, so
+                // cancel walks in `decrease` always see the current row
+                // set. Arcs inserted earlier in the batch carry no flow
+                // yet, so the walks (positive-flow arcs only) skip them.
+                self.apply_one(up, &mut stats, &mut undo_caps)?;
             }
             self.resolve(&mut stats)
         })();
         if let Err(e) = edited {
+            for &(slot, cap) in undo_caps.iter().rev() {
+                if slot < undo_edges {
+                    self.net.edges[slot].cap = cap;
+                }
+            }
+            self.net.edges.truncate(undo_edges);
             self.poisoned = true;
             self.fault = Some(e.clone());
             return Err(e);
@@ -389,22 +475,43 @@ impl DynamicFlow {
         &mut self,
         up: &GraphUpdate,
         stats: &mut SolveStats,
-        topology_changed: &mut bool,
+        undo_caps: &mut Vec<(usize, Capacity)>,
     ) -> Result<(), String> {
         match *up {
             GraphUpdate::IncreaseCap { edge, delta } => {
+                undo_caps.push((edge, self.net.edges[edge].cap));
                 let a = 2 * edge;
                 self.net.edges[edge].cap += delta;
                 self.g.arc_cap[a] += delta;
                 self.st.cf[a].fetch_add(delta, Ordering::Relaxed);
+                if self.dead[edge] && delta > 0 {
+                    // Growing a tombstone resurrects it: the arc pair
+                    // rejoins the scannable rows through the overlay.
+                    self.dead[edge] = false;
+                    let (u, v) = (self.g.arc_from[a], self.g.arc_to[a]);
+                    self.attach_arcs(edge as u32, u, v);
+                }
                 Ok(())
             }
-            GraphUpdate::DecreaseCap { edge, delta } => self.decrease(edge, delta, stats),
+            GraphUpdate::DecreaseCap { edge, delta } => {
+                undo_caps.push((edge, self.net.edges[edge].cap));
+                self.decrease(edge, delta, stats)
+            }
             GraphUpdate::DeleteEdge { edge } => {
+                undo_caps.push((edge, self.net.edges[edge].cap));
+                if self.dead[edge] {
+                    // Already tombstoned: deleting again is a no-op.
+                    return Ok(());
+                }
+                // Cancel in-flight flow *first* (the walk needs the arcs
+                // still scannable), then drop the pair from the rows.
                 let cap = self.g.arc_cap[2 * edge];
-                self.decrease(edge, cap, stats)
+                self.decrease(edge, cap, stats)?;
+                self.tombstone(edge);
+                Ok(())
             }
             GraphUpdate::InsertEdge { u, v, cap } => {
+                let e = self.net.edges.len() as u32;
                 self.net.edges.push(Edge::new(u, v, cap));
                 self.g.arc_from.push(u);
                 self.g.arc_to.push(v);
@@ -414,10 +521,34 @@ impl DynamicFlow {
                 self.g.arc_cap.push(0);
                 self.st.cf.push(AtomicI64::new(cap));
                 self.st.cf.push(AtomicI64::new(0));
-                *topology_changed = true;
+                self.dead.push(false);
+                self.attach_arcs(e, u, v);
                 Ok(())
             }
         }
+    }
+
+    /// Splice edge `edge = (u → v)`'s arc pair into the overlay rows and
+    /// mirror the two endpoint rows' degree change into the pinned census.
+    fn attach_arcs(&mut self, edge: u32, u: u32, v: u32) {
+        let (du, dv) = (self.rep.degree(u), self.rep.degree(v));
+        self.rep.insert_arc_pair(edge, u, v);
+        self.ctx.scratch.census.adjust(du, du + 1);
+        self.ctx.scratch.census.adjust(dv, dv + 1);
+    }
+
+    /// Tombstone edge `edge`: drop its arc pair from the scannable rows
+    /// (the arena slots stay — index stability) and mirror the endpoint
+    /// rows' degree change into the pinned census. Caller guarantees the
+    /// pair carries no flow (a full decrease just ran).
+    fn tombstone(&mut self, edge: usize) {
+        let a = 2 * edge;
+        let (u, v) = (self.g.arc_from[a], self.g.arc_to[a]);
+        let (du, dv) = (self.rep.degree(u), self.rep.degree(v));
+        self.rep.remove_arc_pair(edge as u32, u, v);
+        self.dead[edge] = true;
+        self.ctx.scratch.census.adjust(du, du - 1);
+        self.ctx.scratch.census.adjust(dv, dv - 1);
     }
 
     /// Lower edge `edge`'s capacity by `delta` (clamped), canceling any
@@ -548,6 +679,7 @@ fn add_stats(total: &mut SolveStats, s: &SolveStats) {
     // ratio (Σmax / Σmean) meaningful without storing every batch.
     total.scan_arcs_max_worker += s.scan_arcs_max_worker;
     total.scan_arcs_mean_worker += s.scan_arcs_mean_worker;
+    total.census_rebuilds += s.census_rebuilds;
     for &a in &s.gr_alpha_trace {
         total.record_gr_alpha(a);
     }
@@ -562,9 +694,9 @@ fn add_stats(total: &mut SolveStats, s: &SolveStats) {
 /// (a canceled circulation), or any vertex holding matching excess (the
 /// decrease surplus, typically) — then cancel along the path. Repeats
 /// until the deficit is repaired; every round retires at least one unit.
-fn cancel_deficit(
+fn cancel_deficit<R: Residual>(
     g: &ArcGraph,
-    rep: &Rcsr,
+    rep: &R,
     st: &ParState,
     from: u32,
     amount: i64,
@@ -638,9 +770,9 @@ fn cancel_deficit(
 /// Phase 4: walk every non-terminal's leftover excess back to `s` along
 /// arcs with positive flow into the vertex (the textbook second phase of
 /// preflow-push, restricted to the dead region — see module docs).
-fn return_excess(
+fn return_excess<R: Residual>(
     g: &ArcGraph,
-    rep: &Rcsr,
+    rep: &R,
     st: &ParState,
     stats: &mut SolveStats,
     scratch: &mut BfsScratch,

@@ -213,7 +213,7 @@ mod tests {
     #[test]
     fn snapshot_binary_roundtrip_through_disk() {
         let net = generators::erdos_renyi(30, 140, 5, 13);
-        let df = DynamicFlow::new(&net, &opts());
+        let mut df = DynamicFlow::new(&net, &opts());
         let snap = df.snapshot().unwrap();
         let dir = std::env::temp_dir().join("wbpr-dynamic-snap-test");
         std::fs::create_dir_all(&dir).unwrap();
@@ -226,6 +226,78 @@ mod tests {
         let back = DynamicFlow::from_snapshot(&loaded, &opts(), pool).unwrap();
         assert_eq!(back.value(), df.value());
         check(&back);
+    }
+
+    #[test]
+    fn snapshot_with_unmerged_overlay_roundtrips() {
+        // Topology edits accumulate in the delta overlay; snapshot() is
+        // the merge point. The round trip must preserve the value and the
+        // edge-slot numbering (dead slots serialize as cap-0 records),
+        // and re-hydration must cost zero launches.
+        let net = generators::erdos_renyi(40, 200, 6, 21);
+        let mut df = DynamicFlow::new(&net, &opts());
+        df.apply(&UpdateBatch::new(vec![
+            GraphUpdate::InsertEdge { u: 2, v: 7, cap: 5 },
+            GraphUpdate::DeleteEdge { edge: 4 },
+        ]))
+        .unwrap();
+        df.apply(&UpdateBatch::new(vec![GraphUpdate::InsertEdge { u: 5, v: 9, cap: 3 }])).unwrap();
+        check(&df);
+        let want = df.value();
+        let m = df.network().edges.len();
+        let snap = df.snapshot().unwrap();
+        assert_eq!(snap.edges.len(), m, "tombstoned slots still serialize (index stability)");
+        assert_eq!(snap.edges[4].cap, 0, "deleted edge is a cap-0 record");
+        let pool = std::sync::Arc::new(crate::maxflow::WorkerPool::new(2));
+        let back = DynamicFlow::from_snapshot(&snap, &opts(), pool).unwrap();
+        assert_eq!(back.value(), want, "same value after re-hydration");
+        assert_eq!(back.total_stats().launches, 0, "re-hydration does zero solve work");
+        check(&back);
+        // The re-hydrated engine keeps serving: grow the post-merge tail
+        // insert and resurrect the tombstone.
+        let mut back = back;
+        back.apply(&UpdateBatch::new(vec![
+            GraphUpdate::IncreaseCap { edge: m - 1, delta: 2 },
+            GraphUpdate::IncreaseCap { edge: 4, delta: 3 },
+        ]))
+        .unwrap();
+        check(&back);
+    }
+
+    #[test]
+    fn warm_repairs_reuse_the_census_incrementally() {
+        // With the cooperative path on, the degree-bucket census is built
+        // once by the initial solve and then maintained by per-edit
+        // adjustments — topology-heavy warm batches must not trigger the
+        // O(V) rebuild again.
+        let net = generators::star_hub(100, 60, 31);
+        let o = SolveOptions {
+            threads: 2,
+            cycles_per_launch: 32,
+            coop_degree: 8,
+            coop_chunk: 4,
+            ..Default::default()
+        };
+        let mut df = DynamicFlow::new(&net, &o);
+        check(&df);
+        let cold = df.total_stats().census_rebuilds;
+        assert!(cold >= 1, "initial solve builds the census");
+        for i in 0..4usize {
+            let m = df.network().edges.len();
+            df.apply(&UpdateBatch::new(vec![
+                GraphUpdate::InsertEdge { u: 2, v: (4 + i) as u32, cap: 3 },
+                // Skip the two super-terminal edges so flow stays alive.
+                GraphUpdate::DeleteEdge { edge: 10 + i },
+                GraphUpdate::IncreaseCap { edge: m - 1, delta: 1 },
+            ]))
+            .unwrap();
+            check(&df);
+        }
+        assert_eq!(
+            df.total_stats().census_rebuilds,
+            cold,
+            "warm repairs adjust the census incrementally, never rebuild"
+        );
     }
 
     #[test]

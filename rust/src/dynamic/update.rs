@@ -20,16 +20,21 @@ pub enum GraphUpdate {
     DecreaseCap { edge: usize, delta: Capacity },
     /// Add a new directed edge `u -> v` with capacity `cap`.
     InsertEdge { u: VertexId, v: VertexId, cap: Capacity },
-    /// Remove edge `edge` (equivalent to decreasing its capacity to zero;
-    /// the slot remains as a tombstone and may be re-grown later).
+    /// Remove edge `edge`: in-flight flow is canceled, the arc pair is
+    /// detached from the residual representation, and the slot remains as
+    /// a capacity-0 tombstone (index stability) that [`GraphUpdate::IncreaseCap`]
+    /// may later resurrect.
     DeleteEdge { edge: usize },
 }
 
 impl GraphUpdate {
-    /// Does this update change the arc topology (forcing a representation
-    /// rebuild) rather than just capacities?
+    /// Does this update change the arc topology (attach or detach an arc
+    /// pair) rather than just capacities? Inserts add a pair; deletes
+    /// tombstone one — both mutate the representation's row structure,
+    /// which the cost router must price differently from a pure
+    /// capacity edit.
     pub fn changes_topology(&self) -> bool {
-        matches!(self, GraphUpdate::InsertEdge { .. })
+        matches!(self, GraphUpdate::InsertEdge { .. } | GraphUpdate::DeleteEdge { .. })
     }
 }
 
@@ -54,30 +59,39 @@ impl UpdateBatch {
         self.updates.is_empty()
     }
 
-    /// Count of topology-changing updates in the batch.
+    /// Count of topology-changing updates (inserts + deletes) in the batch.
     pub fn inserts(&self) -> usize {
         self.updates.iter().filter(|u| u.changes_topology()).count()
     }
 
-    /// Distinct edge slots this batch touches (inserts each count as a new
-    /// slot). The cost router's unit of predicted repair work: repeated
-    /// edits of one edge amortize into a single repair frontier, so
-    /// `distinct_touches = len × locality` is a better size proxy than
-    /// `len` alone.
+    /// Distinct residual *rows* this batch touches — the cost router's
+    /// unit of predicted repair work: repeated edits of one edge amortize
+    /// into a single repair frontier, so `distinct_touches = len ×
+    /// locality` is a better size proxy than `len` alone.
+    ///
+    /// Topology updates are heavier than capacity edits and count per
+    /// endpoint row: an insert attaches an arc to *two* rows (tail's
+    /// forward row, head's reverse row), and a delete additionally
+    /// detaches the reverse arc from the head's row on top of the tail's
+    /// slot edit. The old slot-only count under-priced topology batches
+    /// and mis-routed them toward repair.
     pub fn distinct_touches(&self) -> usize {
         let mut slots = std::collections::HashSet::new();
+        let mut deleted = std::collections::HashSet::new();
         let mut inserts = 0usize;
         for up in &self.updates {
             match *up {
-                GraphUpdate::IncreaseCap { edge, .. }
-                | GraphUpdate::DecreaseCap { edge, .. }
-                | GraphUpdate::DeleteEdge { edge } => {
+                GraphUpdate::IncreaseCap { edge, .. } | GraphUpdate::DecreaseCap { edge, .. } => {
                     slots.insert(edge);
                 }
-                GraphUpdate::InsertEdge { .. } => inserts += 1,
+                GraphUpdate::DeleteEdge { edge } => {
+                    slots.insert(edge);
+                    deleted.insert(edge);
+                }
+                GraphUpdate::InsertEdge { .. } => inserts += 2,
             }
         }
-        slots.len() + inserts
+        slots.len() + deleted.len() + inserts
     }
 
     /// Pre-flight validation against a network with `n` vertices and
@@ -201,9 +215,11 @@ mod tests {
         ]);
         assert_eq!(b.len(), 3);
         assert!(!b.is_empty());
-        assert_eq!(b.inserts(), 1);
+        assert_eq!(b.inserts(), 2, "insert and delete both change topology");
         assert!(GraphUpdate::InsertEdge { u: 0, v: 1, cap: 1 }.changes_topology());
-        assert!(!GraphUpdate::DeleteEdge { edge: 0 }.changes_topology());
+        assert!(GraphUpdate::DeleteEdge { edge: 0 }.changes_topology());
+        assert!(!GraphUpdate::IncreaseCap { edge: 0, delta: 1 }.changes_topology());
+        assert!(!GraphUpdate::DecreaseCap { edge: 0, delta: 1 }.changes_topology());
     }
 
     #[test]
@@ -215,7 +231,27 @@ mod tests {
             GraphUpdate::InsertEdge { u: 0, v: 1, cap: 2 },
             GraphUpdate::InsertEdge { u: 1, v: 2, cap: 2 },
         ]);
-        assert_eq!(b.distinct_touches(), 4, "edge 3 counted once, 2 inserts, 1 delete");
+        // edge 3 dedups to one slot; the delete prices slot + reverse row;
+        // each insert prices both endpoint rows.
+        assert_eq!(b.distinct_touches(), 7, "1 slot + (1 slot + 1 rev row) + 2 inserts x 2 rows");
+    }
+
+    #[test]
+    fn distinct_touches_counts_topology_per_row() {
+        // Capacity edit and delete of the *same* slot: slot dedups but the
+        // delete's reverse-row touch still counts.
+        let b = UpdateBatch::new(vec![
+            GraphUpdate::DecreaseCap { edge: 2, delta: 1 },
+            GraphUpdate::DeleteEdge { edge: 2 },
+            GraphUpdate::DeleteEdge { edge: 2 }, // repeat delete dedups entirely
+        ]);
+        assert_eq!(b.distinct_touches(), 2);
+        // Pure capacity batches are unchanged by the topology weighting.
+        let caps = UpdateBatch::new(vec![
+            GraphUpdate::IncreaseCap { edge: 0, delta: 1 },
+            GraphUpdate::DecreaseCap { edge: 1, delta: 1 },
+        ]);
+        assert_eq!(caps.distinct_touches(), 2);
     }
 
     #[test]

@@ -327,6 +327,78 @@ impl UpdateStreamParams {
             seed,
         }
     }
+
+    /// Topology-heavy churn: half the updates attach or detach edges
+    /// (25% inserts, 25% deletes), half edit capacities. `frac`·|E|
+    /// updates per batch — the workload of the Table 3 topology arm
+    /// (deletes may hit previously deleted or fresh-inserted edges;
+    /// real churn looks exactly like that).
+    pub fn churn(m: usize, batches: usize, frac: f64, max_delta: Capacity, seed: u64) -> UpdateStreamParams {
+        UpdateStreamParams {
+            batches,
+            batch_size: ((m as f64 * frac).round() as usize).max(1),
+            p_increase: 0.25,
+            p_decrease: 0.25,
+            p_insert: 0.25,
+            max_delta,
+            seed,
+        }
+    }
+}
+
+/// A sliding-window topology stream: every batch inserts `per_batch` new
+/// edges, and once more than `window` batches of inserts are live, also
+/// deletes the `per_batch` edges inserted `window` batches ago — the
+/// classic streaming-graph window (newest edges arrive, oldest expire).
+/// Worst case for a rebuild-per-batch engine: *every* batch changes
+/// topology, and the live edge set never stops moving.
+///
+/// Deterministic in `seed`; indices follow the engine's in-order
+/// semantics (inserts append, deletes tombstone in place), so the stream
+/// replays against [`crate::dynamic::DynamicFlow`] or
+/// [`crate::dynamic::UpdateBatch::apply_to_network`] alike.
+pub fn sliding_window_stream(
+    net: &FlowNetwork,
+    batches: usize,
+    per_batch: usize,
+    window: usize,
+    max_delta: Capacity,
+    seed: u64,
+) -> crate::dynamic::UpdateStream {
+    assert!(per_batch >= 1 && window >= 1);
+    let mut rng = Rng::new(seed);
+    let mut m = net.edges.len();
+    // FIFO of per-batch insert index runs awaiting expiry.
+    let mut live: std::collections::VecDeque<Vec<usize>> = std::collections::VecDeque::new();
+    let mut out = Vec::with_capacity(batches);
+    for _ in 0..batches {
+        let mut ups = Vec::with_capacity(2 * per_batch);
+        let mut born = Vec::with_capacity(per_batch);
+        for _ in 0..per_batch {
+            let u = rng.index(net.n) as VertexId;
+            let mut v = rng.index(net.n) as VertexId;
+            while v == u {
+                v = rng.index(net.n) as VertexId;
+            }
+            ups.push(crate::dynamic::GraphUpdate::InsertEdge { u, v, cap: rng.range_i64(1, max_delta) });
+            born.push(m);
+            m += 1;
+        }
+        live.push_back(born);
+        if live.len() > window {
+            for edge in live.pop_front().unwrap() {
+                ups.push(crate::dynamic::GraphUpdate::DeleteEdge { edge });
+            }
+        }
+        out.push(crate::dynamic::UpdateBatch::new(ups));
+    }
+    crate::dynamic::UpdateStream {
+        name: format!(
+            "sliding-window(b={batches},per={per_batch},w={window},seed={seed}) over {}",
+            net.name
+        ),
+        batches: out,
+    }
 }
 
 /// Generate a deterministic stream of update batches for `net`.
@@ -521,5 +593,68 @@ mod tests {
         let s = update_stream(&net, &p);
         assert!(s.batches.iter().all(|b| b.inserts() == 0));
         assert!(!s.is_empty());
+    }
+
+    #[test]
+    fn churn_stream_is_topology_heavy_and_replayable() {
+        use crate::dynamic::{DynamicFlow, GraphUpdate};
+        let net = erdos_renyi(30, 150, 6, 5);
+        let p = UpdateStreamParams::churn(net.m(), 5, 0.1, 4, 17);
+        let s = update_stream(&net, &p);
+        let topo: usize = s.batches.iter().map(|b| b.inserts()).sum();
+        let total = s.len();
+        assert!(topo > 0, "churn must contain inserts/deletes");
+        assert!(topo * 4 >= total, "~half the mix is topology, got {topo}/{total}");
+        let has_delete = s
+            .batches
+            .iter()
+            .flat_map(|b| &b.updates)
+            .any(|u| matches!(u, GraphUpdate::DeleteEdge { .. }));
+        assert!(has_delete, "the mix includes a delete share");
+        // The stream must replay cleanly on a warm engine and stay a
+        // verified max flow throughout.
+        let mut df = DynamicFlow::new(&net, &Default::default());
+        for b in &s.batches {
+            df.apply(b).unwrap();
+            crate::maxflow::verify(df.arcs(), &df.flow_result()).unwrap();
+        }
+    }
+
+    #[test]
+    fn sliding_window_stream_expires_oldest_inserts() {
+        use crate::dynamic::{DynamicFlow, GraphUpdate};
+        let net = erdos_renyi(25, 100, 5, 8);
+        let m0 = net.m();
+        let s = sliding_window_stream(&net, 6, 3, 2, 4, 23);
+        assert_eq!(s.batches.len(), 6);
+        // First `window` batches are pure inserts; afterwards each batch
+        // also expires the batch of inserts from `window` batches ago.
+        for (i, b) in s.batches.iter().enumerate() {
+            let inserts =
+                b.updates.iter().filter(|u| matches!(u, GraphUpdate::InsertEdge { .. })).count();
+            let deletes: Vec<usize> = b
+                .updates
+                .iter()
+                .filter_map(|u| match u {
+                    GraphUpdate::DeleteEdge { edge } => Some(*edge),
+                    _ => None,
+                })
+                .collect();
+            assert_eq!(inserts, 3);
+            if i < 2 {
+                assert!(deletes.is_empty());
+            } else {
+                assert_eq!(deletes.len(), 3);
+                // Expired edges are exactly the inserts from batch i-2.
+                let expect: Vec<usize> = (0..3).map(|k| m0 + 3 * (i - 2) + k).collect();
+                assert_eq!(deletes, expect);
+            }
+        }
+        // Replays cleanly and stays verified.
+        let mut df = DynamicFlow::new(&net, &Default::default());
+        for b in &s.batches {
+            df.apply(b).unwrap();
+            crate::maxflow::verify(df.arcs(), &df.flow_result()).unwrap();
+        }
     }
 }

@@ -1,0 +1,395 @@
+//! Delta-overlay residual representation for topology-dynamic graphs.
+//!
+//! [`DeltaRcsr`] wraps a base [`Rcsr`] with a per-row patch/extra overlay so
+//! an inserted edge's arc pair becomes scannable immediately (O(1) append)
+//! and a deleted edge's arcs disappear from every admissibility scan without
+//! rebuilding the CSR. Untouched rows read straight from the base arrays —
+//! the overlay costs nothing on rows churn never visits.
+//!
+//! Row shape (up to four segments, see
+//! [`RowSegs`](super::residual::RowSegs)):
+//!
+//! 1. forward base row *or* its patched copy (when a base forward arc was
+//!    deleted from this row),
+//! 2. forward extras (arcs of edges inserted since the last merge),
+//! 3. reversed base row or its patched copy,
+//! 4. reversed extras.
+//!
+//! The overlay is merged back into a tight base CSR at snapshot/eviction
+//! time (or whenever the caller decides churn has accumulated enough):
+//! [`DeltaRcsr::merge`] rebuilds the two CSRs from the arc arena, skipping
+//! tombstoned (dead) edges, and clears every patch. Arc ids are never
+//! renumbered — edge `e` keeps arcs `2e`/`2e+1` for the lifetime of the
+//! session, so `rev_arc` stays the O(1) `a ^ 1` pairing and flow state
+//! indexed by arc id survives merges untouched.
+
+use super::builder::ArcGraph;
+use super::csr::Csr;
+use super::rcsr::Rcsr;
+use super::residual::{Residual, RowSegs};
+use super::VertexId;
+
+/// One vertex's overlay state. `*_patch = Some(row)` replaces the base
+/// segment entirely (used when a base arc was deleted); `*_extra` holds
+/// arcs appended since the last merge (inserted edges).
+#[derive(Debug, Clone, Default)]
+struct OvRow {
+    fwd_patch: Option<(Vec<u32>, Vec<VertexId>)>,
+    fwd_extra: (Vec<u32>, Vec<VertexId>),
+    rev_patch: Option<(Vec<u32>, Vec<VertexId>)>,
+    rev_extra: (Vec<u32>, Vec<VertexId>),
+}
+
+impl OvRow {
+    fn is_pristine(&self) -> bool {
+        self.fwd_patch.is_none()
+            && self.rev_patch.is_none()
+            && self.fwd_extra.0.is_empty()
+            && self.rev_extra.0.is_empty()
+    }
+}
+
+/// Base RCSR plus a sparse per-row delta overlay (see module docs).
+#[derive(Debug, Clone)]
+pub struct DeltaRcsr {
+    base: Rcsr,
+    /// Overlay row index per vertex; `u32::MAX` = untouched (read base).
+    idx: Vec<u32>,
+    rows: Vec<OvRow>,
+}
+
+const UNTOUCHED: u32 = u32::MAX;
+
+impl DeltaRcsr {
+    /// Wrap a freshly built base with an empty overlay.
+    pub fn build(g: &ArcGraph) -> DeltaRcsr {
+        DeltaRcsr::from_base(Rcsr::build(g))
+    }
+
+    /// Build with the arcs of tombstoned edges (`dead[e]`) compacted out
+    /// of the base from the start — the dynamic engine's constructor for
+    /// evolved edge lists whose capacity-0 slots are tombstones.
+    pub fn build_compact(g: &ArcGraph, dead: &[bool]) -> DeltaRcsr {
+        DeltaRcsr::from_base(compact_base(g, dead))
+    }
+
+    pub fn from_base(base: Rcsr) -> DeltaRcsr {
+        let n = base.n();
+        DeltaRcsr { base, idx: vec![UNTOUCHED; n], rows: Vec::new() }
+    }
+
+    /// True when no row diverges from the base (nothing to merge).
+    pub fn is_pristine(&self) -> bool {
+        self.rows.iter().all(|r| r.is_pristine())
+    }
+
+    /// Number of rows with live overlay state (diagnostics).
+    pub fn overlay_rows(&self) -> usize {
+        self.rows.iter().filter(|r| !r.is_pristine()).count()
+    }
+
+    fn row_mut(&mut self, u: VertexId) -> &mut OvRow {
+        let slot = &mut self.idx[u as usize];
+        if *slot == UNTOUCHED {
+            *slot = self.rows.len() as u32;
+            self.rows.push(OvRow::default());
+        }
+        &mut self.rows[*slot as usize]
+    }
+
+    /// Make edge `e = (u → v)`'s arc pair scannable: arc `2e` joins `u`'s
+    /// forward extras, arc `2e+1` joins `v`'s reversed extras. O(1).
+    pub fn insert_arc_pair(&mut self, e: u32, u: VertexId, v: VertexId) {
+        let ov = self.row_mut(u);
+        ov.fwd_extra.0.push(2 * e);
+        ov.fwd_extra.1.push(v);
+        let ov = self.row_mut(v);
+        ov.rev_extra.0.push(2 * e + 1);
+        ov.rev_extra.1.push(u);
+    }
+
+    /// Remove edge `e = (u → v)`'s arc pair from the scannable rows
+    /// (tombstone: the arc slots in the arena survive, the representation
+    /// just stops yielding them). O(row) worst case when a base row must be
+    /// patched for the first time; O(extra) when the edge was itself an
+    /// unmerged insert.
+    pub fn remove_arc_pair(&mut self, e: u32, u: VertexId, v: VertexId) {
+        let a = 2 * e;
+        {
+            let base = &self.base;
+            let fr = base.fwd.range(u);
+            let base_fwd: Option<(Vec<u32>, Vec<VertexId>)> = if self.idx[u as usize] == UNTOUCHED
+                || self.rows[self.idx[u as usize] as usize].fwd_patch.is_none()
+            {
+                Some((base.fwd_arcs[fr.clone()].to_vec(), base.fwd.cols[fr].to_vec()))
+            } else {
+                None
+            };
+            let ov = self.row_mut(u);
+            if let Some(pos) = ov.fwd_extra.0.iter().position(|&x| x == a) {
+                ov.fwd_extra.0.swap_remove(pos);
+                ov.fwd_extra.1.swap_remove(pos);
+            } else {
+                let patch = ov.fwd_patch.get_or_insert_with(|| base_fwd.expect("patch exists"));
+                let pos = patch.0.iter().position(|&x| x == a).expect("arc present in forward row");
+                patch.0.swap_remove(pos);
+                patch.1.swap_remove(pos);
+            }
+        }
+        let b = a + 1;
+        {
+            let base = &self.base;
+            let rr = base.rev.range(v);
+            let base_rev: Option<(Vec<u32>, Vec<VertexId>)> = if self.idx[v as usize] == UNTOUCHED
+                || self.rows[self.idx[v as usize] as usize].rev_patch.is_none()
+            {
+                Some((base.rev_arcs[rr.clone()].to_vec(), base.rev.cols[rr].to_vec()))
+            } else {
+                None
+            };
+            let ov = self.row_mut(v);
+            if let Some(pos) = ov.rev_extra.0.iter().position(|&x| x == b) {
+                ov.rev_extra.0.swap_remove(pos);
+                ov.rev_extra.1.swap_remove(pos);
+            } else {
+                let patch = ov.rev_patch.get_or_insert_with(|| base_rev.expect("patch exists"));
+                let pos = patch.0.iter().position(|&x| x == b).expect("arc present in reversed row");
+                patch.0.swap_remove(pos);
+                patch.1.swap_remove(pos);
+            }
+        }
+    }
+
+    /// Fold the overlay back into a tight base CSR, dropping the arcs of
+    /// tombstoned edges (`dead[e]`) for good. Arc ids are preserved; only
+    /// the representation is compacted. Called at snapshot/eviction time.
+    pub fn merge(&mut self, g: &ArcGraph, dead: &[bool]) {
+        self.base = compact_base(g, dead);
+        self.idx.clear();
+        self.idx.resize(g.n, UNTOUCHED);
+        self.rows.clear();
+    }
+}
+
+/// Rebuild a tight [`Rcsr`] over the arena, skipping the arcs of
+/// tombstoned edges.
+fn compact_base(g: &ArcGraph, dead: &[bool]) -> Rcsr {
+    let m2 = g.num_arcs();
+    let live = |a: u32| !dead[(a / 2) as usize];
+    let fwd_iter = (0..m2 as u32)
+        .step_by(2)
+        .filter(|&a| live(a))
+        .map(|a| (g.arc_from[a as usize], g.arc_to[a as usize], a));
+    let (fwd, fwd_arcs) = Csr::from_pairs_with(g.n, fwd_iter);
+    let rev_iter = (1..m2 as u32)
+        .step_by(2)
+        .filter(|&a| live(a))
+        .map(|a| (g.arc_from[a as usize], g.arc_to[a as usize], a));
+    let (rev, rev_arcs) = Csr::from_pairs_with(g.n, rev_iter);
+    Rcsr::from_parts(g.n, fwd, fwd_arcs, rev, rev_arcs)
+}
+
+impl Residual for DeltaRcsr {
+    fn n(&self) -> usize {
+        self.base.n()
+    }
+
+    fn row(&self, u: VertexId) -> RowSegs<'_> {
+        let slot = self.idx[u as usize];
+        if slot == UNTOUCHED {
+            return self.base.row(u);
+        }
+        let ov = &self.rows[slot as usize];
+        let fr = self.base.fwd.range(u);
+        let fwd: (&[u32], &[VertexId]) = match &ov.fwd_patch {
+            Some((a, c)) => (a, c),
+            None => (&self.base.fwd_arcs[fr.clone()], &self.base.fwd.cols[fr]),
+        };
+        let rr = self.base.rev.range(u);
+        let rev: (&[u32], &[VertexId]) = match &ov.rev_patch {
+            Some((a, c)) => (a, c),
+            None => (&self.base.rev_arcs[rr.clone()], &self.base.rev.cols[rr]),
+        };
+        RowSegs::four(
+            fwd,
+            (&ov.fwd_extra.0, &ov.fwd_extra.1),
+            rev,
+            (&ov.rev_extra.0, &ov.rev_extra.1),
+        )
+    }
+
+    #[inline(always)]
+    fn rev_arc(&self, a: u32, _from: VertexId, _to: VertexId) -> u32 {
+        // O(1): the arena pairing, same as the base RCSR.
+        a ^ 1
+    }
+
+    fn memory_bytes(&self) -> usize {
+        let overlay: usize = self
+            .rows
+            .iter()
+            .map(|r| {
+                let patch = |p: &Option<(Vec<u32>, Vec<VertexId>)>| {
+                    p.as_ref().map_or(0, |(a, c)| a.len() * 4 + c.len() * 4)
+                };
+                patch(&r.fwd_patch)
+                    + patch(&r.rev_patch)
+                    + (r.fwd_extra.0.len() + r.fwd_extra.1.len()) * 4
+                    + (r.rev_extra.0.len() + r.rev_extra.1.len()) * 4
+            })
+            .sum();
+        self.base.memory_bytes() + self.idx.len() * 4 + overlay
+    }
+
+    fn name(&self) -> &'static str {
+        "RCSR+ov"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::FlowNetwork;
+    use crate::graph::Edge;
+
+    fn diamond() -> (FlowNetwork, ArcGraph) {
+        let net = FlowNetwork::new(
+            4,
+            0,
+            3,
+            vec![Edge::new(0, 1, 3), Edge::new(0, 2, 2), Edge::new(1, 3, 2), Edge::new(2, 3, 3)],
+            "diamond",
+        );
+        let g = ArcGraph::build(&net);
+        (net, g)
+    }
+
+    fn arcs_of(rep: &DeltaRcsr, u: VertexId) -> Vec<(u32, u32)> {
+        let mut v: Vec<(u32, u32)> = rep.row(u).iter().collect();
+        v.sort_unstable();
+        v
+    }
+
+    #[test]
+    fn pristine_overlay_matches_base_rcsr() {
+        let (_, g) = diamond();
+        let plain = Rcsr::build(&g);
+        let ov = DeltaRcsr::build(&g);
+        assert!(ov.is_pristine());
+        for u in 0..g.n as u32 {
+            let mut a: Vec<(u32, u32)> = plain.row(u).iter().collect();
+            let mut b: Vec<(u32, u32)> = ov.row(u).iter().collect();
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b, "row {u}");
+            assert_eq!(ov.degree(u), plain.degree(u));
+        }
+    }
+
+    #[test]
+    fn insert_is_immediately_scannable() {
+        let (_, mut g) = diamond();
+        let mut rep = DeltaRcsr::build(&g);
+        // New edge 4: 1 -> 2, arcs 8 (fwd on row 1) and 9 (rev on row 2).
+        g.arc_from.extend([1, 2]);
+        g.arc_to.extend([2, 1]);
+        g.arc_cap.extend([5, 0]);
+        rep.insert_arc_pair(4, 1, 2);
+        assert!(arcs_of(&rep, 1).contains(&(8, 2)));
+        assert!(arcs_of(&rep, 2).contains(&(9, 1)));
+        assert_eq!(rep.degree(1), 4); // arcs 1(rev of 0->1), 4(fwd 1->3), 8
+                                      // ... plus nothing else: base row 1 = {1, 4}, extra = {8}.
+        assert!(!rep.is_pristine());
+        assert_eq!(rep.rev_arc(8, 1, 2), 9);
+    }
+
+    #[test]
+    fn delete_removes_base_arcs_via_patch() {
+        let (_, g) = diamond();
+        let mut rep = DeltaRcsr::build(&g);
+        // Delete edge 2 (1 -> 3): arc 4 leaves row 1, arc 5 leaves row 3.
+        rep.remove_arc_pair(2, 1, 3);
+        assert!(!arcs_of(&rep, 1).contains(&(4, 3)));
+        assert!(!arcs_of(&rep, 3).contains(&(5, 1)));
+        // Unrelated arcs survive.
+        assert!(arcs_of(&rep, 1).contains(&(1, 0)));
+        assert!(arcs_of(&rep, 3).contains(&(7, 2)));
+        assert_eq!(rep.degree(1), 1);
+    }
+
+    #[test]
+    fn delete_of_unmerged_insert_cancels_in_overlay() {
+        let (_, mut g) = diamond();
+        let mut rep = DeltaRcsr::build(&g);
+        g.arc_from.extend([1, 2]);
+        g.arc_to.extend([2, 1]);
+        g.arc_cap.extend([5, 0]);
+        rep.insert_arc_pair(4, 1, 2);
+        rep.remove_arc_pair(4, 1, 2);
+        assert!(!arcs_of(&rep, 1).contains(&(8, 2)));
+        assert!(!arcs_of(&rep, 2).contains(&(9, 1)));
+        assert_eq!(rep.degree(1), 3);
+    }
+
+    #[test]
+    fn merge_compacts_dead_edges_and_clears_overlay() {
+        let (_, mut g) = diamond();
+        let mut rep = DeltaRcsr::build(&g);
+        // Insert edge 4 (1 -> 2), delete edge 0 (0 -> 1).
+        g.arc_from.extend([1, 2]);
+        g.arc_to.extend([2, 1]);
+        g.arc_cap.extend([5, 0]);
+        rep.insert_arc_pair(4, 1, 2);
+        rep.remove_arc_pair(0, 0, 1);
+        let mut dead = vec![false; 5];
+        dead[0] = true;
+        let before: Vec<Vec<(u32, u32)>> = (0..4).map(|u| arcs_of(&rep, u)).collect();
+        rep.merge(&g, &dead);
+        assert!(rep.is_pristine());
+        // Same residual arcs visible before and after the merge.
+        for u in 0..4u32 {
+            assert_eq!(arcs_of(&rep, u), before[u as usize], "row {u}");
+        }
+        // Dead arcs are gone from the representation for good.
+        assert!(!arcs_of(&rep, 0).contains(&(0, 1)));
+        assert!(!arcs_of(&rep, 1).contains(&(1, 0)));
+        // Live arc ids unchanged (edge 4 still arcs 8/9).
+        assert!(arcs_of(&rep, 1).contains(&(8, 2)));
+        assert!(arcs_of(&rep, 2).contains(&(9, 1)));
+    }
+
+    #[test]
+    fn every_arc_appears_exactly_once_under_churn() {
+        let (_, mut g) = diamond();
+        let mut rep = DeltaRcsr::build(&g);
+        g.arc_from.extend([1, 2, 3, 0]);
+        g.arc_to.extend([2, 1, 0, 3]);
+        g.arc_cap.extend([5, 0, 2, 0]);
+        rep.insert_arc_pair(4, 1, 2);
+        rep.insert_arc_pair(5, 3, 0);
+        rep.remove_arc_pair(1, 0, 2);
+        let mut seen = std::collections::HashMap::new();
+        for u in 0..4u32 {
+            for (a, v) in rep.row(u).iter() {
+                *seen.entry(a).or_insert(0u32) += 1;
+                assert_eq!(g.arc_from[a as usize], u);
+                assert_eq!(g.arc_to[a as usize], v);
+            }
+        }
+        assert!(seen.values().all(|&c| c == 1));
+        // 6 live edges x 2 arcs (edges 0,2,3,4,5 live; edge 1 deleted).
+        assert_eq!(seen.len(), 10);
+    }
+
+    #[test]
+    fn memory_accounts_for_overlay() {
+        let (_, mut g) = diamond();
+        let mut rep = DeltaRcsr::build(&g);
+        let base_bytes = rep.memory_bytes();
+        g.arc_from.extend([1, 2]);
+        g.arc_to.extend([2, 1]);
+        g.arc_cap.extend([5, 0]);
+        rep.insert_arc_pair(4, 1, 2);
+        assert!(rep.memory_bytes() > base_bytes);
+    }
+}

@@ -33,6 +33,12 @@ impl Rcsr {
         let (rev, rev_arcs) = Csr::from_pairs_with(g.n, rev_iter);
         Rcsr { n: g.n, fwd, fwd_arcs, rev, rev_arcs }
     }
+
+    /// Assemble from pre-built CSRs (the delta-overlay's merge path, which
+    /// filters tombstoned arcs out of the iterators before building).
+    pub fn from_parts(n: usize, fwd: Csr, fwd_arcs: Vec<u32>, rev: Csr, rev_arcs: Vec<u32>) -> Rcsr {
+        Rcsr { n, fwd, fwd_arcs, rev, rev_arcs }
+    }
 }
 
 impl Residual for Rcsr {

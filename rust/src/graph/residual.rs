@@ -8,39 +8,58 @@
 
 use super::VertexId;
 
-/// A vertex's residual neighborhood, exposed as up to two contiguous
-/// segments of parallel `(arc id, target)` slices.
+/// Maximum number of contiguous segments a residual row can span.
+///
+/// RCSR uses two (forward row, reversed row); the delta-overlay
+/// representation ([`super::overlay::DeltaRcsr`]) uses up to four
+/// (patched-or-base forward, forward extras, patched-or-base reversed,
+/// reversed extras). BCSR uses one.
+pub const MAX_ROW_SEGS: usize = 4;
+
+/// A vertex's residual neighborhood, exposed as up to [`MAX_ROW_SEGS`]
+/// contiguous segments of parallel `(arc id, target)` slices.
 ///
 /// RCSR yields two segments (forward row, reversed row) — the paper's
 /// "discontinuous addresses, causing uncoalesced memory access". BCSR yields
-/// one (the aggregated row).
+/// one (the aggregated row). The overlay representation yields up to four.
 #[derive(Debug, Clone, Copy)]
 pub struct RowSegs<'a> {
-    pub segs: [(&'a [u32], &'a [VertexId]); 2],
+    pub segs: [(&'a [u32], &'a [VertexId]); MAX_ROW_SEGS],
 }
+
+const EMPTY_SEG: (&[u32], &[VertexId]) = (&[], &[]);
 
 impl<'a> RowSegs<'a> {
     pub fn one(arcs: &'a [u32], cols: &'a [VertexId]) -> RowSegs<'a> {
-        RowSegs { segs: [(arcs, cols), (&[], &[])] }
+        RowSegs { segs: [(arcs, cols), EMPTY_SEG, EMPTY_SEG, EMPTY_SEG] }
     }
 
     pub fn two(a: (&'a [u32], &'a [VertexId]), b: (&'a [u32], &'a [VertexId])) -> RowSegs<'a> {
-        RowSegs { segs: [a, b] }
+        RowSegs { segs: [a, b, EMPTY_SEG, EMPTY_SEG] }
+    }
+
+    /// All four segments explicitly (the delta-overlay's row shape).
+    pub fn four(
+        a: (&'a [u32], &'a [VertexId]),
+        b: (&'a [u32], &'a [VertexId]),
+        c: (&'a [u32], &'a [VertexId]),
+        d: (&'a [u32], &'a [VertexId]),
+    ) -> RowSegs<'a> {
+        RowSegs { segs: [a, b, c, d] }
     }
 
     /// Total number of residual arcs in the row.
     pub fn len(&self) -> usize {
-        self.segs[0].0.len() + self.segs[1].0.len()
+        self.segs.iter().map(|(a, _)| a.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Iterate `(arc, target)` over both segments.
+    /// Iterate `(arc, target)` over every segment in order.
     pub fn iter(&self) -> impl Iterator<Item = (u32, VertexId)> + 'a {
-        let [(a0, c0), (a1, c1)] = self.segs;
-        a0.iter().copied().zip(c0.iter().copied()).chain(a1.iter().copied().zip(c1.iter().copied()))
+        self.segs.into_iter().flat_map(|(a, c)| a.iter().copied().zip(c.iter().copied()))
     }
 
     /// Iterate `(arc, target)` over the positions `lo..hi` of the row, in
@@ -49,15 +68,7 @@ impl<'a> RowSegs<'a> {
     /// row into fixed-size arc chunks, and `iter().skip(lo)` would re-walk
     /// every earlier chunk (quadratic over the row).
     pub fn slice(&self, lo: usize, hi: usize) -> impl Iterator<Item = (u32, VertexId)> + 'a {
-        let [(a0, c0), (a1, c1)] = self.segs;
-        let l0 = a0.len();
-        let r0 = lo.min(l0)..hi.min(l0);
-        let r1 = lo.saturating_sub(l0).min(a1.len())..hi.saturating_sub(l0).min(a1.len());
-        a0[r0.clone()]
-            .iter()
-            .copied()
-            .zip(c0[r0].iter().copied())
-            .chain(a1[r1.clone()].iter().copied().zip(c1[r1].iter().copied()))
+        self.slice_segs(lo, hi).iter()
     }
 
     /// The positions `lo..hi` of the row as a sub-`RowSegs` (same O(1)
@@ -65,11 +76,15 @@ impl<'a> RowSegs<'a> {
     /// shape so the lane-chunked scan kernel can gather over contiguous
     /// windows instead of driving a zipped iterator).
     pub fn slice_segs(&self, lo: usize, hi: usize) -> RowSegs<'a> {
-        let [(a0, c0), (a1, c1)] = self.segs;
-        let l0 = a0.len();
-        let r0 = lo.min(l0)..hi.min(l0);
-        let r1 = lo.saturating_sub(l0).min(a1.len())..hi.saturating_sub(l0).min(a1.len());
-        RowSegs { segs: [(&a0[r0.clone()], &c0[r0]), (&a1[r1.clone()], &c1[r1])] }
+        let mut out = [EMPTY_SEG; MAX_ROW_SEGS];
+        let mut base = 0usize;
+        for (slot, &(a, c)) in out.iter_mut().zip(self.segs.iter()) {
+            let l = a.len();
+            let r = lo.saturating_sub(base).min(l)..hi.saturating_sub(base).min(l);
+            *slot = (&a[r.clone()], &c[r]);
+            base += l;
+        }
+        RowSegs { segs: out }
     }
 }
 
@@ -111,6 +126,30 @@ mod tests {
                 let sub = row.slice_segs(lo, hi);
                 let got: Vec<(u32, u32)> = sub.iter().collect();
                 assert_eq!(got, want, "slice_segs({lo}, {hi})");
+                assert_eq!(sub.len(), hi - lo);
+            }
+        }
+    }
+
+    #[test]
+    fn four_segment_rows_iterate_and_slice() {
+        let a0 = [0u32, 1];
+        let c0 = [10u32, 11];
+        let a1 = [2u32];
+        let c1 = [12u32];
+        let a2 = [3u32, 4, 5];
+        let c2 = [13u32, 14, 15];
+        let a3 = [6u32];
+        let c3 = [16u32];
+        let row = RowSegs::four((&a0, &c0), (&a1, &c1), (&a2, &c2), (&a3, &c3));
+        assert_eq!(row.len(), 7);
+        let all: Vec<(u32, u32)> = row.iter().collect();
+        assert_eq!(all, vec![(0, 10), (1, 11), (2, 12), (3, 13), (4, 14), (5, 15), (6, 16)]);
+        for lo in 0..=7 {
+            for hi in lo..=7 {
+                let want: Vec<(u32, u32)> = all[lo..hi].to_vec();
+                let sub = row.slice_segs(lo, hi);
+                assert_eq!(sub.iter().collect::<Vec<_>>(), want, "slice_segs({lo}, {hi})");
                 assert_eq!(sub.len(), hi - lo);
             }
         }

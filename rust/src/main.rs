@@ -566,6 +566,21 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
         // >= 1.3x speedup gate reads these fields in `bench compare`.
         let scans = table1::scan_captures(&opts)?;
         table1::attach_scan_speedup(&mut records, &scans);
+        // Topology-churn arm (Table 3's insert/delete regime): the T0
+        // churn stream replayed incrementally vs from-scratch. The run
+        // itself enforces the compaction invariants (the merged rep scans
+        // exactly 2x the live edges, no overlay residue); the >= 3x
+        // ops-reduction pair lands in the document for `bench compare`.
+        let topo = table3::topology_smoke_record(&opts)?;
+        println!(
+            "topology churn {}: inc ops {} scratch ops {} reduction {:.2}x (gate {:.2}x in bench compare)",
+            topo.graph,
+            topo.dyn_inc_ops,
+            topo.dyn_scratch_ops,
+            topo.dyn_scratch_ops as f64 / topo.dyn_inc_ops.max(1) as f64,
+            compare::TOPOLOGY_OPS_GATE
+        );
+        records.push(topo);
         let out = args.opt("out").unwrap_or("BENCH_table1.json");
         std::fs::write(out, table1::records_json(&records).to_string()).map_err(|e| e.to_string())?;
         println!("wrote {} ({} records in {:.1}s)", out, records.len(), t.elapsed().as_secs_f64());

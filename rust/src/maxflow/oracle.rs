@@ -54,8 +54,31 @@ pub fn sweep(seeds: &[u64]) -> Vec<OracleCase> {
 /// cooperative discharge path does real work inside the differential
 /// harness. Kept in a separate seed band so the original 0..40 cases stay
 /// byte-identical (the bench-regression cache key hashes the seed list).
+///
+/// Seeds `>= 2000` are the **dynamic band** (`seed % 2`: Erdős–Rényi,
+/// genrmf): modest well-connected networks sized for
+/// [`run_dynamic_case`]'s insert/delete churn replay. They remain valid
+/// static cases too, so the main sweep covers them as well.
 pub fn build_case(seed: u64) -> OracleCase {
     let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0x0DD5_EED5);
+    if seed >= 2000 {
+        let net = match seed % 2 {
+            0 => generators::erdos_renyi(
+                30 + rng.index(40),
+                200 + rng.index(200),
+                4 + rng.below(8) as i64,
+                rng.next_u64(),
+            ),
+            _ => generators::genrmf(&GenrmfParams {
+                a: 3 + rng.index(2),
+                b: 3 + rng.index(3),
+                c1: 1,
+                c2: 10 + rng.below(20) as i64,
+                seed: rng.next_u64(),
+            }),
+        };
+        return OracleCase { name: format!("seed{seed}:{}", net.name), net };
+    }
     if seed >= 1000 {
         let net = match seed % 2 {
             0 => {
@@ -212,6 +235,46 @@ pub fn run_case(case: &OracleCase, threads: usize) -> Result<OracleReport, Strin
     Ok(OracleReport { name: case.name.clone(), value: want })
 }
 
+/// Differential oracle for the **dynamic** path: derive the seed's case,
+/// replay a topology-heavy churn stream (inserts, deletes, capacity
+/// edits) through the warm [`crate::dynamic::DynamicFlow`] engine, and
+/// after every batch require
+///
+/// * the incremental value to equal a from-scratch Dinic solve of the
+///   evolved network, and
+/// * the warm residual to remain a valid flow decomposition
+///   ([`validate_flow`]: bounds, conservation, maximality).
+///
+/// Any overlay-row splice error, missed tombstone, stale census bucket or
+/// broken cancel walk surfaces as a value mismatch or an invalid
+/// decomposition on some seed.
+pub fn run_dynamic_case(seed: u64, threads: usize) -> Result<OracleReport, String> {
+    use crate::dynamic::DynamicFlow;
+    let case = build_case(seed);
+    let net = case.net.normalized();
+    let opts = SolveOptions { threads, cycles_per_launch: 32, ..Default::default() };
+    let mut df = DynamicFlow::new(&net, &opts);
+    if df.is_poisoned() {
+        return Err(format!("{}: initial solve: {}", case.name, df.fault().unwrap_or("poisoned")));
+    }
+    let p = generators::UpdateStreamParams::churn(net.m(), 4, 0.05, 5, seed ^ 0x00C0_FFEE);
+    let stream = generators::update_stream(&net, &p);
+    for (i, batch) in stream.batches.iter().enumerate() {
+        df.apply(batch).map_err(|e| format!("{}: batch {i}: {e}", case.name))?;
+        validate_flow(df.arcs(), &df.flow_result())
+            .map_err(|e| format!("{}: batch {i}: warm state: {e}", case.name))?;
+        let want = dinic::solve(&ArcGraph::build(&df.network().normalized())).value;
+        if df.value() != want {
+            return Err(format!(
+                "{}: batch {i}: incremental value {} != DINIC {want}",
+                case.name,
+                df.value()
+            ));
+        }
+    }
+    Ok(OracleReport { name: format!("{} +churn", case.name), value: df.value() })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -245,6 +308,17 @@ mod tests {
             assert!(case.name.contains("rmat") || case.name.contains("star_hub"), "{}", case.name);
             let report = run_case(&case, 2).unwrap();
             assert!(report.value >= 0, "{}", report.name);
+        }
+    }
+
+    #[test]
+    fn dynamic_band_case_agrees_through_churn() {
+        // One case per dynamic family (seed >= 2000): the fast-path slice
+        // of the insert/delete differential band driven in full by
+        // rust/tests/oracle.rs.
+        for seed in [2000u64, 2001] {
+            let report = run_dynamic_case(seed, 2).unwrap();
+            assert!(report.name.contains("+churn"), "{}", report.name);
         }
     }
 

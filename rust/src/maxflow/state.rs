@@ -68,6 +68,12 @@ pub struct SolveStats {
     /// policy — see `SolveOptions::{pin_cores, numa_interleave}` and
     /// [`crate::maxflow::pool::WorkerPool::pinned_workers`]).
     pub workers_pinned: u64,
+    /// Full O(V) degree-bucket census passes run at solve entry (see
+    /// [`crate::maxflow::vc::DegreeCensus`]). A from-scratch solve with
+    /// the cooperative path on pays exactly 1; a warm dynamic stream pins
+    /// the census and maintains it incrementally per touched row, so its
+    /// repairs add 0 here — the Table 3 topology arm gates on that.
+    pub census_rebuilds: u64,
     /// Scan throughput: residual arcs examined per second per worker
     /// (`scan_arcs / kernel seconds / workers`) — the memory-bandwidth
     /// figure of merit the lane-chunked kernel is gated on in

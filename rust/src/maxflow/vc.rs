@@ -249,6 +249,110 @@ impl AdaptiveChunk {
     }
 }
 
+/// Cached degree-bucket census for the cooperative hub discharge: how many
+/// hub vertices the graph has (rows at or above the coop threshold) and how
+/// many chunk units their rows slice into at the band-minimum width.
+///
+/// By default the census is rebuilt at every [`run_from_state`] entry (one
+/// O(V) pass of O(1) degree reads — correct for arbitrary graphs, including
+/// scratch reuse across *different* graphs). A caller whose representation
+/// is stable across solves — the dynamic engine, whose topology only moves
+/// through its own insert/delete edits — may **pin** the census and
+/// maintain it incrementally via [`DegreeCensus::adjust`], so warm repairs
+/// pay O(touched rows) instead of O(V) ([`SolveStats::census_rebuilds`]
+/// counts the full passes; a pinned warm stream keeps it at its initial 1).
+#[derive(Debug, Clone)]
+pub struct DegreeCensus {
+    /// Opt-in for incremental maintenance: when set (and the cached
+    /// parameters match), [`run_from_state`] reuses the cached counts
+    /// instead of re-scanning every row. Only set this when every degree
+    /// change of the representation is reported through
+    /// [`DegreeCensus::adjust`].
+    pub pinned: bool,
+    valid: bool,
+    n: usize,
+    coop_degree: usize,
+    chunk_floor: usize,
+    hub_count: usize,
+    chunk_cap: usize,
+}
+
+impl DegreeCensus {
+    fn new() -> DegreeCensus {
+        DegreeCensus {
+            pinned: false,
+            valid: false,
+            n: 0,
+            coop_degree: usize::MAX,
+            chunk_floor: 1,
+            hub_count: 0,
+            chunk_cap: 0,
+        }
+    }
+
+    /// Drop the cached counts; the next solve re-runs the full pass.
+    pub fn invalidate(&mut self) {
+        self.valid = false;
+    }
+
+    /// Report one row's residual degree changing from `old_d` to `new_d`
+    /// (the incremental mirror of the full pass). No-op while the census
+    /// is invalid or the cooperative path is off.
+    pub fn adjust(&mut self, old_d: usize, new_d: usize) {
+        if !self.valid || self.coop_degree == usize::MAX {
+            return;
+        }
+        if old_d >= self.coop_degree {
+            debug_assert!(self.hub_count > 0);
+            self.hub_count -= 1;
+            self.chunk_cap = self.chunk_cap.saturating_sub(old_d.div_ceil(self.chunk_floor));
+        }
+        if new_d >= self.coop_degree {
+            self.hub_count += 1;
+            self.chunk_cap += new_d.div_ceil(self.chunk_floor);
+        }
+    }
+
+    /// Return `(hub_count, chunk_cap)` for this solve, reusing the cached
+    /// counts when pinned and parameter-compatible, else re-running the
+    /// full O(V) pass (counted in [`SolveStats::census_rebuilds`] whenever
+    /// the cooperative path is on).
+    fn ensure<R: Residual>(
+        &mut self,
+        rep: &R,
+        n: usize,
+        coop_degree: usize,
+        chunk_floor: usize,
+        stats: &mut SolveStats,
+    ) -> (usize, usize) {
+        let reuse = self.pinned
+            && self.valid
+            && self.n == n
+            && self.coop_degree == coop_degree
+            && self.chunk_floor == chunk_floor;
+        if !reuse {
+            let (mut hubs, mut chunks) = (0usize, 0usize);
+            if coop_degree != usize::MAX {
+                for u in 0..n as u32 {
+                    let d = rep.degree(u);
+                    if d >= coop_degree {
+                        hubs += 1;
+                        chunks += d.div_ceil(chunk_floor);
+                    }
+                }
+                stats.census_rebuilds += 1;
+            }
+            self.n = n;
+            self.coop_degree = coop_degree;
+            self.chunk_floor = chunk_floor;
+            self.hub_count = hubs;
+            self.chunk_cap = chunks;
+            self.valid = true;
+        }
+        (self.hub_count, self.chunk_cap)
+    }
+}
+
 /// Reusable per-solve scratch for the VC engine: the double-buffered AVQ,
 /// the per-vertex queued-epoch stamps, the cycle barrier and the
 /// global-relabel BFS buffers. Warm sessions hold one and allocate nothing
@@ -284,6 +388,9 @@ pub struct VcScratch {
     hubs: Vec<HubSlot>,
     /// Chunk work units of the current cycle.
     chunkq: ChunkQueue,
+    /// Cached degree-bucket census (see [`DegreeCensus`]): rebuilt per
+    /// solve by default, maintained incrementally by owners that pin it.
+    pub census: DegreeCensus,
     /// Global-relabel BFS buffers (shared with the warm host loop).
     pub gr: GrScratch,
 }
@@ -304,6 +411,7 @@ impl VcScratch {
             participants,
             hubs: Vec::new(),
             chunkq: ChunkQueue::with_capacity(0),
+            census: DegreeCensus::new(),
             gr: GrScratch::new(n),
         }
     }
@@ -331,6 +439,7 @@ impl VcScratch {
         self.carry_valid = false;
         self.hubs = Vec::new();
         self.chunkq = ChunkQueue::with_capacity(0);
+        self.census.invalidate();
         self.gr.release();
     }
 
@@ -539,36 +648,30 @@ pub fn run_from_state<R: Residual>(
         ctx.scratch.invalidate_carry();
     }
 
-    // Degree-bucket census for the cooperative hub discharge: count the
-    // graph's hub vertices (rows at or above the coop threshold) and the
+    // Degree-bucket census for the cooperative hub discharge: how many hub
+    // vertices the graph has (rows at or above the coop threshold) and the
     // chunk units their rows slice into, so the per-cycle expansion can
-    // run against fixed-capacity shared buffers. One O(V) pass of O(1)
-    // degree reads per solve — far below the per-batch BFS the warm
-    // repair path already pays. The cooperative path rides the frontier
-    // engine *and* multi-push (the hub owner applies pushes
-    // multi-push-wise, so a single-push ablation must fall back to
-    // vertex-granular work to really be the PR-4 engine); the legacy
-    // ablation keeps vertex-granular work too.
+    // run against fixed-capacity shared buffers. Served from the scratch's
+    // cached [`DegreeCensus`]: an unpinned census re-runs the O(V) pass of
+    // O(1) degree reads here every solve; a pinned one (the dynamic
+    // engine, which reports every topology edit incrementally) reuses the
+    // cached counts, so warm repairs skip the pass entirely. The
+    // cooperative path rides the frontier engine *and* multi-push (the hub
+    // owner applies pushes multi-push-wise, so a single-push ablation must
+    // fall back to vertex-granular work to really be the PR-4 engine); the
+    // legacy ablation keeps vertex-granular work too.
     let coop_degree =
         if frontier && multi_push { opts.resolved_coop_degree() } else { usize::MAX };
     let mut chunk_tuner = AdaptiveChunk::new(
         opts.resolved_coop_chunk(),
         opts.adaptive_chunk && coop_degree != usize::MAX,
     );
-    // The census runs once per solve, so when the tuner may *shrink* the
-    // chunk mid-solve the queue must be sized for the band minimum — the
-    // worst case — instead of the current width.
+    // When the tuner may *shrink* the chunk mid-solve the queue must be
+    // sized for the band minimum — the worst case — instead of the
+    // current width.
     let chunk_floor = if chunk_tuner.on { CHUNK_MIN } else { chunk_tuner.chunk };
-    let (mut hub_count, mut chunk_cap) = (0usize, 0usize);
-    if coop_degree != usize::MAX {
-        for u in 0..n as u32 {
-            let d = rep.degree(u);
-            if d >= coop_degree {
-                hub_count += 1;
-                chunk_cap += d.div_ceil(chunk_floor);
-            }
-        }
-    }
+    let (hub_count, chunk_cap) =
+        ctx.scratch.census.ensure(rep, n, coop_degree, chunk_floor, stats);
     let coop_on = hub_count > 0;
     ctx.scratch.ensure_coop(hub_count, chunk_cap);
 

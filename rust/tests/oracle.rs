@@ -10,7 +10,7 @@
 //! job hashes into its cache key so a baseline and a candidate always
 //! compare identical cases.
 
-use wbpr::maxflow::oracle::{build_case, run_case, sweep};
+use wbpr::maxflow::oracle::{build_case, run_case, run_dynamic_case, sweep};
 
 /// Parse the checked-in seed list (one or more seeds per line, `#`
 /// comments).
@@ -57,8 +57,16 @@ fn oracle_sweep_covers_every_family() {
     // families: hub-skewed rmat (even) and star/bipartite-hub (odd).
     for parity in 0..2u64 {
         assert!(
-            seeds.iter().any(|s| *s >= 1000 && s % 2 == parity),
+            seeds.iter().any(|s| (1000..2000).contains(s) && s % 2 == parity),
             "seed list lost hub family parity {parity}"
+        );
+    }
+    // The dynamic band (>= 2000) must keep both churn families:
+    // erdos-renyi (even) and genrmf (odd).
+    for parity in 0..2u64 {
+        assert!(
+            seeds.iter().any(|s| *s >= 2000 && s % 2 == parity),
+            "seed list lost dynamic family parity {parity}"
         );
     }
     // Case derivation stays deterministic run over run (the property the
@@ -66,6 +74,17 @@ fn oracle_sweep_covers_every_family() {
     let again = sweep(&seeds);
     for (a, b) in sweep(&seeds).iter().zip(again.iter()) {
         assert_eq!(a.name, b.name);
+    }
+}
+
+#[test]
+fn oracle_dynamic_band_survives_churn_replay() {
+    // Every dynamic-band seed replays a topology-heavy insert/delete
+    // stream through the warm engine; after each batch the incremental
+    // value must match a from-scratch Dinic solve of the evolved network
+    // and the residual must stay a valid decomposition.
+    for seed in seeds().into_iter().filter(|&s| s >= 2000) {
+        run_dynamic_case(seed, 3).unwrap_or_else(|e| panic!("dynamic oracle disagreement: {e}"));
     }
 }
 
