@@ -5,6 +5,8 @@
 //!   degree classes the cooperative hub path serves (run it twice, with
 //!   and without `--features simd`, to compare the 8- and 16-lane
 //!   windows),
+//! * the global-relabel BFS (sequential vs the parallel level-synchronous
+//!   pass vs the forced-direction ablations) per graph class,
 //! * the PJRT device launch (K cycles of the AOT executable) per variant,
 //! * graph packing (CSR → device layout),
 //! * end-to-end device solve vs native solve on the same graph.
@@ -154,6 +156,81 @@ fn scan_micro() {
     }
 }
 
+/// Global-relabel BFS over a preflow state, per graph class: the
+/// sequential backward BFS vs the parallel level-synchronous pass on an
+/// 8-worker pool, plus the forced top-down / bottom-up ablations of the
+/// direction switch. Heights are rewritten by every pass, so repeated
+/// calls measure the steady-state BFS, not a warm-up artifact.
+fn gr_micro() {
+    use wbpr::maxflow::global_relabel::{global_relabel_in, ExcessAccounting, GrScratch};
+    use wbpr::maxflow::{GrDirection, GrMode, WorkerPool};
+
+    println!("## global relabel: sequential vs parallel (8 workers) vs forced directions\n");
+    let cases: Vec<(&str, ArcGraph)> = vec![
+        (
+            "rmat-14",
+            ArcGraph::build(&generators::rmat(&generators::RmatParams {
+                scale: 14,
+                edge_factor: 8,
+                a: 0.57,
+                b: 0.19,
+                c: 0.19,
+                seed: 7,
+            })),
+        ),
+        (
+            "genrmf-16x16",
+            ArcGraph::build(&generators::genrmf(&generators::GenrmfParams {
+                a: 16,
+                b: 16,
+                c1: 1,
+                c2: 100,
+                seed: 11,
+            })),
+        ),
+        (
+            "washington-64",
+            ArcGraph::build(&generators::washington_rlg(&generators::WashingtonParams {
+                levels: 64,
+                width: 64,
+                fanout: 2,
+                max_cap: 64,
+                seed: 5,
+            })),
+        ),
+        ("star-hub-32k", ArcGraph::build(&generators::star_hub(1 << 15, 1 << 12, 3))),
+    ];
+    let pool = WorkerPool::new(8);
+    for (name, g) in &cases {
+        let rep = Bcsr::build(g);
+        let (st, total) = ParState::preflow(g);
+        let mut scratch = GrScratch::new(g.n);
+        let mut seq_ms = 0.0;
+        let arms = [
+            ("seq", GrMode::sequential()),
+            ("par/auto", GrMode { pool: Some(&pool), direction: GrDirection::Auto }),
+            ("par/top-down", GrMode { pool: Some(&pool), direction: GrDirection::TopDown }),
+            ("par/bottom-up", GrMode { pool: Some(&pool), direction: GrDirection::BottomUp }),
+        ];
+        for (arm, mode) in arms {
+            let r = bench(&format!("gr/{name}/{arm}"), 1, 5, || {
+                let mut acct = ExcessAccounting::new(g.n, total);
+                black_box(global_relabel_in(g, &rep, &st, &mut acct, true, &mut scratch, mode));
+            });
+            if arm == "seq" {
+                seq_ms = r.mean_ms;
+            }
+            println!(
+                "{:<28} {:>9.3} ms/pass | {:>5.2}x vs seq",
+                r.name,
+                r.mean_ms,
+                seq_ms / r.mean_ms.max(1e-9)
+            );
+        }
+        println!();
+    }
+}
+
 fn pack_micro() {
     println!("## packing (CSR -> device layout)\n");
     let net = generators::grid_road(30, 30, 0.05, 12, 7);
@@ -194,6 +271,7 @@ fn main() {
     println!("# Kernel microbenchmarks\n");
     discharge_micro();
     scan_micro();
+    gr_micro();
     pack_micro();
     device_micro();
     e2e_compare();

@@ -34,6 +34,16 @@ pub const TRACE_OVERHEAD_GATE: f64 = 1.03;
 /// measurement floor.
 pub const SCAN_SPEEDUP_GATE: f64 = 1.3;
 
+/// Global-relabel speedup floor: a record carrying the sequential-vs-
+/// parallel GR walls (`gr_base_ms` / `gr_par_ms`, measured in the same
+/// job by `bench smoke`'s [`crate::bench::table1::gr_captures`] at the
+/// pinned 8-thread count) fails when the parallel direction-optimizing
+/// BFS is not at least this much faster than the sequential backward
+/// BFS. Intra-record on the **new** document — both arms ran on the same
+/// runner — and off when the sequential baseline is under the 50µs
+/// measurement floor or the baseline document predates the fields.
+pub const GR_SPEEDUP_GATE: f64 = 2.0;
+
 /// Topology-churn ops-reduction floor: the `(T0, DYN, CHURN)` record
 /// (see [`crate::bench::table3::topology_smoke_record`]) carries the
 /// summed push+relabel work of incremental insert/delete repairs vs
@@ -73,6 +83,11 @@ pub struct Measurement {
     /// `SCAN_AB_IDS` VC+BCSR records carry it).
     pub scan_base_ms: f64,
     pub scan_opt_ms: f64,
+    /// Global-relabel A/B walls: sequential backward-BFS baseline vs the
+    /// parallel direction-optimizing arm (0/0 on records without the
+    /// measurement — only the `GR_AB_IDS` VC+BCSR records carry it).
+    pub gr_base_ms: f64,
+    pub gr_par_ms: f64,
     /// Topology-churn incremental-vs-recompute ops pair (0/0 on records
     /// without the measurement — only the `(T0, DYN, CHURN)` record
     /// carries it).
@@ -100,6 +115,14 @@ impl Measurement {
     /// under the 50µs floor, where the ratio would be pure timer noise).
     pub fn scan_speedup(&self) -> Option<f64> {
         (self.scan_base_ms > 0.05).then(|| self.scan_base_ms / self.scan_opt_ms.max(0.05))
+    }
+
+    /// Sequential / parallel global-relabel wall ratio — how much faster
+    /// the pool BFS ran (`None` without the A/B arm or when the
+    /// sequential baseline is under the 50µs floor, where the ratio
+    /// would be pure timer noise).
+    pub fn gr_speedup(&self) -> Option<f64> {
+        (self.gr_base_ms > 0.05).then(|| self.gr_base_ms / self.gr_par_ms.max(0.05))
     }
 
     /// From-scratch ops per incremental op on the topology-churn arm —
@@ -150,6 +173,8 @@ pub fn parse_records(doc: &str) -> Result<BTreeMap<Key, Measurement>, String> {
             trace_on_ms: opt_num("trace_on_ms"),
             scan_base_ms: opt_num("scan_base_ms"),
             scan_opt_ms: opt_num("scan_opt_ms"),
+            gr_base_ms: opt_num("gr_base_ms"),
+            gr_par_ms: opt_num("gr_par_ms"),
             dyn_inc_ops: opt_num("dyn_inc_ops") as u64,
             dyn_scratch_ops: opt_num("dyn_scratch_ops") as u64,
         };
@@ -186,7 +211,7 @@ pub fn compare(
 ) -> Comparison {
     let mut t = Table::new(&[
         "graph", "engine", "rep", "old ms", "new ms", "ratio", "old ops", "new ops",
-        "old imb", "new imb", "trace ovh", "scan spd", "topo ops", "verdict",
+        "old imb", "new imb", "trace ovh", "scan spd", "gr spd", "topo ops", "verdict",
     ]);
     let mut regressions = Vec::new();
     let mut unmatched = 0;
@@ -222,13 +247,27 @@ pub fn compare(
         // sub-noise, so neither case can flag.
         let sspd = n.scan_speedup();
         let scan_regressed = sspd.is_some_and(|s| s < SCAN_SPEEDUP_GATE);
+        // GR-speedup gate: same intra-record shape as the scan gate. The
+        // parallel direction-optimizing relabel must beat the sequential
+        // backward BFS by [`GR_SPEEDUP_GATE`] at the pinned thread count;
+        // `gr_speedup()` returns `None` for records without the A/B pair
+        // or with a sub-noise sequential baseline, so old documents and
+        // tiny graphs never flag.
+        let gspd = n.gr_speedup();
+        let gr_regressed = gspd.is_some_and(|s| s < GR_SPEEDUP_GATE);
         // Topology-churn gate: intra-record on the new side like the scan
         // gate, but pure counters — the incremental insert/delete repair
         // leg must stay at least [`TOPOLOGY_OPS_GATE`] times cheaper (in
         // pushes+relabels) than from-scratch recomputes of the stream.
         let topo = n.topology_ops_reduction();
         let topo_regressed = topo.is_some_and(|r| r < TOPOLOGY_OPS_GATE);
-        if wall_regressed || imb_regressed || trace_regressed || scan_regressed || topo_regressed {
+        if wall_regressed
+            || imb_regressed
+            || trace_regressed
+            || scan_regressed
+            || gr_regressed
+            || topo_regressed
+        {
             regressions.push(key.clone());
         }
         let imb_cell = |i: Option<f64>| i.map_or("-".to_string(), |i| format!("{i:.2}"));
@@ -244,6 +283,9 @@ pub fn compare(
         }
         if scan_regressed {
             why.push("scan");
+        }
+        if gr_regressed {
+            why.push("gr");
         }
         if topo_regressed {
             why.push("topology");
@@ -261,6 +303,7 @@ pub fn compare(
             imb_cell(ni),
             tovh.map_or("-".to_string(), |t| format!("{t:.3}x")),
             sspd.map_or("-".to_string(), |s| format!("{s:.2}x")),
+            gspd.map_or("-".to_string(), |s| format!("{s:.2}x")),
             topo.map_or("-".to_string(), |r| format!("{r:.2}x")),
             if why.is_empty() {
                 "ok".to_string()
@@ -443,6 +486,8 @@ mod tests {
             trace_on_ms: 0.0,
             scan_base_ms: 0.0,
             scan_opt_ms: 0.0,
+            gr_base_ms: 0.0,
+            gr_par_ms: 0.0,
             scan_arcs_per_sec_worker: 0.0,
             coop_chunk_final: 64,
             workers_pinned: 0,
@@ -576,6 +621,47 @@ mod tests {
         let cmp = compare(&old, &fast, 1.25);
         assert!(!cmp.is_regression(), "{}", cmp.report);
         assert!(cmp.report.contains("1.50x"), "{}", cmp.report);
+    }
+
+    fn doc_with_gr(wall: f64, pushes: u64, base_ms: f64, par_ms: f64) -> String {
+        let mut r = record(wall, pushes, 10, 10);
+        r.gr_base_ms = base_ms;
+        r.gr_par_ms = par_ms;
+        records_json(&[r]).to_string()
+    }
+
+    #[test]
+    fn gr_speedup_below_the_gate_fails() {
+        // Intra-record A/B on the new side, like the scan gate: the
+        // parallel relabel at only 1.5x over the sequential BFS fails
+        // the 2.0x floor even when the baseline document predates the
+        // fields.
+        let old = parse_records(&doc(10.0, 100)).unwrap();
+        let slow = parse_records(&doc_with_gr(10.0, 100, 3.0, 2.0)).unwrap();
+        let m = slow.values().next().unwrap();
+        assert!((m.gr_speedup().unwrap() - 1.5).abs() < 1e-9);
+        let cmp = compare(&old, &slow, 1.25);
+        assert!(cmp.is_regression());
+        assert!(cmp.report.contains("REGRESSED(gr)"), "{}", cmp.report);
+        // 2.5x passes the gate and shows up in the report column.
+        let fast = parse_records(&doc_with_gr(10.0, 100, 5.0, 2.0)).unwrap();
+        let cmp = compare(&old, &fast, 1.25);
+        assert!(!cmp.is_regression(), "{}", cmp.report);
+        assert!(cmp.report.contains("2.50x"), "{}", cmp.report);
+    }
+
+    #[test]
+    fn gr_gate_stays_off_without_the_measurement() {
+        let old = parse_records(&doc(10.0, 100)).unwrap();
+        // No A/B pair at all: ungated.
+        let none = parse_records(&doc(10.0, 100)).unwrap();
+        assert_eq!(none.values().next().unwrap().gr_speedup(), None);
+        assert!(!compare(&old, &none, 1.25).is_regression());
+        // Sub-noise sequential baseline (40µs < the 50µs floor): a 1.0x
+        // "speedup" there is timer noise, not a relabel regression.
+        let tiny = parse_records(&doc_with_gr(10.0, 100, 0.04, 0.04)).unwrap();
+        assert_eq!(tiny.values().next().unwrap().gr_speedup(), None);
+        assert!(!compare(&old, &tiny, 1.25).is_regression());
     }
 
     fn doc_with_topo(wall: f64, pushes: u64, inc: u64, scratch: u64) -> String {

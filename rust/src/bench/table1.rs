@@ -191,6 +191,15 @@ pub struct BenchRecord {
     pub scan_base_ms: f64,
     /// Min-of-N wall of the chunked+placed arm of the same pair.
     pub scan_opt_ms: f64,
+    /// Min-of-N global-relabel wall (`SolveStats::gr_ms`) of the
+    /// sequential-BFS arm (`--gr-parallel=false`) of the GR A/B pair
+    /// (0 when the record carries no GR measurement — only the
+    /// [`gr_captures`] VC+BCSR records do). `bench compare` gates
+    /// `gr_base_ms / gr_par_ms >= GR_SPEEDUP_GATE`.
+    pub gr_base_ms: f64,
+    /// Min-of-N global-relabel wall of the parallel direction-optimizing
+    /// arm of the same pair.
+    pub gr_par_ms: f64,
     /// Arc-scan throughput per worker (arcs/sec over kernel wall) of the
     /// recorded solve — the raw-speed observability number.
     pub scan_arcs_per_sec_worker: f64,
@@ -232,6 +241,8 @@ impl BenchRecord {
             trace_on_ms: 0.0,
             scan_base_ms: 0.0,
             scan_opt_ms: 0.0,
+            gr_base_ms: 0.0,
+            gr_par_ms: 0.0,
             scan_arcs_per_sec_worker: r.stats.scan_arcs_per_sec_worker,
             coop_chunk_final: r.stats.coop_chunk_final,
             workers_pinned: r.stats.workers_pinned,
@@ -586,6 +597,117 @@ pub fn attach_scan_speedup(records: &mut [BenchRecord], captures: &[ScanCapture]
     }
 }
 
+/// One global-relabel A/B measurement: the same graph solved with the
+/// sequential backward BFS (`gr_parallel: false`) and with the parallel
+/// direction-optimizing BFS on the worker pool, min-of-[`GR_ARM_REPS`]
+/// **GR walls** (`SolveStats::gr_ms`) each, values cross-checked between
+/// the arms. `bench compare` holds `speedup()` under its ≥ 2.0x
+/// `GR_SPEEDUP_GATE` on these cases.
+#[derive(Debug, Clone)]
+pub struct GrCapture {
+    pub graph: String,
+    /// Min-of-N global-relabel wall of the sequential arm, ms.
+    pub base_ms: f64,
+    /// Min-of-N global-relabel wall of the parallel arm, ms.
+    pub par_ms: f64,
+    /// BFS levels the best parallel run expanded (Σ over passes).
+    pub par_levels: u64,
+    /// Of those, levels expanded bottom-up by the direction switch.
+    pub par_bu_levels: u64,
+}
+
+impl GrCapture {
+    /// Sequential / parallel GR-wall ratio (> 1 = the pool BFS wins).
+    pub fn speedup(&self) -> f64 {
+        self.base_ms / self.par_ms.max(1e-9)
+    }
+}
+
+/// Repetitions per arm of the GR A/B measurement (min-of-N: CI
+/// wall-clock noise is one-sided).
+pub const GR_ARM_REPS: usize = 3;
+
+/// Smoke cases the GR A/B arms run on: the two rmat smoke cases plus the
+/// larger hub case — the instances whose backward BFS is wide enough for
+/// level-parallelism to pay at [`HUB_GATE_THREADS`].
+pub const GR_AB_IDS: [&str; 3] = ["R5", "R6", "H1"];
+
+/// Run the global-relabel A/B arms at the pinned [`HUB_GATE_THREADS`]:
+/// sequential backward BFS vs the parallel direction-optimizing BFS,
+/// VC+BCSR, with every flow value cross-checked between the arms. Errors
+/// instead of panicking so `bench smoke` can print the offending graph.
+pub fn gr_captures(opts: &SolveOptions) -> Result<Vec<GrCapture>, String> {
+    let base_opts = SolveOptions {
+        threads: HUB_GATE_THREADS,
+        gr_parallel: false,
+        ..opts.clone()
+    };
+    let par_opts = SolveOptions { gr_parallel: true, ..base_opts.clone() };
+    let mut out = Vec::new();
+    let cases: Vec<&FlowCase> = hub_suite()
+        .iter()
+        .chain(flow_suite().iter())
+        .filter(|c| GR_AB_IDS.contains(&c.id))
+        .collect();
+    for case in cases {
+        let net = (case.build)();
+        let g = ArcGraph::build(&net.normalized());
+        let bcsr = Bcsr::build(&g);
+        let mut base_ms = f64::INFINITY;
+        let mut base_value = None;
+        for _ in 0..GR_ARM_REPS {
+            let r = maxflow::tc_or_vc(&g, &bcsr, EngineKind::VertexCentric, &base_opts);
+            if let Some(e) = &r.error {
+                return Err(format!("{}: sequential-GR arm did not converge: {e:?}", case.id));
+            }
+            base_value = Some(r.value);
+            base_ms = base_ms.min(r.stats.gr_ms);
+        }
+        let mut par_ms = f64::INFINITY;
+        let (mut levels, mut bu_levels) = (0u64, 0u64);
+        for _ in 0..GR_ARM_REPS {
+            let r = maxflow::tc_or_vc(&g, &bcsr, EngineKind::VertexCentric, &par_opts);
+            if let Some(e) = &r.error {
+                return Err(format!("{}: parallel-GR arm did not converge: {e:?}", case.id));
+            }
+            if Some(r.value) != base_value {
+                return Err(format!(
+                    "{}: GR paths disagree: parallel {} != sequential {:?}",
+                    case.id, r.value, base_value
+                ));
+            }
+            if r.stats.gr_ms < par_ms {
+                par_ms = r.stats.gr_ms;
+                levels = r.stats.gr_levels;
+                bu_levels = r.stats.gr_bu_levels;
+            }
+        }
+        out.push(GrCapture {
+            graph: case.id.to_string(),
+            base_ms,
+            par_ms,
+            par_levels: levels,
+            par_bu_levels: bu_levels,
+        });
+    }
+    Ok(out)
+}
+
+/// Copy each GR capture's A/B walls onto the matching VC+BCSR record, so
+/// `BENCH_table1.json` carries the speedup measurement the compare gate
+/// reads.
+pub fn attach_gr_speedup(records: &mut [BenchRecord], captures: &[GrCapture]) {
+    for c in captures {
+        if let Some(r) = records
+            .iter_mut()
+            .find(|r| r.engine == "VC" && r.rep == "BCSR" && r.graph == c.graph)
+        {
+            r.gr_base_ms = c.base_ms;
+            r.gr_par_ms = c.par_ms;
+        }
+    }
+}
+
 /// Render captures as `BENCH_trace.jsonl`: one JSON object per launch
 /// event, each tagged with its graph id (the only key the event schema
 /// itself does not carry).
@@ -641,6 +763,10 @@ pub fn records_json(records: &[BenchRecord]) -> crate::util::json::Json {
             if r.scan_base_ms > 0.0 {
                 o.insert("scan_base_ms".to_string(), Json::Num(r.scan_base_ms));
                 o.insert("scan_opt_ms".to_string(), Json::Num(r.scan_opt_ms));
+            }
+            if r.gr_base_ms > 0.0 {
+                o.insert("gr_base_ms".to_string(), Json::Num(r.gr_base_ms));
+                o.insert("gr_par_ms".to_string(), Json::Num(r.gr_par_ms));
             }
             if r.scan_arcs_per_sec_worker > 0.0 {
                 o.insert(
@@ -741,6 +867,8 @@ mod tests {
             trace_on_ms: 0.0,
             scan_base_ms: 0.0,
             scan_opt_ms: 0.0,
+            gr_base_ms: 0.0,
+            gr_par_ms: 0.0,
             scan_arcs_per_sec_worker: 0.0,
             coop_chunk_final: 64,
             workers_pinned: 0,
@@ -852,6 +980,45 @@ mod tests {
         let r0 = &j.get("records").unwrap().as_arr().unwrap()[0];
         assert_eq!(r0.get("scan_base_ms").unwrap().as_f64(), Some(3.9));
         assert_eq!(r0.get("scan_opt_ms").unwrap().as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn gr_speedup_fields_are_optional_in_json() {
+        let mut recs = vec![rec("R5", "VC")];
+        let j = records_json(&recs);
+        let r0 = &j.get("records").unwrap().as_arr().unwrap()[0];
+        assert!(r0.get("gr_base_ms").is_none(), "absent without a measurement");
+        let cap = GrCapture {
+            graph: "R5".into(),
+            base_ms: 4.2,
+            par_ms: 2.0,
+            par_levels: 12,
+            par_bu_levels: 5,
+        };
+        assert!((cap.speedup() - 2.1).abs() < 1e-9);
+        attach_gr_speedup(&mut recs, &[cap]);
+        let j = records_json(&recs);
+        let r0 = &j.get("records").unwrap().as_arr().unwrap()[0];
+        assert_eq!(r0.get("gr_base_ms").unwrap().as_f64(), Some(4.2));
+        assert_eq!(r0.get("gr_par_ms").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn gr_captures_agree_on_the_ab_cases() {
+        // End-to-end on the real A/B entry point: both GR paths must land
+        // on the same flow value (the capture errors otherwise) and the
+        // relabel wall must be recorded for both arms. Speedup itself is
+        // NOT asserted — tier-1 runs on arbitrary (often single-core)
+        // machines; the ≥ 2.0x gate lives in `bench compare` where a
+        // pinned-runner baseline exists.
+        let opts = SolveOptions { threads: 2, cycles_per_launch: 128, ..Default::default() };
+        let caps = gr_captures(&opts).expect("GR paths agree");
+        assert_eq!(caps.len(), GR_AB_IDS.len(), "one capture per A/B case");
+        for c in &caps {
+            assert!(GR_AB_IDS.contains(&c.graph.as_str()));
+            assert!(c.base_ms > 0.0 && c.par_ms > 0.0, "{}: empty GR walls", c.graph);
+            assert!(c.par_levels > 0, "{}: parallel arm recorded no BFS levels", c.graph);
+        }
     }
 
     #[test]

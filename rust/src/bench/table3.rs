@@ -369,6 +369,8 @@ pub fn topology_smoke_record(opts: &SolveOptions) -> Result<super::table1::Bench
         trace_on_ms: 0.0,
         scan_base_ms: 0.0,
         scan_opt_ms: 0.0,
+        gr_base_ms: 0.0,
+        gr_par_ms: 0.0,
         scan_arcs_per_sec_worker: 0.0,
         coop_chunk_final: 0,
         workers_pinned: 0,

@@ -53,7 +53,7 @@ use super::update::{GraphUpdate, UpdateBatch, UpdateReport};
 use crate::graph::builder::{ArcGraph, FlowNetwork};
 use crate::graph::residual::Residual;
 use crate::graph::{Capacity, DeltaRcsr, Edge};
-use crate::maxflow::global_relabel::{global_relabel_with, ExcessAccounting};
+use crate::maxflow::global_relabel::{global_relabel_in, ExcessAccounting, GrMode};
 use crate::maxflow::vc::VcContext;
 use crate::maxflow::{vc, FlowResult, ParState, SolveOptions, SolveStats, WorkerPool};
 use crate::util::Timer;
@@ -632,8 +632,20 @@ impl DynamicFlow {
         // (the in-kernel relabels only ever lift heights). The
         // `opts.global_relabel` ablation knob still governs the kernel's
         // own periodic relabels inside `run_from_state`.
-        global_relabel_with(g, rep, st, &mut acct, true, &mut ctx.scratch.gr);
+        let gr_timer = Timer::start();
+        let gr_out = global_relabel_in(
+            g,
+            rep,
+            st,
+            &mut acct,
+            true,
+            &mut ctx.scratch.gr,
+            GrMode::from_opts(&self.opts, &ctx.pool),
+        );
+        stats.gr_ms += gr_timer.ms();
         stats.global_relabels += 1;
+        stats.gr_levels += gr_out.levels as u64;
+        stats.gr_bu_levels += gr_out.bu_levels as u64;
         // Seed the kernel's carried frontier straight from this batch's
         // touched vertices (filtered by post-refresh activity): phase 1
         // overflow tails plus the phase-2 source seeds are exactly the
@@ -666,8 +678,11 @@ fn add_stats(total: &mut SolveStats, s: &SolveStats) {
     total.pushes += s.pushes;
     total.relabels += s.relabels;
     total.global_relabels += s.global_relabels;
+    total.gr_levels += s.gr_levels;
+    total.gr_bu_levels += s.gr_bu_levels;
     total.scan_arcs += s.scan_arcs;
     total.kernel_ms += s.kernel_ms;
+    total.gr_ms += s.gr_ms;
     total.total_ms += s.total_ms;
     total.frontier_len_sum += s.frontier_len_sum;
     total.gap_cuts += s.gap_cuts;

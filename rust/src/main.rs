@@ -110,6 +110,20 @@ fn solve_options(args: &Args, cfg: &Config) -> Result<SolveOptions, String> {
         gr_spacing: args.opt_f64("gr-spacing", cfg.get_f64("engine", "gr_spacing", defaults.gr_spacing)?)?,
         gr_alpha_min: args.opt_f64("gr-alpha-min", cfg.get_f64("engine", "gr_alpha_min", defaults.gr_alpha_min)?)?,
         gr_alpha_max: args.opt_f64("gr-alpha-max", cfg.get_f64("engine", "gr_alpha_max", defaults.gr_alpha_max)?)?,
+        // Parallel direction-optimizing global relabel on the worker pool
+        // (`--gr-parallel=false` pins the sequential oracle/A-B path).
+        gr_parallel: match args.opt("gr-parallel") {
+            Some("true") | Some("1") => true,
+            Some("false") | Some("0") => false,
+            Some(other) => return Err(format!("--gr-parallel: '{other}' is not a bool")),
+            None => args.flag("gr-parallel") || cfg.get_bool("engine", "gr_parallel", true)?,
+        },
+        // Per-level BFS direction policy of the parallel relabel:
+        // auto (Beamer switch) | top-down | bottom-up.
+        gr_direction: args
+            .opt("gr-direction")
+            .unwrap_or(cfg.get_or("engine", "gr_direction", "auto"))
+            .parse()?,
         frontier: !args.flag("no-frontier") && cfg.get_bool("engine", "frontier", true)?,
         verify_frontier: false,
         // Multi-push discharge (one scan drains excess to every admissible
@@ -216,6 +230,10 @@ fn cmd_maxflow(args: &Args) -> Result<(), String> {
     println!("pushes      : {}", r.stats.pushes);
     println!("relabels    : {}", r.stats.relabels);
     println!("global rlbl : {}", r.stats.global_relabels);
+    println!(
+        "gr ms       : {:.2} ({} levels, {} bottom-up)",
+        r.stats.gr_ms, r.stats.gr_levels, r.stats.gr_bu_levels
+    );
     if opts.trace {
         let frontiers: Vec<f64> =
             r.stats.trace.iter().map(|e| e.frontier as f64).collect();
@@ -566,6 +584,12 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
         // >= 1.3x speedup gate reads these fields in `bench compare`.
         let scans = table1::scan_captures(&opts)?;
         table1::attach_scan_speedup(&mut records, &scans);
+        // Global-relabel A/B arm (rmat + hub cases): sequential backward
+        // BFS vs the parallel direction-optimizing pass on the pool,
+        // values cross-checked inside gr_captures. The >= 2.0x GR-wall
+        // speedup gate reads these fields in `bench compare`.
+        let grs = table1::gr_captures(&opts)?;
+        table1::attach_gr_speedup(&mut records, &grs);
         // Topology-churn arm (Table 3's insert/delete regime): the T0
         // churn stream replayed incrementally vs from-scratch. The run
         // itself enforces the compaction invariants (the merged rep scans
@@ -609,6 +633,18 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
                 c.opt_arcs_per_sec_worker / 1e6,
                 c.workers_pinned,
                 compare::SCAN_SPEEDUP_GATE
+            );
+        }
+        for c in &grs {
+            println!(
+                "gr {}: seq {:.3}ms par {:.3}ms speedup {:.2}x | {} levels ({} bottom-up) (gate {:.2}x in bench compare)",
+                c.graph,
+                c.base_ms,
+                c.par_ms,
+                c.speedup(),
+                c.par_levels,
+                c.par_bu_levels,
+                compare::GR_SPEEDUP_GATE
             );
         }
         // PR-4 acceptance metric: with the carried frontier + auto-tuned
@@ -718,9 +754,19 @@ fn cmd_trace(args: &Args) -> Result<(), String> {
         let launches = evs.iter().filter(|e| e.kind == EventKind::Launch).count();
         let grs = evs.iter().filter(|e| e.gr).count();
         let kernel_ms: f64 = evs.iter().map(|e| e.kernel_ms).sum();
+        let gr_ms: f64 = evs.iter().map(|e| e.gr_ms).sum();
+        let gr_levels: u64 = evs.iter().map(|e| e.gr_levels).sum();
+        let gr_bu: u64 = evs.iter().map(|e| e.gr_bu_levels).sum();
         println!(
             "## {graph}: {} events ({launches} launches, {grs} global relabels), {pushes} pushes, {kernel_ms:.3}ms kernel",
             evs.len()
+        );
+        // GR share of the traced solve wall: relabel host-step ms over
+        // kernel + relabel ms — the number the parallel GR moves.
+        println!(
+            "gr share : {:.1}% of solve wall ({gr_ms:.3}ms over {} BFS levels, {gr_bu} bottom-up)",
+            100.0 * gr_ms / (kernel_ms + gr_ms).max(1e-9),
+            gr_levels
         );
         let frontiers: Vec<f64> = evs
             .iter()

@@ -8,25 +8,48 @@
 //! `t` are lifted to height `n` (deactivated) and their excess is
 //! subtracted from `Excess_total`, which makes the host loop's
 //! `e(s) + e(t) ≥ Excess_total` termination test sound (He & Hong).
+//!
+//! Two executions of the same pass exist, dispatched by [`GrMode`]:
+//!
+//! * [`global_relabel_with`] — the sequential reference (one host
+//!   thread, FIFO queue), kept as the oracle and the
+//!   `--gr-parallel=false` ablation.
+//! * [`global_relabel_par`] — a **level-synchronous parallel BFS on the
+//!   solve's own [`WorkerPool`]** (Baumstark, Blelloch & Shun): each
+//!   level's frontier is partitioned across workers, `dist` claims go
+//!   through an atomic CAS, per-worker next-frontier shards are merged
+//!   by the owner without locks, and a Beamer-style
+//!   direction-optimizing switch trades the top-down frontier scan for
+//!   bottom-up "is any of my residual out-neighbors settled?" probes
+//!   once the frontier's degree mass rivals the unexplored remainder.
+//!   The O(V) settle loop runs sharded too. Both paths produce
+//!   **bit-identical** results — same heights, same `Excess_total`,
+//!   same active list in the same order (see the property tests).
 
-use super::state::{AtomicCounters, ParState, SolveStats};
+use super::pool::WorkerPool;
+use super::state::{zeroed_atomic_i64, zeroed_atomic_u32, AtomicCounters, ParState, SolveStats};
 use super::SolveOptions;
 use crate::graph::builder::ArcGraph;
 use crate::graph::residual::Residual;
+use std::cell::UnsafeCell;
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicI64, AtomicU32, AtomicU64, Ordering};
 
 /// Mutable accounting carried across global relabels.
 #[derive(Debug)]
 pub struct ExcessAccounting {
-    /// Excess already subtracted from `Excess_total` per vertex.
-    canceled: Vec<i64>,
+    /// Excess already subtracted from `Excess_total` per vertex. Atomic
+    /// cells so the parallel settle partition can write its shard in
+    /// place; the engines' single-writer-per-vertex discipline means no
+    /// cell is ever contended.
+    canceled: Vec<AtomicI64>,
     /// Current `Excess_total`.
     pub excess_total: i64,
 }
 
 impl ExcessAccounting {
     pub fn new(n: usize, excess_total: i64) -> ExcessAccounting {
-        ExcessAccounting { canceled: vec![0; n], excess_total }
+        ExcessAccounting { canceled: zeroed_atomic_i64(n), excess_total }
     }
 
     /// Has the algorithm terminated (all routable excess arrived)?
@@ -39,19 +62,41 @@ impl ExcessAccounting {
     /// excess of vertices that became reachable again. Shared by the host
     /// BFS and the device-relabel paths.
     pub fn settle(&mut self, u: u32, reachable: bool, e_u: i64) {
-        let c = &mut self.canceled[u as usize];
+        self.excess_total += self.settle_shard(u, reachable, e_u);
+    }
+
+    /// [`ExcessAccounting::settle`] for the parallel settle partition:
+    /// updates `u`'s cancellation cell in place (each vertex belongs to
+    /// exactly one worker's shard) and **returns** the `Excess_total`
+    /// delta instead of applying it — workers accumulate their shard's
+    /// deltas in a register and the owner folds the per-worker sums in
+    /// after the pool hands back. Integer addition is exact and
+    /// commutative, so the reduced total is bit-identical to the
+    /// sequential pass no matter how the shards raced.
+    pub fn settle_shard(&self, u: u32, reachable: bool, e_u: i64) -> i64 {
+        let c = &self.canceled[u as usize];
+        let cur = c.load(Ordering::Relaxed);
         if reachable {
-            if *c != 0 {
-                self.excess_total += *c;
-                *c = 0;
+            if cur != 0 {
+                c.store(0, Ordering::Relaxed);
+                cur
+            } else {
+                0
             }
         } else {
-            let newly = e_u - *c;
+            let newly = e_u - cur;
             if newly != 0 {
-                self.excess_total -= newly;
-                *c = e_u;
+                c.store(e_u, Ordering::Relaxed);
+                -newly
+            } else {
+                0
             }
         }
+    }
+
+    /// Fold one worker's settle-shard delta sum back into `Excess_total`.
+    pub fn apply_delta(&mut self, delta: i64) {
+        self.excess_total += delta;
     }
 }
 
@@ -62,30 +107,167 @@ pub struct RelabelOutcome {
     pub reachable: usize,
     /// Active vertices remaining after the pass.
     pub active: usize,
+    /// BFS levels the pass ran (including the sink's level 0). Equal
+    /// between the sequential and parallel passes — the level structure
+    /// is a property of the residual graph, not the schedule.
+    pub levels: u32,
+    /// Levels the direction-optimizing parallel pass expanded bottom-up
+    /// (always 0 for the sequential pass).
+    pub bu_levels: u32,
 }
+
+/// Per-level scan direction of the parallel BFS.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum GrDirection {
+    /// Beamer-style per-level switch: top-down while the frontier's
+    /// residual degree mass is small, bottom-up once it rivals the
+    /// unexplored remainder (see [`BU_DEGREE_FRACTION`]).
+    #[default]
+    Auto,
+    /// Always expand from the frontier (CAS claims).
+    TopDown,
+    /// Always probe from unvisited vertices (plain-store claims: each
+    /// unvisited vertex has exactly one owner).
+    BottomUp,
+}
+
+impl GrDirection {
+    /// Stable CLI/config spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            GrDirection::Auto => "auto",
+            GrDirection::TopDown => "top-down",
+            GrDirection::BottomUp => "bottom-up",
+        }
+    }
+}
+
+impl std::str::FromStr for GrDirection {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<GrDirection, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(GrDirection::Auto),
+            "top-down" | "topdown" | "td" => Ok(GrDirection::TopDown),
+            "bottom-up" | "bottomup" | "bu" => Ok(GrDirection::BottomUp),
+            other => Err(format!("unknown GR direction '{other}' (auto|top-down|bottom-up)")),
+        }
+    }
+}
+
+/// Auto-switch threshold: go bottom-up on the next level once the
+/// frontier's claimed residual degree × this factor exceeds the summed
+/// degree of the still-unvisited vertices (Beamer's α, specialized to
+/// the undirected-degree proxy `rep.row` gives us for free), and fall
+/// back to top-down as the frontier thins again.
+pub const BU_DEGREE_FRACTION: u64 = 4;
+
+/// Telemetry for one BFS level of the last relabel pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GrLevel {
+    /// Frontier width at this distance from the sink.
+    pub width: u32,
+    /// Arcs examined while expanding this level (top-down: the
+    /// frontier's rows; bottom-up: probes over unvisited rows, with
+    /// early exit on the first settled parent).
+    pub arcs: u64,
+    /// Whether the expansion ran bottom-up.
+    pub bottom_up: bool,
+}
+
+/// Per-worker lane of the parallel relabel. `UnsafeCell` instead of a
+/// lock: during a broadcast, worker `w` is the *only* thread touching
+/// `lanes[w]`, and between broadcasts only the owner reads/merges them —
+/// [`WorkerPool::run`]'s hand-back guarantee provides the
+/// happens-before edge in both directions. The scalar slots are atomics
+/// purely for `Sync`; each is written once per level from a
+/// register-local accumulator, so there is no contention.
+#[derive(Debug, Default)]
+struct GrLane {
+    /// Next-level frontier shard (merged, in worker order, by the owner).
+    next: UnsafeCell<Vec<u32>>,
+    /// Active-vertex shard from the settle partition (contiguous
+    /// ascending vertex ranges ⇒ owner concatenation reproduces the
+    /// sequential ascending order exactly).
+    active: UnsafeCell<Vec<u32>>,
+    /// Residual degree claimed into the next frontier this level.
+    claimed_deg: AtomicU64,
+    /// Arcs examined this level.
+    arcs: AtomicU64,
+    /// Settle reduction: this worker's `Excess_total` delta…
+    delta: AtomicI64,
+    /// …and its count of sink-reachable vertices.
+    reachable: AtomicU64,
+}
+
+// SAFETY: exclusive per-worker access between pool barriers, as
+// documented on the struct — the same discipline `vc::WorkerScratch`
+// uses for its reduction slots.
+unsafe impl Sync for GrLane {}
 
 /// Reusable buffers for the global-relabel BFS, so the host step of a warm
 /// solve never re-allocates O(V) memory per pass.
 #[derive(Debug, Default)]
 pub struct GrScratch {
-    dist: Vec<u32>,
+    /// BFS distance per vertex. Atomic for the parallel pass's CAS
+    /// claims; the sequential pass uses plain `Relaxed` loads/stores on
+    /// the same cells.
+    dist: Vec<AtomicU32>,
     queue: VecDeque<u32>,
     /// Active vertices (`e > 0`, `h < n`, non-terminal) as of the end of
-    /// the last [`global_relabel_with`] pass — collected for free during
-    /// the O(V) settle loop the BFS runs anyway. The vertex-centric
-    /// engine re-seeds its carried frontier from this instead of paying a
-    /// separate launch-start rescan after every relabel.
+    /// the last [`global_relabel_with`] / [`global_relabel_par`] pass —
+    /// collected for free during the O(V) settle loop the BFS runs
+    /// anyway. The vertex-centric engine re-seeds its carried frontier
+    /// from this instead of paying a separate launch-start rescan after
+    /// every relabel.
     pub active: Vec<u32>,
+    /// Current-level frontier of the parallel BFS.
+    frontier: Vec<u32>,
+    /// One lane per pool worker.
+    lanes: Vec<GrLane>,
+    /// Per-level telemetry of the last pass (level 0 = the sink), for
+    /// the launch trace and the SIMT cost model.
+    pub levels: Vec<GrLevel>,
 }
 
 impl GrScratch {
     pub fn new(n: usize) -> GrScratch {
-        GrScratch { dist: vec![u32::MAX; n], queue: VecDeque::new(), active: Vec::new() }
+        let mut s = GrScratch::default();
+        s.ensure(n);
+        s
     }
 
     fn ensure(&mut self, n: usize) {
         if self.dist.len() < n {
-            self.dist.resize(n, u32::MAX);
+            // Re-growth goes through the unfaulted zero-page allocation:
+            // every pass starts by filling `dist` anyway, and the
+            // parallel pass does that fill sharded across the pinned
+            // workers — so pages re-grown after a `release()` eviction
+            // first-touch from the workers that will scan them.
+            self.dist = zeroed_atomic_u32(n);
+        }
+        // Grow the queue/active/frontier capacity alongside `dist`: the
+        // first post-eviction pass must not pay O(V) reallocation (and
+        // the doubling-copy churn) inside the timed host step.
+        if self.queue.capacity() < n {
+            self.queue.reserve(n - self.queue.len());
+        }
+        if self.active.capacity() < n {
+            let have = self.active.len();
+            self.active.reserve(n - have);
+        }
+        if self.frontier.capacity() < n {
+            let have = self.frontier.len();
+            self.frontier.reserve(n - have);
+        }
+    }
+
+    /// [`GrScratch::ensure`] plus the per-worker lanes of the parallel
+    /// pass.
+    fn ensure_par(&mut self, n: usize, workers: usize) {
+        self.ensure(n);
+        if self.lanes.len() < workers {
+            self.lanes.resize_with(workers, GrLane::default);
         }
     }
 
@@ -96,6 +278,9 @@ impl GrScratch {
         self.dist = Vec::new();
         self.queue = VecDeque::new();
         self.active = Vec::new();
+        self.frontier = Vec::new();
+        self.lanes = Vec::new();
+        self.levels = Vec::new();
     }
 }
 
@@ -112,8 +297,51 @@ pub fn global_relabel<R: Residual>(
     global_relabel_with(g, rep, st, acct, update_heights, &mut GrScratch::new(g.n))
 }
 
+/// How a global relabel executes: sequentially on the host thread, or
+/// level-parallel on the solve's worker pool.
+#[derive(Clone, Copy)]
+pub struct GrMode<'p> {
+    /// Run the BFS level-parallel on this pool (`None` = sequential).
+    pub pool: Option<&'p WorkerPool>,
+    /// Per-level direction policy of the parallel pass (ignored when
+    /// sequential).
+    pub direction: GrDirection,
+}
+
+impl GrMode<'_> {
+    /// The sequential reference pass (`--gr-parallel=false`).
+    pub fn sequential() -> GrMode<'static> {
+        GrMode { pool: None, direction: GrDirection::Auto }
+    }
+}
+
+impl<'p> GrMode<'p> {
+    /// Mode from the solve options: parallel on `pool` unless the
+    /// `--gr-parallel=false` ablation pins the sequential oracle path.
+    pub fn from_opts(opts: &SolveOptions, pool: &'p WorkerPool) -> GrMode<'p> {
+        GrMode { pool: opts.gr_parallel.then_some(pool), direction: opts.gr_direction }
+    }
+}
+
+/// Dispatch one global relabel according to `mode`. Both paths are
+/// result-identical; the choice is purely a wall-clock/A-B matter.
+pub fn global_relabel_in<R: Residual>(
+    g: &ArcGraph,
+    rep: &R,
+    st: &ParState,
+    acct: &mut ExcessAccounting,
+    update_heights: bool,
+    scratch: &mut GrScratch,
+    mode: GrMode<'_>,
+) -> RelabelOutcome {
+    match mode.pool {
+        Some(pool) => global_relabel_par(g, rep, st, acct, update_heights, scratch, pool, mode.direction),
+        None => global_relabel_with(g, rep, st, acct, update_heights, scratch),
+    }
+}
+
 /// [`global_relabel`] over caller-owned scratch buffers (the warm-session
-/// path: zero allocation per pass).
+/// path: zero allocation per pass). Sequential reference implementation.
 pub fn global_relabel_with<R: Residual>(
     g: &ArcGraph,
     rep: &R,
@@ -124,41 +352,59 @@ pub fn global_relabel_with<R: Residual>(
 ) -> RelabelOutcome {
     let n = g.n;
     scratch.ensure(n);
-    let dist = &mut scratch.dist;
-    dist[..n].fill(u32::MAX);
+    scratch.levels.clear();
+    let dist = &scratch.dist;
+    for d in &dist[..n] {
+        d.store(u32::MAX, Ordering::Relaxed);
+    }
     let queue = &mut scratch.queue;
     queue.clear();
-    dist[g.t as usize] = 0;
+    dist[g.t as usize].store(0, Ordering::Relaxed);
     queue.push_back(g.t);
     // Backward BFS: u is one step from v if the residual arc u→v exists,
     // i.e. cf[reverse of (v→u)] > 0. Each vertex's outgoing row gives us
-    // exactly those reverse arcs in O(d).
+    // exactly those reverse arcs in O(d). The FIFO order is
+    // level-synchronous by construction; `remaining` counts down the
+    // current level so its (width, arcs) telemetry can be recorded.
+    let mut level_width = 1u32;
+    let mut remaining = 1u32;
+    let mut next_width = 0u32;
+    let mut level_arcs = 0u64;
     while let Some(v) = queue.pop_front() {
-        let dv = dist[v as usize];
+        let dv = dist[v as usize].load(Ordering::Relaxed);
         for (a, u) in rep.row(v).iter() {
-            if dist[u as usize] == u32::MAX && st.residual(a ^ 1) > 0 {
-                dist[u as usize] = dv + 1;
+            level_arcs += 1;
+            if dist[u as usize].load(Ordering::Relaxed) == u32::MAX && st.residual(a ^ 1) > 0 {
+                dist[u as usize].store(dv + 1, Ordering::Relaxed);
                 queue.push_back(u);
+                next_width += 1;
             }
+        }
+        remaining -= 1;
+        if remaining == 0 {
+            scratch.levels.push(GrLevel { width: level_width, arcs: level_arcs, bottom_up: false });
+            level_width = next_width;
+            remaining = next_width;
+            next_width = 0;
+            level_arcs = 0;
         }
     }
     let mut reachable = 0usize;
-    let mut active = 0usize;
     scratch.active.clear();
     for u in 0..n as u32 {
         if u == g.s || u == g.t {
             continue;
         }
         let e_u = st.excess(u);
-        let is_reachable = dist[u as usize] != u32::MAX;
+        let du = dist[u as usize].load(Ordering::Relaxed);
+        let is_reachable = du != u32::MAX;
         acct.settle(u, is_reachable, e_u);
         if is_reachable {
             reachable += 1;
             if update_heights {
-                st.set_height(u, dist[u as usize]);
+                st.set_height(u, du);
             }
             if e_u > 0 && st.height(u) < n as u32 {
-                active += 1;
                 scratch.active.push(u);
             }
         } else {
@@ -168,7 +414,233 @@ pub fn global_relabel_with<R: Residual>(
     }
     // Source keeps h = n (it must never be relabeled below n).
     st.set_height(g.s, n as u32);
-    RelabelOutcome { reachable, active }
+    RelabelOutcome {
+        reachable,
+        active: scratch.active.len(),
+        levels: scratch.levels.len() as u32,
+        bu_levels: 0,
+    }
+}
+
+/// The level-synchronous parallel pass (tentpole). One pool broadcast
+/// per phase: a sharded MAX-fill (doubling as the first-touch pass for
+/// re-grown `dist` pages), one broadcast per BFS level, and a sharded
+/// settle with owner-side reduction. Result-identical to
+/// [`global_relabel_with`]:
+///
+/// * `dist` — level-synchronous CAS claims assign every vertex its true
+///   BFS level regardless of schedule, so the distance array (and hence
+///   every height write) matches the sequential pass exactly.
+/// * `Excess_total` — per-vertex deltas are identical (single writer per
+///   vertex) and the owner reduces exact integer sums.
+/// * `active` — settle shards are contiguous ascending vertex ranges in
+///   worker order, so plain concatenation reproduces the sequential
+///   ascending collection order, not merely the same set.
+#[allow(clippy::too_many_arguments)]
+pub fn global_relabel_par<R: Residual>(
+    g: &ArcGraph,
+    rep: &R,
+    st: &ParState,
+    acct: &mut ExcessAccounting,
+    update_heights: bool,
+    scratch: &mut GrScratch,
+    pool: &WorkerPool,
+    direction: GrDirection,
+) -> RelabelOutcome {
+    let n = g.n;
+    let workers = pool.size();
+    scratch.ensure_par(n, workers);
+    scratch.levels.clear();
+
+    // ---- sharded MAX-fill + residual-degree census ----
+    // The census feeds the direction switch; the fill is also where
+    // re-grown zero-page `dist` memory faults in from the pinned
+    // workers (first touch).
+    let total_deg = AtomicU64::new(0);
+    {
+        let dist = &scratch.dist;
+        pool.run_sharded(n, |_, lo, hi| {
+            let mut deg = 0u64;
+            for u in lo..hi {
+                dist[u].store(u32::MAX, Ordering::Relaxed);
+                deg += rep.row(u as u32).len() as u64;
+            }
+            total_deg.fetch_add(deg, Ordering::Relaxed);
+        });
+    }
+    let mut unvisited_deg = total_deg.load(Ordering::Relaxed);
+
+    scratch.dist[g.t as usize].store(0, Ordering::Relaxed);
+    scratch.frontier.clear();
+    scratch.frontier.push(g.t);
+    let mut frontier_deg = rep.row(g.t).len() as u64;
+    unvisited_deg = unvisited_deg.saturating_sub(frontier_deg);
+
+    // ---- level-synchronous expansion, one broadcast per level ----
+    let mut level = 0u32;
+    let mut bu_levels = 0u32;
+    while !scratch.frontier.is_empty() {
+        let width = scratch.frontier.len();
+        let bottom_up = match direction {
+            GrDirection::TopDown => false,
+            GrDirection::BottomUp => true,
+            GrDirection::Auto => frontier_deg.saturating_mul(BU_DEGREE_FRACTION) > unvisited_deg,
+        };
+        {
+            let dist = &scratch.dist;
+            let frontier = &scratch.frontier;
+            let lanes = &scratch.lanes;
+            if bottom_up {
+                // Bottom-up: every still-unvisited vertex probes its own
+                // row for a parent settled at the current level. The
+                // claim is a plain store — vertex u belongs to exactly
+                // one worker's shard — and the probe early-exits on the
+                // first hit, which is where the direction switch wins on
+                // wide frontiers.
+                pool.run_sharded(n, |w, lo, hi| {
+                    let lane = &lanes[w];
+                    // SAFETY: worker w exclusively owns lanes[w] during
+                    // the broadcast (GrLane invariant).
+                    let next = unsafe { &mut *lane.next.get() };
+                    let (mut arcs, mut cdeg) = (0u64, 0u64);
+                    for u in lo..hi {
+                        if dist[u].load(Ordering::Relaxed) != u32::MAX {
+                            continue;
+                        }
+                        let uu = u as u32;
+                        let row = rep.row(uu);
+                        for (a, v) in row.iter() {
+                            arcs += 1;
+                            // The residual arc u→v exists iff cf[a] > 0
+                            // (`a` is u's own out-arc); v settled at the
+                            // current level puts u one step farther out.
+                            if st.residual(a) > 0
+                                && dist[v as usize].load(Ordering::Relaxed) == level
+                            {
+                                dist[u].store(level + 1, Ordering::Relaxed);
+                                next.push(uu);
+                                cdeg += row.len() as u64;
+                                break;
+                            }
+                        }
+                    }
+                    lane.arcs.store(arcs, Ordering::Relaxed);
+                    lane.claimed_deg.store(cdeg, Ordering::Relaxed);
+                });
+            } else {
+                // Top-down: the frontier is partitioned across workers;
+                // claims race across shards, so they go through a CAS —
+                // the winner (any winner) writes the same level value,
+                // keeping `dist` schedule-independent.
+                pool.run_sharded(width, |w, lo, hi| {
+                    let lane = &lanes[w];
+                    // SAFETY: as above.
+                    let next = unsafe { &mut *lane.next.get() };
+                    let (mut arcs, mut cdeg) = (0u64, 0u64);
+                    for i in lo..hi {
+                        let v = frontier[i];
+                        for (a, u) in rep.row(v).iter() {
+                            arcs += 1;
+                            if dist[u as usize].load(Ordering::Relaxed) == u32::MAX
+                                && st.residual(a ^ 1) > 0
+                                && dist[u as usize]
+                                    .compare_exchange(
+                                        u32::MAX,
+                                        level + 1,
+                                        Ordering::Relaxed,
+                                        Ordering::Relaxed,
+                                    )
+                                    .is_ok()
+                            {
+                                next.push(u);
+                                cdeg += rep.row(u).len() as u64;
+                            }
+                        }
+                    }
+                    lane.arcs.store(arcs, Ordering::Relaxed);
+                    lane.claimed_deg.store(cdeg, Ordering::Relaxed);
+                });
+            }
+        }
+        // Owner merge: concatenate the per-worker next shards (hand-back
+        // guarantee makes their plain writes visible) and record the
+        // level's telemetry.
+        let mut arcs = 0u64;
+        let mut claimed = 0u64;
+        scratch.frontier.clear();
+        for lane in &scratch.lanes {
+            arcs += lane.arcs.load(Ordering::Relaxed);
+            claimed += lane.claimed_deg.load(Ordering::Relaxed);
+            // SAFETY: workers are parked; the owner is the only accessor.
+            let next = unsafe { &mut *lane.next.get() };
+            scratch.frontier.append(next);
+        }
+        if bottom_up {
+            bu_levels += 1;
+        }
+        scratch.levels.push(GrLevel { width: width as u32, arcs, bottom_up });
+        unvisited_deg = unvisited_deg.saturating_sub(claimed);
+        frontier_deg = claimed;
+        level += 1;
+    }
+
+    // ---- sharded settle + owner reduction ----
+    {
+        let dist = &scratch.dist;
+        let lanes = &scratch.lanes;
+        let acct_ref: &ExcessAccounting = acct;
+        let nn = n as u32;
+        pool.run_sharded(n, |w, lo, hi| {
+            let lane = &lanes[w];
+            // SAFETY: as above.
+            let active = unsafe { &mut *lane.active.get() };
+            active.clear();
+            let (mut delta, mut reach) = (0i64, 0u64);
+            for u in lo as u32..hi as u32 {
+                if u == g.s || u == g.t {
+                    continue;
+                }
+                let e_u = st.excess(u);
+                let du = dist[u as usize].load(Ordering::Relaxed);
+                let is_reachable = du != u32::MAX;
+                delta += acct_ref.settle_shard(u, is_reachable, e_u);
+                if is_reachable {
+                    reach += 1;
+                    if update_heights {
+                        // Single writer per vertex: u is in exactly one
+                        // shard, so the swap+histogram fixup inside
+                        // set_height never races on h[u].
+                        st.set_height(u, du);
+                    }
+                    if e_u > 0 && st.height(u) < nn {
+                        active.push(u);
+                    }
+                } else {
+                    st.set_height(u, nn);
+                }
+            }
+            lane.delta.store(delta, Ordering::Relaxed);
+            lane.reachable.store(reach, Ordering::Relaxed);
+        });
+    }
+    st.set_height(g.s, n as u32);
+    let mut reachable = 0usize;
+    let mut delta = 0i64;
+    scratch.active.clear();
+    for lane in &scratch.lanes {
+        delta += lane.delta.load(Ordering::Relaxed);
+        reachable += lane.reachable.load(Ordering::Relaxed) as usize;
+        // SAFETY: workers parked; owner-only access.
+        let shard = unsafe { &mut *lane.active.get() };
+        scratch.active.append(shard);
+    }
+    acct.apply_delta(delta);
+    RelabelOutcome {
+        reachable,
+        active: scratch.active.len(),
+        levels: scratch.levels.len() as u32,
+        bu_levels,
+    }
 }
 
 /// Gap heuristic (Goldberg–Tarjan, host form): if some height level in
@@ -229,6 +701,10 @@ pub struct HostStep {
     /// heuristic ran at all — the final launch of a solve never pays a
     /// BFS (or even the O(V) gap scan) that cannot change the outcome.
     pub converged: bool,
+    /// BFS levels of the relabel that ran (0 when no BFS ran).
+    pub gr_levels: u32,
+    /// Levels the direction-optimizing pass expanded bottom-up.
+    pub gr_bu_levels: u32,
 }
 
 impl HostStep {
@@ -384,7 +860,9 @@ impl AdaptiveGr {
     /// which used to burn one full BFS on an already-converged state).
     ///
     /// `frontier_start` is the launch-start frontier size (the auto-tune
-    /// signal; pass `0` from engines without a frontier).
+    /// signal; pass `0` from engines without a frontier). `mode` picks
+    /// the sequential or pool-parallel BFS — both are result-identical,
+    /// so the cadence logic is oblivious to the choice.
     #[allow(clippy::too_many_arguments)]
     pub fn host_step<R: Residual>(
         &mut self,
@@ -397,23 +875,44 @@ impl AdaptiveGr {
         stats: &mut SolveStats,
         scratch: &mut GrScratch,
         frontier_start: u64,
+        mode: GrMode<'_>,
     ) -> HostStep {
         let ops_before = stats.pushes + stats.relabels;
         counters.merge_into(stats);
         let launch_ops = stats.pushes + stats.relabels - ops_before;
         if acct.done(g, st) {
-            return HostStep { relabeled: false, gap_lifted: 0, converged: true };
+            return HostStep {
+                relabeled: false,
+                gap_lifted: 0,
+                converged: true,
+                gr_levels: 0,
+                gr_bu_levels: 0,
+            };
         }
         self.observe(launch_ops, frontier_start);
         if self.should_run(launch_ops) {
-            global_relabel_with(g, rep, st, acct, update_heights, scratch);
+            let out = global_relabel_in(g, rep, st, acct, update_heights, scratch, mode);
             stats.global_relabels += 1;
-            HostStep { relabeled: true, gap_lifted: 0, converged: false }
+            stats.gr_levels += out.levels as u64;
+            stats.gr_bu_levels += out.bu_levels as u64;
+            HostStep {
+                relabeled: true,
+                gap_lifted: 0,
+                converged: false,
+                gr_levels: out.levels,
+                gr_bu_levels: out.bu_levels,
+            }
         } else {
             let lifted = if update_heights { gap_heuristic(g, st) as u64 } else { 0 };
             stats.gap_cuts += lifted;
             stats.gr_skipped += 1;
-            HostStep { relabeled: false, gap_lifted: lifted, converged: false }
+            HostStep {
+                relabeled: false,
+                gap_lifted: lifted,
+                converged: false,
+                gr_levels: 0,
+                gr_bu_levels: 0,
+            }
         }
     }
 }
@@ -636,7 +1135,18 @@ mod tests {
         let counters = AtomicCounters::default();
         let mut stats = SolveStats::default();
         let mut scratch = GrScratch::new(g.n);
-        let out = ad.host_step(&g, &rep, &st, &mut acct, &counters, true, &mut stats, &mut scratch, 0);
+        let out = ad.host_step(
+            &g,
+            &rep,
+            &st,
+            &mut acct,
+            &counters,
+            true,
+            &mut stats,
+            &mut scratch,
+            0,
+            GrMode::sequential(),
+        );
         assert!(out.converged);
         assert!(!out.invalidates_carry());
         assert_eq!(stats.global_relabels, 0, "no BFS on a converged state");
@@ -655,14 +1165,242 @@ mod tests {
         // Zero-op launch on an unconverged state: the forced BFS runs and
         // invalidates any carried frontier.
         let mut ad = AdaptiveGr::new(g.n, 100.0);
-        let out = ad.host_step(&g, &rep, &st, &mut acct, &counters, true, &mut stats, &mut scratch, 0);
+        let out = ad.host_step(
+            &g,
+            &rep,
+            &st,
+            &mut acct,
+            &counters,
+            true,
+            &mut stats,
+            &mut scratch,
+            0,
+            GrMode::sequential(),
+        );
         assert!(out.relabeled && out.invalidates_carry() && !out.converged);
         assert_eq!(stats.global_relabels, 1);
+        assert!(out.gr_levels > 0, "a BFS that ran reports its level count");
+        assert_eq!(stats.gr_levels, out.gr_levels as u64);
         // A skipped step with no gap lift leaves the carry intact.
         counters.pushes.fetch_add(1, Ordering::Relaxed);
-        let out = ad.host_step(&g, &rep, &st, &mut acct, &counters, true, &mut stats, &mut scratch, 1);
+        let out = ad.host_step(
+            &g,
+            &rep,
+            &st,
+            &mut acct,
+            &counters,
+            true,
+            &mut stats,
+            &mut scratch,
+            1,
+            GrMode::sequential(),
+        );
         assert!(!out.relabeled && !out.invalidates_carry());
         assert_eq!(stats.gr_skipped, 1);
+    }
+
+    #[test]
+    fn parallel_relabel_matches_sequential_on_fixture() {
+        let (g, rep) = line();
+        let pool = WorkerPool::new(3);
+        let (st_a, total) = ParState::preflow(&g);
+        let (st_b, _) = ParState::preflow(&g);
+        let mut acct_a = ExcessAccounting::new(g.n, total);
+        let mut acct_b = ExcessAccounting::new(g.n, total);
+        let mut scr_a = GrScratch::new(g.n);
+        let mut scr_b = GrScratch::new(g.n);
+        let a = global_relabel_with(&g, &rep, &st_a, &mut acct_a, true, &mut scr_a);
+        let b = global_relabel_par(
+            &g,
+            &rep,
+            &st_b,
+            &mut acct_b,
+            true,
+            &mut scr_b,
+            &pool,
+            GrDirection::Auto,
+        );
+        assert_eq!(a.reachable, b.reachable);
+        assert_eq!(a.active, b.active);
+        assert_eq!(a.levels, b.levels, "level structure is schedule-independent");
+        assert_eq!(acct_a.excess_total, acct_b.excess_total);
+        assert_eq!(scr_a.active, scr_b.active, "active lists identical including order");
+        for u in 0..g.n as u32 {
+            assert_eq!(st_a.height(u), st_b.height(u), "height({u})");
+        }
+    }
+
+    /// Deterministic warm-up: a sequential relabel followed by fixed
+    /// round-robin discharge sweeps, so two states prepared from the same
+    /// graph are bit-identical when the comparison pass runs.
+    fn warm<R: Residual>(
+        g: &ArcGraph,
+        rep: &R,
+        st: &ParState,
+        acct: &mut ExcessAccounting,
+        scratch: &mut GrScratch,
+    ) {
+        global_relabel_with(g, rep, st, acct, true, scratch);
+        for _ in 0..4 {
+            for u in 0..g.n as u32 {
+                if !st.is_active(g, u) {
+                    continue;
+                }
+                let hu = st.height(u);
+                let mut pushed = false;
+                for (a, v) in rep.row(u).iter() {
+                    let cf = st.residual(a);
+                    if cf > 0 && hu == st.height(v) + 1 {
+                        let amt = cf.min(st.excess(u));
+                        st.cf[a as usize].fetch_sub(amt, Ordering::Relaxed);
+                        st.cf[(a ^ 1) as usize].fetch_add(amt, Ordering::Relaxed);
+                        st.e[u as usize].fetch_sub(amt, Ordering::Relaxed);
+                        st.e[v as usize].fetch_add(amt, Ordering::Relaxed);
+                        pushed = true;
+                        break;
+                    }
+                }
+                if !pushed {
+                    let min_h = rep
+                        .row(u)
+                        .iter()
+                        .filter(|&(a, _)| st.residual(a) > 0)
+                        .map(|(_, v)| st.height(v))
+                        .min();
+                    if let Some(mh) = min_h {
+                        st.set_height(u, (mh + 1).min(g.n as u32));
+                    }
+                }
+            }
+        }
+    }
+
+    fn property_families() -> Vec<ArcGraph> {
+        use crate::graph::generators::*;
+        vec![
+            ArcGraph::build(&rmat(&RmatParams {
+                scale: 6,
+                edge_factor: 8,
+                a: 0.57,
+                b: 0.19,
+                c: 0.19,
+                seed: 7,
+            })),
+            ArcGraph::build(&genrmf(&GenrmfParams { a: 3, b: 4, c1: 1, c2: 10, seed: 11 })),
+            ArcGraph::build(&washington_rlg(&WashingtonParams {
+                levels: 4,
+                width: 4,
+                fanout: 2,
+                max_cap: 8,
+                seed: 5,
+            })),
+            ArcGraph::build(&star_hub(24, 16, 3)),
+        ]
+    }
+
+    /// The ISSUE 10 property sweep: on a deterministically warmed
+    /// mid-solve state, the parallel pass must produce **bit-identical**
+    /// heights, `Excess_total` and active list (same order) as the
+    /// sequential reference, across thread counts including heavy
+    /// oversubscription (`n + 3` workers).
+    #[test]
+    fn parallel_relabel_property_sweep() {
+        for g in property_families() {
+            let rep = Rcsr::build(&g);
+            for threads in [1usize, 2, 8, g.n + 3] {
+                let pool = WorkerPool::new(threads);
+                // Prepare two identical warm states from scratch.
+                let (st_a, total) = ParState::preflow(&g);
+                let (st_b, _) = ParState::preflow(&g);
+                let mut acct_a = ExcessAccounting::new(g.n, total);
+                let mut acct_b = ExcessAccounting::new(g.n, total);
+                let mut scr_a = GrScratch::new(g.n);
+                let mut scr_b = GrScratch::new(g.n);
+                warm(&g, &rep, &st_a, &mut acct_a, &mut scr_a);
+                warm(&g, &rep, &st_b, &mut acct_b, &mut scr_b);
+                assert_eq!(acct_a.excess_total, acct_b.excess_total, "warm-up must be deterministic");
+
+                let a = global_relabel_with(&g, &rep, &st_a, &mut acct_a, true, &mut scr_a);
+                let b = global_relabel_par(
+                    &g,
+                    &rep,
+                    &st_b,
+                    &mut acct_b,
+                    true,
+                    &mut scr_b,
+                    &pool,
+                    GrDirection::Auto,
+                );
+                let ctx = format!("{} threads={threads}", g.name);
+                assert_eq!(a.reachable, b.reachable, "{ctx}: reachable");
+                assert_eq!(a.levels, b.levels, "{ctx}: levels");
+                assert_eq!(acct_a.excess_total, acct_b.excess_total, "{ctx}: Excess_total");
+                assert_eq!(scr_a.active, scr_b.active, "{ctx}: active list (exact order)");
+                for u in 0..g.n as u32 {
+                    assert_eq!(st_a.height(u), st_b.height(u), "{ctx}: height({u})");
+                }
+            }
+        }
+    }
+
+    /// Forced top-down and forced bottom-up must agree with Auto (and the
+    /// sequential pass) — the direction switch is a wall-clock choice,
+    /// never a result choice.
+    #[test]
+    fn forced_directions_agree_with_sequential() {
+        let g = ArcGraph::build(&crate::graph::generators::star_hub(24, 16, 3));
+        let rep = Rcsr::build(&g);
+        let pool = WorkerPool::new(4);
+        let mut reference: Option<(Vec<u32>, i64, Vec<u32>, RelabelOutcome)> = None;
+        for direction in [None, Some(GrDirection::Auto), Some(GrDirection::TopDown), Some(GrDirection::BottomUp)] {
+            let (st, total) = ParState::preflow(&g);
+            let mut acct = ExcessAccounting::new(g.n, total);
+            let mut scr = GrScratch::new(g.n);
+            warm(&g, &rep, &st, &mut acct, &mut scr);
+            let out = match direction {
+                None => global_relabel_with(&g, &rep, &st, &mut acct, true, &mut scr),
+                Some(d) => global_relabel_par(&g, &rep, &st, &mut acct, true, &mut scr, &pool, d),
+            };
+            let heights: Vec<u32> = (0..g.n as u32).map(|u| st.height(u)).collect();
+            match &reference {
+                None => reference = Some((heights, acct.excess_total, scr.active.clone(), out)),
+                Some((h, et, act, r)) => {
+                    assert_eq!(&heights, h, "{direction:?}: heights");
+                    assert_eq!(acct.excess_total, *et, "{direction:?}: Excess_total");
+                    assert_eq!(&scr.active, act, "{direction:?}: active");
+                    assert_eq!(out.reachable, r.reachable, "{direction:?}: reachable");
+                    assert_eq!(out.levels, r.levels, "{direction:?}: levels");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn direction_parses_from_cli_spellings() {
+        assert_eq!("auto".parse::<GrDirection>().unwrap(), GrDirection::Auto);
+        assert_eq!("top-down".parse::<GrDirection>().unwrap(), GrDirection::TopDown);
+        assert_eq!("BOTTOM-UP".parse::<GrDirection>().unwrap(), GrDirection::BottomUp);
+        assert_eq!("bu".parse::<GrDirection>().unwrap(), GrDirection::BottomUp);
+        assert!("sideways".parse::<GrDirection>().is_err());
+        assert_eq!(GrDirection::TopDown.name(), "top-down");
+    }
+
+    #[test]
+    fn scratch_regrowth_reserves_bfs_buffers() {
+        // Satellite: after a release() eviction, one ensure pass (via any
+        // relabel) must leave queue/active capacity at n so the timed
+        // host step never reallocates.
+        let (g, rep) = line();
+        let (st, total) = ParState::preflow(&g);
+        let mut acct = ExcessAccounting::new(g.n, total);
+        let mut scratch = GrScratch::new(g.n);
+        global_relabel_with(&g, &rep, &st, &mut acct, true, &mut scratch);
+        scratch.release();
+        assert_eq!(scratch.dist.len(), 0);
+        let out = global_relabel_with(&g, &rep, &st, &mut acct, true, &mut scratch);
+        assert!(scratch.queue.capacity() >= g.n, "queue re-grown alongside dist");
+        assert!(scratch.active.capacity() >= g.n, "active re-grown alongside dist");
+        assert!(out.levels > 0);
     }
 
     #[test]

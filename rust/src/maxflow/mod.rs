@@ -40,6 +40,7 @@ pub mod vc;
 use crate::graph::builder::{ArcGraph, FlowNetwork};
 use crate::graph::{Bcsr, Rcsr, Representation};
 
+pub use global_relabel::{GrDirection, GrMode};
 pub use pool::{PoolConfig, WorkerPool};
 pub use scan::ScanKind;
 pub use state::{ParState, SolveStats};
@@ -183,6 +184,18 @@ pub struct SolveOptions {
     /// A/B arms keep a fixed chunk geometry; the final width is always
     /// reported as `SolveStats::coop_chunk_final`.
     pub adaptive_chunk: bool,
+    /// Run the global-relabel BFS level-parallel on the solve's worker
+    /// pool (the tentpole of ISSUE 10). On by default — the parallel
+    /// pass is result-identical to the sequential one (bit-identical
+    /// heights, `Excess_total` and active list), so only wall clock
+    /// changes. `--gr-parallel=false` pins the sequential reference for
+    /// A/B runs and the oracle ablation.
+    pub gr_parallel: bool,
+    /// Per-level direction policy of the parallel BFS
+    /// (`--gr-direction auto|top-down|bottom-up`). `Auto` is the
+    /// Beamer-style switch; the forced settings exist for the
+    /// `kernel_micro` direction benches and debugging.
+    pub gr_direction: GrDirection,
 }
 
 impl Default for SolveOptions {
@@ -205,6 +218,8 @@ impl Default for SolveOptions {
             pin_cores: Vec::new(),
             numa_interleave: false,
             adaptive_chunk: false,
+            gr_parallel: true,
+            gr_direction: GrDirection::Auto,
         }
     }
 }

@@ -224,6 +224,22 @@ pub fn run_case(case: &OracleCase, threads: usize) -> Result<OracleReport, Strin
     // Single-push ablation (the PR-4 local op) must still agree.
     let single = SolveOptions { threads, cycles_per_launch: 32, multi_push: false, ..Default::default() };
     check("VC+BCSR(1push)", &vc::solve(&g, &Bcsr::build(&g), &single))?;
+    // Global-relabel execution arms (ISSUE 10): the pool-parallel
+    // direction-optimizing BFS pinned on explicitly, against the
+    // sequential-reference ablation (`--gr-parallel=false`) — the
+    // engine-level face of the relabel bit-identity property tests. Any
+    // divergence between the two BFS executions (a lost claim, a
+    // mis-merged frontier shard, a broken settle reduction) surfaces as
+    // a value or decomposition mismatch here.
+    let par_gr = SolveOptions {
+        threads,
+        cycles_per_launch: 32,
+        gr_parallel: true,
+        ..Default::default()
+    };
+    check("VC+parGR", &vc::solve(&g, &Rcsr::build(&g), &par_gr))?;
+    let seq_gr = SolveOptions { gr_parallel: false, ..par_gr.clone() };
+    check("VC+seqGR", &vc::solve(&g, &Bcsr::build(&g), &seq_gr))?;
     let legacy = SolveOptions {
         threads,
         cycles_per_launch: 32,

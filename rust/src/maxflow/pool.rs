@@ -227,6 +227,28 @@ impl WorkerPool {
             panic!("a worker-pool job panicked");
         }
     }
+
+    /// Broadcast a *sharded* job: partition `0..total` into one
+    /// contiguous, balanced, **ascending** range per worker and call
+    /// `f(w, lo, hi)` on worker `w` (an empty range when the pool is
+    /// oversubscribed). The balanced split mirrors
+    /// [`WorkerPool::shard_sizes`]: shard `w` covers
+    /// `⌊total·w/W⌋ .. ⌊total·(w+1)/W⌋`.
+    ///
+    /// This is the scoped run-everywhere primitive for host phases that
+    /// execute *between* solve launches (the parallel global relabel's
+    /// fill, per-level expansion and settle partitions): contiguity keeps
+    /// each worker streaming one cache-/page-local span, and the
+    /// ascending order is what lets owner-side concatenation of
+    /// per-worker output shards reproduce a sequential loop's order
+    /// exactly. Same hand-back guarantee as [`WorkerPool::run`].
+    pub fn run_sharded<'a, F: Fn(usize, usize, usize) + Send + Sync + 'a>(&self, total: usize, f: F) {
+        let workers = self.size();
+        self.run(move |w| {
+            let (lo, hi) = (total * w / workers, total * (w + 1) / workers);
+            f(w, lo, hi)
+        });
+    }
 }
 
 impl Drop for WorkerPool {
@@ -349,6 +371,37 @@ mod tests {
             }
         });
         assert_eq!(counter.load(Ordering::Relaxed), 4 * 25 * 2);
+    }
+
+    #[test]
+    fn run_sharded_partitions_cover_every_index_in_order() {
+        // Every index in 0..total is visited exactly once, ranges are
+        // contiguous and ascending in worker order, and oversubscribed
+        // workers get empty ranges instead of clamped duplicates.
+        for (workers, total) in [(4usize, 17usize), (3, 3), (8, 5), (1, 9), (4, 0)] {
+            let pool = WorkerPool::new(workers);
+            let hits: Vec<AtomicUsize> = (0..total).map(|_| AtomicUsize::new(0)).collect();
+            let bounds: Vec<AtomicUsize> =
+                (0..2 * workers).map(|_| AtomicUsize::new(usize::MAX)).collect();
+            pool.run_sharded(total, |w, lo, hi| {
+                bounds[2 * w].store(lo, Ordering::Relaxed);
+                bounds[2 * w + 1].store(hi, Ordering::Relaxed);
+                for i in lo..hi {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "({workers},{total}) index {i}");
+            }
+            let mut cursor = 0usize;
+            for w in 0..workers {
+                let (lo, hi) = (bounds[2 * w].load(Ordering::Relaxed), bounds[2 * w + 1].load(Ordering::Relaxed));
+                assert_eq!(lo, cursor, "({workers},{total}) worker {w} range is contiguous");
+                assert!(hi >= lo);
+                cursor = hi;
+            }
+            assert_eq!(cursor, total, "({workers},{total}) ranges cover the prefix");
+        }
     }
 
     #[test]

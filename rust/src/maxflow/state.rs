@@ -16,10 +16,23 @@ pub struct SolveStats {
     pub pushes: u64,
     pub relabels: u64,
     pub global_relabels: u64,
+    /// Σ BFS levels over every global-relabel pass. With the parallel
+    /// pass each level is one pool broadcast (a barrier), so this bounds
+    /// the relabel's synchronization cost; level widths ride in the
+    /// launch trace.
+    pub gr_levels: u64,
+    /// Levels the direction-optimizing parallel BFS expanded bottom-up
+    /// (0 for the sequential pass and for `--gr-direction top-down`).
+    pub gr_bu_levels: u64,
     /// Residual arcs examined during min-height scans.
     pub scan_arcs: u64,
     /// Wall-clock of the push-relabel kernel portion, milliseconds.
     pub kernel_ms: f64,
+    /// Wall-clock of the host steps that ran a height-updating global
+    /// relabel (BFS + settle + accounting), milliseconds — the numerator
+    /// of the `bench compare` GR-speedup gate, recorded with or without
+    /// tracing.
+    pub gr_ms: f64,
     /// Total wall-clock, milliseconds.
     pub total_ms: f64,
     /// Σ AVQ length over executed VC cycles — the work the frontier-driven
@@ -129,6 +142,8 @@ const _: () = assert!(
         && std::mem::align_of::<AtomicU64>() == std::mem::align_of::<u64>()
         && std::mem::size_of::<AtomicU32>() == std::mem::size_of::<u32>()
         && std::mem::align_of::<AtomicU32>() == std::mem::align_of::<u32>()
+        && std::mem::size_of::<AtomicI64>() == std::mem::size_of::<i64>()
+        && std::mem::align_of::<AtomicI64>() == std::mem::align_of::<i64>()
 );
 
 /// Allocate `n` zeroed `AtomicU64`s **without writing the memory**: the
@@ -155,6 +170,15 @@ pub(crate) fn zeroed_atomic_u32(n: usize) -> Vec<AtomicU32> {
     // SAFETY: identical layout (compile-time checked above), ownership
     // transfer as in `zeroed_atomic_u64`.
     unsafe { Vec::from_raw_parts(v.as_mut_ptr() as *mut AtomicU32, v.len(), v.capacity()) }
+}
+
+/// `i64` twin of [`zeroed_atomic_u64`] (residual capacities, excess, and
+/// the settle accounting's per-vertex cancellation ledger).
+pub(crate) fn zeroed_atomic_i64(n: usize) -> Vec<AtomicI64> {
+    let mut v = std::mem::ManuallyDrop::new(vec![0i64; n]);
+    // SAFETY: identical layout (compile-time checked above), ownership
+    // transfer as in `zeroed_atomic_u64`.
+    unsafe { Vec::from_raw_parts(v.as_mut_ptr() as *mut AtomicI64, v.len(), v.capacity()) }
 }
 
 /// Atomic counters accumulated inside parallel kernels, merged into
@@ -222,12 +246,63 @@ impl ParState {
         ParState::from_parts(cf, e, h)
     }
 
+    /// [`ParState::zeroed`] with first-touch NUMA placement: every array
+    /// (`cf`, `e`, `h`, and the height histogram) starts as an untouched
+    /// zero-page allocation and is faulted in by the pool workers, each
+    /// writing its own contiguous shard — so with pinned workers the
+    /// pages land on the node of the worker that will scan them. The
+    /// host's `zeroed` spelling touches everything on the constructing
+    /// thread and concentrates a large session's arc arrays on one node.
+    pub fn zeroed_on(g: &ArcGraph, pool: &super::pool::WorkerPool) -> ParState {
+        let cf = zeroed_atomic_i64(g.num_arcs());
+        let e = zeroed_atomic_i64(g.n);
+        let h = zeroed_atomic_u32(g.n);
+        let hist = zeroed_atomic_u32(g.n);
+        pool.run_sharded(g.num_arcs(), |_, lo, hi| {
+            for a in lo..hi {
+                cf[a].store(g.arc_cap[a], Ordering::Relaxed);
+            }
+        });
+        // Zero stores still fault the pages — that is the first touch.
+        pool.run_sharded(g.n, |_, lo, hi| {
+            for u in lo..hi {
+                e[u].store(0, Ordering::Relaxed);
+                h[u].store(0, Ordering::Relaxed);
+                hist[u].store(0, Ordering::Relaxed);
+            }
+        });
+        h[g.s as usize].store(g.n as u32, Ordering::Relaxed);
+        // All vertices sit at height 0 except s, parked at the untracked
+        // height n — same census `from_parts` would rebuild.
+        hist[0].store(g.n as u32 - 1, Ordering::Relaxed);
+        ParState { cf, e, h, hist }
+    }
+
+    /// [`ParState::preflow`] over a [`ParState::zeroed_on`] base: the
+    /// state arrays fault in from the pinned workers, then the (cheap,
+    /// source-local) saturation sweep runs on the host exactly as in the
+    /// sequential spelling — results are identical.
+    pub fn preflow_on(g: &ArcGraph, pool: &super::pool::WorkerPool) -> (ParState, i64) {
+        let st = ParState::zeroed_on(g, pool);
+        let excess_total = st.saturate_source(g);
+        (st, excess_total)
+    }
+
     /// Initialise heights/excess and perform the preflow (Alg. 1 step 0):
     /// saturate every arc out of `s`, set `h(s) = n`. Returns
     /// `Excess_total` = total preflow pushed out of the source.
     pub fn preflow(g: &ArcGraph) -> (ParState, i64) {
-        let m2 = g.num_arcs();
         let st = ParState::zeroed(g);
+        let excess_total = st.saturate_source(g);
+        (st, excess_total)
+    }
+
+    /// The preflow's saturation sweep: push every arc out of `s` to
+    /// capacity. Returns `Excess_total` = total preflow leaving the
+    /// source.
+    fn saturate_source(&self, g: &ArcGraph) -> i64 {
+        let m2 = g.num_arcs();
+        let st = self;
         let mut excess_total = 0i64;
         for a in (0..m2).step_by(2) {
             if g.arc_from[a] == g.s {
@@ -242,7 +317,7 @@ impl ParState {
             // Arcs into s (backward preflow) are never saturated at init.
         }
         // Flow pushed straight into t by the preflow already "arrived".
-        (st, excess_total)
+        excess_total
     }
 
     pub fn n(&self) -> usize {
@@ -329,6 +404,26 @@ mod tests {
         // cf(s->1) == 0, cf(1->s) == 3.
         assert_eq!(st.residual(0), 0);
         assert_eq!(st.residual(1), 3);
+    }
+
+    #[test]
+    fn preflow_on_matches_host_preflow() {
+        // The first-touch construction path must be observationally
+        // identical to the host-touched one: same residuals, excess,
+        // heights, histogram and Excess_total.
+        let g = diamond();
+        let pool = crate::maxflow::pool::WorkerPool::new(3);
+        let (a, ta) = ParState::preflow(&g);
+        let (b, tb) = ParState::preflow_on(&g, &pool);
+        assert_eq!(ta, tb);
+        assert_eq!(a.cf_snapshot(), b.cf_snapshot());
+        for u in 0..g.n as u32 {
+            assert_eq!(a.height(u), b.height(u), "height({u})");
+            assert_eq!(a.excess(u), b.excess(u), "excess({u})");
+        }
+        for level in 0..g.n {
+            assert_eq!(a.level_count(level), b.level_count(level), "hist[{level}]");
+        }
     }
 
     #[test]

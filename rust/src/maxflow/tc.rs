@@ -12,7 +12,7 @@
 //! solve, not per launch), and the host step uses the same adaptive
 //! global-relabel cadence + gap heuristic as the VC engine.
 
-use super::global_relabel::{AdaptiveGr, ExcessAccounting, GrScratch};
+use super::global_relabel::{AdaptiveGr, ExcessAccounting, GrMode, GrScratch};
 use super::lockfree::{discharge_once, LocalCounters};
 use super::pool::WorkerPool;
 use super::state::{AtomicCounters, ParState};
@@ -33,7 +33,7 @@ pub fn solve<R: Residual>(g: &ArcGraph, rep: &R, opts: &SolveOptions) -> FlowRes
     let pool = WorkerPool::with_config(opts.resolved_threads(), &opts.pool_config());
     let active_workers = pool.size().min(n.max(1));
     let cycles = opts.resolved_cycles(n);
-    let (st, excess_total) = ParState::preflow(g);
+    let (st, excess_total) = ParState::preflow_on(g, &pool);
     let mut acct = ExcessAccounting::new(n, excess_total);
     let counters = AtomicCounters::default();
     let mut stats = SolveStats::default();
@@ -90,7 +90,22 @@ pub fn solve<R: Residual>(g: &ArcGraph, rep: &R, opts: &SolveOptions) -> FlowRes
         // (Alg. 1 §2); skipped passes still get the cheap gap cut. TC has
         // no frontier, so it reports no auto-tune signal (`0`) and
         // ignores the carry outcome.
-        adaptive.host_step(g, rep, &st, &mut acct, &counters, opts.global_relabel, &mut stats, &mut gr_scratch, 0);
+        let host_timer = Timer::start();
+        let outcome = adaptive.host_step(
+            g,
+            rep,
+            &st,
+            &mut acct,
+            &counters,
+            opts.global_relabel,
+            &mut stats,
+            &mut gr_scratch,
+            0,
+            GrMode::from_opts(opts, &pool),
+        );
+        if outcome.relabeled {
+            stats.gr_ms += host_timer.ms();
+        }
     }
 
     // TC's cadence never auto-tunes (no frontier signal), so its alpha

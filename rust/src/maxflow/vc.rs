@@ -44,7 +44,7 @@
 //! `thread::scope` spawns; all per-solve buffers live in [`VcScratch`], so
 //! a warm session re-enters with zero allocation.
 
-use super::global_relabel::{global_relabel_with, AdaptiveGr, ExcessAccounting, GrScratch};
+use super::global_relabel::{global_relabel_in, AdaptiveGr, ExcessAccounting, GrMode, GrScratch};
 use super::lockfree::{discharge_step, Discharge, DischargeOutcome, LocalCounters};
 use super::pool::WorkerPool;
 use super::scan::{self, ScanKind};
@@ -83,7 +83,16 @@ impl FrontierQueue {
 
     fn ensure(&mut self, n: usize) {
         if self.buf.len() < n {
-            self.buf.resize_with(n, || AtomicU32::new(0));
+            if self.buf.is_empty() {
+                // Re-growth after a `release()` eviction: allocate the
+                // whole buffer as untouched zero pages so the re-hydrated
+                // session's first writes (from the pinned workers) decide
+                // placement — same first-touch property as construction.
+                self.buf = zeroed_atomic_u32(n);
+            } else {
+                // Tail extension of a live buffer keeps existing entries.
+                self.buf.resize_with(n, || AtomicU32::new(0));
+            }
         }
     }
 
@@ -125,7 +134,14 @@ impl ChunkQueue {
 
     fn ensure(&mut self, n: usize) {
         if self.buf.len() < n {
-            self.buf.resize_with(n, || AtomicU64::new(0));
+            if self.buf.is_empty() {
+                // Zero-page reallocation on re-growth from empty (see
+                // `FrontierQueue::ensure`): the chunk units are rewritten
+                // every cycle, so placement is the only thing at stake.
+                self.buf = zeroed_atomic_u64(n);
+            } else {
+                self.buf.resize_with(n, || AtomicU64::new(0));
+            }
         }
     }
 
@@ -462,8 +478,15 @@ impl VcScratch {
         if self.queued.len() < n {
             self.avq[0].ensure(n);
             self.avq[1].ensure(n);
-            // Fresh stamps are 0, which never equals a live epoch (≥ 1).
-            self.queued.resize_with(n, || AtomicU64::new(0));
+            // Fresh stamps are 0, which never equals a live epoch (≥ 1) —
+            // true for the zero-page reallocation below exactly as for
+            // tail-extension, so a post-`release()` re-hydration can take
+            // the first-touch-friendly path safely.
+            if self.queued.is_empty() {
+                self.queued = zeroed_atomic_u64(n);
+            } else {
+                self.queued.resize_with(n, || AtomicU64::new(0));
+            }
             self.carry_valid = false;
         }
     }
@@ -560,10 +583,11 @@ impl VcContext {
     /// Only sound on a **fresh** scratch: the writes re-zero the `queued`
     /// epoch stamps, which on a warm scratch would resurrect already-used
     /// epochs and break the frontier dedup. `for_opts` calls it exactly
-    /// once, right after construction. Buffers grown later
-    /// (`ensure`/`ensure_coop`) are host-touched — a documented
-    /// limitation, acceptable because the dominant O(V) buffers are
-    /// allocated here.
+    /// once, right after construction. Buffers re-grown *from empty*
+    /// after a [`VcScratch::release`] eviction go through the zero-page
+    /// allocators too, so a re-hydrated session's first worker writes
+    /// decide their placement; only mid-life tail extensions of a live
+    /// buffer stay host-touched (they must preserve existing entries).
     fn first_touch(&self) {
         let sc: &VcScratch = &self.scratch;
         let n = sc.queued.len();
@@ -582,10 +606,13 @@ impl VcContext {
 /// Solve max-flow with the vertex-centric engine over representation `rep`.
 pub fn solve<R: Residual>(g: &ArcGraph, rep: &R, opts: &SolveOptions) -> FlowResult {
     let total_timer = Timer::start();
-    let (st, excess_total) = ParState::preflow(g);
+    let mut ctx = VcContext::for_opts(g.n, opts);
+    // State arrays fault in from the pool workers (first-touch NUMA
+    // placement for `cf`/`e`/`h`); results are identical to the host
+    // construction.
+    let (st, excess_total) = ParState::preflow_on(g, &ctx.pool);
     let mut acct = ExcessAccounting::new(g.n, excess_total);
     let mut stats = SolveStats::default();
-    let mut ctx = VcContext::for_opts(g.n, opts);
     let error = run_from_state(g, rep, &st, &mut acct, opts, &mut stats, &mut ctx).err();
     stats.total_ms = total_timer.ms();
     FlowResult { value: st.excess(g.t), cf: st.cf_snapshot(), stats, error }
@@ -630,6 +657,10 @@ pub fn run_from_state<R: Residual>(
     let multi_push = opts.multi_push;
     let scan_kind = opts.resolved_scan();
     let mut adaptive = AdaptiveGr::from_opts(n, opts);
+    // Sequential vs pool-parallel global relabel (result-identical; see
+    // `global_relabel_par`). The pool reference is the solve's own pool —
+    // the BFS runs between launches, when every worker is parked.
+    let gr_mode = GrMode::from_opts(opts, &ctx.pool);
     ctx.scratch.ensure(n, active_workers);
     // Launch-granular tracing (see `crate::obs`): every clock read and
     // every event build below is gated on this flag, so an untraced solve
@@ -697,11 +728,16 @@ pub fn run_from_state<R: Residual>(
             // excess / re-lower heights). Run it directly instead of
             // paying a zero-op launch to discover the same thing, and
             // adopt the active set it collected as the next frontier.
-            let gr_timer = if tracing { Some(Timer::start()) } else { None };
-            global_relabel_with(g, rep, st, acct, opts.global_relabel, &mut ctx.scratch.gr);
+            let gr_timer = Timer::start();
+            let gr_out =
+                global_relabel_in(g, rep, st, acct, opts.global_relabel, &mut ctx.scratch.gr, gr_mode);
+            let gr_wall = gr_timer.ms();
+            stats.gr_ms += gr_wall;
             stats.global_relabels += 1;
+            stats.gr_levels += gr_out.levels as u64;
+            stats.gr_bu_levels += gr_out.bu_levels as u64;
             adaptive.note_external_relabel();
-            if let Some(t) = gr_timer {
+            if tracing {
                 // No kernel ran, so there are no counter deltas — the
                 // event records only that the BFS happened and its cost.
                 stats.trace.push(LaunchEvent {
@@ -709,7 +745,9 @@ pub fn run_from_state<R: Residual>(
                     kind: EventKind::GlobalRelabel,
                     gr: true,
                     gr_alpha: adaptive.alpha(),
-                    gr_ms: t.ms(),
+                    gr_ms: gr_wall,
+                    gr_levels: gr_out.levels as u64,
+                    gr_bu_levels: gr_out.bu_levels as u64,
                     ..Default::default()
                 });
             }
@@ -982,7 +1020,7 @@ pub fn run_from_state<R: Residual>(
         // Host step: adaptive global relabel + termination accounting; a
         // skipped pass still gets the cheap gap cut, and anything that
         // moved heights invalidates the carried frontier.
-        let host_timer = if tracing { Some(Timer::start()) } else { None };
+        let host_timer = Timer::start();
         let outcome = adaptive.host_step(
             g,
             rep,
@@ -993,7 +1031,14 @@ pub fn run_from_state<R: Residual>(
             stats,
             &mut ctx.scratch.gr,
             frontier_start.load(Ordering::Relaxed),
+            gr_mode,
         );
+        let host_ms = host_timer.ms();
+        if outcome.relabeled {
+            // Only height-updating relabels count toward the GR wall —
+            // a skipped cadence step is just the O(1) accounting check.
+            stats.gr_ms += host_ms;
+        }
         // The hand-back guarantee of `WorkerPool::run` makes the
         // post-launch `worker_scan` reads exact (every worker flushed
         // before `run` returned), so the per-launch imbalance slice
@@ -1008,7 +1053,7 @@ pub fn run_from_state<R: Residual>(
             chunk_tuner.observe(scan_max, scan_sum as f64 / active_workers.max(1) as f64);
         }
         if let Some((pushes0, relabels0, scan0, chunks0)) = snap {
-            let gr_ms = host_timer.map(|t| t.ms()).unwrap_or(0.0);
+            let gr_ms = host_ms;
             let scan_ms = phase_a_ns.load(Ordering::Relaxed) as f64 / 1e6;
             let chunk_ms = phase_b_ns.load(Ordering::Relaxed) as f64 / 1e6;
             stats.trace.push(LaunchEvent {
@@ -1030,6 +1075,8 @@ pub fn run_from_state<R: Residual>(
                 apply_ms: (launch_kernel_ms - scan_ms - chunk_ms).max(0.0),
                 chunk_ms,
                 gr_ms,
+                gr_levels: outcome.gr_levels as u64,
+                gr_bu_levels: outcome.gr_bu_levels as u64,
             });
         }
         // One trajectory sample per host step — but only when the cadence

@@ -107,6 +107,12 @@ pub struct LaunchEvent {
     pub chunk_ms: f64,
     /// Host-step wall (global-relabel BFS or gap scan + accounting), ms.
     pub gr_ms: f64,
+    /// BFS levels the global relabel in this host step expanded (0 when
+    /// no height-updating relabel ran).
+    pub gr_levels: u64,
+    /// Of those levels, how many the direction-optimizing parallel BFS
+    /// expanded bottom-up (always 0 on the sequential path).
+    pub gr_bu_levels: u64,
 }
 
 impl Default for LaunchEvent {
@@ -130,6 +136,8 @@ impl Default for LaunchEvent {
             apply_ms: 0.0,
             chunk_ms: 0.0,
             gr_ms: 0.0,
+            gr_levels: 0,
+            gr_bu_levels: 0,
         }
     }
 }
@@ -162,6 +170,8 @@ impl LaunchEvent {
         o.insert("apply_ms".into(), Json::Num(self.apply_ms));
         o.insert("chunk_ms".into(), Json::Num(self.chunk_ms));
         o.insert("gr_ms".into(), Json::Num(self.gr_ms));
+        o.insert("gr_levels".into(), Json::Num(self.gr_levels as f64));
+        o.insert("gr_bu_levels".into(), Json::Num(self.gr_bu_levels as f64));
         Json::Obj(o)
     }
 
@@ -190,6 +200,8 @@ impl LaunchEvent {
             apply_ms: num("apply_ms"),
             chunk_ms: num("chunk_ms"),
             gr_ms: num("gr_ms"),
+            gr_levels: num("gr_levels") as u64,
+            gr_bu_levels: num("gr_bu_levels") as u64,
         })
     }
 }
@@ -359,6 +371,8 @@ mod tests {
             apply_ms: 0.05,
             chunk_ms: 0.1,
             gr_ms: 0.4,
+            gr_levels: 9,
+            gr_bu_levels: 4,
         };
         let parsed = LaunchEvent::from_json(&Json::parse(&e.to_json().to_string()).unwrap()).unwrap();
         assert_eq!(parsed, e);

@@ -46,6 +46,35 @@ fn serial_scan_tx(d: f64, rep: Representation, c: &CostParams) -> f64 {
     }
 }
 
+/// Serial charge of one global-relabel BFS pass (the TC discipline: the
+/// host walks every level's arcs one after another, exactly the
+/// sequential `global_relabel_with`).
+fn gr_serial_cycles(trace: &Trace, rep: Representation, c: &CostParams) -> f64 {
+    let mut cycles = 0.0;
+    for pass in &trace.grs {
+        for &(_, arcs) in &pass.levels {
+            cycles += arcs as f64 * c.c_arc + serial_scan_tx(arcs as f64, rep, c) * c.mem_tx;
+        }
+    }
+    cycles
+}
+
+/// Level-parallel charge of the global-relabel passes (the VC
+/// discipline: each level's frontier expansion spreads its arc work over
+/// the resident warp slots — coalesced row streaming — with one grid
+/// sync per level, mirroring `global_relabel_par`'s one pool broadcast
+/// per BFS level).
+fn gr_parallel_cycles(trace: &Trace, rep: Representation, slots: usize, c: &CostParams) -> f64 {
+    let mut cycles = 0.0;
+    for pass in &trace.grs {
+        for &(_, arcs) in &pass.levels {
+            let work = arcs as f64 * c.c_arc + coop_scan_tx(arcs as f64, rep, c) * c.mem_tx;
+            cycles += work / slots.max(1) as f64 + c.c_sync;
+        }
+    }
+    cycles
+}
+
 #[inline]
 fn op_cost(pushed: bool, d: f64, rep: Representation, c: &CostParams) -> f64 {
     if pushed {
@@ -108,7 +137,10 @@ pub fn simulate_tc(trace: &Trace, rep: Representation, model: &GpuModel, c: &Cos
     }
 
     let sched = schedule(&warp_total, model.slots());
-    let total_cycles = sched.makespan;
+    // Global relabels: TC has no level-parallel BFS — every recorded pass
+    // is charged as the host's serial sweep, appended to the makespan
+    // (the kernel is parked while the host walks the graph).
+    let total_cycles = sched.makespan + gr_serial_cycles(trace, rep, c);
     SimReport {
         total_cycles,
         ms: model.cycles_to_ms(total_cycles),
@@ -197,6 +229,11 @@ pub fn simulate_vc(trace: &Trace, rep: Representation, model: &GpuModel, c: &Cos
         }
         total += scan.makespan + proc.makespan + 2.0 * c.c_sync;
     }
+    // Global relabels: charged level-parallel — the workload-balanced
+    // engine runs the BFS on the same worker pool (one broadcast per
+    // level), so its wall cost is arc work over the slots plus one sync
+    // per level instead of TC's serial host sweep.
+    total += gr_parallel_cycles(trace, rep, slots, c);
 
     SimReport {
         total_cycles: total,
@@ -305,6 +342,7 @@ mod tests {
             iters: (0..50).map(|_| vec![Op { u: 0, pushed: true }]).collect(),
             rescan: vec![],
             row_len: vec![4; n],
+            grs: vec![],
             value: 1,
         };
         let (m, c) = (GpuModel::default(), CostParams::default());
@@ -330,6 +368,7 @@ mod tests {
                 r[0] = 100_000;
                 r
             },
+            grs: vec![],
             value: 1,
         };
         let (m, c) = (GpuModel::default(), CostParams::default());
@@ -347,6 +386,38 @@ mod tests {
             split.total_cycles,
             mono.total_cycles
         );
+    }
+
+    #[test]
+    fn gr_charge_is_level_parallel_under_vc_serial_under_tc() {
+        // On a graph big enough for the arc work to dwarf the per-level
+        // syncs, the VC discipline's level-parallel GR charge must be far
+        // below TC's serial host sweep — and neither changes the op count
+        // (the BFS does no pushes/relabels).
+        let net = with_terminals(generators::rmat(&generators::RmatParams {
+            scale: 11,
+            edge_factor: 10,
+            a: 0.6,
+            b: 0.18,
+            c: 0.18,
+            seed: 4,
+        }));
+        let t = trace_of(&net);
+        assert!(!t.grs.is_empty());
+        let mut bare = t.clone();
+        bare.grs.clear();
+        let (m, c) = (GpuModel::default(), CostParams::default());
+        let rep = Representation::Bcsr;
+        let tc_delta = simulate_tc(&t, rep, &m, &c).total_cycles
+            - simulate_tc(&bare, rep, &m, &c).total_cycles;
+        let vc_delta = simulate_vc(&t, rep, &m, &c).total_cycles
+            - simulate_vc(&bare, rep, &m, &c).total_cycles;
+        assert!(tc_delta > 0.0 && vc_delta > 0.0, "both disciplines charge GR work");
+        assert!(
+            vc_delta < tc_delta / 2.0,
+            "level-parallel GR {vc_delta} should be far below the serial sweep {tc_delta}"
+        );
+        assert_eq!(simulate_tc(&t, rep, &m, &c).ops, simulate_tc(&bare, rep, &m, &c).ops);
     }
 
     #[test]

@@ -6,7 +6,7 @@
 
 use crate::graph::builder::ArcGraph;
 use crate::graph::residual::Residual;
-use crate::maxflow::global_relabel::{global_relabel, ExcessAccounting};
+use crate::maxflow::global_relabel::{global_relabel_with, ExcessAccounting, GrScratch};
 use crate::maxflow::lockfree::{discharge_once, LocalCounters};
 use crate::maxflow::state::ParState;
 
@@ -16,6 +16,17 @@ pub struct Op {
     pub u: u32,
     /// true = push, false = relabel.
     pub pushed: bool,
+}
+
+/// Level structure of one global-relabel BFS pass: `(width, arcs)` per
+/// level, exactly as the host relabel's `GrScratch::levels` telemetry
+/// records it. The cost model charges these — level-parallel under VC
+/// (each level's arc work spreads over the resident slots, one grid sync
+/// per level), as one serial host sweep under TC.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct GrPass {
+    /// Per-level (frontier width, arcs examined while expanding it).
+    pub levels: Vec<(u32, u64)>,
 }
 
 /// A recorded execution.
@@ -35,6 +46,10 @@ pub struct Trace {
     /// Row length (in + out arcs) per vertex — the scan cost `d(v)` of
     /// Eq. 1 (the full row is always examined by the min-height search).
     pub row_len: Vec<u32>,
+    /// Level telemetry of every global relabel the replay ran (the
+    /// initial height seeding plus one per `gr_interval` firing). Empty
+    /// on hand-built traces — GR work simply goes uncharged there.
+    pub grs: Vec<GrPass>,
     /// Max-flow value reached (sanity cross-check against the engines).
     pub value: i64,
 }
@@ -69,7 +84,13 @@ pub fn record<R: Residual>(g: &ArcGraph, rep: &R, gr_interval: usize) -> Trace {
     let mut rescan: Vec<bool> = Vec::new();
     let gr = gr_interval.max(1);
     let mut cnt = LocalCounters::default();
-    global_relabel(g, rep, &st, &mut acct, true);
+    let mut scratch = GrScratch::new(n);
+    let mut grs: Vec<GrPass> = Vec::new();
+    let mut relabel = |st: &ParState, acct: &mut ExcessAccounting, grs: &mut Vec<GrPass>| {
+        global_relabel_with(g, rep, st, acct, true, &mut scratch);
+        grs.push(GrPass { levels: scratch.levels.iter().map(|l| (l.width, l.arcs)).collect() });
+    };
+    relabel(&st, &mut acct, &mut grs);
     // The first iteration always rescans; afterwards only an iteration
     // following a global relabel does (heights moved → carried frontier
     // invalid), matching the host engine's carry-over.
@@ -87,11 +108,11 @@ pub fn record<R: Residual>(g: &ArcGraph, rep: &R, gr_interval: usize) -> Trace {
         }
         iters.push(ops);
         if iters.len() % gr == 0 {
-            global_relabel(g, rep, &st, &mut acct, true);
+            relabel(&st, &mut acct, &mut grs);
             next_rescan = true;
         }
     }
-    Trace { n, iters, rescan, row_len, value: st.excess(g.t) }
+    Trace { n, iters, rescan, row_len, grs, value: st.excess(g.t) }
 }
 
 #[cfg(test)]
@@ -110,6 +131,8 @@ mod tests {
         let want = crate::maxflow::dinic::solve(&g).value;
         assert_eq!(t.value, want);
         assert!(t.total_ops() > 0);
+        assert!(!t.grs.is_empty(), "the initial height seeding is always recorded");
+        assert!(t.grs.iter().all(|p| !p.levels.is_empty()), "every pass reaches the sink's level");
     }
 
     #[test]
@@ -149,7 +172,14 @@ mod tests {
             assert_eq!(t.is_rescan(i), i % 4 == 0, "only post-relabel iterations rescan (it {i})");
         }
         // Hand-built traces without flags fall back to it == 0.
-        let bare = Trace { n: 4, iters: vec![vec![], vec![]], rescan: vec![], row_len: vec![1; 4], value: 0 };
+        let bare = Trace {
+            n: 4,
+            iters: vec![vec![], vec![]],
+            rescan: vec![],
+            row_len: vec![1; 4],
+            grs: vec![],
+            value: 0,
+        };
         assert!(bare.is_rescan(0));
         assert!(!bare.is_rescan(1));
     }
